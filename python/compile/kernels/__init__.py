@@ -1,0 +1,7 @@
+# L1: Pallas kernels for the paper's ML-workload compute hot-spots.
+#
+# All kernels run with interpret=True (CPU PJRT cannot execute Mosaic
+# custom-calls); block shapes are still chosen as if targeting a real TPU
+# (VMEM-sized tiles, MXU-aligned matmuls) — see DESIGN.md §Hardware-Adaptation.
+
+from . import kmeans, logreg, pagerank, ref  # noqa: F401

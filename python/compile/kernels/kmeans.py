@@ -1,0 +1,96 @@
+"""Pallas kernel: tiled pairwise squared-distance for K-Means (PowerGraph
+"Kmeans clustering" workload in the paper, Table 4).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the sample matrix is streamed
+HBM→VMEM in (BN, D) row tiles via BlockSpec; the centroid matrix (K, D) is
+small enough to pin in VMEM for every grid step. The inner product x @ c.T
+is shaped for the MXU (BN and K padded to multiples of 8/128 by the
+wrapper); ||x||^2 / ||c||^2 are VPU reductions fused into the same tile.
+
+VMEM footprint per grid step (f32):
+    BN*D (x tile) + K*D (centroids) + BN*K (out tile)
+with the default BN=256, D<=512, K<=128: 256*512*4 + 128*512*4 + 256*128*4
+= 0.5 MB + 0.25 MB + 0.125 MB << 16 MB VMEM, leaving room for
+double-buffering the x stream.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_N = 256
+
+
+def _dist_kernel(x_ref, c_ref, o_ref):
+    """One (BN, K) tile of squared distances.
+
+    o = ||x||^2 - 2 x c^T + ||c||^2, computed entirely in VMEM.
+    """
+    x = x_ref[...]                                       # (BN, D)
+    c = c_ref[...]                                       # (K, D)
+    xx = jnp.sum(x * x, axis=1, keepdims=True)           # (BN, 1)  VPU
+    cc = jnp.sum(c * c, axis=1, keepdims=True).T         # (1, K)   VPU
+    xc = jnp.dot(x, c.T, preferred_element_type=jnp.float32)  # MXU
+    o_ref[...] = xx - 2.0 * xc + cc
+
+
+def _pad_rows(x, multiple):
+    n = x.shape[0]
+    rem = (-n) % multiple
+    if rem == 0:
+        return x, n
+    return jnp.pad(x, ((0, rem),) + ((0, 0),) * (x.ndim - 1)), n
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def pairwise_sq_dists(x, c, *, block_n=DEFAULT_BLOCK_N):
+    """Squared euclidean distances between rows of x (N,D) and c (K,D).
+
+    Pads N up to a multiple of block_n, runs the tiled kernel over a 1-D
+    grid of row tiles, and slices the padding back off. Returns (N, K).
+    """
+    x = x.astype(jnp.float32)
+    c = c.astype(jnp.float32)
+    xp, n = _pad_rows(x, block_n)
+    np_, d = xp.shape
+    k = c.shape[0]
+    grid = (np_ // block_n,)
+    out = pl.pallas_call(
+        _dist_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((np_, k), jnp.float32),
+        interpret=True,
+    )(xp, c)
+    return out[:n]
+
+
+def assign(x, c, *, block_n=DEFAULT_BLOCK_N):
+    """Nearest-centroid assignment per row, (N,) int32."""
+    return jnp.argmin(pairwise_sq_dists(x, c, block_n=block_n), axis=1).astype(
+        jnp.int32
+    )
+
+
+def lloyd_step(x, c, *, block_n=DEFAULT_BLOCK_N):
+    """One Lloyd iteration built on the Pallas distance kernel.
+
+    Returns (assignments (N,) int32, new centroids (K, D)). The
+    scatter/reduce half stays in plain XLA (it is bandwidth- not
+    compute-bound and XLA fuses it well); only the distance matrix — the
+    O(N*K*D) hot spot — goes through Pallas.
+    """
+    a = assign(x, c, block_n=block_n)
+    k = c.shape[0]
+    one_hot = (a[:, None] == jnp.arange(k)[None, :]).astype(x.dtype)
+    counts = one_hot.sum(axis=0)
+    sums = one_hot.T @ x
+    safe = jnp.maximum(counts, 1.0)[:, None]
+    new_c = jnp.where(counts[:, None] > 0, sums / safe, c)
+    return a, new_c

@@ -1,0 +1,80 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every kernel in this package has an entry here computing the same function
+with plain jax.numpy. pytest (and hypothesis sweeps) assert_allclose the
+Pallas output against these; they are the *only* correctness ground truth
+for L1, so keep them dead simple.
+"""
+
+import jax.numpy as jnp
+
+
+def pairwise_sq_dists(x, c):
+    """Squared euclidean distances between rows of x (N,D) and c (K,D).
+
+    Returns (N, K) float32. Expanded form ||x||^2 - 2 x.c^T + ||c||^2 —
+    the same algebra the kernel uses, so tolerances stay tight.
+    """
+    xx = jnp.sum(x * x, axis=1, keepdims=True)          # (N, 1)
+    cc = jnp.sum(c * c, axis=1, keepdims=True).T        # (1, K)
+    xc = x @ c.T                                        # (N, K)
+    return xx - 2.0 * xc + cc
+
+
+def kmeans_assign(x, c):
+    """Nearest-centroid index for each row of x. Returns (N,) int32."""
+    return jnp.argmin(pairwise_sq_dists(x, c), axis=1).astype(jnp.int32)
+
+
+def kmeans_update(x, c):
+    """One Lloyd step: assignments and recomputed centroids.
+
+    Empty clusters keep their previous centroid.
+    """
+    assign = kmeans_assign(x, c)
+    k = c.shape[0]
+    one_hot = (assign[:, None] == jnp.arange(k)[None, :]).astype(x.dtype)
+    counts = one_hot.sum(axis=0)                        # (K,)
+    sums = one_hot.T @ x                                # (K, D)
+    safe = jnp.maximum(counts, 1.0)[:, None]
+    new_c = jnp.where(counts[:, None] > 0, sums / safe, c)
+    return assign, new_c
+
+
+def logistic_fwd(w, x):
+    """sigmoid(x @ w) — predicted probabilities, (N,)."""
+    return 1.0 / (1.0 + jnp.exp(-(x @ w)))
+
+
+def logistic_loss(w, x, y):
+    """Mean binary cross-entropy (stable form via logaddexp)."""
+    z = x @ w
+    return jnp.mean(jnp.logaddexp(0.0, z) - y * z)
+
+
+def logistic_grad(w, x, y):
+    """d loss / d w = X^T (sigmoid(Xw) - y) / N, shape (D,)."""
+    r = logistic_fwd(w, x) - y
+    return x.T @ r / x.shape[0]
+
+
+def logistic_sgd_step(w, x, y, lr):
+    """One SGD step; returns (w', loss)."""
+    return w - lr * logistic_grad(w, x, y), logistic_loss(w, x, y)
+
+
+def pagerank_step(a, r, alpha=0.85):
+    """One power-iteration step of PageRank/TextRank.
+
+    a is the column-stochastic adjacency (n, n); r the rank vector (n,).
+    r' = alpha * A r + (1 - alpha) / n.
+    """
+    n = r.shape[0]
+    return alpha * (a @ r) + (1.0 - alpha) / n
+
+
+def mlp_fwd(params, x):
+    """Two-layer MLP with tanh hidden; params = (w1, b1, w2, b2)."""
+    w1, b1, w2, b2 = params
+    h = jnp.tanh(x @ w1 + b1)
+    return h @ w2 + b2

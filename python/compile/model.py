@@ -1,0 +1,139 @@
+"""L2: the paper's ML workloads as JAX compute graphs, calling the Pallas
+kernels in ``kernels/``.
+
+Each entry point here corresponds to one ML workload from Table 4 of the
+paper and is AOT-lowered by ``aot.py`` into one HLO artifact that the rust
+coordinator executes via PJRT on every workload step. Shapes are fixed at
+lowering time (one executable per model variant); the rust side feeds
+batches whose backing pages travel through the Valet block device.
+
+Exported step functions (all pure, jit-friendly):
+
+* ``logreg_step(w, x, y, lr)``        -> (w', loss)        Logistic Regression
+* ``kmeans_step(x, c)``               -> (assign, c')      K-Means (Lloyd)
+* ``textrank_step(a, r, alpha)``      -> r'                TextRank/PageRank
+* ``gboost_stump_step(x, resid)``     -> (feat, thresh, gamma, resid')
+                                                           Gradient Boosting
+* ``rf_proximity_step(x, c)``         -> votes             Random Forest
+                                                           (proximity voting)
+
+Gradient Boosting and Random Forest reuse the kmeans/logreg kernels for
+their inner products — the O(N*D) scan is the hot spot in all of them.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import kmeans, logreg, pagerank
+
+
+def logreg_step(w, x, y, lr):
+    """One SGD step of logistic regression. Pallas fwd + Pallas grad."""
+    return logreg.sgd_step(w, x, y, lr)
+
+
+def kmeans_step(x, c):
+    """One Lloyd iteration. Pallas distance kernel + XLA reduce."""
+    return kmeans.lloyd_step(x, c)
+
+
+def textrank_step(a, r, alpha):
+    """One TextRank power-iteration step via the tiled Pallas mat-vec."""
+    return pagerank.step(a, r, alpha[0])
+
+
+def gboost_stump_step(x, resid):
+    """One boosting round with depth-1 stumps on feature means.
+
+    A deliberately simple (but real) gradient-boosting round: for every
+    feature j, split at the feature mean, compute per-side mean residual,
+    and pick the feature with the largest SSE reduction. The per-feature
+    statistics are inner products over the sample axis (`resid @ left`) —
+    the same bandwidth-bound scan the Pallas logreg kernel performs; XLA
+    fuses the mask+matvec here, and the Pallas kernels cover the
+    compute-bound workloads (logreg/kmeans/textrank).
+
+    Returns (best_feature i32[], best_thresh f32[], gammas f32[2],
+    new_residual f32[N]).
+    """
+    x = x.astype(jnp.float32)
+    n, d = x.shape
+    mu = jnp.mean(x, axis=0)                            # (D,) thresholds
+    left = (x <= mu[None, :]).astype(jnp.float32)       # (N, D) masks
+    nl = jnp.sum(left, axis=0)                          # (N per left side)
+    nr = n - nl
+    # Per-feature sums of residual on each side: resid^T @ left — one
+    # mat-vec over the sample axis, the gboost hot spot.
+    sl = resid @ left                                   # (D,)
+    sr = jnp.sum(resid) - sl
+    ml = sl / jnp.maximum(nl, 1.0)
+    mr = sr / jnp.maximum(nr, 1.0)
+    sse_red = nl * ml * ml + nr * mr * mr               # variance reduction
+    best = jnp.argmax(sse_red).astype(jnp.int32)
+    gl, gr = ml[best], mr[best]
+    pred = jnp.where(x[:, best] <= mu[best], gl, gr)
+    return best, mu[best], jnp.stack([gl, gr]), resid - pred
+
+
+def rf_proximity_step(x, c):
+    """Random-Forest-style proximity voting round.
+
+    Each "tree" is approximated by a random prototype set (c); samples vote
+    for their nearest prototype (Pallas distance kernel), producing the
+    leaf-cooccurrence counts the paper's Random Forest workload spends its
+    memory bandwidth on. Returns per-prototype vote counts (K,) i32.
+    """
+    a = kmeans.assign(x, c)
+    k = c.shape[0]
+    return jnp.sum(
+        (a[:, None] == jnp.arange(k)[None, :]).astype(jnp.int32), axis=0
+    )
+
+
+# ---------------------------------------------------------------------------
+# Artifact registry: name -> (fn, example_args builder). aot.py iterates
+# this to emit artifacts/<name>.hlo.txt; the rust runtime loads them by the
+# same names (rust/src/runtime/artifacts.rs keeps the mirror list).
+# ---------------------------------------------------------------------------
+
+# Shapes for the AOT executables. Small enough that interpret-mode Pallas
+# lowering and CPU execution stay fast, big enough to be a real workload
+# step (N*D = 2M f32 = 8 MB of paged batch data per logreg step).
+LOGREG_N, LOGREG_D = 4096, 256
+KMEANS_N, KMEANS_D, KMEANS_K = 4096, 64, 16
+TEXTRANK_N = 1024
+GBOOST_N, GBOOST_D = 4096, 64
+RF_N, RF_D, RF_K = 4096, 64, 32
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+ARTIFACTS = {
+    "logreg_step": (
+        logreg_step,
+        lambda: (
+            _f32(LOGREG_D),
+            _f32(LOGREG_N, LOGREG_D),
+            _f32(LOGREG_N),
+            _f32(),
+        ),
+    ),
+    "kmeans_step": (
+        kmeans_step,
+        lambda: (_f32(KMEANS_N, KMEANS_D), _f32(KMEANS_K, KMEANS_D)),
+    ),
+    "textrank_step": (
+        textrank_step,
+        lambda: (_f32(TEXTRANK_N, TEXTRANK_N), _f32(TEXTRANK_N), _f32(1)),
+    ),
+    "gboost_stump_step": (
+        gboost_stump_step,
+        lambda: (_f32(GBOOST_N, GBOOST_D), _f32(GBOOST_N)),
+    ),
+    "rf_proximity_step": (
+        rf_proximity_step,
+        lambda: (_f32(RF_N, RF_D), _f32(RF_K, RF_D)),
+    ),
+}

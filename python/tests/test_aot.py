@@ -1,0 +1,52 @@
+# AOT pipeline tests: manifest, filtering, HLO-text invariants that the
+# rust loader depends on.
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile.aot import lower_one
+from compile.model import ARTIFACTS
+
+
+@pytest.mark.parametrize("name", sorted(ARTIFACTS))
+def test_hlo_text_is_loader_compatible(name):
+    text, meta = lower_one(name)
+    # The rust loader parses HLO *text*: must contain a module header and
+    # an ENTRY computation, and must not be a serialized proto blob.
+    assert text.startswith("HloModule"), text[:50]
+    assert "ENTRY" in text
+    assert "\x00" not in text
+    # inputs recorded for the manifest match the lowered signature
+    assert len(meta["inputs"]) >= 1
+    for inp in meta["inputs"]:
+        assert inp["dtype"] == "float32"
+
+
+def test_cli_writes_manifest_and_respects_only(tmp_path):
+    out = tmp_path / "arts"
+    subprocess.run(
+        [
+            sys.executable,
+            "-m",
+            "compile.aot",
+            "--out-dir",
+            str(out),
+            "--only",
+            "kmeans_step",
+        ],
+        check=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    files = sorted(os.listdir(out))
+    assert files == ["kmeans_step.hlo.txt", "manifest.json"]
+    manifest = json.loads((out / "manifest.json").read_text())
+    assert [m["name"] for m in manifest] == ["kmeans_step"]
+    assert manifest[0]["inputs"][0]["shape"] == [4096, 64]
+
+
+def test_every_artifact_name_is_a_valid_filename():
+    for name in ARTIFACTS:
+        assert name.isidentifier(), name

@@ -1,0 +1,128 @@
+# pytest: Pallas kernels vs pure-jnp ref — the CORE L1 correctness signal.
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile.kernels import kmeans, logreg, pagerank, ref
+
+RNG = np.random.default_rng(7)
+
+
+def randn(*shape):
+    return jnp.asarray(RNG.standard_normal(shape), jnp.float32)
+
+
+# ---------------------------------------------------------------- kmeans --
+
+
+@pytest.mark.parametrize("n,d,k", [(64, 8, 4), (256, 32, 16), (300, 17, 5)])
+def test_kmeans_dists_match_ref(n, d, k):
+    x, c = randn(n, d), randn(k, d)
+    got = kmeans.pairwise_sq_dists(x, c, block_n=64)
+    want = ref.pairwise_sq_dists(x, c)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("n,d,k", [(128, 16, 8), (77, 9, 3)])
+def test_kmeans_assign_matches_ref(n, d, k):
+    x, c = randn(n, d), randn(k, d)
+    got = kmeans.assign(x, c, block_n=64)
+    want = ref.kmeans_assign(x, c)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_kmeans_lloyd_step_matches_ref():
+    x, c = randn(200, 12), randn(6, 12)
+    a_got, c_got = kmeans.lloyd_step(x, c, block_n=64)
+    a_want, c_want = ref.kmeans_update(x, c)
+    assert np.array_equal(np.asarray(a_got), np.asarray(a_want))
+    assert_allclose(np.asarray(c_got), np.asarray(c_want), rtol=1e-5, atol=1e-5)
+
+
+def test_kmeans_converges_on_separated_blobs():
+    # Two well-separated blobs: one Lloyd step from mid-way centroids must
+    # land each centroid on its blob mean.
+    blob1 = randn(100, 4) * 0.1 + 10.0
+    blob2 = randn(100, 4) * 0.1 - 10.0
+    x = jnp.concatenate([blob1, blob2])
+    c0 = jnp.stack([jnp.full((4,), 5.0), jnp.full((4,), -5.0)])
+    _, c1 = kmeans.lloyd_step(x, c0, block_n=64)
+    assert_allclose(np.asarray(c1[0]), np.asarray(blob1.mean(0)), atol=1e-4)
+    assert_allclose(np.asarray(c1[1]), np.asarray(blob2.mean(0)), atol=1e-4)
+
+
+# ---------------------------------------------------------------- logreg --
+
+
+@pytest.mark.parametrize("n,d", [(128, 16), (513, 32), (1000, 7)])
+def test_logreg_forward_matches_ref(n, d):
+    w, x = randn(d), randn(n, d)
+    got = logreg.forward(w, x, block_n=128)
+    want = ref.logistic_fwd(w, x)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("n,d", [(128, 16), (513, 32), (100, 64)])
+def test_logreg_grad_matches_ref(n, d):
+    w, x = randn(d), randn(n, d)
+    y = jnp.asarray(RNG.integers(0, 2, n), jnp.float32)
+    got = logreg.grad(w, x, y, block_n=128)
+    want = ref.logistic_grad(w, x, y)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_logreg_grad_matches_jax_autodiff():
+    # The analytic-gradient kernel must agree with jax.grad of the loss.
+    n, d = 256, 24
+    w, x = randn(d), randn(n, d)
+    y = jnp.asarray(RNG.integers(0, 2, n), jnp.float32)
+    got = logreg.grad(w, x, y, block_n=64)
+    want = jax.grad(ref.logistic_loss)(w, x, y)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_logreg_sgd_descends():
+    n, d = 512, 8
+    w_true = randn(d)
+    x = randn(n, d)
+    y = (ref.logistic_fwd(w_true, x) > 0.5).astype(jnp.float32)
+    w = jnp.zeros(d)
+    losses = []
+    for _ in range(20):
+        w, loss = logreg.sgd_step(w, x, y, 1.0, block_n=128)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.7, losses
+
+
+# -------------------------------------------------------------- pagerank --
+
+
+@pytest.mark.parametrize("n", [64, 200, 512])
+def test_pagerank_step_matches_ref(n):
+    a = jnp.asarray(RNG.random((n, n)), jnp.float32)
+    a = a / a.sum(axis=0, keepdims=True)  # column-stochastic
+    r = jnp.full((n,), 1.0 / n)
+    got = pagerank.step(a, r, 0.85, block=64)
+    want = ref.pagerank_step(a, r, 0.85)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_pagerank_preserves_mass():
+    n = 128
+    a = jnp.asarray(RNG.random((n, n)), jnp.float32)
+    a = a / a.sum(axis=0, keepdims=True)
+    r = jnp.asarray(RNG.random(n), jnp.float32)
+    r = r / r.sum()
+    out = pagerank.step(a, r, 0.85, block=64)
+    assert_allclose(float(out.sum()), 1.0, rtol=1e-4)
+
+
+def test_pagerank_fixed_point_of_uniform_chain():
+    # Uniform column-stochastic matrix: uniform r is a fixed point.
+    n = 96
+    a = jnp.full((n, n), 1.0 / n, jnp.float32)
+    r = jnp.full((n,), 1.0 / n)
+    out = pagerank.step(a, r, 0.85, block=32)
+    assert_allclose(np.asarray(out), np.asarray(r), rtol=1e-5)

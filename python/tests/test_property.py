@@ -1,0 +1,89 @@
+# hypothesis sweeps: Pallas kernels vs ref across shapes/dtypes/blocks.
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import kmeans, logreg, pagerank, ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _arr(rng, shape, dtype):
+    a = rng.standard_normal(shape).astype(np.float32)
+    if dtype == "bf16":
+        # Round-trip through bfloat16 so both kernel and ref see the same
+        # quantized inputs; compute stays f32 in both paths.
+        a = np.asarray(jnp.asarray(a, jnp.bfloat16).astype(jnp.float32))
+    return jnp.asarray(a)
+
+
+@given(
+    n=st.integers(1, 400),
+    d=st.integers(1, 48),
+    k=st.integers(1, 12),
+    block=st.sampled_from([32, 64, 128]),
+    dtype=st.sampled_from(["f32", "bf16"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_kmeans_dists_sweep(n, d, k, block, dtype, seed):
+    rng = np.random.default_rng(seed)
+    x, c = _arr(rng, (n, d), dtype), _arr(rng, (k, d), dtype)
+    got = kmeans.pairwise_sq_dists(x, c, block_n=block)
+    want = ref.pairwise_sq_dists(x, c)
+    assert got.shape == (n, k)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-3)
+
+
+@given(
+    n=st.integers(1, 600),
+    d=st.integers(1, 64),
+    block=st.sampled_from([64, 128, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_logreg_forward_sweep(n, d, block, seed):
+    rng = np.random.default_rng(seed)
+    w, x = _arr(rng, (d,), "f32"), _arr(rng, (n, d), "f32")
+    got = logreg.forward(w, x, block_n=block)
+    want = ref.logistic_fwd(w, x)
+    assert got.shape == (n,)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@given(
+    n=st.integers(1, 600),
+    d=st.integers(1, 64),
+    block=st.sampled_from([64, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_logreg_grad_sweep(n, d, block, seed):
+    rng = np.random.default_rng(seed)
+    w, x = _arr(rng, (d,), "f32"), _arr(rng, (n, d), "f32")
+    y = jnp.asarray(rng.integers(0, 2, n), jnp.float32)
+    got = logreg.grad(w, x, y, block_n=block)
+    want = ref.logistic_grad(w, x, y)
+    assert got.shape == (d,)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-3, atol=1e-4)
+
+
+@given(
+    n=st.integers(2, 300),
+    block=st.sampled_from([32, 64, 128]),
+    alpha=st.floats(0.05, 0.99),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_pagerank_sweep(n, block, alpha, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.random((n, n)), jnp.float32)
+    a = a / a.sum(axis=0, keepdims=True)
+    r = jnp.asarray(rng.random(n), jnp.float32)
+    r = r / r.sum()
+    got = pagerank.step(a, r, alpha, block=block)
+    want = ref.pagerank_step(a, r, alpha)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+    # rank mass is conserved for any column-stochastic matrix
+    assert_allclose(float(got.sum()), 1.0, rtol=1e-3)

@@ -1,0 +1,140 @@
+//! `cargo bench --bench hotpath` — L3 hot-path micro-benchmarks backing
+//! the §Perf log in EXPERIMENTS.md: GPT radix ops, mempool alloc/reclaim,
+//! staging queue, zipfian sampling, histogram recording, fabric verbs and
+//! a full write-path iteration.
+
+use std::hint::black_box;
+
+use valet::backends::{valet::ValetBackend, ClusterState, PagingBackend};
+use valet::bench::timing::bench;
+use valet::config::Config;
+use valet::gpt::RadixGpt;
+use valet::mempool::Mempool;
+use valet::metrics::Histogram;
+use valet::queues::{StagingQueue, WriteSet};
+use valet::simnet::Fabric;
+use valet::util::{Rng, Zipfian};
+
+fn main() {
+    let mut results = Vec::new();
+
+    // GPT
+    {
+        let mut t = RadixGpt::new();
+        for p in 0..100_000u64 {
+            t.insert(p * 7, p as u32);
+        }
+        let mut i = 0u64;
+        results.push(bench("gpt/lookup_hit (100k keys)", 1_000_000, || {
+            i = (i + 1) % 100_000;
+            black_box(t.get(i * 7));
+        }));
+        let mut j = 0u64;
+        results.push(bench("gpt/insert+remove", 1_000_000, || {
+            j += 1;
+            let k = 1_000_000_000 + (j % 4096);
+            t.insert(k, 1);
+            black_box(t.remove(k));
+        }));
+        // the write path's actual pattern: 16 consecutive page inserts
+        // + lookups per 64 KB block (leaf-cache target)
+        let mut base = 2_000_000_000u64;
+        results.push(bench("gpt/sequential_block16", 200_000, || {
+            base += 16;
+            for p in base..base + 16 {
+                black_box(t.get(p));
+                t.insert(p, 1);
+            }
+        }));
+    }
+
+    // Mempool
+    {
+        let mut mp = Mempool::new(4096, 8192, 0.8, 1.0);
+        let mut p = 0u64;
+        results.push(bench("mempool/alloc+reclaim", 1_000_000, || {
+            p += 1;
+            if let Ok(a) = mp.alloc(p, 1 << 20) {
+                mp.mark_reclaimable(a.slot);
+            }
+            black_box(());
+        }));
+    }
+
+    // Staging queue
+    {
+        let mut q = StagingQueue::new();
+        let mut n = 0u64;
+        results.push(bench("staging/push+pop_batch", 300_000, || {
+            n += 1;
+            q.push(WriteSet {
+                page: n,
+                slots: vec![n as u32],
+                bytes: 4096,
+                enqueued_at: n,
+            });
+            if n % 8 == 0 {
+                black_box(q.pop_batch(1 << 19));
+            }
+        }));
+    }
+
+    // Zipfian + histogram
+    {
+        let z = Zipfian::new(10_000_000, 0.99);
+        let mut rng = Rng::new(1);
+        results.push(bench("zipfian/sample (10M keys)", 3_000_000, || {
+            black_box(z.sample_scattered(&mut rng));
+        }));
+        let mut h = Histogram::new();
+        let mut v = 1u64;
+        results.push(bench("histogram/record", 3_000_000, || {
+            v = v.wrapping_mul(6364136223846793005).wrapping_add(1);
+            h.record(black_box(v >> 40));
+        }));
+    }
+
+    // Fabric verb
+    {
+        let cfg = Config::default();
+        let mut f = Fabric::new(4, cfg.latency.clone());
+        let (t, _) = f.ensure_connected(0, 0, 1);
+        let mut now = t;
+        results.push(bench("fabric/rdma_write(4k)", 1_000_000, || {
+            let d = f.rdma_write(now, 0, 1, 4096);
+            now = d.end;
+            black_box(d);
+        }));
+    }
+
+    // Full Valet write path (sim)
+    {
+        let mut cfg = Config::default();
+        cfg.cluster.nodes = 4;
+        cfg.valet.mr_block_bytes = 64 << 20;
+        cfg.valet.min_pool_pages = 1 << 16;
+        cfg.valet.max_pool_pages = 1 << 16;
+        let mut cl = ClusterState::new(&cfg);
+        let mut be = ValetBackend::new(&cfg);
+        let mut now = 0;
+        let mut p = 0u64;
+        results.push(bench("valet/write_path e2e", 200_000, || {
+            p = (p + 16) % (1 << 14);
+            let a = be.write(&mut cl, now, p, 65536);
+            now = a.end;
+            black_box(a.end);
+        }));
+        let mut rp = 0u64;
+        results.push(bench("valet/read_path local hit", 500_000, || {
+            rp = (rp + 1) % (1 << 14);
+            let a = be.read(&mut cl, now, rp);
+            now = a.end;
+            black_box(a.end);
+        }));
+    }
+
+    println!("\n=== hotpath results ===");
+    for r in &results {
+        println!("{}", r.render());
+    }
+}

@@ -1,0 +1,24 @@
+//! `cargo bench --bench paper_tables` — end-to-end regeneration of every
+//! paper table/figure at small scale, with wall-clock timing per
+//! experiment (the "one criterion bench per paper table" requirement,
+//! adapted to the offline toolchain: criterion is unavailable, so this
+//! is a plain harness=false bench binary).
+
+use valet::bench::experiments::{all_ids, run, Scale};
+
+fn main() {
+    let scale = Scale::small();
+    println!("paper-table regeneration bench (small scale)\n");
+    let mut total = 0.0;
+    for id in all_ids() {
+        let t0 = std::time::Instant::now();
+        let report = run(id, &scale).expect("known id");
+        let dt = t0.elapsed().as_secs_f64();
+        total += dt;
+        println!(
+            "bench {id:<10} {dt:>8.2}s   ({} rows)",
+            report.rows.len()
+        );
+    }
+    println!("\ntotal {total:.2}s");
+}

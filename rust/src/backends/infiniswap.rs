@@ -1,0 +1,355 @@
+//! Infiniswap-like baseline [6]: the state-of-the-art remote paging
+//! system the paper compares against.
+//!
+//! Behavioral model (from the paper's §2.1 baseline prototype and
+//! Table 7b):
+//! * One-sided RDMA, slab (MR block) granularity, power-of-two-choices
+//!   placement with **dynamic** connection + mapping.
+//! * The RDMA send is **on the write critical path**: a write completes
+//!   when its WC is polled.
+//! * During a connection/mapping window, traffic targeting the unmapped
+//!   slab is **redirected to disk** — those pages' later reads also come
+//!   from disk ("we observe disk access increases during connection and
+//!   mapping setup", §2.1; the 6–8 % disk fractions of Table 7b).
+//! * Asynchronous local disk backup of remotely-written pages.
+//! * Eviction deletes the slab (batched random query selection); reads of
+//!   deleted data fall to disk (§2.3).
+
+use std::collections::HashSet;
+
+use super::{Access, ClusterState, PagingBackend, PressureOutcome, Source, Unit, UnitMap};
+use crate::config::{Config, LatencyConfig, ValetConfig};
+use crate::eviction::{BatchedQueryRandom, VictimPolicy};
+use crate::metrics::RunMetrics;
+use crate::placement::{Placement, PowerOfTwo};
+use crate::replication::choose_replicas;
+use crate::sim::Ns;
+use crate::{pages_for, NodeId, PAGE_SIZE};
+
+/// The Infiniswap-like backend.
+pub struct InfiniswapBackend {
+    lat: LatencyConfig,
+    #[allow(dead_code)]
+    vcfg: ValetConfig,
+    units: UnitMap,
+    placement: PowerOfTwo,
+    remote_ready: HashSet<u64>,
+    disk_valid: HashSet<u64>,
+    victim_policy: BatchedQueryRandom,
+    metrics: RunMetrics,
+}
+
+impl InfiniswapBackend {
+    /// Build from config (shares Valet's sizing knobs where applicable —
+    /// Infiniswap also uses ~1 GB slabs).
+    pub fn new(cfg: &Config) -> Self {
+        InfiniswapBackend {
+            lat: cfg.latency.clone(),
+            vcfg: cfg.valet.clone(),
+            units: UnitMap::new(cfg.valet.mr_block_bytes),
+            placement: PowerOfTwo::new(cfg.cluster.seed ^ 0x1F1),
+            remote_ready: HashSet::new(),
+            disk_valid: HashSet::new(),
+            victim_policy: BatchedQueryRandom::new(
+                cfg.cluster.seed ^ 0x2F2,
+                4,
+                2 * cfg.latency.rdma_write_base + cfg.latency.two_sided_extra,
+            ),
+            metrics: RunMetrics::default(),
+        }
+    }
+
+    /// Start mapping a unit in the background; returns `ready_at`.
+    fn start_mapping(
+        &mut self,
+        cl: &mut ClusterState,
+        now: Ns,
+        unit: u64,
+    ) -> Ns {
+        let cands = cl.candidates();
+        let primary = self
+            .placement
+            .pick(&cands)
+            .expect("cluster has at least one peer");
+        let cand_nodes: Vec<NodeId> = cands.iter().map(|c| c.node).collect();
+        let nodes = choose_replicas(cl.sender, primary, &cand_nodes, 1);
+        let (tc, _) = cl.fabric.ensure_connected(now, cl.sender, nodes[0]);
+        let ready = cl.fabric.map_mr(tc, cl.sender);
+        let blocks = nodes
+            .iter()
+            .map(|&n| {
+                cl.mrpools[n].register(cl.sender, self.units.unit_bytes, ready)
+            })
+            .collect();
+        self.units.insert(
+            unit,
+            Unit {
+                nodes,
+                blocks,
+                ready_at: ready,
+                wlocked_until: 0,
+                alive: true,
+            },
+        );
+        ready
+    }
+
+    /// Redirect a write to disk (blocking) during an unmapped window.
+    fn disk_write(
+        &mut self,
+        cl: &mut ClusterState,
+        now: Ns,
+        page: u64,
+        bytes: u64,
+    ) -> Access {
+        let end = cl.disks[cl.sender].write(now, bytes);
+        for p in page..page + pages_for(bytes) {
+            self.disk_valid.insert(p);
+            self.remote_ready.remove(&p);
+        }
+        self.metrics.disk_writes += 1;
+        self.metrics.write_parts.add("disk", end - now);
+        self.metrics.write_latency.record(end - now);
+        Access {
+            end,
+            source: Source::Disk,
+        }
+    }
+}
+
+impl PagingBackend for InfiniswapBackend {
+    fn write(
+        &mut self,
+        cl: &mut ClusterState,
+        now: Ns,
+        page: u64,
+        bytes: u64,
+    ) -> Access {
+        let unit = self.units.unit_of(page);
+        let ready = match self.units.get(unit) {
+            Some(u) if u.alive => u.ready_at,
+            _ => self.start_mapping(cl, now, unit),
+        };
+        if now < ready {
+            // connection/mapping window: redirect to disk (§2.1)
+            return self.disk_write(cl, now, page, bytes);
+        }
+        // mapped: copy into the shared BIO/MR buffer, then a synchronous
+        // one-sided write — both on the critical path (Table 7b).
+        let mut t = now + self.lat.copy_fixed_slow;
+        self.metrics
+            .write_parts
+            .add("copy", self.lat.copy_fixed_slow);
+        t += self.lat.mrpool_get_slow;
+        self.metrics
+            .write_parts
+            .add("mrpool", self.lat.mrpool_get_slow);
+        let primary = self.units.get(unit).unwrap().nodes[0];
+        let pblock = self.units.get(unit).unwrap().blocks[0];
+        let verb = cl.fabric.rdma_write(t, cl.sender, primary, bytes);
+        self.metrics.write_parts.add("rdma", verb.end - t);
+        cl.mrpools[primary].touch_write(pblock, verb.end);
+        for p in page..page + pages_for(bytes) {
+            self.remote_ready.insert(p);
+        }
+        // async disk backup (not on the critical path)
+        cl.disks[cl.sender].write_async(verb.end, bytes);
+        for p in page..page + pages_for(bytes) {
+            self.disk_valid.insert(p);
+        }
+        self.metrics.write_latency.record(verb.end - now);
+        Access {
+            end: verb.end,
+            source: Source::Remote,
+        }
+    }
+
+    fn read(&mut self, cl: &mut ClusterState, now: Ns, page: u64) -> Access {
+        let unit = self.units.unit_of(page);
+        let remote_ok = self
+            .units
+            .get(unit)
+            .map(|u| u.alive && now >= u.ready_at)
+            .unwrap_or(false)
+            && self.remote_ready.contains(&page);
+        if remote_ok {
+            let u = self.units.get(unit).unwrap();
+            let primary = u.nodes[0];
+            let t0 = now + self.lat.mrpool_get;
+            self.metrics
+                .read_parts
+                .add("mrpool", self.lat.mrpool_get);
+            let verb = cl.fabric.rdma_read(t0, cl.sender, primary, PAGE_SIZE);
+            self.metrics.read_parts.add("rdma", verb.end - t0);
+            let end = verb.end + self.lat.copy_read_page;
+            self.metrics
+                .read_parts
+                .add("copy", self.lat.copy_read_page);
+            self.metrics.remote_hits += 1;
+            self.metrics.read_latency.record(end - now);
+            return Access {
+                end,
+                source: Source::Remote,
+            };
+        }
+        // disk path (redirected writes, evicted slabs, not-yet-mapped)
+        let end = cl.disks[cl.sender].read(now, PAGE_SIZE);
+        self.metrics.read_parts.add("disk", end - now);
+        self.metrics.disk_reads += 1;
+        self.metrics.read_latency.record(end - now);
+        Access {
+            end,
+            source: Source::Disk,
+        }
+    }
+
+    fn pump(&mut self, _cl: &mut ClusterState, _now: Ns) {
+        // no background machinery beyond what write() already charged
+    }
+
+    fn remote_pressure(
+        &mut self,
+        cl: &mut ClusterState,
+        now: Ns,
+        node: NodeId,
+        bytes: u64,
+    ) -> PressureOutcome {
+        // §2.3: select via batched random queries, then DELETE the slab.
+        let mut out = PressureOutcome {
+            done_at: now,
+            ..Default::default()
+        };
+        let mut t = now;
+        while out.reclaimed_bytes < bytes {
+            let choice = match self.victim_policy.select(&cl.mrpools[node], t)
+            {
+                Some(c) => c,
+                None => break,
+            };
+            t += choice.selection_cost; // linear query latency (§2.3)
+            let released = match cl.mrpools[node].release(choice.block) {
+                Some(b) => b,
+                None => break,
+            };
+            if let Some(unit) = self.units.unit_of_block(node, choice.block)
+            {
+                if let Some(u) = self.units.get_mut(unit) {
+                    u.alive = false;
+                }
+                // all pages of the unit now fall back to disk
+                let first_page =
+                    unit * self.units.unit_bytes / PAGE_SIZE;
+                let npages = self.units.unit_bytes / PAGE_SIZE;
+                for p in first_page..first_page + npages {
+                    self.remote_ready.remove(&p);
+                }
+            }
+            out.deleted += 1;
+            out.reclaimed_bytes += released.bytes;
+            out.done_at = t;
+        }
+        out
+    }
+
+    fn metrics(&self) -> &RunMetrics {
+        &self.metrics
+    }
+
+    fn metrics_mut(&mut self) -> &mut RunMetrics {
+        &mut self.metrics
+    }
+
+    fn name(&self) -> &'static str {
+        "Infiniswap"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::sim::{ms, us};
+
+    fn setup() -> (ClusterState, InfiniswapBackend) {
+        let mut cfg = Config::default();
+        cfg.cluster.nodes = 4;
+        cfg.valet.mr_block_bytes = 1 << 20;
+        (ClusterState::new(&cfg), InfiniswapBackend::new(&cfg))
+    }
+
+    #[test]
+    fn first_write_redirects_to_disk() {
+        let (mut cl, mut be) = setup();
+        let a = be.write(&mut cl, 0, 0, 64 * 1024);
+        assert_eq!(a.source, Source::Disk);
+        assert!(a.end >= ms(8)); // at least one disk service
+        assert_eq!(be.metrics().disk_writes, 1);
+    }
+
+    #[test]
+    fn writes_after_mapping_use_rdma_synchronously() {
+        let (mut cl, mut be) = setup();
+        let _ = be.write(&mut cl, 0, 0, 64 * 1024);
+        // past the connection+mapping window (~263 ms)
+        let t = ms(300);
+        let a = be.write(&mut cl, t, 16, 64 * 1024);
+        assert_eq!(a.source, Source::Remote);
+        let lat = a.end - t;
+        // copy 37.57 + mrpool 8.37 + rdma(64 KB) ≈ 9.9 ⇒ ~56 µs. (The
+        // paper's Table 7b shows 99.45 µs with its 512 KB RDMA message;
+        // the composition — copy+mrpool+rdma, no disk — is what matters.)
+        assert!((45_000.0..120_000.0).contains(&(lat as f64)), "{lat}");
+        let parts = &be.metrics().write_parts;
+        assert!(parts.sum("copy") > 0 && parts.sum("rdma") > 0);
+    }
+
+    #[test]
+    fn reads_of_redirected_pages_hit_disk() {
+        let (mut cl, mut be) = setup();
+        let a = be.write(&mut cl, 0, 0, 64 * 1024); // disk redirect
+        let r = be.read(&mut cl, a.end, 0);
+        assert_eq!(r.source, Source::Disk);
+        assert!(be.metrics().disk_reads == 1);
+    }
+
+    #[test]
+    fn reads_of_rdma_written_pages_are_fast() {
+        let (mut cl, mut be) = setup();
+        let _ = be.write(&mut cl, 0, 0, 64 * 1024);
+        let t = ms(300);
+        let w = be.write(&mut cl, t, 16, 64 * 1024);
+        let r = be.read(&mut cl, w.end, 16);
+        assert_eq!(r.source, Source::Remote);
+        assert!(r.end - w.end < us(50));
+    }
+
+    #[test]
+    fn eviction_deletes_and_reads_fall_to_disk() {
+        let (mut cl, mut be) = setup();
+        let _ = be.write(&mut cl, 0, 0, 64 * 1024);
+        let t = ms(300);
+        let w = be.write(&mut cl, t, 16, 64 * 1024);
+        let holder = be.units.get(0).unwrap().nodes[0];
+        let out = be.remote_pressure(&mut cl, w.end, holder, 1);
+        assert_eq!(out.deleted, 1);
+        assert!(out.done_at > w.end, "query cost must be charged");
+        let r = be.read(&mut cl, out.done_at, 16);
+        assert_eq!(r.source, Source::Disk);
+    }
+
+    #[test]
+    fn write_latency_dominated_by_disk_share() {
+        // Mix of redirected + rdma writes: average write latency should
+        // be pulled up by the disk share, as in Table 7b.
+        let (mut cl, mut be) = setup();
+        let mut t = 0;
+        for i in 0..50u64 {
+            let a = be.write(&mut cl, t, i * 16, 64 * 1024);
+            t = a.end;
+        }
+        let m = be.metrics();
+        assert!(m.disk_writes >= 1);
+        let disk_share = m.write_parts.share("disk");
+        assert!(disk_share > 0.5, "disk share {disk_share}");
+    }
+}

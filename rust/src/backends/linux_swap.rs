@@ -1,0 +1,122 @@
+//! Conventional OS swap: every swap-out/in is a blocking disk I/O on the
+//! local HDD. The paper's "Linux" baseline — the 100×-class loser in
+//! Tables 5/6.
+
+use std::collections::HashSet;
+
+use super::{Access, ClusterState, PagingBackend, PressureOutcome, Source};
+use crate::metrics::RunMetrics;
+use crate::sim::Ns;
+use crate::{pages_for, NodeId, PAGE_SIZE};
+
+/// The disk-swap backend.
+pub struct LinuxSwapBackend {
+    swapped: HashSet<u64>,
+    metrics: RunMetrics,
+}
+
+impl LinuxSwapBackend {
+    /// Build (config carries the disk latency model via ClusterState).
+    pub fn new(_cfg: &crate::config::Config) -> Self {
+        LinuxSwapBackend {
+            swapped: HashSet::new(),
+            metrics: RunMetrics::default(),
+        }
+    }
+}
+
+impl PagingBackend for LinuxSwapBackend {
+    fn write(
+        &mut self,
+        cl: &mut ClusterState,
+        now: Ns,
+        page: u64,
+        bytes: u64,
+    ) -> Access {
+        let end = cl.disks[cl.sender].write(now, bytes);
+        for p in page..page + pages_for(bytes) {
+            self.swapped.insert(p);
+        }
+        self.metrics.disk_writes += 1;
+        self.metrics.write_parts.add("disk", end - now);
+        self.metrics.write_latency.record(end - now);
+        Access {
+            end,
+            source: Source::Disk,
+        }
+    }
+
+    fn read(&mut self, cl: &mut ClusterState, now: Ns, _page: u64) -> Access {
+        let end = cl.disks[cl.sender].read(now, PAGE_SIZE);
+        self.metrics.disk_reads += 1;
+        self.metrics.read_parts.add("disk", end - now);
+        self.metrics.read_latency.record(end - now);
+        Access {
+            end,
+            source: Source::Disk,
+        }
+    }
+
+    fn pump(&mut self, _cl: &mut ClusterState, _now: Ns) {}
+
+    fn remote_pressure(
+        &mut self,
+        _cl: &mut ClusterState,
+        now: Ns,
+        _node: NodeId,
+        _bytes: u64,
+    ) -> PressureOutcome {
+        // no remote memory to reclaim
+        PressureOutcome {
+            done_at: now,
+            ..Default::default()
+        }
+    }
+
+    fn metrics(&self) -> &RunMetrics {
+        &self.metrics
+    }
+
+    fn metrics_mut(&mut self) -> &mut RunMetrics {
+        &mut self.metrics
+    }
+
+    fn name(&self) -> &'static str {
+        "Linux"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::sim::ms;
+
+    #[test]
+    fn everything_is_disk() {
+        let cfg = Config::default();
+        let mut cl = ClusterState::new(&cfg);
+        let mut be = LinuxSwapBackend::new(&cfg);
+        let w = be.write(&mut cl, 0, 0, 64 * 1024);
+        assert_eq!(w.source, Source::Disk);
+        assert!(w.end >= ms(8));
+        let r = be.read(&mut cl, w.end, 0);
+        assert_eq!(r.source, Source::Disk);
+        assert!(r.end - w.end >= ms(8));
+        assert_eq!(be.metrics().disk_reads, 1);
+        assert_eq!(be.metrics().disk_writes, 1);
+    }
+
+    #[test]
+    fn convoys_under_burst() {
+        let cfg = Config::default();
+        let mut cl = ClusterState::new(&cfg);
+        let mut be = LinuxSwapBackend::new(&cfg);
+        let mut last = 0;
+        for i in 0..20 {
+            last = be.write(&mut cl, 0, i, PAGE_SIZE).end;
+        }
+        // 20 queued disk I/Os: last one sees ~20 service times
+        assert!(last >= 20 * ms(8));
+    }
+}

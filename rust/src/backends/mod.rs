@@ -1,0 +1,318 @@
+//! Paging backends: the pluggable swap targets the container model pages
+//! against. Four implementations, matching the paper's evaluation:
+//!
+//! * [`valet::ValetBackend`] — the paper's system.
+//! * [`infiniswap::InfiniswapBackend`] — one-sided RDMA on the critical
+//!   path, disk redirect during connection/mapping windows, random
+//!   delete-on-eviction (Infiniswap [6]).
+//! * [`nbdx::NbdxBackend`] — two-sided verbs with bounded message pools
+//!   and a remote ramdisk (nbdX [11]).
+//! * [`linux_swap::LinuxSwapBackend`] — conventional OS swap to disk.
+//!
+//! All backends run against the same [`ClusterState`] substrate (fabric +
+//! disks + MR pools + activity monitors), so comparisons are
+//! apples-to-apples.
+
+pub mod infiniswap;
+pub mod linux_swap;
+pub mod nbdx;
+pub mod valet;
+
+use std::collections::HashMap;
+
+use crate::config::{BackendKind, Config};
+use crate::metrics::RunMetrics;
+use crate::mrpool::{ActivityMonitor, MrBlockId, MrBlockPool};
+use crate::sim::Ns;
+use crate::simdisk::Disk;
+use crate::simnet::Fabric;
+use crate::NodeId;
+
+/// Where a completed access was ultimately served from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Source {
+    /// The sender's local mempool (Valet only).
+    LocalPool,
+    /// A remote node's MR memory.
+    Remote,
+    /// Local disk.
+    Disk,
+}
+
+/// Completion of one block-device request.
+#[derive(Clone, Copy, Debug)]
+pub struct Access {
+    /// Virtual completion time.
+    pub end: Ns,
+    /// Serving tier.
+    pub source: Source,
+}
+
+/// The shared simulated substrate every backend runs on.
+#[derive(Clone, Debug)]
+pub struct ClusterState {
+    /// RDMA fabric between all nodes.
+    pub fabric: Fabric,
+    /// One disk per node.
+    pub disks: Vec<Disk>,
+    /// One MR block pool per node (receiver module state).
+    pub mrpools: Vec<MrBlockPool>,
+    /// One activity monitor per node.
+    pub monitors: Vec<ActivityMonitor>,
+    /// The sender node (our container host).
+    pub sender: NodeId,
+}
+
+impl ClusterState {
+    /// Build from config: `cfg.cluster.nodes` nodes, node 0 the sender.
+    pub fn new(cfg: &Config) -> Self {
+        let n = cfg.cluster.nodes.max(2);
+        ClusterState {
+            fabric: Fabric::new(n, cfg.latency.clone()),
+            disks: (0..n).map(|_| Disk::new(&cfg.latency)).collect(),
+            mrpools: (0..n).map(|_| MrBlockPool::new()).collect(),
+            monitors: (0..n)
+                .map(|_| {
+                    ActivityMonitor::new(
+                        cfg.cluster.node_mem_bytes,
+                        cfg.cluster.node_mem_bytes / 32, // 2 GB reserve @64 GB
+                    )
+                })
+                .collect(),
+            sender: 0,
+        }
+    }
+
+    /// Peer nodes (everyone but the sender).
+    pub fn peers(&self) -> impl Iterator<Item = NodeId> + '_ {
+        (0..self.disks.len()).filter(move |&n| n != self.sender)
+    }
+
+    /// Free bytes a peer can donate right now.
+    pub fn donatable(&self, node: NodeId) -> u64 {
+        self.monitors[node].free_for_mr(self.mrpools[node].registered_bytes())
+    }
+
+    /// Placement candidates over all peers.
+    pub fn candidates(&self) -> Vec<crate::placement::Candidate> {
+        self.peers()
+            .map(|n| crate::placement::Candidate {
+                node: n,
+                free_bytes: self.donatable(n),
+            })
+            .collect()
+    }
+}
+
+/// Outcome of a remote-pressure (eviction) episode.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PressureOutcome {
+    /// Bytes reclaimed on the pressured node.
+    pub reclaimed_bytes: u64,
+    /// Blocks migrated (Valet).
+    pub migrated: u32,
+    /// Blocks deleted (baselines).
+    pub deleted: u32,
+    /// Virtual time the reclamation finished.
+    pub done_at: Ns,
+}
+
+/// A paging backend: the swap device the container faults against.
+/// `Send` so the serve mode can own one on a coordinator thread.
+pub trait PagingBackend: Send {
+    /// Swap OUT: persist `bytes` starting at `page` (dirty eviction from
+    /// the container). Returns completion as observed by the faulting
+    /// thread.
+    fn write(
+        &mut self,
+        cl: &mut ClusterState,
+        now: Ns,
+        page: u64,
+        bytes: u64,
+    ) -> Access;
+
+    /// Swap IN: fetch one page (4 KB) at `page`.
+    fn read(&mut self, cl: &mut ClusterState, now: Ns, page: u64) -> Access;
+
+    /// Drive background machinery (remote sender thread, pool resize) up
+    /// to virtual time `now`.
+    fn pump(&mut self, cl: &mut ClusterState, now: Ns);
+
+    /// A peer node needs `bytes` of its donated memory back.
+    fn remote_pressure(
+        &mut self,
+        cl: &mut ClusterState,
+        now: Ns,
+        node: NodeId,
+        bytes: u64,
+    ) -> PressureOutcome;
+
+    /// Run metrics.
+    fn metrics(&self) -> &RunMetrics;
+
+    /// Mutable run metrics (workload drivers record op latencies here).
+    fn metrics_mut(&mut self) -> &mut RunMetrics;
+
+    /// Display name matching the paper's figures.
+    fn name(&self) -> &'static str;
+}
+
+/// Build a backend by kind.
+pub fn build(kind: BackendKind, cfg: &Config) -> Box<dyn PagingBackend> {
+    match kind {
+        BackendKind::Valet => Box::new(valet::ValetBackend::new(cfg)),
+        BackendKind::Infiniswap => {
+            Box::new(infiniswap::InfiniswapBackend::new(cfg))
+        }
+        BackendKind::Nbdx => Box::new(nbdx::NbdxBackend::new(cfg)),
+        BackendKind::LinuxSwap => {
+            Box::new(linux_swap::LinuxSwapBackend::new(cfg))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Shared remote-address-space bookkeeping
+// ---------------------------------------------------------------------
+
+/// State of one unit of the device's address space on the remote side.
+#[derive(Clone, Debug)]
+pub struct Unit {
+    /// Replica locations, primary first.
+    pub nodes: Vec<NodeId>,
+    /// MR block ids, parallel to `nodes`.
+    pub blocks: Vec<MrBlockId>,
+    /// Mapping (incl. connection) completes at this time; I/O targeting
+    /// the unit before then must detour (mempool for Valet, disk for
+    /// Infiniswap).
+    pub ready_at: Ns,
+    /// While migrating, writes may not be sent until this time.
+    pub wlocked_until: Ns,
+    /// Set false when a baseline deletes the remote copy (reads fall to
+    /// disk afterwards).
+    pub alive: bool,
+}
+
+/// Maps address-space units (of `unit_bytes` each) to remote placements —
+/// the §4.3 "global page address … dynamically mapped" table.
+#[derive(Clone, Debug)]
+pub struct UnitMap {
+    /// Unit granularity (the remote MR block size).
+    pub unit_bytes: u64,
+    units: HashMap<u64, Unit>,
+}
+
+impl UnitMap {
+    /// Empty map with the given unit size.
+    pub fn new(unit_bytes: u64) -> Self {
+        UnitMap {
+            unit_bytes: unit_bytes.max(crate::PAGE_SIZE),
+            units: HashMap::new(),
+        }
+    }
+
+    /// Unit index of a page.
+    pub fn unit_of(&self, page: u64) -> u64 {
+        page * crate::PAGE_SIZE / self.unit_bytes
+    }
+
+    /// Look up a unit.
+    pub fn get(&self, unit: u64) -> Option<&Unit> {
+        self.units.get(&unit)
+    }
+
+    /// Mutable lookup.
+    pub fn get_mut(&mut self, unit: u64) -> Option<&mut Unit> {
+        self.units.get_mut(&unit)
+    }
+
+    /// Insert a mapping.
+    pub fn insert(&mut self, unit: u64, u: Unit) {
+        self.units.insert(unit, u);
+    }
+
+    /// Iterate all mapped units.
+    pub fn iter(&self) -> impl Iterator<Item = (&u64, &Unit)> {
+        self.units.iter()
+    }
+
+    /// Mutable iteration.
+    pub fn iter_mut(&mut self) -> impl Iterator<Item = (&u64, &mut Unit)> {
+        self.units.iter_mut()
+    }
+
+    /// Units mapped.
+    pub fn len(&self) -> usize {
+        self.units.len()
+    }
+
+    /// True if nothing mapped yet.
+    pub fn is_empty(&self) -> bool {
+        self.units.is_empty()
+    }
+
+    /// Find the unit (id) whose primary block is `block` on `node`.
+    pub fn unit_of_block(
+        &self,
+        node: NodeId,
+        block: MrBlockId,
+    ) -> Option<u64> {
+        self.units.iter().find_map(|(&u, unit)| {
+            unit.nodes
+                .iter()
+                .zip(&unit.blocks)
+                .any(|(&n, &b)| n == node && b == block)
+                .then_some(u)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    #[test]
+    fn cluster_state_shape() {
+        let cfg = Config::default();
+        let cl = ClusterState::new(&cfg);
+        assert_eq!(cl.disks.len(), cfg.cluster.nodes);
+        assert_eq!(cl.peers().count(), cfg.cluster.nodes - 1);
+        assert!(cl.donatable(1) > 0);
+    }
+
+    #[test]
+    fn unit_map_page_math() {
+        let m = UnitMap::new(1 << 20); // 1 MB units = 256 pages
+        assert_eq!(m.unit_of(0), 0);
+        assert_eq!(m.unit_of(255), 0);
+        assert_eq!(m.unit_of(256), 1);
+    }
+
+    #[test]
+    fn unit_of_block_reverse_lookup() {
+        let mut m = UnitMap::new(1 << 20);
+        m.insert(
+            3,
+            Unit {
+                nodes: vec![2, 4],
+                blocks: vec![11, 12],
+                ready_at: 0,
+                wlocked_until: 0,
+                alive: true,
+            },
+        );
+        assert_eq!(m.unit_of_block(2, 11), Some(3));
+        assert_eq!(m.unit_of_block(4, 12), Some(3));
+        assert_eq!(m.unit_of_block(2, 12), None);
+    }
+
+    #[test]
+    fn build_constructs_all_kinds() {
+        let cfg = Config::default();
+        for kind in BackendKind::all() {
+            let b = build(kind, &cfg);
+            assert_eq!(b.name(), kind.name());
+        }
+    }
+}

@@ -1,0 +1,46 @@
+//! Experiment harness: one function per paper table/figure, shared by the
+//! `valet-bench` binary and the `cargo bench` targets. Each experiment
+//! builds scaled-down but shape-preserving versions of the paper's §6
+//! runs (records/ops scaled; latency model identical) and returns a
+//! printable report plus machine-readable rows.
+
+pub mod experiments;
+pub mod timing;
+
+/// A regenerated table/figure.
+#[derive(Clone, Debug)]
+pub struct Report {
+    /// Experiment id ("table1", "fig21", ...).
+    pub id: &'static str,
+    /// Human title (matches the paper artifact).
+    pub title: &'static str,
+    /// Column header.
+    pub header: Vec<&'static str>,
+    /// Data rows.
+    pub rows: Vec<Vec<String>>,
+    /// Free-form notes (observations the paper calls out).
+    pub notes: Vec<String>,
+}
+
+impl Report {
+    /// Render as an ASCII table with title + notes.
+    pub fn render(&self) -> String {
+        let mut s = format!("== {} — {} ==\n", self.id, self.title);
+        s.push_str(&crate::util::fmt::table(&self.header, &self.rows));
+        for n in &self.notes {
+            s.push_str(&format!("note: {n}\n"));
+        }
+        s
+    }
+
+    /// Render as CSV (for plotting).
+    pub fn to_csv(&self) -> String {
+        let mut s = self.header.join(",");
+        s.push('\n');
+        for r in &self.rows {
+            s.push_str(&r.join(","));
+            s.push('\n');
+        }
+        s
+    }
+}

@@ -1,0 +1,65 @@
+//! Wall-clock micro-benchmark helper (the offline build has no criterion;
+//! this provides the same measure-loop-report workflow for the hot-path
+//! benches and the §Perf iteration log).
+
+use std::time::Instant;
+
+/// Result of one micro-benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    /// Name.
+    pub name: String,
+    /// Iterations measured.
+    pub iters: u64,
+    /// Nanoseconds per iteration (median of 5 samples).
+    pub ns_per_iter: f64,
+}
+
+impl BenchResult {
+    /// "name: 123.4 ns/iter (x iters)".
+    pub fn render(&self) -> String {
+        format!(
+            "{:<40} {:>12.1} ns/iter   ({} iters)",
+            self.name, self.ns_per_iter, self.iters
+        )
+    }
+}
+
+/// Run `f` in a measured loop: warm up, then 5 samples of `iters`
+/// iterations; report the median sample. `f` should include a
+/// `std::hint::black_box` on its result.
+pub fn bench(name: &str, iters: u64, mut f: impl FnMut()) -> BenchResult {
+    // warmup
+    for _ in 0..iters / 10 + 1 {
+        f();
+    }
+    let mut samples = Vec::with_capacity(5);
+    for _ in 0..5 {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        samples.push(t0.elapsed().as_nanos() as f64 / iters as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        ns_per_iter: samples[2],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("noop-ish", 10_000, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(r.ns_per_iter >= 0.0);
+        assert!(r.ns_per_iter < 1_000_000.0);
+        assert!(r.render().contains("noop-ish"));
+    }
+}

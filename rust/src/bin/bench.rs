@@ -1,0 +1,61 @@
+//! `valet-bench` — regenerate every table and figure from the paper's
+//! evaluation (§6). See DESIGN.md §6 for the experiment index.
+//!
+//! ```text
+//! valet-bench all                 # every experiment, default scale
+//! valet-bench table1 fig21 ...    # selected experiments
+//! valet-bench all --small         # quick pass (CI)
+//! valet-bench all --csv results/  # also dump CSVs
+//! ```
+
+use std::process::ExitCode;
+
+use valet::bench::experiments::{all_ids, run, Scale};
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let small = args.iter().any(|a| a == "--small");
+    let csv_dir = args
+        .iter()
+        .position(|a| a == "--csv")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+    let scale = if small { Scale::small() } else { Scale::default() };
+    let mut ids: Vec<String> = args
+        .iter()
+        .filter(|a| !a.starts_with("--"))
+        .filter(|a| csv_dir.as_deref() != Some(a.as_str()))
+        .cloned()
+        .collect();
+    if ids.is_empty() || ids.iter().any(|i| i == "all") {
+        ids = all_ids().iter().map(|s| s.to_string()).collect();
+    }
+    for id in &ids {
+        let t0 = std::time::Instant::now();
+        match run(id, &scale) {
+            Some(report) => {
+                println!("{}", report.render());
+                eprintln!(
+                    "[{} regenerated in {:.1}s]\n",
+                    id,
+                    t0.elapsed().as_secs_f64()
+                );
+                if let Some(dir) = &csv_dir {
+                    let _ = std::fs::create_dir_all(dir);
+                    let path = format!("{dir}/{id}.csv");
+                    if std::fs::write(&path, report.to_csv()).is_ok() {
+                        eprintln!("wrote {path}");
+                    }
+                }
+            }
+            None => {
+                eprintln!(
+                    "unknown experiment '{id}' (known: {})",
+                    all_ids().join(" ")
+                );
+                return ExitCode::from(2);
+            }
+        }
+    }
+    ExitCode::SUCCESS
+}

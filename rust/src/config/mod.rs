@@ -1,0 +1,381 @@
+//! Configuration system: every latency constant, policy knob, cluster
+//! shape and workload parameter in one tree, loadable from a TOML-subset
+//! file (`--config path`) plus `section.key=value` CLI overrides.
+//!
+//! Defaults are calibrated to the paper's own measurements (Table 1 and
+//! Table 7) and evaluation setup (§6 "Setup"): 64 KB block I/O, 512 KB
+//! RDMA message, 1 GB MR block unit, 32-node cluster.
+
+mod toml;
+
+pub use toml::{parse_toml, Value};
+
+use crate::sim::{ms, us_f, Ns};
+
+/// Which paging backend to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// The paper's system (§3–§4).
+    Valet,
+    /// Infiniswap-like baseline [6]: one-sided RDMA on the critical path,
+    /// disk redirect during connection/mapping windows, delete-on-evict.
+    Infiniswap,
+    /// nbdX-like baseline [11]: two-sided verbs, bounded message pools,
+    /// remote ramdisk.
+    Nbdx,
+    /// Conventional OS swap to local disk.
+    LinuxSwap,
+}
+
+impl BackendKind {
+    /// Parse from CLI string.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "valet" => Some(Self::Valet),
+            "infiniswap" => Some(Self::Infiniswap),
+            "nbdx" => Some(Self::Nbdx),
+            "linux" | "linux_swap" | "swap" | "disk" => Some(Self::LinuxSwap),
+            _ => None,
+        }
+    }
+
+    /// Display name matching the paper's figures.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Valet => "Valet",
+            Self::Infiniswap => "Infiniswap",
+            Self::Nbdx => "nbdX",
+            Self::LinuxSwap => "Linux",
+        }
+    }
+
+    /// All four systems, in the order the paper's figures list them.
+    pub fn all() -> [BackendKind; 4] {
+        [Self::Nbdx, Self::Infiniswap, Self::Valet, Self::LinuxSwap]
+    }
+}
+
+/// Latency model, calibrated to the paper's Table 1 / Table 7. All values
+/// in ns; `*_per_byte` values are in ns per byte (f64 — sub-ns rates).
+#[derive(Clone, Debug)]
+pub struct LatencyConfig {
+    /// Radix-tree (GPT) insert on the write path (Table 7a: 23.9 µs).
+    pub radix_insert: Ns,
+    /// Radix-tree lookup on the read path (Table 7a: 1.39 µs).
+    pub radix_lookup: Ns,
+    /// Copy block-I/O buffer → local mempool, per byte (Table 7a:
+    /// 9.73 µs per 64 KB block ⇒ ~0.148 ns/B).
+    pub copy_per_byte: f64,
+    /// Fixed per-copy setup cost.
+    pub copy_base: Ns,
+    /// Enqueue a write set into the staging queue (Table 7a: 1.68 µs).
+    pub staging_enqueue: Ns,
+    /// Get a unit MR from the MR pool (Table 7a: 0.14 µs).
+    pub mrpool_get: Ns,
+    /// One-sided RDMA WRITE base latency (Table 1: 51.35 µs for the
+    /// 512 KB default message; we split into base + per-byte so different
+    /// message sizes sweep correctly in Figure 9).
+    pub rdma_write_base: Ns,
+    /// One-sided RDMA READ base latency (Table 1: 36.48 µs @ 4 KB page).
+    pub rdma_read_base: Ns,
+    /// RDMA wire time per byte (56 Gbps FDR ≈ 0.0903 ns/B effective —
+    /// calibrated so 512 KB WRITE lands on 51.35 µs with a 4 µs base).
+    pub rdma_per_byte: f64,
+    /// Extra round-trip + receiver-CPU latency for two-sided verbs (nbdX).
+    pub two_sided_extra: Ns,
+    /// QP connection establishment (Table 1: 200.668 ms).
+    pub connect: Ns,
+    /// Remote MR mapping: query N nodes, exchange keys (Table 1:
+    /// 62.276 ms).
+    pub map_mr: Ns,
+    /// Disk seek + rotational positioning per I/O.
+    pub disk_seek: Ns,
+    /// Disk transfer per byte (SATA HDD ≈ 100 MB/s ⇒ 10 ns/B).
+    pub disk_per_byte: f64,
+    /// Number of WQEs the RNIC caches before misses add latency [12].
+    pub wqe_cache_entries: usize,
+    /// Added latency per verb when the WQE cache thrashes.
+    pub wqe_miss_penalty: Ns,
+    /// Read-side copy of one 4 KB page out of the mempool (Table 7a:
+    /// 2.11 µs local hit / 2.13 µs remote).
+    pub copy_read_page: Ns,
+    /// Infiniswap's shared BIO/MR buffer copy (Table 7b: 37.57 µs —
+    /// larger than Valet's because the buffer is tied to the disk path).
+    pub copy_fixed_slow: Ns,
+    /// Infiniswap's MR-pool get under load (Table 7b: 8.37 µs on the
+    /// write path vs Valet's 0.14 µs).
+    pub mrpool_get_slow: Ns,
+}
+
+impl Default for LatencyConfig {
+    fn default() -> Self {
+        LatencyConfig {
+            radix_insert: us_f(23.9),
+            radix_lookup: us_f(1.39),
+            copy_per_byte: 9.73 * 1000.0 / (64.0 * 1024.0), // 9.73µs / 64KB
+            copy_base: 0,
+            staging_enqueue: us_f(1.68),
+            mrpool_get: us_f(0.14),
+            rdma_write_base: us_f(4.0),
+            rdma_read_base: us_f(36.3),
+            rdma_per_byte: (51.35 - 4.0) * 1000.0 / (512.0 * 1024.0),
+            two_sided_extra: us_f(25.0),
+            connect: us_f(200_668.0),
+            map_mr: us_f(62_276.0),
+            disk_seek: ms(8),
+            disk_per_byte: 10.0,
+            wqe_cache_entries: 256,
+            wqe_miss_penalty: us_f(10.0),
+            copy_read_page: us_f(2.11),
+            copy_fixed_slow: us_f(37.57),
+            mrpool_get_slow: us_f(8.37),
+        }
+    }
+}
+
+impl LatencyConfig {
+    /// Copy time for `bytes` bytes through the CPU.
+    pub fn copy(&self, bytes: u64) -> Ns {
+        self.copy_base + (self.copy_per_byte * bytes as f64) as Ns
+    }
+
+    /// One-sided RDMA WRITE service time for a message of `bytes`.
+    pub fn rdma_write(&self, bytes: u64) -> Ns {
+        self.rdma_write_base + (self.rdma_per_byte * bytes as f64) as Ns
+    }
+
+    /// One-sided RDMA READ service time.
+    pub fn rdma_read(&self, bytes: u64) -> Ns {
+        self.rdma_read_base + (self.rdma_per_byte * bytes as f64) as Ns
+    }
+
+    /// Disk service time for one I/O of `bytes`.
+    pub fn disk_io(&self, bytes: u64) -> Ns {
+        self.disk_seek + (self.disk_per_byte * bytes as f64) as Ns
+    }
+}
+
+/// Mempool cache-replacement policy. The paper uses LRU and names MRU as
+/// promising future work for repetitive access patterns (§6.2); both are
+/// implemented (see the `ablations` experiment).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Replacement {
+    /// Evict the least-recently-used reclaimable page (paper default).
+    Lru,
+    /// Evict the most-recently-used reclaimable page.
+    Mru,
+}
+
+/// Valet-specific policy knobs (§3.4, §4.1, Table 2).
+#[derive(Clone, Debug)]
+pub struct ValetConfig {
+    /// Guaranteed minimum mempool size (pages). `min_pool_pages` in §4.1.
+    pub min_pool_pages: u64,
+    /// Hard maximum (pages); the effective cap is
+    /// `min(max_pool_pages, host_free_fraction × host free pages)`.
+    pub max_pool_pages: u64,
+    /// Grow when usage exceeds this fraction of the current size (0.8).
+    pub grow_threshold: f64,
+    /// Cap relative to host free memory (0.5 = "50% of the total free
+    /// memory on the host node").
+    pub host_free_fraction: f64,
+    /// Block I/O request size in bytes (64 KB default; Figure 9 sweeps).
+    pub block_io_bytes: u64,
+    /// RDMA message size for coalesced batch sends (512 KB default).
+    pub rdma_msg_bytes: u64,
+    /// Unit MR block size on remote nodes (1 GB default).
+    pub mr_block_bytes: u64,
+    /// Number of remote copies of each page (1 = no extra replicas).
+    pub replicas: usize,
+    /// Also write pages to local disk (Table 3 fault-tolerance matrix).
+    pub disk_backup: bool,
+    /// Message coalescing + batch sending (§3.3). Disabling it sends one
+    /// RDMA message per block I/O — the ablation knob.
+    pub coalescing: bool,
+    /// Mempool replacement policy (LRU default; MRU per §6.2).
+    pub replacement: Replacement,
+}
+
+impl Default for ValetConfig {
+    fn default() -> Self {
+        ValetConfig {
+            min_pool_pages: 16 * 1024,        // 64 MB
+            max_pool_pages: 8 * 1024 * 1024,  // 32 GB cap
+            grow_threshold: 0.8,
+            host_free_fraction: 0.5,
+            block_io_bytes: 64 * 1024,
+            rdma_msg_bytes: 512 * 1024,
+            mr_block_bytes: 1 << 30,
+            replicas: 1,
+            disk_backup: false,
+            coalescing: true,
+            replacement: Replacement::Lru,
+        }
+    }
+}
+
+/// Cluster shape (§6 "Setup": 32 machines, 64 GB each).
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    /// Number of nodes (sender + peers; symmetric model §3.2).
+    pub nodes: usize,
+    /// Physical memory per node, bytes.
+    pub node_mem_bytes: u64,
+    /// Deterministic seed for placement and workload generation.
+    pub seed: u64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            nodes: 7, // 1 sender + 6 peers, the paper's Figure 4 setup
+            node_mem_bytes: 64 << 30,
+            seed: 0x0A1E7,
+        }
+    }
+}
+
+/// Everything together.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    /// Cluster shape.
+    pub cluster: ClusterConfig,
+    /// Latency model.
+    pub latency: LatencyConfig,
+    /// Valet policy knobs.
+    pub valet: ValetConfig,
+}
+
+impl Config {
+    /// Apply one `section.key = value` assignment; unknown keys error so
+    /// typos don't silently no-op.
+    pub fn set(&mut self, section: &str, key: &str, v: &Value) -> Result<(), String> {
+        let err = || format!("unknown config key {section}.{key}");
+        match section {
+            "cluster" => match key {
+                "nodes" => self.cluster.nodes = v.as_u64().ok_or_else(err)? as usize,
+                "node_mem_gb" => {
+                    self.cluster.node_mem_bytes = v.as_u64().ok_or_else(err)? << 30
+                }
+                "seed" => self.cluster.seed = v.as_u64().ok_or_else(err)?,
+                _ => return Err(err()),
+            },
+            "valet" => match key {
+                "min_pool_pages" => self.valet.min_pool_pages = v.as_u64().ok_or_else(err)?,
+                "max_pool_pages" => self.valet.max_pool_pages = v.as_u64().ok_or_else(err)?,
+                "grow_threshold" => self.valet.grow_threshold = v.as_f64().ok_or_else(err)?,
+                "host_free_fraction" => {
+                    self.valet.host_free_fraction = v.as_f64().ok_or_else(err)?
+                }
+                "block_io_kb" => self.valet.block_io_bytes = v.as_u64().ok_or_else(err)? << 10,
+                "rdma_msg_kb" => self.valet.rdma_msg_bytes = v.as_u64().ok_or_else(err)? << 10,
+                "mr_block_mb" => self.valet.mr_block_bytes = v.as_u64().ok_or_else(err)? << 20,
+                "replicas" => self.valet.replicas = v.as_u64().ok_or_else(err)? as usize,
+                "disk_backup" => self.valet.disk_backup = v.as_bool().ok_or_else(err)?,
+                "coalescing" => self.valet.coalescing = v.as_bool().ok_or_else(err)?,
+                "replacement" => {
+                    self.valet.replacement =
+                        match v.as_str().ok_or_else(err)? {
+                            "lru" => Replacement::Lru,
+                            "mru" => Replacement::Mru,
+                            _ => return Err(err()),
+                        }
+                }
+                _ => return Err(err()),
+            },
+            "latency" => {
+                let f = v.as_f64().ok_or_else(err)?;
+                let ns = us_f(f); // latency keys are specified in µs
+                match key {
+                    "radix_insert_us" => self.latency.radix_insert = ns,
+                    "radix_lookup_us" => self.latency.radix_lookup = ns,
+                    "staging_enqueue_us" => self.latency.staging_enqueue = ns,
+                    "mrpool_get_us" => self.latency.mrpool_get = ns,
+                    "rdma_write_base_us" => self.latency.rdma_write_base = ns,
+                    "rdma_read_base_us" => self.latency.rdma_read_base = ns,
+                    "two_sided_extra_us" => self.latency.two_sided_extra = ns,
+                    "connect_us" => self.latency.connect = ns,
+                    "map_mr_us" => self.latency.map_mr = ns,
+                    "disk_seek_us" => self.latency.disk_seek = ns,
+                    "wqe_miss_penalty_us" => self.latency.wqe_miss_penalty = ns,
+                    "rdma_per_byte_ns" => self.latency.rdma_per_byte = f,
+                    "copy_per_byte_ns" => self.latency.copy_per_byte = f,
+                    "disk_per_byte_ns" => self.latency.disk_per_byte = f,
+                    "wqe_cache_entries" => {
+                        self.latency.wqe_cache_entries = f as usize
+                    }
+                    _ => return Err(err()),
+                }
+            }
+            _ => return Err(format!("unknown config section {section}")),
+        }
+        Ok(())
+    }
+
+    /// Load from TOML-subset text.
+    pub fn from_toml(text: &str) -> Result<Self, String> {
+        let mut cfg = Config::default();
+        for ((section, key), value) in parse_toml(text)? {
+            cfg.set(&section, &key, &value)?;
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn from_file(path: &str) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {path}: {e}"))?;
+        Self::from_toml(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_table1() {
+        let l = LatencyConfig::default();
+        // RDMA WRITE of the default 512 KB message ≈ 51.35 µs
+        let w = l.rdma_write(512 * 1024);
+        assert!((w as f64 - 51_350.0).abs() < 200.0, "{w}");
+        // RDMA READ of a 4 KB page ≈ 36.48 µs
+        let r = l.rdma_read(4096);
+        assert!((r as f64 - 36_480.0).abs() < 400.0, "{r}");
+        // copy of a 64 KB block ≈ 9.73 µs
+        let c = l.copy(64 * 1024);
+        assert!((c as f64 - 9_730.0).abs() < 50.0, "{c}");
+        assert_eq!(l.connect, 200_668_000);
+        assert_eq!(l.map_mr, 62_276_000);
+    }
+
+    #[test]
+    fn toml_roundtrip_sets_fields() {
+        let cfg = Config::from_toml(
+            "[cluster]\nnodes = 12\nnode_mem_gb = 32\n\
+             [valet]\nblock_io_kb = 32\nreplicas = 2\ndisk_backup = true\n\
+             [latency]\nconnect_us = 1000.0\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.cluster.nodes, 12);
+        assert_eq!(cfg.cluster.node_mem_bytes, 32 << 30);
+        assert_eq!(cfg.valet.block_io_bytes, 32 * 1024);
+        assert_eq!(cfg.valet.replicas, 2);
+        assert!(cfg.valet.disk_backup);
+        assert_eq!(cfg.latency.connect, 1_000_000);
+    }
+
+    #[test]
+    fn unknown_key_is_error() {
+        assert!(Config::from_toml("[valet]\nbogus = 1\n").is_err());
+        assert!(Config::from_toml("[nope]\nx = 1\n").is_err());
+    }
+
+    #[test]
+    fn backend_kind_parsing() {
+        assert_eq!(BackendKind::parse("valet"), Some(BackendKind::Valet));
+        assert_eq!(BackendKind::parse("NBDX"), Some(BackendKind::Nbdx));
+        assert_eq!(BackendKind::parse("linux"), Some(BackendKind::LinuxSwap));
+        assert_eq!(BackendKind::parse("wat"), None);
+    }
+}

@@ -1,0 +1,155 @@
+//! Mini TOML parser covering the subset our configs use:
+//! `[section]` headers, `key = value` lines with integer / float / bool /
+//! quoted-string values, `#` comments and blank lines. No tables-in-tables,
+//! no arrays — config stays flat and obvious.
+
+/// A parsed scalar value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    /// Integer literal (also accepts `1_000` separators).
+    Int(i64),
+    /// Float literal.
+    Float(f64),
+    /// `true` / `false`.
+    Bool(bool),
+    /// Double-quoted string.
+    Str(String),
+}
+
+impl Value {
+    /// As unsigned integer (floats with zero fraction coerce).
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Value::Int(i) if *i >= 0 => Some(*i as u64),
+            Value::Float(f) if *f >= 0.0 && f.fract() == 0.0 => {
+                Some(*f as u64)
+            }
+            _ => None,
+        }
+    }
+
+    /// As float (ints coerce).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Int(i) => Some(*i as f64),
+            Value::Float(f) => Some(*f),
+            _ => None,
+        }
+    }
+
+    /// As bool.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// As string slice.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Parse a scalar literal.
+    pub fn parse(raw: &str) -> Result<Value, String> {
+        let s = raw.trim();
+        if s == "true" {
+            return Ok(Value::Bool(true));
+        }
+        if s == "false" {
+            return Ok(Value::Bool(false));
+        }
+        if s.starts_with('"') && s.ends_with('"') && s.len() >= 2 {
+            return Ok(Value::Str(s[1..s.len() - 1].to_string()));
+        }
+        let cleaned: String = s.chars().filter(|&c| c != '_').collect();
+        if let Ok(i) = cleaned.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+        if let Ok(f) = cleaned.parse::<f64>() {
+            return Ok(Value::Float(f));
+        }
+        Err(format!("cannot parse value: {raw:?}"))
+    }
+}
+
+/// Parse the full document into ((section, key), value) pairs in file
+/// order. Keys before any `[section]` get section `""`.
+pub fn parse_toml(
+    text: &str,
+) -> Result<Vec<((String, String), Value)>, String> {
+    let mut out = Vec::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = match raw.find('#') {
+            // avoid cutting '#' inside quotes — good enough for our subset:
+            Some(i) if !raw[..i].contains('"') => &raw[..i],
+            _ => raw,
+        }
+        .trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') {
+            if !line.ends_with(']') {
+                return Err(format!("line {}: bad section", lineno + 1));
+            }
+            section = line[1..line.len() - 1].trim().to_string();
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+        let key = line[..eq].trim().to_string();
+        let value = Value::parse(&line[eq + 1..])
+            .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        out.push(((section.clone(), key), value));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_keys_comments() {
+        let doc = "# top comment\nglobal = 1\n[a]\nx = 2\n y = 3.5 # trailing\n[b]\nflag = true\nname = \"hi\"\n";
+        let kv = parse_toml(doc).unwrap();
+        assert_eq!(kv.len(), 5);
+        assert_eq!(
+            kv[0],
+            (("".into(), "global".into()), Value::Int(1))
+        );
+        assert_eq!(kv[1], (("a".into(), "x".into()), Value::Int(2)));
+        assert_eq!(kv[2], (("a".into(), "y".into()), Value::Float(3.5)));
+        assert_eq!(kv[3], (("b".into(), "flag".into()), Value::Bool(true)));
+        assert_eq!(
+            kv[4],
+            (("b".into(), "name".into()), Value::Str("hi".into()))
+        );
+    }
+
+    #[test]
+    fn underscore_separators() {
+        assert_eq!(Value::parse("1_000_000").unwrap(), Value::Int(1_000_000));
+    }
+
+    #[test]
+    fn coercions() {
+        assert_eq!(Value::Int(5).as_f64(), Some(5.0));
+        assert_eq!(Value::Float(5.0).as_u64(), Some(5));
+        assert_eq!(Value::Float(5.5).as_u64(), None);
+        assert_eq!(Value::Int(-1).as_u64(), None);
+        assert_eq!(Value::Str("x".into()).as_str(), Some("x"));
+    }
+
+    #[test]
+    fn errors_have_line_numbers() {
+        let e = parse_toml("ok = 1\nbroken line\n").unwrap_err();
+        assert!(e.contains("line 2"), "{e}");
+    }
+}

@@ -1,0 +1,233 @@
+//! Container memory-limit model (§2.2): each container has a page limit
+//! and an LRU resident set. Touching a non-resident page past the limit
+//! raises a fault that evicts the LRU page — the swap-out/swap-in traffic
+//! that feeds the paging backends. This is the substrate behind the
+//! working-set-fit experiments (100/75/50/25 % in Figures 18–21).
+
+use crate::util::Lru;
+use crate::PAGE_SIZE;
+
+/// Result of touching one page.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Access {
+    /// Page was resident — pure DRAM access.
+    Hit,
+    /// Page was not resident and fit under the limit (cold fault, no
+    /// eviction — first touch of a growing working set).
+    ColdFault,
+    /// Page was not resident and the limit is full: the returned LRU
+    /// victim page must be swapped out (if dirty) and the new page
+    /// swapped in.
+    Fault {
+        /// Page evicted to make room.
+        victim: u64,
+        /// Whether the victim had been written since it was loaded
+        /// (dirty pages must be written back to the paging backend).
+        victim_dirty: bool,
+    },
+}
+
+/// One container: limit + resident set + dirty tracking.
+#[derive(Clone, Debug)]
+pub struct Container {
+    limit_pages: u64,
+    resident: Lru<u64>,
+    dirty: std::collections::HashSet<u64>,
+    /// Faults taken (stats).
+    pub faults: u64,
+    /// Total page touches (stats).
+    pub touches: u64,
+}
+
+impl Container {
+    /// Container with a memory limit in bytes.
+    pub fn new(limit_bytes: u64) -> Self {
+        Container {
+            limit_pages: (limit_bytes / PAGE_SIZE).max(1),
+            resident: Lru::new(),
+            dirty: std::collections::HashSet::new(),
+            faults: 0,
+            touches: 0,
+        }
+    }
+
+    /// Memory limit in pages.
+    pub fn limit_pages(&self) -> u64 {
+        self.limit_pages
+    }
+
+    /// Currently resident pages.
+    pub fn resident_pages(&self) -> u64 {
+        self.resident.len() as u64
+    }
+
+    /// Touch `page`; `write` marks it dirty. Returns what happened.
+    pub fn touch(&mut self, page: u64, write: bool) -> Access {
+        self.touches += 1;
+        if self.resident.contains(&page) {
+            self.resident.touch(page);
+            if write {
+                self.dirty.insert(page);
+            }
+            return Access::Hit;
+        }
+        self.faults += 1;
+        let result = if (self.resident.len() as u64) < self.limit_pages {
+            Access::ColdFault
+        } else {
+            let victim = self
+                .resident
+                .pop_lru()
+                .expect("limit_pages >= 1, resident full");
+            let victim_dirty = self.dirty.remove(&victim);
+            Access::Fault {
+                victim,
+                victim_dirty,
+            }
+        };
+        self.resident.touch(page);
+        if write {
+            self.dirty.insert(page);
+        }
+        result
+    }
+
+    /// Is the page resident right now?
+    pub fn is_resident(&self, page: u64) -> bool {
+        self.resident.contains(&page)
+    }
+
+    /// Shrink the limit (the Figure 3 "vary the memory limitation"
+    /// experiment); evicts LRU pages until under the new limit, returning
+    /// the evicted (page, dirty) pairs in eviction order.
+    pub fn set_limit_bytes(&mut self, limit_bytes: u64) -> Vec<(u64, bool)> {
+        self.limit_pages = (limit_bytes / PAGE_SIZE).max(1);
+        let mut evicted = Vec::new();
+        while self.resident.len() as u64 > self.limit_pages {
+            let p = self.resident.pop_lru().unwrap();
+            let dirty = self.dirty.remove(&p);
+            evicted.push((p, dirty));
+        }
+        evicted
+    }
+
+    /// Resident pages currently dirty, in ascending page order (for the
+    /// workload drivers' post-load writeback flush).
+    pub fn dirty_pages(&self) -> Vec<u64> {
+        let mut v: Vec<u64> = self.dirty.iter().copied().collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Mark a page clean (its data has been written back).
+    pub fn clean(&mut self, page: u64) {
+        self.dirty.remove(&page);
+    }
+
+    /// Fault ratio so far.
+    pub fn fault_ratio(&self) -> f64 {
+        if self.touches == 0 {
+            0.0
+        } else {
+            self.faults as f64 / self.touches as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn c(pages: u64) -> Container {
+        Container::new(pages * PAGE_SIZE)
+    }
+
+    #[test]
+    fn hits_until_limit_then_faults() {
+        let mut ct = c(3);
+        assert_eq!(ct.touch(1, false), Access::ColdFault);
+        assert_eq!(ct.touch(2, false), Access::ColdFault);
+        assert_eq!(ct.touch(3, false), Access::ColdFault);
+        assert_eq!(ct.touch(1, false), Access::Hit);
+        // 4 faults out LRU=2
+        assert_eq!(
+            ct.touch(4, false),
+            Access::Fault {
+                victim: 2,
+                victim_dirty: false
+            }
+        );
+        assert!(ct.is_resident(4));
+        assert!(!ct.is_resident(2));
+    }
+
+    #[test]
+    fn dirty_victims_are_flagged() {
+        let mut ct = c(2);
+        ct.touch(1, true);
+        ct.touch(2, false);
+        match ct.touch(3, false) {
+            Access::Fault {
+                victim: 1,
+                victim_dirty: true,
+            } => {}
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn rewritten_page_is_dirty_once_resident() {
+        let mut ct = c(2);
+        ct.touch(1, false);
+        ct.touch(1, true); // hit that dirties
+        ct.touch(2, false);
+        match ct.touch(3, false) {
+            Access::Fault {
+                victim: 1,
+                victim_dirty: true,
+            } => {}
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn working_set_within_limit_never_faults_after_warmup() {
+        let mut ct = c(10);
+        for p in 0..10 {
+            ct.touch(p, false);
+        }
+        let faults_before = ct.faults;
+        for _ in 0..100 {
+            for p in 0..10 {
+                ct.touch(p, false);
+            }
+        }
+        assert_eq!(ct.faults, faults_before);
+    }
+
+    #[test]
+    fn fault_ratio_tracks_overcommit() {
+        // Working set 2x the limit with uniform cycling => ~100% faults.
+        let mut ct = c(5);
+        for round in 0..20 {
+            for p in 0..10 {
+                ct.touch(p, false);
+            }
+            let _ = round;
+        }
+        assert!(ct.fault_ratio() > 0.9);
+    }
+
+    #[test]
+    fn shrinking_limit_evicts_lru_first() {
+        let mut ct = c(4);
+        for p in [1, 2, 3, 4] {
+            ct.touch(p, p == 1); // page 1 dirty
+        }
+        ct.touch(1, false); // 1 becomes MRU
+        let evicted = ct.set_limit_bytes(2 * PAGE_SIZE);
+        assert_eq!(evicted, vec![(2, false), (3, false)]);
+        assert_eq!(ct.resident_pages(), 2);
+        assert!(ct.is_resident(1) && ct.is_resident(4));
+    }
+}

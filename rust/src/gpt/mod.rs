@@ -1,0 +1,340 @@
+//! Global Page Table (§4.1): maps a page offset in the block device's
+//! linear address space to the page's slot in the local mempool.
+//!
+//! Per the paper: "Radix Tree is used to implement GPT. Radix Tree is wide
+//! and shallow … Unlike array-based GPT, RadixTree-based GPT does not need
+//! to allocate the whole structure in advance. It can grow and shrink
+//! dynamically." Presence in the tree *is* the residency marker ("If a
+//! page reference exists in the GPT, it points to the local page.
+//! Otherwise … it needs to read from remote memory"), which avoids a
+//! separate existence bitmap and its lock contention.
+//!
+//! Implementation: 64-way (6 bits/level) radix tree over an arena of
+//! nodes, height grows on demand; empty nodes are freed on removal so the
+//! structure shrinks too.
+
+const FANOUT: usize = 64;
+const BITS: u32 = 6;
+const EMPTY: u32 = u32::MAX;
+
+#[derive(Clone)]
+struct Node {
+    slots: [u32; FANOUT],
+    used: u16,
+}
+
+impl Node {
+    fn new() -> Self {
+        Node {
+            slots: [EMPTY; FANOUT],
+            used: 0,
+        }
+    }
+}
+
+/// Radix-tree page table: key = page number (u64), value = mempool slot
+/// (u32, `!= u32::MAX`).
+///
+/// A one-entry *leaf cache* short-circuits the descent for consecutive
+/// pages sharing a leaf (block-I/O requests touch 16 consecutive pages;
+/// leaves span 64) — see EXPERIMENTS.md §Perf.
+#[derive(Clone)]
+pub struct RadixGpt {
+    nodes: Vec<Node>,
+    free: Vec<u32>,
+    root: u32,
+    /// Number of 6-bit levels below (and including) the root.
+    height: u32,
+    len: usize,
+    /// Leaf cache: page-group (page >> 6) of the cached leaf.
+    cache_group: u64,
+    /// Cached leaf node index (EMPTY = invalid).
+    cache_leaf: u32,
+}
+
+impl Default for RadixGpt {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RadixGpt {
+    /// Empty table.
+    pub fn new() -> Self {
+        RadixGpt {
+            nodes: Vec::new(),
+            free: Vec::new(),
+            root: EMPTY,
+            height: 0,
+            len: 0,
+            cache_group: u64::MAX,
+            cache_leaf: EMPTY,
+        }
+    }
+
+    /// Number of mapped pages.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True if no pages are mapped.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Allocated radix nodes (diagnostics: tree really does shrink).
+    pub fn node_count(&self) -> usize {
+        self.nodes.len() - self.free.len()
+    }
+
+    fn alloc_node(&mut self) -> u32 {
+        if let Some(i) = self.free.pop() {
+            self.nodes[i as usize] = Node::new();
+            i
+        } else {
+            self.nodes.push(Node::new());
+            (self.nodes.len() - 1) as u32
+        }
+    }
+
+    /// Max key representable at current height.
+    fn capacity(&self) -> u64 {
+        if self.height == 0 {
+            0
+        } else if self.height * BITS >= 64 {
+            u64::MAX
+        } else {
+            (1u64 << (self.height * BITS)) - 1
+        }
+    }
+
+    /// Map `page` → `slot`, returning the previous slot if any.
+    pub fn insert(&mut self, page: u64, slot: u32) -> Option<u32> {
+        assert_ne!(slot, EMPTY, "slot value reserved");
+        // Leaf-cache fast path: same 64-page group as the last access.
+        if page >> BITS == self.cache_group && self.cache_leaf != EMPTY {
+            let node = self.cache_leaf;
+            let idx = (page & (FANOUT as u64 - 1)) as usize;
+            let prev = self.nodes[node as usize].slots[idx];
+            self.nodes[node as usize].slots[idx] = slot;
+            return if prev == EMPTY {
+                self.nodes[node as usize].used += 1;
+                self.len += 1;
+                None
+            } else {
+                Some(prev)
+            };
+        }
+        // Grow height until the key fits.
+        if self.root == EMPTY {
+            self.root = self.alloc_node();
+            self.height = 1;
+        }
+        while page > self.capacity() {
+            let new_root = self.alloc_node();
+            let old_root = self.root;
+            self.nodes[new_root as usize].slots[0] = old_root;
+            self.nodes[new_root as usize].used = 1;
+            self.root = new_root;
+            self.height += 1;
+        }
+        // Descend, creating nodes.
+        let mut node = self.root;
+        for level in (1..self.height).rev() {
+            let idx = ((page >> (level * BITS as u32)) & (FANOUT as u64 - 1))
+                as usize;
+            let child = self.nodes[node as usize].slots[idx];
+            let child = if child == EMPTY {
+                let c = self.alloc_node();
+                self.nodes[node as usize].slots[idx] = c;
+                self.nodes[node as usize].used += 1;
+                c
+            } else {
+                child
+            };
+            node = child;
+        }
+        let idx = (page & (FANOUT as u64 - 1)) as usize;
+        let prev = self.nodes[node as usize].slots[idx];
+        self.nodes[node as usize].slots[idx] = slot;
+        self.cache_group = page >> BITS;
+        self.cache_leaf = node;
+        if prev == EMPTY {
+            self.nodes[node as usize].used += 1;
+            self.len += 1;
+            None
+        } else {
+            Some(prev)
+        }
+    }
+
+    /// Look up the slot mapped for `page`.
+    #[inline]
+    pub fn get(&self, page: u64) -> Option<u32> {
+        // Leaf-cache fast path (read-only: cannot update the cache here,
+        // but insert/remove keep it fresh for the common sequential
+        // block-I/O pattern).
+        if page >> BITS == self.cache_group && self.cache_leaf != EMPTY {
+            let v = self.nodes[self.cache_leaf as usize].slots
+                [(page & (FANOUT as u64 - 1)) as usize];
+            return if v == EMPTY { None } else { Some(v) };
+        }
+        if self.root == EMPTY || page > self.capacity() {
+            return None;
+        }
+        let mut node = self.root;
+        for level in (1..self.height).rev() {
+            let idx = ((page >> (level * BITS as u32)) & (FANOUT as u64 - 1))
+                as usize;
+            node = self.nodes[node as usize].slots[idx];
+            if node == EMPTY {
+                return None;
+            }
+        }
+        let v = self.nodes[node as usize].slots
+            [(page & (FANOUT as u64 - 1)) as usize];
+        if v == EMPTY {
+            None
+        } else {
+            Some(v)
+        }
+    }
+
+    /// Unmap `page`, returning its slot if it was mapped. Frees nodes
+    /// that become empty (the "shrink dynamically" half).
+    pub fn remove(&mut self, page: u64) -> Option<u32> {
+        // removal can free the cached leaf — invalidate up front
+        self.cache_group = u64::MAX;
+        self.cache_leaf = EMPTY;
+        if self.root == EMPTY || page > self.capacity() {
+            return None;
+        }
+        // Record the descent path for cleanup.
+        let mut path = [(EMPTY, 0usize); 11]; // height ≤ ceil(64/6)+1
+        let mut node = self.root;
+        let mut depth = 0;
+        for level in (1..self.height).rev() {
+            let idx = ((page >> (level * BITS as u32)) & (FANOUT as u64 - 1))
+                as usize;
+            path[depth] = (node, idx);
+            depth += 1;
+            node = self.nodes[node as usize].slots[idx];
+            if node == EMPTY {
+                return None;
+            }
+        }
+        let idx = (page & (FANOUT as u64 - 1)) as usize;
+        let v = self.nodes[node as usize].slots[idx];
+        if v == EMPTY {
+            return None;
+        }
+        self.nodes[node as usize].slots[idx] = EMPTY;
+        self.nodes[node as usize].used -= 1;
+        self.len -= 1;
+        // Free empty nodes bottom-up.
+        let mut child = node;
+        while self.nodes[child as usize].used == 0 && depth > 0 {
+            depth -= 1;
+            let (parent, pidx) = path[depth];
+            self.nodes[parent as usize].slots[pidx] = EMPTY;
+            self.nodes[parent as usize].used -= 1;
+            self.free.push(child);
+            child = parent;
+        }
+        if self.nodes[self.root as usize].used == 0 {
+            self.free.push(self.root);
+            self.root = EMPTY;
+            self.height = 0;
+        }
+        Some(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use std::collections::HashMap;
+
+    #[test]
+    fn insert_get_remove_roundtrip() {
+        let mut t = RadixGpt::new();
+        assert_eq!(t.get(42), None);
+        assert_eq!(t.insert(42, 7), None);
+        assert_eq!(t.get(42), Some(7));
+        assert_eq!(t.insert(42, 9), Some(7));
+        assert_eq!(t.get(42), Some(9));
+        assert_eq!(t.remove(42), Some(9));
+        assert_eq!(t.get(42), None);
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn sparse_keys_grow_height() {
+        let mut t = RadixGpt::new();
+        t.insert(0, 1);
+        t.insert(u64::MAX / 2, 2);
+        t.insert(1 << 40, 3);
+        assert_eq!(t.get(0), Some(1));
+        assert_eq!(t.get(u64::MAX / 2), Some(2));
+        assert_eq!(t.get(1 << 40), Some(3));
+        assert_eq!(t.len(), 3);
+    }
+
+    #[test]
+    fn tree_shrinks_after_removal() {
+        let mut t = RadixGpt::new();
+        for p in 0..10_000u64 {
+            t.insert(p * 64, p as u32);
+        }
+        let peak = t.node_count();
+        for p in 0..10_000u64 {
+            assert_eq!(t.remove(p * 64), Some(p as u32));
+        }
+        assert_eq!(t.len(), 0);
+        assert_eq!(t.node_count(), 0, "peak was {peak}");
+    }
+
+    #[test]
+    fn dense_range_lookups() {
+        let mut t = RadixGpt::new();
+        for p in 0..4096u64 {
+            t.insert(p, (p * 3) as u32);
+        }
+        for p in 0..4096u64 {
+            assert_eq!(t.get(p), Some((p * 3) as u32));
+        }
+        assert_eq!(t.get(4096), None);
+    }
+
+    #[test]
+    fn prop_matches_hashmap_model() {
+        prop::check("radix vs hashmap", |rng| {
+            let mut t = RadixGpt::new();
+            let mut m: HashMap<u64, u32> = HashMap::new();
+            for _ in 0..300 {
+                // keys from mixed ranges to exercise height growth
+                let key = match rng.below(3) {
+                    0 => rng.below(100),
+                    1 => rng.below(1 << 20),
+                    _ => rng.next_u64() >> rng.below(30),
+                };
+                match rng.below(3) {
+                    0 | 1 => {
+                        let v = rng.below(1 << 30) as u32;
+                        assert_eq!(t.insert(key, v), m.insert(key, v));
+                    }
+                    _ => {
+                        assert_eq!(t.remove(key), m.remove(&key));
+                    }
+                }
+                assert_eq!(t.get(key), m.get(&key).copied());
+                assert_eq!(t.len(), m.len());
+            }
+            // final full sweep
+            for (&k, &v) in &m {
+                assert_eq!(t.get(k), Some(v));
+            }
+        });
+    }
+}

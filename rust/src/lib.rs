@@ -1,0 +1,95 @@
+//! # Valet-RS
+//!
+//! A from-scratch reproduction of **"Efficient Orchestration of Host and
+//! Remote Shared Memory for Memory Intensive Workloads"** (Valet,
+//! MemSys '20) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the paper's contribution: a remote-paging
+//!   coordinator with a host-coordinated local memory pool, decoupled
+//!   block-I/O/RDMA sizing, staging/reclaimable consistency queues,
+//!   activity-based victim selection and a sender-driven migration
+//!   protocol — plus every substrate it needs (RDMA fabric model, disk
+//!   model, container memory-limit model, baselines) and the PJRT runtime
+//!   that executes the AOT-compiled ML workloads.
+//! * **L2/L1 (python/, build-time only)** — the ML workloads (logistic
+//!   regression, k-means, TextRank, …) as JAX graphs calling Pallas
+//!   kernels, lowered once to `artifacts/*.hlo.txt`.
+//!
+//! The paper's testbed (32-node 56 Gbps InfiniBand cluster, SATA HDDs,
+//! Linux containers) is replaced by a deterministic simulation calibrated
+//! to the paper's own latency measurements (Table 1 / Table 7); see
+//! DESIGN.md §2 for the substitution argument.
+//!
+//! ## Crate map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`config`] | cluster/policy/latency configuration (TOML subset + CLI) |
+//! | [`sim`] | virtual clock, FIFO resource servers, event queue |
+//! | [`simnet`] | RDMA fabric model: connections, MRs, verbs, WQE cache |
+//! | [`simdisk`] | disk latency model |
+//! | [`container`] | container memory limits + resident-set (LRU) model |
+//! | [`mempool`] | dynamic host-coordinated memory pool (§3.4, Table 2) |
+//! | [`gpt`] | radix-tree Global Page Table (§4.1) |
+//! | [`queues`] | staging + reclaimable queues, Update/Reclaimable flags (§5.2) |
+//! | [`mrpool`] | remote MR block pool + activity tags (§4.2, Fig. 11) |
+//! | [`placement`] | round-robin / power-of-two-choices placement (§4.3) |
+//! | [`eviction`] | victim selection: activity-based vs batched-query (§3.5) |
+//! | [`migration`] | sender-driven migration protocol (§3.5, Fig. 14) |
+//! | [`replication`] | replication/disk-backup fault-tolerance matrix (Table 3) |
+//! | [`backends`] | `PagingBackend`: valet, infiniswap, nbdx, linux_swap |
+//! | [`cluster`] | node/cluster assembly + remote-pressure events |
+//! | [`workloads`] | YCSB (zipfian, ETC/SYS), KV-store models, FIO, ML driver |
+//! | [`runtime`] | PJRT client: load + execute `artifacts/*.hlo.txt` |
+//! | [`metrics`] | histograms, throughput, latency breakdowns |
+//! | [`bench`] | table/figure regeneration harness support |
+//! | [`serve`] | live multi-threaded serving mode (std::thread; no tokio) |
+
+pub mod backends;
+pub mod bench;
+pub mod cluster;
+pub mod config;
+pub mod container;
+pub mod eviction;
+pub mod gpt;
+pub mod mempool;
+pub mod metrics;
+pub mod migration;
+pub mod mrpool;
+pub mod placement;
+pub mod queues;
+pub mod replication;
+pub mod runtime;
+pub mod serve;
+pub mod sim;
+pub mod simdisk;
+pub mod simnet;
+pub mod util;
+pub mod workloads;
+
+/// Identifier of a node in the cluster (0-based, dense).
+pub type NodeId = usize;
+
+/// A byte offset into the Valet block device's linear address space.
+pub type BlockOff = u64;
+
+/// 4 KiB OS page — the paging granularity everywhere in the system.
+pub const PAGE_SIZE: u64 = 4096;
+
+/// Convert a byte count to whole pages (rounding up).
+pub fn pages_for(bytes: u64) -> u64 {
+    bytes.div_ceil(PAGE_SIZE)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pages_for_rounds_up() {
+        assert_eq!(pages_for(0), 0);
+        assert_eq!(pages_for(1), 1);
+        assert_eq!(pages_for(4096), 1);
+        assert_eq!(pages_for(4097), 2);
+    }
+}

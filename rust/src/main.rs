@@ -1,0 +1,330 @@
+//! `valet` — the leader CLI.
+//!
+//! ```text
+//! valet run   [--backend valet|infiniswap|nbdx|linux] [--app redis]
+//!             [--mix sys] [--fit 0.25] [--records N] [--ops N]
+//!             [--config file.toml] [--set section.key=value ...]
+//! valet ml    [--kind logreg|kmeans|textrank|gboost|rf] [--fit 0.5]
+//!             [--steps N] [--artifacts DIR]
+//! valet serve [--backend valet] [--writes N] [--reads N]
+//! valet info  — print config defaults, artifact status, cluster shape
+//! ```
+
+use std::process::ExitCode;
+
+use valet::bench::experiments;
+use valet::cluster::Cluster;
+use valet::config::{BackendKind, Config, Value};
+use valet::runtime::Runtime;
+use valet::sim::ms;
+use valet::util::fmt;
+use valet::workloads::{
+    run_kv, run_ml, App, KvRunConfig, Mix, MlKind, MlRunConfig, StoreModel,
+};
+
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+    sets: Vec<(String, String, String)>,
+}
+
+fn parse_args(argv: &[String]) -> Result<Args, String> {
+    let mut a = Args {
+        positional: Vec::new(),
+        flags: std::collections::HashMap::new(),
+        sets: Vec::new(),
+    };
+    let mut i = 0;
+    while i < argv.len() {
+        let arg = &argv[i];
+        if let Some(name) = arg.strip_prefix("--") {
+            let value = if i + 1 < argv.len() && !argv[i + 1].starts_with("--")
+            {
+                i += 1;
+                argv[i].clone()
+            } else {
+                "true".to_string()
+            };
+            if name == "set" {
+                let (path, v) = value
+                    .split_once('=')
+                    .ok_or_else(|| format!("--set wants k=v, got {value}"))?;
+                let (sec, key) = path
+                    .split_once('.')
+                    .ok_or_else(|| format!("--set wants section.key, got {path}"))?;
+                a.sets.push((sec.into(), key.into(), v.into()));
+            } else {
+                a.flags.insert(name.to_string(), value);
+            }
+        } else {
+            a.positional.push(arg.clone());
+        }
+        i += 1;
+    }
+    Ok(a)
+}
+
+fn build_config(a: &Args) -> Result<Config, String> {
+    let mut cfg = match a.flags.get("config") {
+        Some(path) => Config::from_file(path)?,
+        None => Config::default(),
+    };
+    for (sec, key, v) in &a.sets {
+        cfg.set(sec, key, &Value::parse(v)?)?;
+    }
+    Ok(cfg)
+}
+
+fn cmd_run(a: &Args) -> Result<(), String> {
+    let cfg = build_config(a)?;
+    let kind = a
+        .flags
+        .get("backend")
+        .map(|s| BackendKind::parse(s).ok_or(format!("bad backend {s}")))
+        .transpose()?
+        .unwrap_or(BackendKind::Valet);
+    let app = a
+        .flags
+        .get("app")
+        .map(|s| App::parse(s).ok_or(format!("bad app {s}")))
+        .transpose()?
+        .unwrap_or(App::Redis);
+    let mix = a
+        .flags
+        .get("mix")
+        .map(|s| Mix::parse(s).ok_or(format!("bad mix {s}")))
+        .transpose()?
+        .unwrap_or(Mix::Sys);
+    let fit: f64 = a
+        .flags
+        .get("fit")
+        .map(|s| s.parse().map_err(|_| format!("bad fit {s}")))
+        .transpose()?
+        .unwrap_or(0.5);
+    let records: u64 = a
+        .flags
+        .get("records")
+        .map(|s| s.parse().map_err(|_| format!("bad records {s}")))
+        .transpose()?
+        .unwrap_or(60_000);
+    let ops: u64 = a
+        .flags
+        .get("ops")
+        .map(|s| s.parse().map_err(|_| format!("bad ops {s}")))
+        .transpose()?
+        .unwrap_or(30_000);
+
+    let store = StoreModel::new(app, 1024);
+    let rc = KvRunConfig {
+        concurrency: 8,
+        seed: cfg.cluster.seed,
+        ..KvRunConfig::new(store, mix, records, ops)
+    }
+    .with_fit(fit);
+    eprintln!(
+        "running {} {} fit={fit} records={records} ops={ops} on {}",
+        app.name(),
+        mix.name(),
+        kind.name()
+    );
+    let mut cluster = Cluster::new(&cfg, kind);
+    let r = run_kv(&mut cluster, &rc);
+    let m = &r.metrics;
+    println!("backend           : {}", kind.name());
+    println!("completion        : {}", fmt::ns(r.completion));
+    println!("throughput        : {:.0} ops/s", m.throughput());
+    println!(
+        "op latency        : mean {} p50 {} p99 {}",
+        fmt::ns(m.op_latency.mean() as u64),
+        fmt::ns(m.op_latency.p50()),
+        fmt::ns(m.op_latency.p99())
+    );
+    println!(
+        "reads             : local {} remote {} disk {} (hit {:.1}%)",
+        m.local_hits,
+        m.remote_hits,
+        m.disk_reads,
+        m.local_hit_ratio() * 100.0
+    );
+    println!("page faults       : {}", r.faults);
+    Ok(())
+}
+
+fn cmd_ml(a: &Args) -> Result<(), String> {
+    let cfg = build_config(a)?;
+    let kind = a
+        .flags
+        .get("backend")
+        .map(|s| BackendKind::parse(s).ok_or(format!("bad backend {s}")))
+        .transpose()?
+        .unwrap_or(BackendKind::Valet);
+    let ml_kind = match a.flags.get("kind").map(String::as_str) {
+        None | Some("logreg") => MlKind::LogReg,
+        Some("kmeans") => MlKind::KMeans,
+        Some("textrank") => MlKind::TextRank,
+        Some("gboost") => MlKind::GBoost,
+        Some("rf") => MlKind::RandomForest,
+        Some(other) => return Err(format!("bad ml kind {other}")),
+    };
+    let fit: f64 = a
+        .flags
+        .get("fit")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.5);
+    let steps: u64 = a
+        .flags
+        .get("steps")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(50);
+    let dir = a
+        .flags
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(Runtime::default_dir);
+    // measure the real per-step compute from the AOT artifact
+    let rt = Runtime::load(&dir).map_err(|e| e.to_string())?;
+    let step_ns = match rt.get(ml_kind.artifact()) {
+        Ok(exe) => {
+            let inputs = valet::runtime::random_inputs(exe.spec)
+                .map_err(|e| e.to_string())?;
+            let t0 = std::time::Instant::now();
+            exe.run(&inputs).map_err(|e| e.to_string())?;
+            t0.elapsed().as_nanos() as u64
+        }
+        Err(e) => {
+            eprintln!("warning: {e}; using 25 ms per step");
+            ms(25)
+        }
+    };
+    eprintln!(
+        "{} on {}: measured step compute {}",
+        ml_kind.name(),
+        kind.name(),
+        fmt::ns(step_ns)
+    );
+    let mut cluster = Cluster::new(&cfg, kind);
+    let rc = MlRunConfig::new(ml_kind, 192 << 20, steps, fit);
+    let r = run_ml(&mut cluster, &rc, |_| step_ns);
+    println!("workload          : {}", ml_kind.name());
+    println!("completion        : {}", fmt::ns(r.completion));
+    println!("compute           : {}", fmt::ns(r.compute));
+    println!(
+        "paging            : {}",
+        fmt::ns(r.completion.saturating_sub(r.compute))
+    );
+    println!(
+        "reads             : local {} remote {} disk {}",
+        r.metrics.local_hits, r.metrics.remote_hits, r.metrics.disk_reads
+    );
+    Ok(())
+}
+
+fn cmd_serve(a: &Args) -> Result<(), String> {
+    use valet::serve::{spawn, Request};
+    let cfg = build_config(a)?;
+    let kind = a
+        .flags
+        .get("backend")
+        .map(|s| BackendKind::parse(s).ok_or(format!("bad backend {s}")))
+        .transpose()?
+        .unwrap_or(BackendKind::Valet);
+    let writes: u64 = a
+        .flags
+        .get("writes")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1000);
+    let reads: u64 = a
+        .flags
+        .get("reads")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1000);
+    eprintln!("serving {} (demo load: {writes} writes, {reads} reads)", kind.name());
+    let h = spawn(&cfg, kind);
+    let mut wall = 0u64;
+    let mut virt = 0u64;
+    for i in 0..writes {
+        let r = h
+            .call(Request::Write { page: i * 16, bytes: 65536 })
+            .ok_or("serve channel closed")?;
+        wall += r.wall_ns;
+        virt += r.virtual_ns;
+    }
+    for i in 0..reads {
+        let r = h
+            .call(Request::Read { page: (i * 37) % (writes * 16) })
+            .ok_or("serve channel closed")?;
+        wall += r.wall_ns;
+        virt += r.virtual_ns;
+    }
+    let n = writes + reads;
+    println!("requests          : {n}");
+    println!("mean wall service : {}", fmt::ns(wall / n.max(1)));
+    println!("mean virtual lat  : {}", fmt::ns(virt / n.max(1)));
+    let cluster = h.shutdown().ok_or("join failed")?;
+    let m = cluster.backend.metrics();
+    println!(
+        "reads             : local {} remote {} disk {}",
+        m.local_hits, m.remote_hits, m.disk_reads
+    );
+    Ok(())
+}
+
+fn cmd_info(a: &Args) -> Result<(), String> {
+    let cfg = build_config(a)?;
+    println!("valet-rs — Valet (MemSys '20) reproduction");
+    println!(
+        "cluster           : {} nodes × {} RAM",
+        cfg.cluster.nodes,
+        fmt::bytes(cfg.cluster.node_mem_bytes)
+    );
+    println!(
+        "valet             : block_io {} rdma_msg {} mr_block {} replicas {}",
+        fmt::bytes(cfg.valet.block_io_bytes),
+        fmt::bytes(cfg.valet.rdma_msg_bytes),
+        fmt::bytes(cfg.valet.mr_block_bytes),
+        cfg.valet.replicas
+    );
+    println!(
+        "latency (µs)      : radix_ins 23.9 rdma_wr {} rdma_rd {} connect {} map {}",
+        cfg.latency.rdma_write(cfg.valet.rdma_msg_bytes) / 1000,
+        cfg.latency.rdma_read(4096) / 1000,
+        cfg.latency.connect / 1000,
+        cfg.latency.map_mr / 1000
+    );
+    let dir = Runtime::default_dir();
+    match Runtime::load(&dir) {
+        Ok(rt) => println!("artifacts         : {:?} in {}", rt.loaded(), dir.display()),
+        Err(e) => println!("artifacts         : unavailable ({e})"),
+    }
+    println!("experiments       : {}", experiments::all_ids().join(" "));
+    Ok(())
+}
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        eprintln!("usage: valet <run|ml|serve|info> [flags]  (see --help in README)");
+        return ExitCode::from(2);
+    }
+    let a = match parse_args(&argv[1..]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let r = match argv[0].as_str() {
+        "run" => cmd_run(&a),
+        "ml" => cmd_ml(&a),
+        "serve" => cmd_serve(&a),
+        "info" => cmd_info(&a),
+        other => Err(format!("unknown command {other}")),
+    };
+    match r {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}

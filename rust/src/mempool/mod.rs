@@ -1,0 +1,486 @@
+//! The host-coordinated dynamic local memory pool (§3.4, §4.1, Table 2) —
+//! the centerpiece of Valet's critical-path redesign.
+//!
+//! Semantics (vs Linux mempool, Table 2):
+//! * pre-allocated pages are used FIRST (no allocation on the hot path);
+//! * the pool grows on demand when usage crosses `grow_threshold` (80 %),
+//!   capped by `min(max_pool_pages, host_free_fraction × host free)`;
+//! * it shrinks when host free memory drops, but never below
+//!   `min_pool_pages`;
+//! * freed pages return to the pool instead of the OS.
+//!
+//! Each slot carries the §5.2 consistency flags: `UPDATE` (a newer write
+//! set exists for the same page — skip this slot when its older write set
+//! reclaims) and `RECLAIMABLE` (remote copy is durable; safe to reuse).
+//! Reclaim order is LRU ("For replacement policy, we use LRU in our
+//! prototype").
+
+use crate::config::Replacement;
+use crate::util::Lru;
+
+/// Per-slot consistency flags (§5.2). The paper pairs an Update flag with
+/// a reference counter (Figure 17 caption); we fold both into a pending-
+/// supersede counter: it counts how many *newer* write sets cover the
+/// same page, so each older write set's completion decrements instead of
+/// reclaiming.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SlotFlags {
+    /// Number of newer write sets covering the same page; while > 0 the
+    /// slot must NOT be freed when an (older) write set is reclaimed.
+    pub update_pending: u16,
+    /// The slot's data is durably replicated (remote and/or disk);
+    /// eligible for reuse via the reclaimable queue.
+    pub reclaimable: bool,
+}
+
+/// State of one mempool page slot.
+#[derive(Clone, Debug, PartialEq, Eq)]
+enum Slot {
+    Free,
+    Used {
+        /// Page number in the block device address space.
+        page: u64,
+        flags: SlotFlags,
+    },
+}
+
+/// Why an allocation failed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AllocFail {
+    /// Pool at capacity and nothing reclaimable — caller must wait for
+    /// remote sending to drain (this is the backpressure signal).
+    NoReclaimable,
+}
+
+/// Outcome of a successful allocation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Alloc {
+    /// The slot handed out.
+    pub slot: u32,
+    /// If the slot was recycled from a reclaimable page, the page that
+    /// was evicted from the pool (its GPT entry must be dropped).
+    pub evicted_page: Option<u64>,
+    /// Whether the pool grew to satisfy this allocation.
+    pub grew: bool,
+}
+
+/// The dynamic local memory pool.
+#[derive(Clone, Debug)]
+pub struct Mempool {
+    slots: Vec<Slot>,
+    free: Vec<u32>,
+    /// LRU over *reclaimable* used slots only.
+    reclaim_lru: Lru<u32>,
+    capacity: u64,
+    min_pages: u64,
+    max_pages: u64,
+    grow_threshold: f64,
+    host_free_fraction: f64,
+    /// Grow events (stats / Figure 8 diagnostics).
+    pub grows: u64,
+    /// Shrink events (stats).
+    pub shrinks: u64,
+    /// Pages recycled through the reclaim path (stats).
+    pub reclaims: u64,
+    /// Replacement policy for the reclaim list.
+    replacement: Replacement,
+}
+
+impl Mempool {
+    /// Build with the policy knobs from [`crate::config::ValetConfig`].
+    pub fn new(
+        min_pages: u64,
+        max_pages: u64,
+        grow_threshold: f64,
+        host_free_fraction: f64,
+    ) -> Self {
+        let cap = min_pages.max(1);
+        Mempool {
+            slots: vec![Slot::Free; cap as usize],
+            free: (0..cap as u32).rev().collect(),
+            reclaim_lru: Lru::new(),
+            capacity: cap,
+            min_pages: cap,
+            max_pages: max_pages.max(cap),
+            grow_threshold,
+            host_free_fraction,
+            grows: 0,
+            shrinks: 0,
+            reclaims: 0,
+            replacement: Replacement::Lru,
+        }
+    }
+
+    /// Switch the replacement policy (LRU default; MRU per the paper's
+    /// §6.2 future-work note for repetitive access patterns).
+    pub fn with_replacement(mut self, r: Replacement) -> Self {
+        self.replacement = r;
+        self
+    }
+
+    /// Current pool size in pages.
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    /// Pages currently holding data.
+    pub fn used(&self) -> u64 {
+        self.capacity - self.free.len() as u64
+    }
+
+    /// Usage fraction in [0,1].
+    pub fn usage(&self) -> f64 {
+        self.used() as f64 / self.capacity.max(1) as f64
+    }
+
+    /// Effective cap given current host free memory:
+    /// `min(max_pool_pages, host_free_fraction × host_free_pages)`,
+    /// never below `min_pool_pages`.
+    pub fn effective_cap(&self, host_free_pages: u64) -> u64 {
+        let host_cap =
+            (host_free_pages as f64 * self.host_free_fraction) as u64;
+        self.max_pages.min(host_cap).max(self.min_pages)
+    }
+
+    fn grow_to(&mut self, new_cap: u64) {
+        debug_assert!(new_cap > self.capacity);
+        for i in self.capacity..new_cap {
+            self.slots.push(Slot::Free);
+            self.free.push(i as u32);
+        }
+        self.capacity = new_cap;
+        self.grows += 1;
+    }
+
+    /// Allocate a slot for `page`. Strategy (§4.1):
+    /// 1. use a pre-allocated free page;
+    /// 2. if usage ≥ grow_threshold and the effective cap allows, grow;
+    /// 3. otherwise recycle the LRU *reclaimable* slot (a few CPU cycles —
+    ///    "reclaiming is just moving a page pointer");
+    /// 4. otherwise fail — backpressure until remote sending catches up.
+    pub fn alloc(
+        &mut self,
+        page: u64,
+        host_free_pages: u64,
+    ) -> Result<Alloc, AllocFail> {
+        // Grow proactively when usage crosses the threshold.
+        let mut grew = false;
+        let cap = self.effective_cap(host_free_pages);
+        if self.usage() >= self.grow_threshold && self.capacity < cap {
+            // grow by 25% of current size, clamped to the cap
+            let step = (self.capacity / 4).max(64);
+            self.grow_to((self.capacity + step).min(cap));
+            grew = true;
+        }
+        if let Some(slot) = self.free.pop() {
+            self.slots[slot as usize] = Slot::Used {
+                page,
+                flags: SlotFlags::default(),
+            };
+            return Ok(Alloc {
+                slot,
+                evicted_page: None,
+                grew,
+            });
+        }
+        // Recycle a reclaimable slot per the replacement policy.
+        let victim = match self.replacement {
+            Replacement::Lru => self.reclaim_lru.pop_lru(),
+            Replacement::Mru => self.reclaim_lru.pop_mru(),
+        };
+        if let Some(victim) = victim {
+            let evicted_page = match &self.slots[victim as usize] {
+                Slot::Used { page, .. } => *page,
+                Slot::Free => unreachable!("reclaim_lru holds used slots"),
+            };
+            self.slots[victim as usize] = Slot::Used {
+                page,
+                flags: SlotFlags::default(),
+            };
+            self.reclaims += 1;
+            return Ok(Alloc {
+                slot: victim,
+                evicted_page: Some(evicted_page),
+                grew,
+            });
+        }
+        Err(AllocFail::NoReclaimable)
+    }
+
+    /// Page stored in `slot` (panics on a free slot — caller bug).
+    pub fn page_of(&self, slot: u32) -> u64 {
+        match &self.slots[slot as usize] {
+            Slot::Used { page, .. } => *page,
+            Slot::Free => panic!("page_of on free slot {slot}"),
+        }
+    }
+
+    /// Flags of `slot`.
+    pub fn flags(&self, slot: u32) -> SlotFlags {
+        match &self.slots[slot as usize] {
+            Slot::Used { flags, .. } => *flags,
+            Slot::Free => panic!("flags on free slot {slot}"),
+        }
+    }
+
+    /// A newer write set now covers this page: bump the pending-supersede
+    /// counter so the older write set's completion skips the slot.
+    pub fn bump_update(&mut self, slot: u32) {
+        if let Slot::Used { flags, .. } = &mut self.slots[slot as usize] {
+            flags.update_pending += 1;
+        }
+    }
+
+    /// Mark `slot` reclaimable (its write set reached the remote copy) and
+    /// enter it into the reclaim LRU. Per §5.2, a superseded slot
+    /// (`update_pending > 0`) is skipped and the counter decremented: a
+    /// newer write set owns the page now and will reclaim it later.
+    /// Returns true if the slot became reclaimable.
+    pub fn mark_reclaimable(&mut self, slot: u32) -> bool {
+        match &mut self.slots[slot as usize] {
+            Slot::Used { flags, .. } => {
+                if flags.update_pending > 0 {
+                    flags.update_pending -= 1;
+                    false
+                } else {
+                    flags.reclaimable = true;
+                    self.reclaim_lru.touch(slot);
+                    true
+                }
+            }
+            Slot::Free => false,
+        }
+    }
+
+    /// Touch a slot on read (LRU recency for the cache-replacement order).
+    pub fn touch(&mut self, slot: u32) {
+        if self.reclaim_lru.contains(&slot) {
+            self.reclaim_lru.touch(slot);
+        }
+    }
+
+    /// A write re-dirtied this slot: it is no longer safe to reclaim until
+    /// its new write set is remotely durable.
+    pub fn unmark_reclaimable(&mut self, slot: u32) {
+        if let Slot::Used { flags, .. } = &mut self.slots[slot as usize] {
+            flags.reclaimable = false;
+        }
+        self.reclaim_lru.remove(&slot);
+    }
+
+    /// Free a slot outright (page dropped, e.g. discard/trim).
+    pub fn free_slot(&mut self, slot: u32) {
+        self.reclaim_lru.remove(&slot);
+        if matches!(self.slots[slot as usize], Slot::Used { .. }) {
+            self.slots[slot as usize] = Slot::Free;
+            self.free.push(slot);
+        }
+    }
+
+    /// Shrink toward the effective cap for the given host free memory.
+    /// Only *free* slots can be released (used ones must first drain via
+    /// remote sending); returns how many pages were released to the host.
+    pub fn shrink(&mut self, host_free_pages: u64) -> u64 {
+        let cap = self.effective_cap(host_free_pages);
+        if self.capacity <= cap {
+            return 0;
+        }
+        // Release free slots from the tail of the slot array where
+        // possible; slots are logical here (the sim carries no data), so
+        // just drop free-list entries.
+        let want = self.capacity - cap;
+        let can = (self.free.len() as u64).min(want);
+        if can == 0 {
+            return 0;
+        }
+        for _ in 0..can {
+            let s = self.free.pop().unwrap();
+            // mark permanently unusable by swapping in a tombstone: we
+            // model release by shrinking capacity only; slot ids stay.
+            let _ = s;
+        }
+        self.capacity -= can;
+        self.shrinks += 1;
+        can
+    }
+
+    /// Number of reclaimable slots waiting in the LRU.
+    pub fn reclaimable_count(&self) -> usize {
+        self.reclaim_lru.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn pool() -> Mempool {
+        Mempool::new(8, 64, 0.8, 0.5)
+    }
+
+    #[test]
+    fn uses_preallocated_first() {
+        let mut p = pool();
+        let a = p.alloc(100, 1 << 20).unwrap();
+        assert_eq!(a.evicted_page, None);
+        assert_eq!(p.used(), 1);
+        assert_eq!(p.capacity(), 8);
+    }
+
+    #[test]
+    fn grows_at_threshold() {
+        let mut p = pool();
+        // fill to 7/8 = 87% > 80% threshold triggers growth on next alloc
+        for i in 0..7 {
+            p.alloc(i, 1 << 20).unwrap();
+        }
+        let a = p.alloc(7, 1 << 20).unwrap();
+        assert!(a.grew);
+        assert!(p.capacity() > 8);
+    }
+
+    #[test]
+    fn growth_respects_max_pages() {
+        let mut p = Mempool::new(8, 16, 0.5, 1.0);
+        for i in 0..64 {
+            match p.alloc(i, 1 << 20) {
+                Ok(_) => {}
+                Err(_) => break,
+            }
+        }
+        assert!(p.capacity() <= 16);
+    }
+
+    #[test]
+    fn growth_respects_host_free_fraction() {
+        let mut p = Mempool::new(8, 1 << 20, 0.5, 0.5);
+        // host has only 40 free pages → cap = 20
+        for i in 0..200 {
+            if p.alloc(i, 40).is_err() {
+                break;
+            }
+        }
+        assert!(p.capacity() <= 20, "cap {}", p.capacity());
+    }
+
+    #[test]
+    fn alloc_fails_without_reclaimable_then_recycles_lru() {
+        let mut p = Mempool::new(4, 4, 0.9, 1.0);
+        for i in 0..4 {
+            p.alloc(i, 1 << 20).unwrap();
+        }
+        assert_eq!(p.alloc(99, 1 << 20), Err(AllocFail::NoReclaimable));
+        // make pages 0..2 reclaimable (slot ids == insertion order here)
+        assert!(p.mark_reclaimable(0));
+        assert!(p.mark_reclaimable(1));
+        p.touch(0); // 0 becomes MRU; LRU victim should be slot 1
+        let a = p.alloc(99, 1 << 20).unwrap();
+        assert_eq!(a.evicted_page, Some(1));
+        assert_eq!(p.page_of(a.slot), 99);
+        assert_eq!(p.reclaims, 1);
+    }
+
+    #[test]
+    fn update_flag_defers_reclaim() {
+        let mut p = pool();
+        let a = p.alloc(5, 1 << 20).unwrap();
+        p.bump_update(a.slot);
+        // older write set completes: slot must NOT become reclaimable,
+        // and one pending-update is consumed.
+        assert!(!p.mark_reclaimable(a.slot));
+        assert_eq!(p.flags(a.slot).update_pending, 0);
+        // newer write set completes: now it reclaims.
+        assert!(p.mark_reclaimable(a.slot));
+        assert!(p.flags(a.slot).reclaimable);
+    }
+
+    #[test]
+    fn three_updates_same_page_reclaim_only_on_last() {
+        // WS1, WS2, WS3 all cover the same page slot; only WS3's
+        // completion may free it (Figure 17 generalized).
+        let mut p = pool();
+        let a = p.alloc(5, 1 << 20).unwrap();
+        p.bump_update(a.slot); // WS2 issued
+        p.bump_update(a.slot); // WS3 issued
+        assert!(!p.mark_reclaimable(a.slot)); // WS1 done
+        assert!(!p.mark_reclaimable(a.slot)); // WS2 done
+        assert!(p.mark_reclaimable(a.slot)); // WS3 done
+    }
+
+    #[test]
+    fn rewrite_unmarks_reclaimable() {
+        let mut p = pool();
+        let a = p.alloc(5, 1 << 20).unwrap();
+        p.mark_reclaimable(a.slot);
+        assert_eq!(p.reclaimable_count(), 1);
+        p.unmark_reclaimable(a.slot);
+        assert_eq!(p.reclaimable_count(), 0);
+        assert!(!p.flags(a.slot).reclaimable);
+    }
+
+    #[test]
+    fn shrink_releases_only_free_pages_and_keeps_min() {
+        let mut p = Mempool::new(8, 64, 0.5, 0.5);
+        // grow the pool, remembering which slots we hold
+        let mut held = Vec::new();
+        for i in 0..20 {
+            held.push(p.alloc(i, 1 << 20).unwrap().slot);
+        }
+        let cap_before = p.capacity();
+        assert!(cap_before > 8);
+        // host pressure: free mem collapses to 4 pages → cap = min_pages=8.
+        // Only free slots can be released; used ones must drain first.
+        let released = p.shrink(4);
+        assert!(p.capacity() >= 8);
+        assert!(p.capacity() >= p.used());
+        assert_eq!(released, cap_before - p.capacity());
+        // free everything we hold, then shrink again → min floor
+        for s in held {
+            p.free_slot(s);
+        }
+        p.shrink(4);
+        assert_eq!(p.capacity(), 8);
+        assert!(p.shrinks >= 1);
+    }
+
+    #[test]
+    fn prop_capacity_always_within_bounds() {
+        prop::check("mempool bounds", |rng| {
+            let min = 4 + rng.below(16);
+            let max = min + rng.below(64);
+            let mut p = Mempool::new(min, max, 0.5 + rng.f64() * 0.4, 0.5);
+            let mut next_page = 0u64;
+            for _ in 0..200 {
+                let host_free = rng.below(256);
+                match rng.below(4) {
+                    0 | 1 => {
+                        next_page += 1;
+                        if let Ok(a) = p.alloc(next_page, host_free) {
+                            if rng.chance(0.5) {
+                                p.mark_reclaimable(a.slot);
+                            }
+                        }
+                    }
+                    2 => {
+                        let _ = p.shrink(host_free);
+                    }
+                    _ => {
+                        let s = rng.below(p.capacity()) as u32;
+                        if (s as usize) < p.slots.len()
+                            && matches!(
+                                p.slots[s as usize],
+                                Slot::Used { .. }
+                            )
+                        {
+                            p.touch(s);
+                        }
+                    }
+                }
+                assert!(p.capacity() >= min);
+                assert!(p.capacity() <= max);
+                assert!(p.used() <= p.capacity());
+            }
+        });
+    }
+}

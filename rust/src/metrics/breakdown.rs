@@ -1,0 +1,138 @@
+//! Per-component latency attribution — the machinery behind the paper's
+//! Table 1 ("Comparison of latency impact on the critical path") and
+//! Table 7 ("latency breakdown comparison between Valet and Infiniswap").
+
+use std::collections::BTreeMap;
+
+/// Sums time spent per named component; components are static strings
+/// ("radix", "copy", "rdma", "disk", "connection", "mapping", ...).
+#[derive(Clone, Debug, Default)]
+pub struct Breakdown {
+    parts: BTreeMap<&'static str, (u128, u64)>, // (sum ns, count)
+}
+
+impl Breakdown {
+    /// New, empty.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Attribute `ns` nanoseconds to `part`.
+    #[inline]
+    pub fn add(&mut self, part: &'static str, ns: u64) {
+        let e = self.parts.entry(part).or_insert((0, 0));
+        e.0 += ns as u128;
+        e.1 += 1;
+    }
+
+    /// Total ns across all components.
+    pub fn total(&self) -> u128 {
+        self.parts.values().map(|(s, _)| s).sum()
+    }
+
+    /// Sum for one component.
+    pub fn sum(&self, part: &str) -> u128 {
+        self.parts.get(part).map(|(s, _)| *s).unwrap_or(0)
+    }
+
+    /// Mean ns per event for one component (0 if absent).
+    pub fn mean(&self, part: &str) -> f64 {
+        match self.parts.get(part) {
+            Some(&(s, c)) if c > 0 => s as f64 / c as f64,
+            _ => 0.0,
+        }
+    }
+
+    /// Event count for one component.
+    pub fn count(&self, part: &str) -> u64 {
+        self.parts.get(part).map(|(_, c)| *c).unwrap_or(0)
+    }
+
+    /// Share of total time for one component, in [0,1].
+    pub fn share(&self, part: &str) -> f64 {
+        let t = self.total();
+        if t == 0 {
+            0.0
+        } else {
+            self.sum(part) as f64 / t as f64
+        }
+    }
+
+    /// Components sorted by descending total time.
+    pub fn ranked(&self) -> Vec<(&'static str, u128, f64)> {
+        let t = self.total().max(1);
+        let mut v: Vec<_> = self
+            .parts
+            .iter()
+            .map(|(&k, &(s, _))| (k, s, s as f64 / t as f64))
+            .collect();
+        v.sort_by(|a, b| b.1.cmp(&a.1));
+        v
+    }
+
+    /// Merge another breakdown.
+    pub fn merge(&mut self, other: &Breakdown) {
+        for (&k, &(s, c)) in &other.parts {
+            let e = self.parts.entry(k).or_insert((0, 0));
+            e.0 += s;
+            e.1 += c;
+        }
+    }
+
+    /// Iterate (component, sum, count).
+    pub fn iter(&self) -> impl Iterator<Item = (&'static str, u128, u64)> + '_ {
+        self.parts.iter().map(|(&k, &(s, c))| (k, s, c))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shares_sum_to_one() {
+        let mut b = Breakdown::new();
+        b.add("disk", 600);
+        b.add("rdma", 300);
+        b.add("copy", 100);
+        let s: f64 = ["disk", "rdma", "copy"]
+            .iter()
+            .map(|p| b.share(p))
+            .sum();
+        assert!((s - 1.0).abs() < 1e-12);
+        assert!((b.share("disk") - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ranked_is_descending() {
+        let mut b = Breakdown::new();
+        b.add("a", 10);
+        b.add("b", 30);
+        b.add("c", 20);
+        let names: Vec<_> = b.ranked().iter().map(|r| r.0).collect();
+        assert_eq!(names, vec!["b", "c", "a"]);
+    }
+
+    #[test]
+    fn mean_counts_events() {
+        let mut b = Breakdown::new();
+        b.add("x", 10);
+        b.add("x", 30);
+        assert_eq!(b.mean("x"), 20.0);
+        assert_eq!(b.count("x"), 2);
+        assert_eq!(b.mean("absent"), 0.0);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = Breakdown::new();
+        a.add("x", 5);
+        let mut b = Breakdown::new();
+        b.add("x", 7);
+        b.add("y", 1);
+        a.merge(&b);
+        assert_eq!(a.sum("x"), 12);
+        assert_eq!(a.count("x"), 2);
+        assert_eq!(a.sum("y"), 1);
+    }
+}

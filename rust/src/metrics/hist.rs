@@ -1,0 +1,240 @@
+//! Log-bucketed latency histogram, HDR-histogram style: constant-time
+//! record, ~1.5 % relative quantile error, fixed 4 KiB footprint. Covers
+//! 1 ns ..= ~584 years, which is enough virtual time for anyone.
+
+/// Buckets: 64 octaves × 16 sub-buckets (linear within an octave).
+const SUB: usize = 16;
+const SUB_SHIFT: u32 = 4;
+const NBUCKETS: usize = 64 * SUB;
+
+/// A latency histogram over u64 nanosecond values.
+#[derive(Clone)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl std::fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Histogram(n={}, mean={:.0}, p50={}, p99={}, max={})",
+            self.total,
+            self.mean(),
+            self.quantile(0.5),
+            self.quantile(0.99),
+            self.max
+        )
+    }
+}
+
+#[inline]
+fn bucket_of(v: u64) -> usize {
+    if v < SUB as u64 {
+        return v as usize;
+    }
+    let oct = 63 - v.leading_zeros(); // highest set bit
+    let top = oct.saturating_sub(SUB_SHIFT);
+    let sub = ((v >> top) as usize) & (SUB - 1);
+    ((oct - SUB_SHIFT + 1) as usize) * SUB + sub
+}
+
+#[inline]
+fn bucket_low(b: usize) -> u64 {
+    if b < SUB {
+        return b as u64;
+    }
+    let oct = (b / SUB - 1) as u32 + SUB_SHIFT;
+    let sub = (b % SUB) as u64;
+    (1u64 << oct) | (sub << (oct - SUB_SHIFT))
+}
+
+impl Histogram {
+    /// Empty histogram.
+    pub fn new() -> Self {
+        Histogram {
+            counts: vec![0; NBUCKETS],
+            total: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    /// Record one value (ns).
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        self.counts[bucket_of(v).min(NBUCKETS - 1)] += 1;
+        self.total += 1;
+        self.sum += v as u128;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Number of recorded values.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Arithmetic mean (exact, tracked outside the buckets).
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.total as f64
+        }
+    }
+
+    /// Smallest recorded value (0 if empty).
+    pub fn min(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    /// Largest recorded value.
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Approximate quantile (q in [0,1]): lower bound of the bucket
+    /// holding the q-th value, exact min/max at the ends.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        if q <= 0.0 {
+            return self.min();
+        }
+        if q >= 1.0 {
+            return self.max;
+        }
+        let target = (q * self.total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (b, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return bucket_low(b).max(self.min).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    /// p50 shorthand.
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.5)
+    }
+
+    /// p99 shorthand.
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    /// Merge another histogram into this one.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn bucket_roundtrip_error_bounded() {
+        // bucket_low(bucket_of(v)) <= v, and within 1/16 relative error.
+        for shift in 0..50u32 {
+            for off in [0u64, 1, 3, 7] {
+                let v = (1u64 << shift).wrapping_add(off * (1 << shift) / 9);
+                let lo = bucket_low(bucket_of(v));
+                assert!(lo <= v, "v={v} lo={lo}");
+                assert!(
+                    (v - lo) as f64 <= v as f64 / 8.0 + 1.0,
+                    "v={v} lo={lo}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn empty_histogram_is_zeroes() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn single_value() {
+        let mut h = Histogram::new();
+        h.record(12_345);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.min(), 12_345);
+        assert_eq!(h.max(), 12_345);
+        assert_eq!(h.quantile(0.5), h.quantile(0.99));
+    }
+
+    #[test]
+    fn quantiles_are_monotone_and_accurate() {
+        let mut h = Histogram::new();
+        let mut rng = Rng::new(3);
+        for _ in 0..100_000 {
+            h.record(rng.below(1_000_000) + 1);
+        }
+        let p50 = h.quantile(0.5);
+        let p90 = h.quantile(0.9);
+        let p99 = h.quantile(0.99);
+        assert!(p50 <= p90 && p90 <= p99);
+        // uniform distribution: p50 ~ 500k within bucket error
+        assert!((p50 as f64 - 500_000.0).abs() < 500_000.0 / 8.0, "{p50}");
+        assert!((p99 as f64 - 990_000.0).abs() < 990_000.0 / 8.0, "{p99}");
+    }
+
+    #[test]
+    fn mean_is_exact() {
+        let mut h = Histogram::new();
+        for v in [10u64, 20, 30] {
+            h.record(v);
+        }
+        assert_eq!(h.mean(), 20.0);
+    }
+
+    #[test]
+    fn merge_matches_combined_recording() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut both = Histogram::new();
+        let mut rng = Rng::new(5);
+        for i in 0..10_000 {
+            let v = rng.below(1 << 30);
+            if i % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+            both.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), both.count());
+        assert_eq!(a.mean(), both.mean());
+        assert_eq!(a.quantile(0.99), both.quantile(0.99));
+    }
+}

@@ -1,0 +1,121 @@
+//! Measurement plumbing: latency histograms (log-bucketed, HDR-style),
+//! throughput counters and per-component latency breakdowns — everything
+//! needed to print the paper's tables (avg / p99 latency, ops/sec,
+//! component percentages as in Tables 1 and 7).
+
+mod breakdown;
+mod hist;
+
+pub use breakdown::Breakdown;
+pub use hist::Histogram;
+
+use crate::sim::Ns;
+
+/// Aggregate metrics for one run of a workload against a backend.
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    /// End-to-end latency of application-level operations (e.g. one YCSB
+    /// GET/SET), in virtual ns.
+    pub op_latency: Histogram,
+    /// Latency of swap-in (page read) requests seen by the block device.
+    pub read_latency: Histogram,
+    /// Latency of swap-out (page write) requests.
+    pub write_latency: Histogram,
+    /// Per-component time attribution (radix, copy, rdma, disk, ...).
+    pub read_parts: Breakdown,
+    /// Per-component time attribution on the write path.
+    pub write_parts: Breakdown,
+    /// Completed application operations.
+    pub ops: u64,
+    /// Virtual time at which the run finished.
+    pub finished_at: Ns,
+    /// Local mempool hits / remote reads / disk reads (Figure 8, Table 7).
+    pub local_hits: u64,
+    /// Reads served by a remote node.
+    pub remote_hits: u64,
+    /// Reads that fell through to disk.
+    pub disk_reads: u64,
+    /// Writes redirected to disk (Infiniswap connection/mapping windows).
+    pub disk_writes: u64,
+}
+
+impl RunMetrics {
+    /// Operations per virtual second.
+    pub fn throughput(&self) -> f64 {
+        if self.finished_at == 0 {
+            return 0.0;
+        }
+        self.ops as f64 / (self.finished_at as f64 / 1e9)
+    }
+
+    /// Local cache hit ratio among all block-device reads.
+    pub fn local_hit_ratio(&self) -> f64 {
+        let total = self.local_hits + self.remote_hits + self.disk_reads;
+        if total == 0 {
+            0.0
+        } else {
+            self.local_hits as f64 / total as f64
+        }
+    }
+
+    /// Merge another run's numbers (for multi-client aggregation).
+    pub fn merge(&mut self, other: &RunMetrics) {
+        self.op_latency.merge(&other.op_latency);
+        self.read_latency.merge(&other.read_latency);
+        self.write_latency.merge(&other.write_latency);
+        self.read_parts.merge(&other.read_parts);
+        self.write_parts.merge(&other.write_parts);
+        self.ops += other.ops;
+        self.finished_at = self.finished_at.max(other.finished_at);
+        self.local_hits += other.local_hits;
+        self.remote_hits += other.remote_hits;
+        self.disk_reads += other.disk_reads;
+        self.disk_writes += other.disk_writes;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_is_ops_per_virtual_second() {
+        let m = RunMetrics {
+            ops: 500,
+            finished_at: 2_000_000_000,
+            ..Default::default()
+        };
+        assert!((m.throughput() - 250.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hit_ratio_counts_all_read_sources() {
+        let m = RunMetrics {
+            local_hits: 25,
+            remote_hits: 70,
+            disk_reads: 5,
+            ..Default::default()
+        };
+        assert!((m.local_hit_ratio() - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = RunMetrics {
+            ops: 10,
+            finished_at: 5,
+            local_hits: 1,
+            ..Default::default()
+        };
+        let b = RunMetrics {
+            ops: 20,
+            finished_at: 3,
+            local_hits: 2,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.ops, 30);
+        assert_eq!(a.finished_at, 5);
+        assert_eq!(a.local_hits, 3);
+    }
+}

@@ -1,0 +1,247 @@
+//! Remote Memory module (§4.2): the MR block pool a receiver node exposes
+//! to sender nodes, with the per-block metadata tag of Figure 11 (owner +
+//! last-write timestamp) that makes activity-based victim selection a
+//! local decision — no queries to N sender nodes.
+//!
+//! The pool expands and shrinks with the node's free memory ("It can
+//! dynamically expand and shrink MR blocks based on the free memory") and
+//! its activity monitor reports pressure when native applications claim
+//! memory back.
+
+use crate::sim::Ns;
+use crate::NodeId;
+
+/// Identifier of an MR block on some node.
+pub type MrBlockId = u64;
+
+/// State of one registered MR block.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MrState {
+    /// Serving reads/writes for its owner.
+    Active,
+    /// Being migrated away; reads allowed, writes parked at the sender.
+    Migrating,
+}
+
+/// One unit-sized MR block (Figure 11's format: data + tag).
+#[derive(Clone, Debug)]
+pub struct MrBlock {
+    /// Block id (unique per node).
+    pub id: MrBlockId,
+    /// Sender node that owns the data.
+    pub owner: NodeId,
+    /// Block size in bytes (the 1 GB unit by default).
+    pub bytes: u64,
+    /// Tag: virtual time of the last write from the owner.
+    pub last_write: Ns,
+    /// Tag: when the block was registered.
+    pub registered_at: Ns,
+    /// Current state.
+    pub state: MrState,
+}
+
+impl MrBlock {
+    /// §3.5: `Non-Activity-Duration = Time_cur − Time_last_activity`.
+    pub fn non_activity_duration(&self, now: Ns) -> Ns {
+        now.saturating_sub(self.last_write)
+    }
+}
+
+/// The MR block pool of one receiver node.
+#[derive(Clone, Debug, Default)]
+pub struct MrBlockPool {
+    blocks: Vec<MrBlock>,
+    next_id: MrBlockId,
+    /// Total registrations (stats).
+    pub registered: u64,
+    /// Total blocks released (evicted or migrated away) (stats).
+    pub released: u64,
+}
+
+impl MrBlockPool {
+    /// Empty pool.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bytes currently registered as remote memory.
+    pub fn registered_bytes(&self) -> u64 {
+        self.blocks.iter().map(|b| b.bytes).sum()
+    }
+
+    /// Register a new unit MR block for `owner`. The receiver-side cost
+    /// is charged by the caller (user-space registration, §4.2).
+    pub fn register(
+        &mut self,
+        owner: NodeId,
+        bytes: u64,
+        now: Ns,
+    ) -> MrBlockId {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.blocks.push(MrBlock {
+            id,
+            owner,
+            bytes,
+            last_write: now,
+            registered_at: now,
+            state: MrState::Active,
+        });
+        self.registered += 1;
+        id
+    }
+
+    /// Stamp a write into `block` ("TimeStamp on the MR block is updated
+    /// by write request", Figure 13).
+    pub fn touch_write(&mut self, block: MrBlockId, now: Ns) {
+        if let Some(b) = self.get_mut(block) {
+            b.last_write = b.last_write.max(now);
+        }
+    }
+
+    /// Lookup.
+    pub fn get(&self, block: MrBlockId) -> Option<&MrBlock> {
+        self.blocks.iter().find(|b| b.id == block)
+    }
+
+    /// Mutable lookup.
+    pub fn get_mut(&mut self, block: MrBlockId) -> Option<&mut MrBlock> {
+        self.blocks.iter_mut().find(|b| b.id == block)
+    }
+
+    /// Remove a block (eviction-by-delete or migration completion).
+    pub fn release(&mut self, block: MrBlockId) -> Option<MrBlock> {
+        let i = self.blocks.iter().position(|b| b.id == block)?;
+        self.released += 1;
+        Some(self.blocks.swap_remove(i))
+    }
+
+    /// The least-active block (max Non-Activity-Duration) among Active
+    /// blocks — §3.5's victim, computed purely from local tags.
+    pub fn least_active(&self, now: Ns) -> Option<&MrBlock> {
+        self.blocks
+            .iter()
+            .filter(|b| b.state == MrState::Active)
+            .max_by_key(|b| (b.non_activity_duration(now), b.id))
+    }
+
+    /// All blocks (iteration for monitors/tests).
+    pub fn blocks(&self) -> &[MrBlock] {
+        &self.blocks
+    }
+
+    /// Number of blocks.
+    pub fn len(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// True if no blocks are registered.
+    pub fn is_empty(&self) -> bool {
+        self.blocks.is_empty()
+    }
+}
+
+/// Activity monitor (Figure 16): watches a node's free memory and decides
+/// how many MR blocks must be reclaimed to satisfy native applications.
+#[derive(Clone, Debug)]
+pub struct ActivityMonitor {
+    /// Total physical memory of the node.
+    pub total_bytes: u64,
+    /// Memory currently used by native applications (containers).
+    pub native_bytes: u64,
+    /// Free-memory floor the node must keep for itself.
+    pub reserve_bytes: u64,
+}
+
+impl ActivityMonitor {
+    /// Monitor for a node of `total_bytes`, keeping `reserve_bytes` free.
+    pub fn new(total_bytes: u64, reserve_bytes: u64) -> Self {
+        ActivityMonitor {
+            total_bytes,
+            native_bytes: 0,
+            reserve_bytes,
+        }
+    }
+
+    /// Free bytes available for (additional) MR registration.
+    pub fn free_for_mr(&self, registered: u64) -> u64 {
+        self.total_bytes
+            .saturating_sub(self.native_bytes)
+            .saturating_sub(self.reserve_bytes)
+            .saturating_sub(registered)
+    }
+
+    /// Bytes of MR that must be reclaimed to satisfy current native
+    /// usage (0 when no pressure).
+    pub fn pressure(&self, registered: u64) -> u64 {
+        let available = self
+            .total_bytes
+            .saturating_sub(self.native_bytes)
+            .saturating_sub(self.reserve_bytes);
+        registered.saturating_sub(available)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_touch_release_roundtrip() {
+        let mut p = MrBlockPool::new();
+        let a = p.register(1, 1 << 30, 100);
+        let b = p.register(2, 1 << 30, 100);
+        assert_eq!(p.len(), 2);
+        assert_eq!(p.registered_bytes(), 2 << 30);
+        p.touch_write(a, 500);
+        assert_eq!(p.get(a).unwrap().last_write, 500);
+        let released = p.release(b).unwrap();
+        assert_eq!(released.owner, 2);
+        assert_eq!(p.len(), 1);
+    }
+
+    #[test]
+    fn least_active_is_max_non_activity_duration() {
+        // Figure 13's example: blocks with last-write stamps 15, 9, 3 —
+        // the block stamped 3 is the victim.
+        let mut p = MrBlockPool::new();
+        let b15 = p.register(0, 1, 0);
+        let b9 = p.register(0, 1, 0);
+        let b3 = p.register(0, 1, 0);
+        p.touch_write(b15, 15);
+        p.touch_write(b9, 9);
+        p.touch_write(b3, 3);
+        assert_eq!(p.least_active(20).unwrap().id, b3);
+    }
+
+    #[test]
+    fn touch_write_never_moves_time_backwards() {
+        let mut p = MrBlockPool::new();
+        let b = p.register(0, 1, 0);
+        p.touch_write(b, 100);
+        p.touch_write(b, 50); // stale stamp ignored
+        assert_eq!(p.get(b).unwrap().last_write, 100);
+    }
+
+    #[test]
+    fn migrating_blocks_are_not_victims() {
+        let mut p = MrBlockPool::new();
+        let old = p.register(0, 1, 0);
+        let newer = p.register(0, 1, 0);
+        p.touch_write(newer, 1000);
+        p.get_mut(old).unwrap().state = MrState::Migrating;
+        assert_eq!(p.least_active(2000).unwrap().id, newer);
+    }
+
+    #[test]
+    fn monitor_pressure_math() {
+        let mut m = ActivityMonitor::new(64 << 30, 2 << 30);
+        // 20 GB registered, native apps idle → no pressure
+        assert_eq!(m.pressure(20 << 30), 0);
+        assert_eq!(m.free_for_mr(20 << 30), 42 << 30);
+        // native apps claim 50 GB → 64-50-2 = 12 GB available < 20 GB
+        m.native_bytes = 50 << 30;
+        assert_eq!(m.pressure(20 << 30), 8 << 30);
+        assert_eq!(m.free_for_mr(20 << 30), 0);
+    }
+}

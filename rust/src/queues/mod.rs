@@ -1,0 +1,218 @@
+//! Staging and Reclaimable queues (§4.1, §5.2): the consistency machinery
+//! between the local mempool and remote replicas.
+//!
+//! Lifecycle of a write set (one block-I/O request → one `tree_entry`):
+//!
+//! ```text
+//! write → [Staging queue] → remote sender thread sends (coalesced)
+//!       → [Reclaimable queue] → page slots become reusable
+//! ```
+//!
+//! Writes are serialized in arrival order ("Unlike parallel reading,
+//! writing is serialized for data consistency"); the two queues have the
+//! same size by construction; the multiple-updates-to-one-page race is
+//! handled by the mempool's UPDATE flag (see
+//! [`crate::mempool::Mempool::mark_reclaimable`]).
+
+use std::collections::VecDeque;
+
+use crate::sim::Ns;
+
+/// One write set: the §4.1 24-byte `tree_entry` tracking the pages of one
+/// block-I/O request.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WriteSet {
+    /// First page number covered.
+    pub page: u64,
+    /// Mempool slots holding the pages, in page order.
+    pub slots: Vec<u32>,
+    /// Total bytes in this write set.
+    pub bytes: u64,
+    /// Virtual time the write set entered staging.
+    pub enqueued_at: Ns,
+}
+
+impl WriteSet {
+    /// Number of pages covered.
+    pub fn pages(&self) -> u64 {
+        self.slots.len() as u64
+    }
+}
+
+/// FIFO staging queue of write sets not yet remotely durable.
+#[derive(Clone, Debug, Default)]
+pub struct StagingQueue {
+    q: VecDeque<WriteSet>,
+    bytes: u64,
+    /// Total write sets ever enqueued (stats).
+    pub enqueued: u64,
+}
+
+impl StagingQueue {
+    /// Empty queue.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append a write set (arrival order == send order).
+    pub fn push(&mut self, ws: WriteSet) {
+        self.bytes += ws.bytes;
+        self.enqueued += 1;
+        self.q.push_back(ws);
+    }
+
+    /// Next write set to send, without removing it.
+    pub fn peek(&self) -> Option<&WriteSet> {
+        self.q.front()
+    }
+
+    /// Remove the front write set (it has been sent).
+    pub fn pop(&mut self) -> Option<WriteSet> {
+        let ws = self.q.pop_front()?;
+        self.bytes -= ws.bytes;
+        Some(ws)
+    }
+
+    /// Pop up to `max_bytes` of write sets for one coalesced RDMA message
+    /// (§3.3 "message coalescing and batch sending with large size of
+    /// RDMA MR"). Always returns at least one write set if non-empty.
+    pub fn pop_batch(&mut self, max_bytes: u64) -> Vec<WriteSet> {
+        let mut out = Vec::new();
+        let mut total = 0;
+        while let Some(front) = self.q.front() {
+            if !out.is_empty() && total + front.bytes > max_bytes {
+                break;
+            }
+            total += front.bytes;
+            out.push(self.pop().unwrap());
+        }
+        out
+    }
+
+    /// Queued write sets.
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    /// True if nothing is staged.
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    /// Bytes awaiting send — the "memory pressure on the local mempool"
+    /// quantity that migration victim selection cares about.
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+}
+
+/// FIFO queue of write sets whose remote copies are durable; their slots
+/// feed the mempool's reclaim LRU.
+#[derive(Clone, Debug, Default)]
+pub struct ReclaimableQueue {
+    q: VecDeque<WriteSet>,
+    /// Total write sets that became reclaimable (stats).
+    pub completed: u64,
+}
+
+impl ReclaimableQueue {
+    /// Empty queue.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A write set's remote send completed.
+    pub fn push(&mut self, ws: WriteSet) {
+        self.completed += 1;
+        self.q.push_back(ws);
+    }
+
+    /// Oldest durable write set.
+    pub fn pop(&mut self) -> Option<WriteSet> {
+        self.q.pop_front()
+    }
+
+    /// Queued write sets.
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ws(page: u64, bytes: u64, at: Ns) -> WriteSet {
+        WriteSet {
+            page,
+            slots: vec![page as u32],
+            bytes,
+            enqueued_at: at,
+        }
+    }
+
+    #[test]
+    fn staging_is_fifo() {
+        let mut s = StagingQueue::new();
+        s.push(ws(1, 10, 0));
+        s.push(ws(2, 10, 1));
+        assert_eq!(s.pop().unwrap().page, 1);
+        assert_eq!(s.pop().unwrap().page, 2);
+        assert!(s.pop().is_none());
+    }
+
+    #[test]
+    fn bytes_tracks_queue_content() {
+        let mut s = StagingQueue::new();
+        s.push(ws(1, 100, 0));
+        s.push(ws(2, 50, 0));
+        assert_eq!(s.bytes(), 150);
+        s.pop();
+        assert_eq!(s.bytes(), 50);
+    }
+
+    #[test]
+    fn batch_coalesces_up_to_max_bytes() {
+        let mut s = StagingQueue::new();
+        for i in 0..10 {
+            s.push(ws(i, 64, 0));
+        }
+        let batch = s.pop_batch(256);
+        assert_eq!(batch.len(), 4);
+        assert_eq!(s.len(), 6);
+    }
+
+    #[test]
+    fn batch_always_returns_one_even_if_oversized() {
+        let mut s = StagingQueue::new();
+        s.push(ws(1, 10_000, 0));
+        let batch = s.pop_batch(256);
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn batch_preserves_order() {
+        let mut s = StagingQueue::new();
+        for i in 0..6 {
+            s.push(ws(i, 64, i));
+        }
+        let batch = s.pop_batch(10_000);
+        let pages: Vec<_> = batch.iter().map(|w| w.page).collect();
+        assert_eq!(pages, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn reclaimable_counts_completions() {
+        let mut r = ReclaimableQueue::new();
+        r.push(ws(1, 10, 0));
+        r.push(ws(2, 10, 0));
+        assert_eq!(r.completed, 2);
+        assert_eq!(r.pop().unwrap().page, 1);
+        assert_eq!(r.len(), 1);
+    }
+}

@@ -1,0 +1,160 @@
+//! Fault tolerance (§5.1, Table 3): replication across remote nodes
+//! and/or local disk backup, and the read-fallback semantics of each
+//! combination.
+//!
+//! | | w/ Replication | w/o Replication |
+//! |---|---|---|
+//! | **w/ Disk Backup** | replica first, disk if replica fails | local disk |
+//! | **w/o Disk Backup** | replica | remote data loss (caching use case) |
+
+use crate::NodeId;
+
+/// Fault-tolerance configuration of a Valet device.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FtPolicy {
+    /// Total remote copies (1 = primary only, 2 = primary + 1 replica…).
+    pub copies: usize,
+    /// Write pages to local disk as well.
+    pub disk_backup: bool,
+}
+
+impl FtPolicy {
+    /// Replication without disk (the paper's default for all experiments:
+    /// "We use replication for all experiments in evaluation").
+    pub fn replicated(copies: usize) -> Self {
+        FtPolicy {
+            copies: copies.max(1),
+            disk_backup: false,
+        }
+    }
+
+    /// Extra remote space factor: N replication needs N× remote memory
+    /// ("It requires N time larger remote memory space with N
+    /// replication", §5.3).
+    pub fn space_factor(&self) -> usize {
+        self.copies
+    }
+}
+
+/// Where a read for remotely-stored data is served from, given which
+/// copies survive (Table 3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReadSource {
+    /// A remote copy on this node.
+    Remote(NodeId),
+    /// Local disk backup.
+    Disk,
+    /// Data is lost — acceptable only for caching semantics.
+    Lost,
+}
+
+/// Pick the read source: first surviving remote copy, then disk if
+/// enabled, else the data is gone.
+pub fn read_source(
+    policy: FtPolicy,
+    copies: &[(NodeId, bool)], // (node, alive)
+) -> ReadSource {
+    for &(node, alive) in copies {
+        if alive {
+            return ReadSource::Remote(node);
+        }
+    }
+    if policy.disk_backup {
+        ReadSource::Disk
+    } else {
+        ReadSource::Lost
+    }
+}
+
+/// Choose distinct replica nodes for a block: the primary plus
+/// `copies-1` follower nodes, skipping the sender itself. Deterministic
+/// given the candidate order (placement policy orders candidates).
+pub fn choose_replicas(
+    sender: NodeId,
+    primary: NodeId,
+    candidates: &[NodeId],
+    copies: usize,
+) -> Vec<NodeId> {
+    let mut out = vec![primary];
+    for &c in candidates {
+        if out.len() >= copies {
+            break;
+        }
+        if c != sender && !out.contains(&c) {
+            out.push(c);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_all_four_quadrants() {
+        let with_repl_disk = FtPolicy {
+            copies: 2,
+            disk_backup: true,
+        };
+        let with_repl = FtPolicy {
+            copies: 2,
+            disk_backup: false,
+        };
+        let disk_only = FtPolicy {
+            copies: 1,
+            disk_backup: true,
+        };
+        let none = FtPolicy {
+            copies: 1,
+            disk_backup: false,
+        };
+
+        // both replicas alive → remote
+        assert_eq!(
+            read_source(with_repl_disk, &[(1, true), (2, true)]),
+            ReadSource::Remote(1)
+        );
+        // primary dead, replica alive → the replica
+        assert_eq!(
+            read_source(with_repl, &[(1, false), (2, true)]),
+            ReadSource::Remote(2)
+        );
+        // all remote dead + disk backup → disk
+        assert_eq!(
+            read_source(with_repl_disk, &[(1, false), (2, false)]),
+            ReadSource::Disk
+        );
+        assert_eq!(
+            read_source(disk_only, &[(1, false)]),
+            ReadSource::Disk
+        );
+        // all remote dead, no disk → lost (caching semantics)
+        assert_eq!(read_source(none, &[(1, false)]), ReadSource::Lost);
+        assert_eq!(
+            read_source(with_repl, &[(1, false), (2, false)]),
+            ReadSource::Lost
+        );
+    }
+
+    #[test]
+    fn space_factor_is_copies() {
+        assert_eq!(FtPolicy::replicated(3).space_factor(), 3);
+        assert_eq!(FtPolicy::replicated(0).copies, 1);
+    }
+
+    #[test]
+    fn replicas_are_distinct_and_skip_sender() {
+        let r = choose_replicas(0, 2, &[0, 1, 2, 3, 4], 3);
+        assert_eq!(r, vec![2, 1, 3]);
+        assert!(!r.contains(&0));
+        let dedup: std::collections::HashSet<_> = r.iter().collect();
+        assert_eq!(dedup.len(), r.len());
+    }
+
+    #[test]
+    fn replicas_truncate_when_cluster_too_small() {
+        let r = choose_replicas(0, 1, &[1], 3);
+        assert_eq!(r, vec![1]);
+    }
+}

@@ -1,0 +1,131 @@
+//! Artifact registry: the rust mirror of `python/compile/model.py`'s
+//! `ARTIFACTS` dict. Shapes must match the AOT lowering exactly (they are
+//! baked into the executables); `python/tests/test_model.py` checks the
+//! python side, `rust/tests/runtime_roundtrip.rs` checks this side.
+
+/// Shapes for the logistic-regression step (model.py LOGREG_N/D).
+pub const LOGREG_N: usize = 4096;
+/// Feature dimension.
+pub const LOGREG_D: usize = 256;
+/// K-Means sample count.
+pub const KMEANS_N: usize = 4096;
+/// K-Means feature dimension.
+pub const KMEANS_D: usize = 64;
+/// K-Means cluster count.
+pub const KMEANS_K: usize = 16;
+/// TextRank graph size.
+pub const TEXTRANK_N: usize = 1024;
+/// Gradient-boosting sample count.
+pub const GBOOST_N: usize = 4096;
+/// Gradient-boosting feature count.
+pub const GBOOST_D: usize = 64;
+/// Random-forest sample count.
+pub const RF_N: usize = 4096;
+/// Random-forest feature count.
+pub const RF_D: usize = 64;
+/// Random-forest prototype count.
+pub const RF_K: usize = 32;
+
+/// Dtype of an artifact input.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    /// 32-bit float.
+    F32,
+}
+
+/// One input's shape.
+#[derive(Clone, Debug)]
+pub struct InputSpec {
+    /// Dimensions (empty = scalar).
+    pub dims: &'static [i64],
+    /// Element type.
+    pub dtype: Dtype,
+}
+
+/// One artifact: name + ordered inputs.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    /// Artifact name (= python ARTIFACTS key = file stem).
+    pub name: &'static str,
+    /// Input shapes in call order.
+    pub inputs: &'static [InputSpec],
+}
+
+const F32: Dtype = Dtype::F32;
+
+/// All artifacts `aot.py` emits.
+pub static ARTIFACT_SPECS: &[ArtifactSpec] = &[
+    ArtifactSpec {
+        name: "logreg_step",
+        inputs: &[
+            InputSpec { dims: &[LOGREG_D as i64], dtype: F32 },
+            InputSpec {
+                dims: &[LOGREG_N as i64, LOGREG_D as i64],
+                dtype: F32,
+            },
+            InputSpec { dims: &[LOGREG_N as i64], dtype: F32 },
+            InputSpec { dims: &[], dtype: F32 },
+        ],
+    },
+    ArtifactSpec {
+        name: "kmeans_step",
+        inputs: &[
+            InputSpec {
+                dims: &[KMEANS_N as i64, KMEANS_D as i64],
+                dtype: F32,
+            },
+            InputSpec {
+                dims: &[KMEANS_K as i64, KMEANS_D as i64],
+                dtype: F32,
+            },
+        ],
+    },
+    ArtifactSpec {
+        name: "textrank_step",
+        inputs: &[
+            InputSpec {
+                dims: &[TEXTRANK_N as i64, TEXTRANK_N as i64],
+                dtype: F32,
+            },
+            InputSpec { dims: &[TEXTRANK_N as i64], dtype: F32 },
+            InputSpec { dims: &[1], dtype: F32 },
+        ],
+    },
+    ArtifactSpec {
+        name: "gboost_stump_step",
+        inputs: &[
+            InputSpec {
+                dims: &[GBOOST_N as i64, GBOOST_D as i64],
+                dtype: F32,
+            },
+            InputSpec { dims: &[GBOOST_N as i64], dtype: F32 },
+        ],
+    },
+    ArtifactSpec {
+        name: "rf_proximity_step",
+        inputs: &[
+            InputSpec { dims: &[RF_N as i64, RF_D as i64], dtype: F32 },
+            InputSpec { dims: &[RF_K as i64, RF_D as i64], dtype: F32 },
+        ],
+    },
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_are_unique() {
+        let mut names: Vec<_> =
+            ARTIFACT_SPECS.iter().map(|s| s.name).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), ARTIFACT_SPECS.len());
+    }
+
+    #[test]
+    fn logreg_batch_is_8mb_of_paged_data() {
+        // sanity: one logreg step consumes N*D floats = 4 MB of X
+        assert_eq!(LOGREG_N * LOGREG_D * 4, 4 << 20);
+    }
+}

@@ -1,0 +1,179 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client —
+//! the L3↔L2 bridge. Python never runs at request time; the rust binary
+//! is self-contained once `artifacts/` exists.
+//!
+//! Interchange format is HLO **text** (see /opt/xla-example/README.md):
+//! jax ≥ 0.5 emits HloModuleProto with 64-bit instruction ids that the
+//! crate's xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+mod artifacts;
+
+pub use artifacts::{ArtifactSpec, ARTIFACT_SPECS, GBOOST_D, GBOOST_N, KMEANS_D, KMEANS_K, KMEANS_N, LOGREG_D, LOGREG_N, RF_D, RF_K, RF_N, TEXTRANK_N};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+/// A loaded, compiled artifact.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Spec (name + input shapes) for validation.
+    pub spec: &'static ArtifactSpec,
+}
+
+impl Executable {
+    /// Execute with the given literals; returns the flattened tuple of
+    /// outputs (aot.py lowers with `return_tuple=True`).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.spec.inputs.len() {
+            return Err(anyhow!(
+                "{}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            ));
+        }
+        let mut result = self.exe.execute::<xla::Literal>(inputs)?[0][0]
+            .to_literal_sync()?;
+        let tuple = result.decompose_tuple()?;
+        Ok(tuple)
+    }
+}
+
+/// The runtime: one PJRT CPU client + the compiled executables.
+pub struct Runtime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    exes: HashMap<&'static str, Executable>,
+    /// Where artifacts were loaded from.
+    pub dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create the CPU client and compile every artifact found in `dir`
+    /// that matches a known spec. Missing artifacts are skipped (callers
+    /// check [`Runtime::get`]).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let client =
+            xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut exes = HashMap::new();
+        for spec in ARTIFACT_SPECS {
+            let path = dir.join(format!("{}.hlo.txt", spec.name));
+            if !path.exists() {
+                continue;
+            }
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().unwrap(),
+            )
+            .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", spec.name))?;
+            exes.insert(spec.name, Executable { exe, spec });
+        }
+        Ok(Runtime { client, exes, dir })
+    }
+
+    /// Default artifact location (repo-root `artifacts/`), overridable
+    /// via the VALET_ARTIFACTS environment variable.
+    pub fn default_dir() -> PathBuf {
+        if let Ok(p) = std::env::var("VALET_ARTIFACTS") {
+            return PathBuf::from(p);
+        }
+        PathBuf::from("artifacts")
+    }
+
+    /// Fetch a compiled artifact by name.
+    pub fn get(&self, name: &str) -> Result<&Executable> {
+        self.exes.get(name).ok_or_else(|| {
+            anyhow!("artifact '{name}' not loaded (run `make artifacts`)")
+        })
+    }
+
+    /// Names of everything loaded.
+    pub fn loaded(&self) -> Vec<&'static str> {
+        let mut v: Vec<_> = self.exes.keys().copied().collect();
+        v.sort();
+        v
+    }
+}
+
+/// Build a rank-N f32 literal from a flat slice.
+pub fn f32_literal(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    if n as usize != data.len() {
+        return Err(anyhow!("shape {:?} != len {}", dims, data.len()));
+    }
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Build a scalar f32 literal (rank 0).
+pub fn f32_scalar(v: f32) -> Result<xla::Literal> {
+    Ok(xla::Literal::scalar(v))
+}
+
+/// Extract an f32 vector from a literal.
+pub fn to_f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Extract an i32 vector from a literal.
+pub fn to_i32_vec(lit: &xla::Literal) -> Result<Vec<i32>> {
+    Ok(lit.to_vec::<i32>()?)
+}
+
+
+/// Random (seeded) input literals matching a spec — used by examples and
+/// benches to measure step compute without real data.
+pub fn random_inputs(spec: &ArtifactSpec) -> Result<Vec<xla::Literal>> {
+    let mut rng = crate::util::Rng::new(0xA07);
+    spec.inputs
+        .iter()
+        .map(|inp| {
+            let n: i64 = inp.dims.iter().product::<i64>().max(1);
+            let data: Vec<f32> = (0..n)
+                .map(|_| (rng.f64() as f32) * 2.0 - 1.0)
+                .collect();
+            if inp.dims.is_empty() {
+                f32_scalar(data[0].abs() * 0.1)
+            } else {
+                f32_literal(&data, inp.dims)
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Runtime tests that need artifacts live in rust/tests/ (integration,
+    // after `make artifacts`); here we only check spec plumbing.
+
+    #[test]
+    fn specs_are_wellformed() {
+        assert!(ARTIFACT_SPECS.len() >= 5);
+        for s in ARTIFACT_SPECS {
+            assert!(!s.inputs.is_empty(), "{}", s.name);
+        }
+    }
+
+    #[test]
+    fn literal_builders() {
+        let l = f32_literal(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(f32_literal(&[1.0], &[2]).is_err());
+        let s = f32_scalar(7.5).unwrap();
+        assert_eq!(s.to_vec::<f32>().unwrap(), vec![7.5]);
+    }
+
+    #[test]
+    fn missing_artifact_is_reported() {
+        let rt = Runtime::load("/nonexistent-dir").unwrap();
+        assert!(rt.get("logreg_step").is_err());
+    }
+}

@@ -1,0 +1,130 @@
+//! Typed event queue: schedules state-change events (remote memory
+//! pressure, eviction triggers, mempool resize checks, migration
+//! completions) in virtual time. Stable FIFO order among simultaneous
+//! events (insertion sequence breaks ties) keeps runs deterministic.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::Ns;
+
+/// A min-heap of (time, seq, event).
+#[derive(Debug)]
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Reverse<(Ns, u64, EventBox<E>)>>,
+    seq: u64,
+}
+
+// Wrapper so E doesn't need Ord — ordering ignores the payload.
+#[derive(Debug)]
+struct EventBox<E>(E);
+
+impl<E> PartialEq for EventBox<E> {
+    fn eq(&self, _: &Self) -> bool {
+        true
+    }
+}
+impl<E> Eq for EventBox<E> {}
+impl<E> PartialOrd for EventBox<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for EventBox<E> {
+    fn cmp(&self, _: &Self) -> std::cmp::Ordering {
+        std::cmp::Ordering::Equal
+    }
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> EventQueue<E> {
+    /// Empty queue.
+    pub fn new() -> Self {
+        EventQueue {
+            heap: BinaryHeap::new(),
+            seq: 0,
+        }
+    }
+
+    /// Schedule `ev` at time `at`.
+    pub fn push(&mut self, at: Ns, ev: E) {
+        self.heap.push(Reverse((at, self.seq, EventBox(ev))));
+        self.seq += 1;
+    }
+
+    /// Time of the next event, if any.
+    pub fn peek_time(&self) -> Option<Ns> {
+        self.heap.peek().map(|Reverse((t, _, _))| *t)
+    }
+
+    /// Pop the next event if it fires at or before `now`.
+    pub fn pop_due(&mut self, now: Ns) -> Option<(Ns, E)> {
+        match self.peek_time() {
+            Some(t) if t <= now => {
+                let Reverse((t, _, EventBox(e))) = self.heap.pop().unwrap();
+                Some((t, e))
+            }
+            _ => None,
+        }
+    }
+
+    /// Pop the earliest event regardless of time.
+    pub fn pop(&mut self) -> Option<(Ns, E)> {
+        self.heap.pop().map(|Reverse((t, _, EventBox(e)))| (t, e))
+    }
+
+    /// Number of pending events.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// True if no events are pending.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(30, "c");
+        q.push(10, "a");
+        q.push(20, "b");
+        assert_eq!(q.pop(), Some((10, "a")));
+        assert_eq!(q.pop(), Some((20, "b")));
+        assert_eq!(q.pop(), Some((30, "c")));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn simultaneous_events_preserve_insertion_order() {
+        let mut q = EventQueue::new();
+        q.push(5, 1);
+        q.push(5, 2);
+        q.push(5, 3);
+        assert_eq!(q.pop(), Some((5, 1)));
+        assert_eq!(q.pop(), Some((5, 2)));
+        assert_eq!(q.pop(), Some((5, 3)));
+    }
+
+    #[test]
+    fn pop_due_respects_now() {
+        let mut q = EventQueue::new();
+        q.push(100, "later");
+        q.push(10, "now");
+        assert_eq!(q.pop_due(50), Some((10, "now")));
+        assert_eq!(q.pop_due(50), None);
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.pop_due(100), Some((100, "later")));
+        assert!(q.is_empty());
+    }
+}

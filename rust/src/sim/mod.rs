@@ -1,0 +1,57 @@
+//! Deterministic simulation substrate: a virtual clock in nanoseconds,
+//! FIFO resource servers (queueing-model building block for NICs, disks,
+//! sender threads and remote CPUs) and a typed event queue for scheduled
+//! state changes (evictions, memory-pressure phases, mempool resizes).
+//!
+//! Why this shape: every figure in the paper is an aggregate over the
+//! *latency composition* of a paging pipeline. Modeling each shared
+//! resource as a FIFO server with a `next_free` timestamp reproduces the
+//! queueing effects that drive those figures (nbdX message-pool
+//! exhaustion, disk convoys during Infiniswap connection windows, staging
+//! backpressure on the Valet mempool) while keeping the simulator
+//! single-threaded, allocation-free on the hot path, and bit-for-bit
+//! deterministic under a fixed seed.
+
+mod engine;
+mod server;
+
+pub use engine::EventQueue;
+pub use server::Server;
+
+/// Virtual time in nanoseconds since simulation start.
+pub type Ns = u64;
+
+/// Microseconds → ns.
+pub const fn us(v: u64) -> Ns {
+    v * 1_000
+}
+
+/// Milliseconds → ns.
+pub const fn ms(v: u64) -> Ns {
+    v * 1_000_000
+}
+
+/// Seconds → ns.
+pub const fn secs(v: u64) -> Ns {
+    v * 1_000_000_000
+}
+
+/// Fractional microseconds → ns (for paper-calibrated constants like
+/// 51.35 µs).
+pub fn us_f(v: f64) -> Ns {
+    (v * 1_000.0).round() as Ns
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_helpers() {
+        assert_eq!(us(51), 51_000);
+        assert_eq!(ms(200), 200_000_000);
+        assert_eq!(secs(2), 2_000_000_000);
+        assert_eq!(us_f(51.35), 51_350);
+        assert_eq!(us_f(0.14), 140);
+    }
+}

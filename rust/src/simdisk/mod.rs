@@ -1,0 +1,123 @@
+//! Disk model: a FIFO device with seek + per-byte transfer costs
+//! (defaults model the paper's 7.2k SATA HDD testbed). Used by the
+//! linux_swap baseline, Infiniswap's redirect-to-disk windows and Valet's
+//! optional disk-backup path.
+
+use crate::config::LatencyConfig;
+use crate::sim::{Ns, Server};
+
+/// A single disk (one per node).
+#[derive(Clone, Debug)]
+pub struct Disk {
+    queue: Server,
+    seek: Ns,
+    per_byte: f64,
+    /// Total I/Os served (stats).
+    pub ios: u64,
+    /// Total bytes moved (stats).
+    pub bytes: u64,
+}
+
+impl Disk {
+    /// Build from the latency model.
+    pub fn new(lat: &LatencyConfig) -> Self {
+        Disk {
+            queue: Server::new(),
+            seek: lat.disk_seek,
+            per_byte: lat.disk_per_byte,
+            ios: 0,
+            bytes: 0,
+        }
+    }
+
+    /// Service time for one I/O of `bytes` (no queueing).
+    pub fn service_time(&self, bytes: u64) -> Ns {
+        self.seek + (self.per_byte * bytes as f64) as Ns
+    }
+
+    /// Submit a synchronous read; returns completion time (queueing
+    /// included — a busy disk convoys requests, which is exactly the
+    /// effect behind the paper's Table 1 disk numbers).
+    pub fn read(&mut self, now: Ns, bytes: u64) -> Ns {
+        self.io(now, bytes)
+    }
+
+    /// Submit a synchronous write.
+    pub fn write(&mut self, now: Ns, bytes: u64) -> Ns {
+        self.io(now, bytes)
+    }
+
+    /// Submit an asynchronous background write (Valet disk backup;
+    /// Infiniswap's async flush). Modeled as low-priority writeback that
+    /// yields to foreground I/O: it does NOT occupy the FIFO that reads
+    /// and synchronous writes queue on (kernel writeback runs at idle
+    /// priority), so it only counts toward stats. Returns a durability
+    /// estimate of now + one service time.
+    pub fn write_async(&mut self, now: Ns, bytes: u64) -> Ns {
+        self.ios += 1;
+        self.bytes += bytes;
+        now + self.service_time(bytes)
+    }
+
+    fn io(&mut self, now: Ns, bytes: u64) -> Ns {
+        let dur = self.service_time(bytes);
+        let (_, end) = self.queue.serve(now, dur);
+        self.ios += 1;
+        self.bytes += bytes;
+        end
+    }
+
+    /// Pending work, as time.
+    pub fn backlog(&self, now: Ns) -> Ns {
+        self.queue.backlog(now)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn disk() -> Disk {
+        Disk::new(&LatencyConfig::default())
+    }
+
+    #[test]
+    fn service_time_has_seek_and_transfer() {
+        let d = disk();
+        let t4k = d.service_time(4096);
+        let t128k = d.service_time(128 * 1024);
+        assert!(t4k >= 8_000_000); // >= seek
+        assert!(t128k > t4k);
+        // transfer component ≈ bytes * 10ns
+        assert_eq!(t128k - t4k, (10.0 * (128 * 1024 - 4096) as f64) as u64);
+    }
+
+    #[test]
+    fn disk_queues_fifo() {
+        let mut d = disk();
+        let a = d.write(0, 4096);
+        let b = d.write(0, 4096);
+        assert_eq!(b - a, d.service_time(4096));
+        assert_eq!(d.ios, 2);
+    }
+
+    #[test]
+    fn convoy_effect_grows_latency() {
+        // 50 writes burst-arriving at t=0: the last one waits ~50 service
+        // times — the Table 1 "Disk WR 401 ms" convoy in miniature.
+        let mut d = disk();
+        let mut last = 0;
+        for _ in 0..50 {
+            last = d.write(0, 64 * 1024);
+        }
+        assert!(last >= 50 * d.service_time(64 * 1024));
+    }
+
+    #[test]
+    fn backlog_drains_with_time() {
+        let mut d = disk();
+        d.write(0, 4096);
+        assert!(d.backlog(0) > 0);
+        assert_eq!(d.backlog(d.service_time(4096)), 0);
+    }
+}

@@ -1,0 +1,129 @@
+//! Growable page bitmap: the §5.2 "bitmap for the remote page indicates
+//! that remote page is ready to read" structure. Constant-time set/get
+//! over dense page numbers; ~30× less memory and pointer-chasing than a
+//! `HashSet<u64>` on the write/read hot paths (see EXPERIMENTS.md §Perf
+//! iteration 2).
+
+/// A bitmap over page numbers, growing on demand.
+#[derive(Clone, Debug, Default)]
+pub struct PageBitmap {
+    words: Vec<u64>,
+    ones: u64,
+}
+
+impl PageBitmap {
+    /// Empty bitmap.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of set bits.
+    pub fn count(&self) -> u64 {
+        self.ones
+    }
+
+    /// Set `page`'s bit; returns true if it was newly set.
+    #[inline]
+    pub fn set(&mut self, page: u64) -> bool {
+        let (w, b) = ((page / 64) as usize, page % 64);
+        if w >= self.words.len() {
+            self.words.resize(w + 1, 0);
+        }
+        let mask = 1u64 << b;
+        let was = self.words[w] & mask != 0;
+        self.words[w] |= mask;
+        if !was {
+            self.ones += 1;
+        }
+        !was
+    }
+
+    /// Clear `page`'s bit; returns true if it was set.
+    #[inline]
+    pub fn clear(&mut self, page: u64) -> bool {
+        let (w, b) = ((page / 64) as usize, page % 64);
+        if w >= self.words.len() {
+            return false;
+        }
+        let mask = 1u64 << b;
+        let was = self.words[w] & mask != 0;
+        self.words[w] &= !mask;
+        if was {
+            self.ones -= 1;
+        }
+        was
+    }
+
+    /// Is `page`'s bit set?
+    #[inline]
+    pub fn get(&self, page: u64) -> bool {
+        let (w, b) = ((page / 64) as usize, page % 64);
+        self.words.get(w).is_some_and(|word| word & (1 << b) != 0)
+    }
+
+    /// Set all bits in [start, start+n).
+    pub fn set_range(&mut self, start: u64, n: u64) {
+        for p in start..start + n {
+            self.set(p);
+        }
+    }
+
+    /// Clear all bits in [start, start+n).
+    pub fn clear_range(&mut self, start: u64, n: u64) {
+        for p in start..start + n {
+            self.clear(p);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use std::collections::HashSet;
+
+    #[test]
+    fn set_get_clear_roundtrip() {
+        let mut b = PageBitmap::new();
+        assert!(!b.get(1000));
+        assert!(b.set(1000));
+        assert!(!b.set(1000)); // already set
+        assert!(b.get(1000));
+        assert_eq!(b.count(), 1);
+        assert!(b.clear(1000));
+        assert!(!b.clear(1000));
+        assert!(!b.get(1000));
+        assert_eq!(b.count(), 0);
+    }
+
+    #[test]
+    fn ranges() {
+        let mut b = PageBitmap::new();
+        b.set_range(10, 20);
+        assert_eq!(b.count(), 20);
+        assert!(b.get(10) && b.get(29) && !b.get(30) && !b.get(9));
+        b.clear_range(15, 100);
+        assert_eq!(b.count(), 5);
+    }
+
+    #[test]
+    fn prop_matches_hashset_model() {
+        prop::check("bitmap vs hashset", |rng| {
+            let mut bm = PageBitmap::new();
+            let mut hs: HashSet<u64> = HashSet::new();
+            for _ in 0..300 {
+                let p = rng.below(10_000);
+                match rng.below(3) {
+                    0 | 1 => {
+                        assert_eq!(bm.set(p), hs.insert(p));
+                    }
+                    _ => {
+                        assert_eq!(bm.clear(p), hs.remove(&p));
+                    }
+                }
+                assert_eq!(bm.get(p), hs.contains(&p));
+                assert_eq!(bm.count(), hs.len() as u64);
+            }
+        });
+    }
+}

@@ -1,0 +1,102 @@
+//! Human-readable formatting for byte sizes, durations and table output —
+//! used by the CLI and the `valet-bench` table printers.
+
+/// Format a byte count with binary units ("1.50 GiB").
+pub fn bytes(b: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Format nanoseconds adaptively ("12.3 µs", "4.56 ms", "1.23 s").
+pub fn ns(t: u64) -> String {
+    match t {
+        0..=999 => format!("{t} ns"),
+        1_000..=999_999 => format!("{:.2} µs", t as f64 / 1e3),
+        1_000_000..=999_999_999 => format!("{:.2} ms", t as f64 / 1e6),
+        _ => format!("{:.2} s", t as f64 / 1e9),
+    }
+}
+
+/// Format microseconds as the paper's tables do (µsec, 2 decimals).
+pub fn usec(t_ns: u64) -> String {
+    format!("{:.2}", t_ns as f64 / 1e3)
+}
+
+/// Render rows as a fixed-width ASCII table with a header.
+pub fn table(header: &[&str], rows: &[Vec<String>]) -> String {
+    let ncol = header.len();
+    let mut w: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncol) {
+            w[i] = w[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let sep = |out: &mut String| {
+        for width in &w {
+            out.push('+');
+            out.push_str(&"-".repeat(width + 2));
+        }
+        out.push_str("+\n");
+    };
+    sep(&mut out);
+    out.push('|');
+    for (i, h) in header.iter().enumerate() {
+        out.push_str(&format!(" {:<width$} |", h, width = w[i]));
+    }
+    out.push('\n');
+    sep(&mut out);
+    for row in rows {
+        out.push('|');
+        for (i, cell) in row.iter().enumerate().take(ncol) {
+            out.push_str(&format!(" {:<width$} |", cell, width = w[i]));
+        }
+        out.push('\n');
+    }
+    sep(&mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(bytes(512), "512 B");
+        assert_eq!(bytes(1536), "1.50 KiB");
+        assert_eq!(bytes(3 * 1024 * 1024 * 1024), "3.00 GiB");
+    }
+
+    #[test]
+    fn ns_units() {
+        assert_eq!(ns(12), "12 ns");
+        assert_eq!(ns(12_300), "12.30 µs");
+        assert_eq!(ns(4_560_000), "4.56 ms");
+        assert_eq!(ns(1_230_000_000), "1.23 s");
+    }
+
+    #[test]
+    fn table_renders_all_rows() {
+        let t = table(
+            &["a", "long header"],
+            &[
+                vec!["1".into(), "2".into()],
+                vec!["333".into(), "4".into()],
+            ],
+        );
+        assert!(t.contains("long header"));
+        assert!(t.lines().count() >= 6);
+        assert!(t.contains("333"));
+    }
+}

@@ -1,0 +1,275 @@
+//! Generic O(1) LRU list: HashMap + slab-backed intrusive doubly-linked
+//! list. Shared by the container resident-set model and the Valet local
+//! mempool replacement policy ("For replacement policy, we use LRU in our
+//! prototype", §4.1).
+
+use std::collections::HashMap;
+use std::hash::Hash;
+
+const NIL: usize = usize::MAX;
+
+#[derive(Clone, Debug)]
+struct Node<K> {
+    key: K,
+    prev: usize,
+    next: usize,
+}
+
+/// LRU ordering over keys; front = most recently used.
+#[derive(Clone, Debug)]
+pub struct Lru<K: Hash + Eq + Copy> {
+    map: HashMap<K, usize>,
+    nodes: Vec<Node<K>>,
+    free: Vec<usize>,
+    head: usize,
+    tail: usize,
+}
+
+impl<K: Hash + Eq + Copy> Default for Lru<K> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<K: Hash + Eq + Copy> Lru<K> {
+    /// Empty list.
+    pub fn new() -> Self {
+        Lru {
+            map: HashMap::new(),
+            nodes: Vec::new(),
+            free: Vec::new(),
+            head: NIL,
+            tail: NIL,
+        }
+    }
+
+    /// Number of keys tracked.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Is `k` present?
+    pub fn contains(&self, k: &K) -> bool {
+        self.map.contains_key(k)
+    }
+
+    fn unlink(&mut self, i: usize) {
+        let (p, n) = (self.nodes[i].prev, self.nodes[i].next);
+        if p != NIL {
+            self.nodes[p].next = n;
+        } else {
+            self.head = n;
+        }
+        if n != NIL {
+            self.nodes[n].prev = p;
+        } else {
+            self.tail = p;
+        }
+    }
+
+    fn link_front(&mut self, i: usize) {
+        self.nodes[i].prev = NIL;
+        self.nodes[i].next = self.head;
+        if self.head != NIL {
+            self.nodes[self.head].prev = i;
+        }
+        self.head = i;
+        if self.tail == NIL {
+            self.tail = i;
+        }
+    }
+
+    /// Insert `k` as most-recently-used (or move it to front if present).
+    /// Returns true if the key was newly inserted.
+    pub fn touch(&mut self, k: K) -> bool {
+        if let Some(&i) = self.map.get(&k) {
+            if self.head != i {
+                self.unlink(i);
+                self.link_front(i);
+            }
+            false
+        } else {
+            let i = if let Some(i) = self.free.pop() {
+                self.nodes[i] = Node {
+                    key: k,
+                    prev: NIL,
+                    next: NIL,
+                };
+                i
+            } else {
+                self.nodes.push(Node {
+                    key: k,
+                    prev: NIL,
+                    next: NIL,
+                });
+                self.nodes.len() - 1
+            };
+            self.map.insert(k, i);
+            self.link_front(i);
+            true
+        }
+    }
+
+    /// Remove and return the least-recently-used key.
+    pub fn pop_lru(&mut self) -> Option<K> {
+        if self.tail == NIL {
+            return None;
+        }
+        let i = self.tail;
+        let k = self.nodes[i].key;
+        self.unlink(i);
+        self.map.remove(&k);
+        self.free.push(i);
+        Some(k)
+    }
+
+    /// Remove and return the MOST-recently-used key (MRU eviction — the
+    /// policy the paper's §6.2 suggests for K-Means-like repetitive
+    /// access patterns; left as future work there, implemented here).
+    pub fn pop_mru(&mut self) -> Option<K> {
+        if self.head == NIL {
+            return None;
+        }
+        let i = self.head;
+        let k = self.nodes[i].key;
+        self.unlink(i);
+        self.map.remove(&k);
+        self.free.push(i);
+        Some(k)
+    }
+
+    /// Peek at the least-recently-used key without removing it.
+    pub fn peek_lru(&self) -> Option<&K> {
+        if self.tail == NIL {
+            None
+        } else {
+            Some(&self.nodes[self.tail].key)
+        }
+    }
+
+    /// Remove a specific key; returns true if it was present.
+    pub fn remove(&mut self, k: &K) -> bool {
+        if let Some(i) = self.map.remove(k) {
+            self.unlink(i);
+            self.free.push(i);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Iterate keys from most- to least-recently used.
+    pub fn iter_mru(&self) -> impl Iterator<Item = &K> + '_ {
+        let mut cur = self.head;
+        std::iter::from_fn(move || {
+            if cur == NIL {
+                None
+            } else {
+                let k = &self.nodes[cur].key;
+                cur = self.nodes[cur].next;
+                Some(k)
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn touch_orders_mru_first() {
+        let mut l = Lru::new();
+        l.touch(1);
+        l.touch(2);
+        l.touch(3);
+        l.touch(1); // 1 becomes MRU
+        let order: Vec<_> = l.iter_mru().copied().collect();
+        assert_eq!(order, vec![1, 3, 2]);
+        assert_eq!(l.pop_lru(), Some(2));
+        assert_eq!(l.pop_lru(), Some(3));
+        assert_eq!(l.pop_lru(), Some(1));
+        assert_eq!(l.pop_lru(), None);
+    }
+
+    #[test]
+    fn pop_mru_takes_front() {
+        let mut l = Lru::new();
+        l.touch(1);
+        l.touch(2);
+        l.touch(3);
+        assert_eq!(l.pop_mru(), Some(3));
+        assert_eq!(l.pop_mru(), Some(2));
+        assert_eq!(l.pop_lru(), Some(1));
+        assert_eq!(l.pop_mru(), None);
+    }
+
+    #[test]
+    fn remove_mid_list() {
+        let mut l = Lru::new();
+        for k in 0..5 {
+            l.touch(k);
+        }
+        assert!(l.remove(&2));
+        assert!(!l.remove(&2));
+        let order: Vec<_> = l.iter_mru().copied().collect();
+        assert_eq!(order, vec![4, 3, 1, 0]);
+    }
+
+    #[test]
+    fn slots_are_reused() {
+        let mut l = Lru::new();
+        for k in 0..100 {
+            l.touch(k);
+        }
+        for _ in 0..100 {
+            l.pop_lru();
+        }
+        for k in 100..200 {
+            l.touch(k);
+        }
+        assert!(l.nodes.len() <= 100, "slab grew: {}", l.nodes.len());
+    }
+
+    #[test]
+    fn prop_matches_reference_model() {
+        // Random ops vs a naive Vec-based reference LRU.
+        prop::check("lru vs reference", |rng| {
+            let mut lru = Lru::new();
+            let mut model: Vec<u64> = Vec::new(); // front = MRU
+            for _ in 0..200 {
+                match rng.below(4) {
+                    0 | 1 => {
+                        let k = rng.below(20);
+                        lru.touch(k);
+                        model.retain(|&x| x != k);
+                        model.insert(0, k);
+                    }
+                    2 => {
+                        let got = lru.pop_lru();
+                        let want = model.pop();
+                        assert_eq!(got, want);
+                    }
+                    _ => {
+                        let k = rng.below(20);
+                        let got = lru.remove(&k);
+                        let want = model.iter().any(|&x| x == k);
+                        model.retain(|&x| x != k);
+                        assert_eq!(got, want);
+                    }
+                }
+                assert_eq!(lru.len(), model.len());
+                assert_eq!(
+                    lru.iter_mru().copied().collect::<Vec<_>>(),
+                    model
+                );
+            }
+        });
+    }
+}

@@ -1,0 +1,13 @@
+//! Small shared utilities: deterministic PRNG, zipfian sampling, an
+//! in-crate property-testing harness (no external proptest available in
+//! this offline build), and human-readable size/time formatting.
+
+pub mod bitmap;
+pub mod fmt;
+pub mod lru;
+pub mod prop;
+pub mod rng;
+
+pub use bitmap::PageBitmap;
+pub use lru::Lru;
+pub use rng::{Rng, Zipfian};

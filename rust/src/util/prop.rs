@@ -1,0 +1,74 @@
+//! Minimal in-crate property-testing harness (the offline build has no
+//! proptest/quickcheck). Each property runs `CASES` random cases from a
+//! fixed base seed; a failure reports the case seed so it can be replayed
+//! with [`check_one`].
+//!
+//! ```ignore
+//! check("mempool never exceeds max", |rng| {
+//!     let n = rng.below(100);
+//!     ... assert!(...);
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Number of random cases per property (tuned so the full suite stays
+/// fast; bump locally when hunting bugs).
+pub const CASES: u64 = 256;
+
+/// Run `f` on `CASES` independently seeded RNGs; panic with the failing
+/// seed on the first failure.
+pub fn check(name: &str, mut f: impl FnMut(&mut Rng)) {
+    for case in 0..CASES {
+        let seed = 0x0A1E7_u64 ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || f(&mut rng),
+        ));
+        if let Err(e) = result {
+            eprintln!(
+                "property '{name}' failed on case {case} (seed {seed:#x}); \
+                 replay with check_one({seed:#x}, ..)"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Replay a single case by seed.
+pub fn check_one(seed: u64, mut f: impl FnMut(&mut Rng)) {
+    let mut rng = Rng::new(seed);
+    f(&mut rng);
+}
+
+/// Random vector of length in [0, max_len) with values from `g`.
+pub fn vec_of<T>(
+    rng: &mut Rng,
+    max_len: usize,
+    mut g: impl FnMut(&mut Rng) -> T,
+) -> Vec<T> {
+    let n = rng.below_usize(max_len.max(1));
+    (0..n).map(|_| g(rng)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_runs_all_cases() {
+        let mut n = 0;
+        check("counting", |_| n += 1);
+        assert_eq!(n, CASES);
+    }
+
+    #[test]
+    fn vec_of_respects_bound() {
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let v = vec_of(&mut rng, 17, |r| r.below(5));
+            assert!(v.len() < 17);
+            assert!(v.iter().all(|&x| x < 5));
+        }
+    }
+}

@@ -1,0 +1,277 @@
+//! Deterministic PRNG + YCSB-style zipfian generator.
+//!
+//! The whole simulation must be reproducible from a seed (DESIGN.md §7:
+//! "determinism under same seed" is a tested invariant), so we carry our
+//! own xoshiro256** implementation instead of depending on `rand` (not
+//! available offline), seeded via splitmix64 like the reference
+//! implementation.
+
+/// xoshiro256** PRNG (Blackman & Vigna). Fast, 256-bit state, good enough
+/// for workload generation; NOT cryptographic.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Create from a seed; any seed (including 0) is fine — state is
+    /// expanded with splitmix64.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut next = || {
+            sm = sm.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        Rng {
+            s: [next(), next(), next(), next()],
+        }
+    }
+
+    /// Next raw 64-bit value.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let r = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        r
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n). n must be > 0.
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        // Lemire's multiply-shift rejection-free approximation is fine for
+        // workload gen; modulo bias at n << 2^64 is negligible but we use
+        // the widening multiply anyway.
+        (((self.next_u64() as u128) * (n as u128)) >> 64) as u64
+    }
+
+    /// Uniform usize in [0, n).
+    #[inline]
+    pub fn below_usize(&mut self, n: usize) -> usize {
+        self.below(n as u64) as usize
+    }
+
+    /// Bernoulli trial with probability p.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Uniform f64 in [lo, hi).
+    #[inline]
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.f64() * (hi - lo)
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below_usize(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// Zipfian generator over [0, n) with skew `theta`, after the YCSB /
+/// Gray et al. construction ("Quickly generating billion-record synthetic
+/// databases"). `theta = 0.99` matches YCSB's default, which the paper's
+/// evaluation uses ("we use zipfian distribution for both workload").
+#[derive(Clone, Debug)]
+pub struct Zipfian {
+    n: u64,
+    theta: f64,
+    alpha: f64,
+    zetan: f64,
+    eta: f64,
+    zeta2: f64,
+}
+
+impl Zipfian {
+    /// Build for n items. O(n) once (zeta sum); n up to ~10^8 is fine.
+    pub fn new(n: u64, theta: f64) -> Self {
+        assert!(n > 0);
+        let zetan = Self::zeta(n, theta);
+        let zeta2 = Self::zeta(2, theta);
+        let alpha = 1.0 / (1.0 - theta);
+        let eta =
+            (1.0 - (2.0 / n as f64).powf(1.0 - theta)) / (1.0 - zeta2 / zetan);
+        Zipfian {
+            n,
+            theta,
+            alpha,
+            zetan,
+            eta,
+            zeta2,
+        }
+    }
+
+    fn zeta(n: u64, theta: f64) -> f64 {
+        let mut sum = 0.0;
+        for i in 1..=n {
+            sum += 1.0 / (i as f64).powf(theta);
+        }
+        sum
+    }
+
+    /// Number of items.
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    /// Draw the next rank (0 = hottest item).
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        let u = rng.f64();
+        let uz = u * self.zetan;
+        if uz < 1.0 {
+            return 0;
+        }
+        if uz < 1.0 + 0.5f64.powf(self.theta) {
+            return 1;
+        }
+        let v = (self.n as f64
+            * (self.eta * u - self.eta + 1.0).powf(self.alpha))
+            as u64;
+        v.min(self.n - 1)
+    }
+
+    /// Draw and scatter: YCSB hashes the rank so hot items are spread over
+    /// the key space instead of clustered at low keys. fnv-style mix.
+    pub fn sample_scattered(&self, rng: &mut Rng) -> u64 {
+        let r = self.sample(rng);
+        // splitmix-style scramble, then reduce
+        let mut z = r.wrapping_add(0x9E3779B97F4A7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        (z ^ (z >> 31)) % self.n
+    }
+
+    /// Exposed for tests: theoretical probability of rank k (0-based).
+    pub fn prob(&self, k: u64) -> f64 {
+        (1.0 / ((k + 1) as f64).powf(self.theta)) / self.zetan
+    }
+
+    /// zeta(2, theta), exposed for diagnostics.
+    pub fn zeta2(&self) -> f64 {
+        self.zeta2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn rng_different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(
+            (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let v = r.f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut r = Rng::new(3);
+        let mut seen = [false; 10];
+        for _ in 0..10_000 {
+            let v = r.below(10);
+            assert!(v < 10);
+            seen[v as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn below_mean_is_centered() {
+        let mut r = Rng::new(5);
+        let n = 100_000;
+        let sum: u64 = (0..n).map(|_| r.below(1000)).sum();
+        let mean = sum as f64 / n as f64;
+        assert!((mean - 499.5).abs() < 5.0, "mean={mean}");
+    }
+
+    #[test]
+    fn zipf_hot_item_frequency_matches_theory() {
+        let z = Zipfian::new(1000, 0.99);
+        let mut r = Rng::new(9);
+        let n = 200_000;
+        let hot = (0..n).filter(|_| z.sample(&mut r) == 0).count();
+        let got = hot as f64 / n as f64;
+        let want = z.prob(0);
+        assert!(
+            (got - want).abs() < 0.01,
+            "got {got}, theoretical {want}"
+        );
+    }
+
+    #[test]
+    fn zipf_is_monotone_decreasing_in_rank() {
+        let z = Zipfian::new(100, 0.99);
+        let mut r = Rng::new(11);
+        let mut counts = vec![0u64; 100];
+        for _ in 0..300_000 {
+            counts[z.sample(&mut r) as usize] += 1;
+        }
+        // aggregate decreasing in broad buckets to dodge sampling noise
+        let head: u64 = counts[..10].iter().sum();
+        let mid: u64 = counts[10..50].iter().sum();
+        let tail: u64 = counts[50..].iter().sum();
+        assert!(head > mid && mid > tail, "{head} {mid} {tail}");
+    }
+
+    #[test]
+    fn zipf_scattered_stays_in_range() {
+        let z = Zipfian::new(1234, 0.99);
+        let mut r = Rng::new(13);
+        for _ in 0..10_000 {
+            assert!(z.sample_scattered(&mut r) < 1234);
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(17);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,330 @@
+//! The KV workload driver: runs YCSB over a store model inside a
+//! memory-limited container, paging through the cluster's backend — the
+//! engine behind Figures 3, 18, 19, 21, 22 and Tables 5/7.
+//!
+//! Closed-loop with `concurrency` logical clients: each client issues its
+//! next operation when its previous one completes; shared resources (NIC,
+//! disk, receiver CPUs) queue naturally, so saturation effects (disk
+//! convoys, nbdX pool exhaustion) emerge at high load.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashSet};
+
+use super::stores::StoreModel;
+use super::ycsb::{Mix, YcsbGen};
+use crate::cluster::Cluster;
+use crate::container::{Access as CtAccess, Container};
+use crate::metrics::RunMetrics;
+use crate::sim::Ns;
+use crate::PAGE_SIZE;
+
+/// Parameters of one KV run.
+#[derive(Clone, Debug)]
+pub struct KvRunConfig {
+    /// Store model (app + value size).
+    pub store: StoreModel,
+    /// GET/SET mix.
+    pub mix: Mix,
+    /// Number of records.
+    pub records: u64,
+    /// Operations to run (measured phase).
+    pub ops: u64,
+    /// Container memory limit in bytes.
+    pub container_limit: u64,
+    /// Concurrent logical clients.
+    pub concurrency: usize,
+    /// Seed.
+    pub seed: u64,
+    /// DRAM access cost per resident page touch.
+    pub dram_ns: Ns,
+}
+
+impl KvRunConfig {
+    /// Reasonable defaults for a store + mix + fit fraction.
+    pub fn new(store: StoreModel, mix: Mix, records: u64, ops: u64) -> Self {
+        KvRunConfig {
+            store,
+            mix,
+            records,
+            ops,
+            container_limit: u64::MAX,
+            concurrency: 8,
+            seed: 1,
+            dram_ns: 200,
+        }
+    }
+
+    /// Set the container limit so that `fit` (0..=1] of the working set
+    /// is memory-resident — the paper's 100/75/50/25 % configurations.
+    pub fn with_fit(mut self, fit: f64) -> Self {
+        let ws = self.store.working_set_pages(self.records) * PAGE_SIZE;
+        self.container_limit = ((ws as f64) * fit).ceil() as u64;
+        self
+    }
+}
+
+/// Outcome of a run.
+#[derive(Clone, Debug)]
+pub struct KvResult {
+    /// Merged metrics (op latencies + the backend's internals).
+    pub metrics: RunMetrics,
+    /// Virtual completion time of the measured phase.
+    pub completion: Ns,
+    /// Page faults taken during the measured phase.
+    pub faults: u64,
+}
+
+/// A persistent KV workload session: load once, measure any number of
+/// phases (the eviction experiments — Figures 5 and 23 — evict remote
+/// memory *between* phases, which a single populate+run call would wash
+/// out by re-populating).
+pub struct KvSession {
+    rc: KvRunConfig,
+    container: Container,
+    swapped: HashSet<u64>,
+    /// Current virtual time (advances across phases).
+    pub t: Ns,
+    loaded: bool,
+}
+
+impl KvSession {
+    /// New session (no pages touched yet).
+    pub fn new(rc: KvRunConfig) -> Self {
+        KvSession {
+            container: Container::new(rc.container_limit),
+            swapped: HashSet::new(),
+            t: 0,
+            loaded: false,
+            rc,
+        }
+    }
+
+    /// Load phase: touch every working-set page once (write), like
+    /// YCSB's load phase; then flush dirty residents (steady-state
+    /// writeback) and idle until the background pipelines drain.
+    pub fn load(&mut self, cluster: &mut Cluster) {
+        let ws_pages = self.rc.store.working_set_pages(self.rc.records);
+        for page in 0..ws_pages {
+            self.t = touch_page(
+                cluster,
+                &mut self.container,
+                &mut self.swapped,
+                self.t,
+                page,
+                true,
+                self.rc.dram_ns,
+            );
+            if page % 8192 == 0 {
+                cluster.advance(self.t);
+            }
+        }
+        // Writeback flush: the load phase leaves the resident set dirty;
+        // flush it so measured dirty evictions reflect the GET/SET mix.
+        for page in self.container.dirty_pages() {
+            let a = cluster.backend.write(
+                &mut cluster.state,
+                self.t,
+                page,
+                PAGE_SIZE,
+            );
+            self.t = a.end;
+            self.swapped.insert(page);
+            self.container.clean(page);
+        }
+        // idle gap: reach steady state (virtual time is free)
+        self.t += crate::sim::secs(30);
+        cluster.advance(self.t);
+        self.loaded = true;
+    }
+
+    /// One measured phase of `ops` operations.
+    pub fn run(&mut self, cluster: &mut Cluster, ops: u64) -> KvResult {
+        assert!(self.loaded, "call load() first");
+        *cluster.backend.metrics_mut() = RunMetrics::default();
+        let t0 = self.t;
+        let faults0 = self.container.faults;
+        let rc = self.rc.clone();
+        let mut gen = YcsbGen::new(rc.records, rc.mix, rc.seed);
+        let mut heap: BinaryHeap<Reverse<(Ns, usize)>> = (0..rc.concurrency)
+            .map(|c| Reverse((t0 + c as Ns, c)))
+            .collect();
+        let mut op_lat = crate::metrics::Histogram::new();
+        let mut issued = 0u64;
+        let mut finished_at = t0;
+        while issued < ops {
+            let Reverse((t_cl, client)) = heap.pop().expect("clients");
+            cluster.advance(t_cl);
+            let op = gen.next_op();
+            let mut rng_scratch = crate::util::Rng::new(rc.seed ^ issued);
+            let pages = rc.store.pages_for_op(
+                op.key,
+                op.is_get,
+                rc.records,
+                &mut rng_scratch,
+            );
+            let mut t_op = t_cl + rc.store.op_cpu;
+            for (page, write) in pages {
+                t_op = touch_page(
+                    cluster,
+                    &mut self.container,
+                    &mut self.swapped,
+                    t_op,
+                    page,
+                    write,
+                    rc.dram_ns,
+                );
+            }
+            op_lat.record(t_op - t_cl);
+            finished_at = finished_at.max(t_op);
+            issued += 1;
+            heap.push(Reverse((t_op, client)));
+        }
+        self.t = finished_at;
+        let mut metrics = cluster.backend.metrics().clone();
+        metrics.op_latency = op_lat;
+        metrics.ops = ops;
+        metrics.finished_at = finished_at - t0;
+        KvResult {
+            metrics,
+            completion: finished_at - t0,
+            faults: self.container.faults - faults0,
+        }
+    }
+}
+
+/// Populate + run once (the common case).
+pub fn run_kv(cluster: &mut Cluster, rc: &KvRunConfig) -> KvResult {
+    let ops = rc.ops;
+    let mut session = KvSession::new(rc.clone());
+    session.load(cluster);
+    session.run(cluster, ops)
+}
+
+/// Touch one page inside the container, paging via the backend on
+/// faults. Returns the completion time.
+fn touch_page(
+    cluster: &mut Cluster,
+    container: &mut Container,
+    swapped: &mut HashSet<u64>,
+    now: Ns,
+    page: u64,
+    write: bool,
+    dram_ns: Ns,
+) -> Ns {
+    match container.touch(page, write) {
+        CtAccess::Hit | CtAccess::ColdFault => now + dram_ns,
+        CtAccess::Fault {
+            victim,
+            victim_dirty,
+        } => {
+            let mut t = now;
+            if victim_dirty {
+                let a = cluster.backend.write(
+                    &mut cluster.state,
+                    t,
+                    victim,
+                    PAGE_SIZE,
+                );
+                t = a.end;
+            }
+            swapped.insert(victim);
+            if swapped.contains(&page) {
+                let a = cluster.backend.read(&mut cluster.state, t, page);
+                t = a.end;
+            } else {
+                t += dram_ns;
+            }
+            t
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{BackendKind, Config};
+    use crate::workloads::stores::{App, StoreModel};
+
+    fn small_cfg() -> Config {
+        let mut cfg = Config::default();
+        cfg.cluster.nodes = 4;
+        cfg.valet.mr_block_bytes = 4 << 20; // 4 MB units
+        cfg.valet.min_pool_pages = 512;
+        cfg.valet.max_pool_pages = 4096;
+        cfg
+    }
+
+    fn small_rc(fit: f64) -> KvRunConfig {
+        let store = StoreModel::new(App::Redis, 1024);
+        KvRunConfig {
+            concurrency: 4,
+            ops: 2_000,
+            ..KvRunConfig::new(store, Mix::Sys, 20_000, 2_000)
+        }
+        .with_fit(fit)
+    }
+
+    #[test]
+    fn full_fit_never_pages() {
+        let cfg = small_cfg();
+        let mut cl = Cluster::new(&cfg, BackendKind::Valet);
+        let r = run_kv(&mut cl, &small_rc(1.0));
+        assert_eq!(r.faults, 0);
+        assert_eq!(r.metrics.disk_reads, 0);
+        assert!(r.metrics.throughput() > 0.0);
+    }
+
+    #[test]
+    fn partial_fit_pages_through_backend() {
+        let cfg = small_cfg();
+        let mut cl = Cluster::new(&cfg, BackendKind::Valet);
+        let r = run_kv(&mut cl, &small_rc(0.5));
+        assert!(r.faults > 0);
+        assert!(
+            r.metrics.local_hits + r.metrics.remote_hits > 0,
+            "{:?}",
+            r.metrics
+        );
+    }
+
+    #[test]
+    fn lower_fit_is_slower_for_linux_swap() {
+        let cfg = small_cfg();
+        let mut c1 = Cluster::new(&cfg, BackendKind::LinuxSwap);
+        let hi = run_kv(&mut c1, &small_rc(1.0));
+        let mut c2 = Cluster::new(&cfg, BackendKind::LinuxSwap);
+        let lo = run_kv(&mut c2, &small_rc(0.25));
+        assert!(
+            lo.completion > hi.completion * 5,
+            "lo {} hi {}",
+            lo.completion,
+            hi.completion
+        );
+    }
+
+    #[test]
+    fn valet_beats_linux_swap_under_pressure() {
+        let cfg = small_cfg();
+        let mut cv = Cluster::new(&cfg, BackendKind::Valet);
+        let v = run_kv(&mut cv, &small_rc(0.25));
+        let mut cl = Cluster::new(&cfg, BackendKind::LinuxSwap);
+        let l = run_kv(&mut cl, &small_rc(0.25));
+        assert!(
+            v.completion * 10 < l.completion,
+            "valet {} linux {}",
+            v.completion,
+            l.completion
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = small_cfg();
+        let mut c1 = Cluster::new(&cfg, BackendKind::Valet);
+        let a = run_kv(&mut c1, &small_rc(0.5));
+        let mut c2 = Cluster::new(&cfg, BackendKind::Valet);
+        let b = run_kv(&mut c2, &small_rc(0.5));
+        assert_eq!(a.completion, b.completion);
+        assert_eq!(a.faults, b.faults);
+    }
+}

@@ -1,0 +1,15 @@
+//! Workloads: YCSB generation, in-memory store models, the KV and ML
+//! paging drivers, and the FIO-style block-device microbenchmark —
+//! everything the paper's evaluation (§6) runs on top of the backends.
+
+pub mod fio;
+pub mod kv;
+pub mod ml;
+pub mod stores;
+pub mod ycsb;
+
+pub use fio::{run_fio, FioJob};
+pub use kv::{run_kv, KvResult, KvRunConfig, KvSession};
+pub use ml::{run_ml, MlKind, MlResult, MlRunConfig};
+pub use stores::{App, StoreModel};
+pub use ycsb::{Mix, Op, YcsbGen};

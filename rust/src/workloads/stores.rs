@@ -1,0 +1,235 @@
+//! In-memory store models: Memcached, Redis and VoltDB as
+//! *page-access-pattern generators* with the paper's measured memory
+//! footprints (§6.1: a 10 GB dataset yields a 15 GB working set in
+//! Memcached and 22 GB in Redis/VoltDB — "its complicated data structure
+//! in VoltDB requires more memory").
+//!
+//! What matters for the paging experiments is (a) the total page
+//! footprint, (b) how many pages one operation touches and (c) per-op CPU
+//! cost; the models encode exactly those.
+
+use crate::sim::{us, Ns};
+use crate::util::Rng;
+use crate::PAGE_SIZE;
+
+/// Which application.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum App {
+    /// memcached: flat hash, slab allocation — leanest footprint.
+    Memcached,
+    /// redis: dict + robj overhead, fragmentation — 2.2× footprint.
+    Redis,
+    /// VoltDB: ACID transactional tables + indexes — 2.2× footprint and
+    /// extra index-page touches per op.
+    VoltDb,
+}
+
+impl App {
+    /// All three, figure order.
+    pub fn all() -> [App; 3] {
+        [App::Memcached, App::Redis, App::VoltDb]
+    }
+
+    /// Parse CLI name.
+    pub fn parse(s: &str) -> Option<App> {
+        match s.to_ascii_lowercase().as_str() {
+            "memcached" => Some(App::Memcached),
+            "redis" => Some(App::Redis),
+            "voltdb" => Some(App::VoltDb),
+            _ => None,
+        }
+    }
+
+    /// Display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            App::Memcached => "Memcached",
+            App::Redis => "Redis",
+            App::VoltDb => "VoltDB",
+        }
+    }
+}
+
+/// The store model.
+#[derive(Clone, Debug)]
+pub struct StoreModel {
+    /// Which app this models.
+    pub app: App,
+    /// Bytes of value payload per record (dataset bytes / records).
+    pub value_bytes: u64,
+    /// Working-set amplification over the raw dataset (1.5× / 2.2×).
+    pub footprint_factor: f64,
+    /// Extra (index/metadata) pages touched per GET.
+    pub index_pages_get: u64,
+    /// Extra pages touched per SET (index update + allocation metadata).
+    pub index_pages_set: u64,
+    /// In-memory CPU time per operation.
+    pub op_cpu: Ns,
+}
+
+impl StoreModel {
+    /// Model for `app` with `records` records of `value_bytes` each.
+    pub fn new(app: App, value_bytes: u64) -> Self {
+        match app {
+            App::Memcached => StoreModel {
+                app,
+                value_bytes,
+                footprint_factor: 1.5,
+                index_pages_get: 0,
+                index_pages_set: 0,
+                op_cpu: us(8),
+            },
+            App::Redis => StoreModel {
+                app,
+                value_bytes,
+                footprint_factor: 2.2,
+                index_pages_get: 1,
+                index_pages_set: 1,
+                op_cpu: us(10),
+            },
+            App::VoltDb => StoreModel {
+                app,
+                value_bytes,
+                footprint_factor: 2.2,
+                index_pages_get: 2,
+                index_pages_set: 3,
+                op_cpu: us(25),
+            },
+        }
+    }
+
+    /// Effective bytes one record occupies in memory.
+    pub fn record_footprint(&self) -> u64 {
+        ((self.value_bytes as f64) * self.footprint_factor).ceil() as u64
+    }
+
+    /// Pages in the record data region.
+    pub fn data_region_pages(&self, records: u64) -> u64 {
+        (records * self.record_footprint()).div_ceil(PAGE_SIZE)
+    }
+
+    /// Total working set in pages: index/metadata region + data region.
+    pub fn working_set_pages(&self, records: u64) -> u64 {
+        self.index_region_pages(records) + self.data_region_pages(records)
+    }
+
+    /// Data page(s) holding record `key`. Records are laid out
+    /// sequentially in the data region (pages [index_region …)).
+    pub fn data_page(&self, key: u64, records: u64) -> u64 {
+        let idx = self.index_region_pages(records);
+        idx + key * self.record_footprint() / PAGE_SIZE
+    }
+
+    /// Size of the index/metadata region (first pages of the space).
+    pub fn index_region_pages(&self, records: u64) -> u64 {
+        // ~3% of the data region, at least one page
+        (self.data_region_pages(records) * 3 / 100).max(1)
+    }
+
+    /// Pages touched by one op, data page first. Index touches hash into
+    /// the index region (deterministic per key, spread by `rng` over the
+    /// B-tree levels for VoltDB).
+    pub fn pages_for_op(
+        &self,
+        key: u64,
+        is_get: bool,
+        records: u64,
+        rng: &mut Rng,
+    ) -> Vec<(u64, bool)> {
+        let mut out = Vec::with_capacity(4);
+        // data page: GET reads, SET writes
+        out.push((self.data_page(key, records), !is_get));
+        let extra = if is_get {
+            self.index_pages_get
+        } else {
+            self.index_pages_set
+        };
+        let idx_pages = self.index_region_pages(records);
+        for level in 0..extra {
+            // mix key + level into the index region; upper levels of the
+            // tree (level 0) concentrate on few pages (hot, resident)
+            let span = (idx_pages >> (extra - 1 - level).min(10)).max(1);
+            let mut z = key
+                .wrapping_mul(0x9E3779B97F4A7C15)
+                .wrapping_add(level * 0x1000193);
+            z ^= z >> 29;
+            let page = z % span;
+            // index writes only on SET's last level
+            let write = !is_get && level + 1 == extra;
+            out.push((page, write));
+            let _ = rng;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn footprints_match_paper() {
+        // 10 GB dataset / 10 M records = 1 KB values (paper §6.1)
+        let records = 10_000_000u64;
+        let mc = StoreModel::new(App::Memcached, 1024);
+        let rd = StoreModel::new(App::Redis, 1024);
+        let vd = StoreModel::new(App::VoltDb, 1024);
+        let gb = |pages: u64| {
+            (pages * PAGE_SIZE) as f64 / (1u64 << 30) as f64
+        };
+        // Memcached ≈ 15 GB; Redis/VoltDB ≈ 22 GB
+        let m = gb(mc.working_set_pages(records));
+        let r = gb(rd.working_set_pages(records));
+        let v = gb(vd.working_set_pages(records));
+        assert!((14.0..16.5).contains(&m), "{m}");
+        assert!((21.0..23.5).contains(&r), "{r}");
+        assert!((21.0..23.5).contains(&v), "{v}");
+    }
+
+    #[test]
+    fn voltdb_touches_more_pages() {
+        let mut rng = Rng::new(1);
+        let mc = StoreModel::new(App::Memcached, 1024);
+        let vd = StoreModel::new(App::VoltDb, 1024);
+        let m = mc.pages_for_op(5, true, 1000, &mut rng);
+        let v = vd.pages_for_op(5, true, 1000, &mut rng);
+        assert_eq!(m.len(), 1);
+        assert_eq!(v.len(), 3);
+    }
+
+    #[test]
+    fn get_reads_set_writes_data_page() {
+        let mut rng = Rng::new(1);
+        let rd = StoreModel::new(App::Redis, 1024);
+        let g = rd.pages_for_op(5, true, 1000, &mut rng);
+        let s = rd.pages_for_op(5, false, 1000, &mut rng);
+        assert!(!g[0].1, "GET must not dirty the data page");
+        assert!(s[0].1, "SET must dirty the data page");
+        assert_eq!(g[0].0, s[0].0, "same record, same page");
+    }
+
+    #[test]
+    fn distinct_keys_spread_over_pages() {
+        let rd = StoreModel::new(App::Redis, 1024);
+        let records = 100_000;
+        let p1 = rd.data_page(0, records);
+        let p2 = rd.data_page(records - 1, records);
+        assert!(p2 > p1);
+        assert!(p2 - p1 >= records * 2048 / PAGE_SIZE);
+    }
+
+    #[test]
+    fn index_pages_stay_in_index_region() {
+        let mut rng = Rng::new(2);
+        let vd = StoreModel::new(App::VoltDb, 1024);
+        let records = 1_000_000;
+        let idx = vd.index_region_pages(records);
+        for key in [0u64, 17, 999_999] {
+            for (page, _) in
+                vd.pages_for_op(key, true, records, &mut rng)[1..].iter()
+            {
+                assert!(*page < idx);
+            }
+        }
+    }
+}

@@ -1,0 +1,139 @@
+//! YCSB-style workload generation (§6: "we use Facebook simulated
+//! workload ETC (95% GET and 5% SET) and SYS (75% GET and 25% SET) by
+//! using YCSB … zipfian distribution for both").
+
+use crate::util::{Rng, Zipfian};
+
+/// GET/SET mix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mix {
+    /// Facebook ETC: 95 % GET, 5 % SET.
+    Etc,
+    /// Facebook SYS: 75 % GET, 25 % SET.
+    Sys,
+    /// 100 % GET (warm-read ablations).
+    ReadOnly,
+    /// 100 % SET (write-path ablations, Figure 9).
+    WriteOnly,
+}
+
+impl Mix {
+    /// Fraction of GETs.
+    pub fn get_fraction(&self) -> f64 {
+        match self {
+            Mix::Etc => 0.95,
+            Mix::Sys => 0.75,
+            Mix::ReadOnly => 1.0,
+            Mix::WriteOnly => 0.0,
+        }
+    }
+
+    /// Parse CLI name.
+    pub fn parse(s: &str) -> Option<Mix> {
+        match s.to_ascii_lowercase().as_str() {
+            "etc" => Some(Mix::Etc),
+            "sys" => Some(Mix::Sys),
+            "read" | "readonly" => Some(Mix::ReadOnly),
+            "write" | "writeonly" => Some(Mix::WriteOnly),
+            _ => None,
+        }
+    }
+
+    /// Display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Mix::Etc => "ETC",
+            Mix::Sys => "SYS",
+            Mix::ReadOnly => "READ",
+            Mix::WriteOnly => "WRITE",
+        }
+    }
+}
+
+/// One application-level operation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Op {
+    /// Record key in [0, records).
+    pub key: u64,
+    /// true = GET, false = SET.
+    pub is_get: bool,
+}
+
+/// The generator: zipfian keys (scattered over the key space as YCSB
+/// does) + Bernoulli GET/SET mix.
+#[derive(Clone, Debug)]
+pub struct YcsbGen {
+    zipf: Zipfian,
+    mix: Mix,
+    rng: Rng,
+}
+
+impl YcsbGen {
+    /// Build over `records` keys with YCSB's default 0.99 skew.
+    pub fn new(records: u64, mix: Mix, seed: u64) -> Self {
+        YcsbGen {
+            zipf: Zipfian::new(records, 0.99),
+            mix,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// Number of records.
+    pub fn records(&self) -> u64 {
+        self.zipf.n()
+    }
+
+    /// Draw the next operation.
+    pub fn next_op(&mut self) -> Op {
+        let key = self.zipf.sample_scattered(&mut self.rng);
+        let is_get = self.rng.chance(self.mix.get_fraction());
+        Op { key, is_get }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix_fractions() {
+        assert_eq!(Mix::Etc.get_fraction(), 0.95);
+        assert_eq!(Mix::Sys.get_fraction(), 0.75);
+        assert_eq!(Mix::parse("sys"), Some(Mix::Sys));
+        assert_eq!(Mix::parse("bogus"), None);
+    }
+
+    #[test]
+    fn op_mix_matches_fraction() {
+        let mut g = YcsbGen::new(1000, Mix::Sys, 42);
+        let n = 100_000;
+        let gets = (0..n).filter(|_| g.next_op().is_get).count();
+        let frac = gets as f64 / n as f64;
+        assert!((frac - 0.75).abs() < 0.01, "{frac}");
+    }
+
+    #[test]
+    fn keys_in_range_and_skewed() {
+        let mut g = YcsbGen::new(10_000, Mix::Etc, 7);
+        let mut counts = std::collections::HashMap::new();
+        for _ in 0..50_000 {
+            let op = g.next_op();
+            assert!(op.key < 10_000);
+            *counts.entry(op.key).or_insert(0u64) += 1;
+        }
+        // zipfian: the most popular key should carry a few % of traffic
+        let max = counts.values().max().copied().unwrap();
+        assert!(max > 1_000, "hottest key count {max}");
+        // but traffic must not be concentrated on a single key only
+        assert!(counts.len() > 1_000);
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let mut a = YcsbGen::new(1000, Mix::Sys, 5);
+        let mut b = YcsbGen::new(1000, Mix::Sys, 5);
+        for _ in 0..100 {
+            assert_eq!(a.next_op(), b.next_op());
+        }
+    }
+}

@@ -1,0 +1,82 @@
+//! Smoke test: every paper table/figure regenerates at small scale and
+//! preserves its headline shape. This is the guard that keeps the
+//! reproduction reproducible.
+
+use valet::bench::experiments::{all_ids, run, Scale};
+
+#[test]
+fn every_experiment_regenerates() {
+    let scale = Scale::small();
+    for id in all_ids() {
+        let report = run(id, &scale)
+            .unwrap_or_else(|| panic!("unknown experiment {id}"));
+        assert!(!report.rows.is_empty(), "{id} produced no rows");
+        assert!(!report.render().is_empty());
+        assert!(report.to_csv().lines().count() > 1, "{id} CSV empty");
+    }
+}
+
+#[test]
+fn fig9_block_sweep_is_monotone() {
+    let r = run("fig9", &Scale::small()).unwrap();
+    let means: Vec<f64> = r
+        .rows
+        .iter()
+        .map(|row| row[1].parse::<f64>().unwrap())
+        .collect();
+    assert!(means.windows(2).all(|w| w[0] < w[1]), "{means:?}");
+    // the 64 KB point is Table 7a's write total
+    assert!((means[1] - 35.31).abs() < 1.0, "{}", means[1]);
+}
+
+#[test]
+fn fig8_hit_ratio_is_monotone_nondecreasing() {
+    let r = run("fig8", &Scale::small()).unwrap();
+    let hits: Vec<f64> = r
+        .rows
+        .iter()
+        .map(|row| row[1].trim_end_matches('%').parse::<f64>().unwrap())
+        .collect();
+    assert!(hits.windows(2).all(|w| w[0] <= w[1] + 1.0), "{hits:?}");
+    assert!(hits.last().unwrap() > &hits[0], "{hits:?}");
+}
+
+#[test]
+fn fig23_valet_flat_infiniswap_collapses() {
+    let r = run("fig23", &Scale::small()).unwrap();
+    let tp = |cell: &str| -> f64 {
+        cell.split_whitespace().next().unwrap().parse().unwrap()
+    };
+    let valet0 = tp(&r.rows[0][1]);
+    let valet_worst = r.rows.iter().map(|row| tp(&row[1])).fold(f64::MAX, f64::min);
+    let inf0 = tp(&r.rows[0][2]);
+    let inf_worst = r.rows.iter().map(|row| tp(&row[2])).fold(f64::MAX, f64::min);
+    assert!(
+        valet_worst > valet0 * 0.8,
+        "valet should stay flat: {valet0} -> {valet_worst}"
+    );
+    assert!(
+        inf_worst < inf0 * 0.5,
+        "delete-eviction should collapse: {inf0} -> {inf_worst}"
+    );
+}
+
+#[test]
+fn table1_disk_and_connection_dominate() {
+    let r = run("table1", &Scale::small()).unwrap();
+    // rows: name, µs, share. Disk WR must be the largest share, and
+    // RDMA/copy negligible — the paper's Table 1 structure.
+    let share = |name: &str| -> f64 {
+        r.rows
+            .iter()
+            .find(|row| row[0] == name)
+            .unwrap()[2]
+            .trim_end_matches('%')
+            .parse()
+            .unwrap()
+    };
+    assert!(share("Disk WR") > 40.0);
+    assert!(share("Connection") > 10.0);
+    assert!(share("RDMA WRITE") < 1.0);
+    assert!(share("COPY") < 1.0);
+}

@@ -1,0 +1,141 @@
+//! Runtime integration: load every AOT artifact through the PJRT CPU
+//! client and validate numerics against rust-side references — the exact
+//! round-trip the production path uses. Requires `make artifacts`.
+
+use valet::runtime::{
+    f32_literal, f32_scalar, random_inputs, to_f32_vec, to_i32_vec,
+    Runtime, KMEANS_D, KMEANS_K, KMEANS_N, LOGREG_D, LOGREG_N, TEXTRANK_N,
+};
+use valet::util::Rng;
+
+fn runtime() -> Option<Runtime> {
+    let dir = Runtime::default_dir();
+    if !dir.join("logreg_step.hlo.txt").exists() {
+        eprintln!(
+            "skipping: artifacts not built (run `make artifacts` first)"
+        );
+        return None;
+    }
+    Some(Runtime::load(dir).expect("runtime load"))
+}
+
+#[test]
+fn all_artifacts_compile_and_execute() {
+    let Some(rt) = runtime() else { return };
+    assert_eq!(rt.loaded().len(), 5, "{:?}", rt.loaded());
+    for name in rt.loaded() {
+        let exe = rt.get(name).unwrap();
+        let inputs = random_inputs(exe.spec).unwrap();
+        let out = exe.run(&inputs).unwrap();
+        assert!(!out.is_empty(), "{name} returned nothing");
+    }
+}
+
+#[test]
+fn logreg_step_descends_and_matches_reference_gradient() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.get("logreg_step").unwrap();
+    let mut rng = Rng::new(3);
+    let x: Vec<f32> = (0..LOGREG_N * LOGREG_D)
+        .map(|_| (rng.f64() as f32) - 0.5)
+        .collect();
+    let y: Vec<f32> = (0..LOGREG_N)
+        .map(|_| if rng.chance(0.5) { 1.0 } else { 0.0 })
+        .collect();
+    let w = vec![0.0f32; LOGREG_D];
+    let lr = 0.5f32;
+    let out = exe
+        .run(&[
+            f32_literal(&w, &[LOGREG_D as i64]).unwrap(),
+            f32_literal(&x, &[LOGREG_N as i64, LOGREG_D as i64]).unwrap(),
+            f32_literal(&y, &[LOGREG_N as i64]).unwrap(),
+            f32_scalar(lr).unwrap(),
+        ])
+        .unwrap();
+    let w2 = to_f32_vec(&out[0]).unwrap();
+    let loss = to_f32_vec(&out[1]).unwrap()[0];
+    // at w=0: p=0.5 for all rows, loss = ln 2
+    assert!((loss - 0.6931).abs() < 1e-3, "{loss}");
+    // reference gradient: g = X^T (0.5 - y) / N ; w2 = -lr * g
+    for j in (0..LOGREG_D).step_by(37) {
+        let mut g = 0.0f64;
+        for i in 0..LOGREG_N {
+            g += (0.5 - y[i] as f64) * x[i * LOGREG_D + j] as f64;
+        }
+        g /= LOGREG_N as f64;
+        let expected = -(lr as f64) * g;
+        assert!(
+            (w2[j] as f64 - expected).abs() < 1e-4,
+            "w2[{j}]={} expected {expected}",
+            w2[j]
+        );
+    }
+}
+
+#[test]
+fn kmeans_step_assigns_to_nearest_centroid() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.get("kmeans_step").unwrap();
+    let mut rng = Rng::new(4);
+    let x: Vec<f32> = (0..KMEANS_N * KMEANS_D)
+        .map(|_| (rng.f64() as f32) * 2.0 - 1.0)
+        .collect();
+    let c: Vec<f32> = (0..KMEANS_K * KMEANS_D)
+        .map(|_| (rng.f64() as f32) * 2.0 - 1.0)
+        .collect();
+    let out = exe
+        .run(&[
+            f32_literal(&x, &[KMEANS_N as i64, KMEANS_D as i64]).unwrap(),
+            f32_literal(&c, &[KMEANS_K as i64, KMEANS_D as i64]).unwrap(),
+        ])
+        .unwrap();
+    let assign = to_i32_vec(&out[0]).unwrap();
+    // spot-check: assignment is the argmin distance centroid
+    for &i in &[0usize, 17, 1000, KMEANS_N - 1] {
+        let mut best = (f64::MAX, usize::MAX);
+        for k in 0..KMEANS_K {
+            let mut d = 0.0f64;
+            for j in 0..KMEANS_D {
+                let diff = x[i * KMEANS_D + j] as f64
+                    - c[k * KMEANS_D + j] as f64;
+                d += diff * diff;
+            }
+            if d < best.0 {
+                best = (d, k);
+            }
+        }
+        assert_eq!(assign[i] as usize, best.1, "sample {i}");
+    }
+}
+
+#[test]
+fn textrank_step_conserves_mass() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.get("textrank_step").unwrap();
+    let n = TEXTRANK_N;
+    let mut rng = Rng::new(5);
+    let mut a = vec![0.0f32; n * n];
+    for col in 0..n {
+        let mut sum = 0.0f32;
+        for row in 0..n {
+            let v = rng.f64() as f32;
+            a[row * n + col] = v;
+            sum += v;
+        }
+        for row in 0..n {
+            a[row * n + col] /= sum;
+        }
+    }
+    let r = vec![1.0f32 / n as f32; n];
+    let out = exe
+        .run(&[
+            f32_literal(&a, &[n as i64, n as i64]).unwrap(),
+            f32_literal(&r, &[n as i64]).unwrap(),
+            f32_literal(&[0.85], &[1]).unwrap(),
+        ])
+        .unwrap();
+    let r2 = to_f32_vec(&out[0]).unwrap();
+    let mass: f32 = r2.iter().sum();
+    assert!((mass - 1.0).abs() < 1e-3, "mass {mass}");
+    assert!(r2.iter().all(|&v| v >= 0.0));
+}
