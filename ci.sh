@@ -1,0 +1,31 @@
+#!/usr/bin/env bash
+# Tier-1 verify + lint gate. A missing-manifest-class breakage (the seed
+# shipped without any Cargo.toml) fails here before anything can land.
+#
+#   ./ci.sh          # build + tests + clippy
+#   ./ci.sh --fast   # skip the release build (tests + clippy only)
+set -euo pipefail
+cd "$(dirname "$0")"
+
+FAST=0
+for arg in "$@"; do
+    case "$arg" in
+        --fast) FAST=1 ;;
+        *) echo "unknown flag: $arg" >&2; exit 2 ;;
+    esac
+done
+
+echo "== tier-1 verify =="
+if [ "$FAST" -eq 0 ]; then
+    cargo build --release
+fi
+cargo test -q
+
+echo "== lint =="
+if cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy --all-targets -- -D warnings
+else
+    echo "warning: clippy not installed in this toolchain; lint skipped" >&2
+fi
+
+echo "ci.sh: OK"

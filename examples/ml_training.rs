@@ -11,10 +11,12 @@
 //! iteration until the rank vector converges; then compares
 //! paging-completion time for the logreg workload across backends.
 //!
-//! Requires `make artifacts` first.
+//! Requires `make artifacts` first, plus a pjrt-enabled build (the
+//! default offline build loads no executables and exits with an error
+//! explaining that).
 //!
 //! ```sh
-//! cargo run --release --example ml_training
+//! cargo run --release --features pjrt --example ml_training
 //! ```
 
 use valet::bench::experiments::base_config;
@@ -27,7 +29,7 @@ use valet::runtime::{
 use valet::util::{fmt, Rng};
 use valet::workloads::{run_ml, MlKind, MlRunConfig};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let rt = Runtime::load(Runtime::default_dir())?;
     println!("loaded artifacts: {:?}\n", rt.loaded());
 

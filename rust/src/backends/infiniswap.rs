@@ -259,6 +259,10 @@ impl PagingBackend for InfiniswapBackend {
         &mut self.metrics
     }
 
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
     fn name(&self) -> &'static str {
         "Infiniswap"
     }

@@ -81,6 +81,10 @@ impl PagingBackend for LinuxSwapBackend {
         &mut self.metrics
     }
 
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
     fn name(&self) -> &'static str {
         "Linux"
     }

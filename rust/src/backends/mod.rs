@@ -147,11 +147,22 @@ pub trait PagingBackend: Send {
         bytes: u64,
     ) -> PressureOutcome;
 
+    /// Host free memory on the sender changed (container churn): `pages`
+    /// are now available to backend-local caches. Only Valet reacts (its
+    /// mempool cap follows host free memory, §3.4); the default is a
+    /// no-op.
+    fn host_pressure(&mut self, _free_pages: u64) {}
+
     /// Run metrics.
     fn metrics(&self) -> &RunMetrics;
 
     /// Mutable run metrics (workload drivers record op latencies here).
     fn metrics_mut(&mut self) -> &mut RunMetrics;
+
+    /// Downcast support, so integration tests and diagnostics can reach
+    /// a concrete backend (e.g. the Valet coordinator) behind the trait
+    /// object a [`crate::cluster::Cluster`] owns.
+    fn as_any(&self) -> &dyn std::any::Any;
 
     /// Display name matching the paper's figures.
     fn name(&self) -> &'static str;

@@ -237,6 +237,10 @@ impl PagingBackend for NbdxBackend {
         &mut self.metrics
     }
 
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
     fn name(&self) -> &'static str {
         "nbdX"
     }

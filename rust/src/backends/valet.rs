@@ -1,330 +1,58 @@
-//! The Valet paging backend: the paper's full system (§3–§5).
+//! The Valet paging backend: the paper's full system (§3–§5) as a thin
+//! [`PagingBackend`] adapter over [`crate::coordinator::Coordinator`] — the
+//! entire hot path (write/read/pump/remote-pressure) is owned by the
+//! coordinator, so the simulated path here and the live serving path
+//! ([`crate::serve`]) share one implementation of the Figure-6 flow.
 //!
-//! Write path (critical path = the first three steps only, Figure 7):
-//! 1. radix-tree insert into the GPT,
-//! 2. copy block-I/O buffer → local mempool,
-//! 3. enqueue the write set into the staging queue — **request ends**.
-//! The remote sender thread later coalesces staged write sets into
-//! RDMA-MR-sized messages and sends them one-sided to the mapped peers
-//! (+ replicas); completion moves the write set to the reclaimable queue
-//! and frees its slots for reuse. Connection setup and MR mapping happen
-//! entirely behind the mempool.
-//!
-//! Read path: GPT hit → serve from mempool (local cache); miss → one-sided
-//! RDMA READ from the unit's primary; disk only if every remote copy is
-//! gone and disk backup is on (Table 3).
-//!
-//! Remote pressure (§3.5) triggers activity-based victim selection on the
-//! pressured peer and a sender-driven migration to the least-pressured
-//! peer; writes to the migrating unit stay parked in the mempool (staging
-//! queue) until commit, reads keep hitting the source.
+//! See [`crate::coordinator`] for the stage-by-stage description of the
+//! write/read critical paths, the remote-sender drain, the §5.2
+//! consistency machinery and the §3.5 eviction/migration hooks.
 
-use super::{Access, ClusterState, PagingBackend, PressureOutcome, Source, Unit, UnitMap};
-use crate::config::{Config, LatencyConfig, ValetConfig};
-use crate::eviction::{ActivityBased, VictimPolicy};
-use crate::gpt::RadixGpt;
-use crate::mempool::{AllocFail, Mempool};
+use super::{Access, ClusterState, PagingBackend, PressureOutcome};
+use crate::config::Config;
+use crate::coordinator::Coordinator;
+use crate::mempool::Mempool;
 use crate::metrics::RunMetrics;
-use crate::migration;
-use crate::mrpool::MrState;
-use crate::placement::{Placement, PowerOfTwo};
-use crate::queues::{ReclaimableQueue, StagingQueue, WriteSet};
-use crate::replication::choose_replicas;
-use crate::sim::{Ns, Server};
-use crate::{pages_for, NodeId, PAGE_SIZE};
+use crate::sim::Ns;
+use crate::NodeId;
 
-/// One coalesced RDMA message in flight: completion time + the write sets
-/// it carries.
-#[derive(Clone, Debug)]
-struct Inflight {
-    done: Ns,
-    sets: Vec<WriteSet>,
-}
-
-/// The Valet backend.
+/// The Valet backend: one [`Coordinator`] behind the backend trait.
 pub struct ValetBackend {
-    lat: LatencyConfig,
-    vcfg: ValetConfig,
-    gpt: RadixGpt,
-    mempool: Mempool,
-    staging: StagingQueue,
-    reclaim_q: ReclaimableQueue,
-    /// Remote sender thread's timeline (one batch in service at a time;
-    /// batches pipeline on the NIC beneath it).
-    sender_thread: Server,
-    units: UnitMap,
-    placement: PowerOfTwo,
-    /// Pages whose remote copy is valid (the §5.2 per-page bitmap).
-    remote_ready: crate::util::PageBitmap,
-    /// Pages with a disk-backup copy.
-    disk_valid: crate::util::PageBitmap,
-    inflight: Vec<Inflight>,
-    victim_policy: ActivityBased,
-    metrics: RunMetrics,
-    /// Host free pages available to the mempool (updated by the cluster
-    /// driver as containers allocate/free).
-    pub host_free_pages: u64,
-    /// True when configured with no mempool (Valet-RemoteOnly ablation in
-    /// Figure 21): writes go synchronously to remote memory.
-    sync_mode: bool,
+    coord: Coordinator,
 }
 
 impl ValetBackend {
     /// Build from config.
     pub fn new(cfg: &Config) -> Self {
-        let sync_mode =
-            cfg.valet.min_pool_pages == 0 && cfg.valet.max_pool_pages == 0;
         ValetBackend {
-            lat: cfg.latency.clone(),
-            vcfg: cfg.valet.clone(),
-            gpt: RadixGpt::new(),
-            mempool: Mempool::new(
-                cfg.valet.min_pool_pages.max(1),
-                cfg.valet.max_pool_pages.max(1),
-                cfg.valet.grow_threshold,
-                cfg.valet.host_free_fraction,
-            )
-            .with_replacement(cfg.valet.replacement),
-            staging: StagingQueue::new(),
-            reclaim_q: ReclaimableQueue::new(),
-            sender_thread: Server::new(),
-            units: UnitMap::new(cfg.valet.mr_block_bytes),
-            placement: PowerOfTwo::new(cfg.cluster.seed),
-            remote_ready: crate::util::PageBitmap::new(),
-            disk_valid: crate::util::PageBitmap::new(),
-            inflight: Vec::new(),
-            victim_policy: ActivityBased,
-            metrics: RunMetrics::default(),
-            host_free_pages: (cfg.cluster.node_mem_bytes / PAGE_SIZE) / 2,
-            sync_mode,
+            coord: Coordinator::new(cfg),
         }
+    }
+
+    /// The orchestration layer driving this backend.
+    pub fn coordinator(&self) -> &Coordinator {
+        &self.coord
+    }
+
+    /// Mutable access to the orchestration layer (policy hooks, host
+    /// free-memory updates).
+    pub fn coordinator_mut(&mut self) -> &mut Coordinator {
+        &mut self.coord
     }
 
     /// Mempool occupancy/capacity diagnostics.
     pub fn mempool(&self) -> &Mempool {
-        &self.mempool
+        self.coord.mempool()
     }
 
     /// Staged (not yet remotely durable) bytes.
     pub fn staged_bytes(&self) -> u64 {
-        self.staging.bytes()
+        self.coord.staged_bytes()
     }
 
     /// Number of mapped address-space units.
     pub fn mapped_units(&self) -> usize {
-        self.units.len()
-    }
-
-    /// Ensure `unit` has a remote mapping; returns when it is usable.
-    /// Charged on the *sender thread* timeline — never the request path.
-    fn ensure_unit(&mut self, cl: &mut ClusterState, now: Ns, unit: u64) -> Ns {
-        if let Some(u) = self.units.get(unit) {
-            if u.alive {
-                return u.ready_at;
-            }
-        }
-        // (Re)map: pick primary via power-of-two choices, then replicas.
-        let cands = cl.candidates();
-        let primary = self
-            .placement
-            .pick(&cands)
-            .expect("cluster has at least one peer");
-        let cand_nodes: Vec<NodeId> = cands.iter().map(|c| c.node).collect();
-        let nodes = choose_replicas(
-            cl.sender,
-            primary,
-            &cand_nodes,
-            self.vcfg.replicas.max(1),
-        );
-        // Connection (if new) + mapping, charged sequentially per node.
-        let mut t = now;
-        for &n in &nodes {
-            let (tc, _newc) = cl.fabric.ensure_connected(t, cl.sender, n);
-            t = cl.fabric.map_mr(tc, cl.sender);
-        }
-        let blocks = nodes
-            .iter()
-            .map(|&n| cl.mrpools[n].register(cl.sender, self.units.unit_bytes, t))
-            .collect();
-        self.units.insert(
-            unit,
-            Unit {
-                nodes,
-                blocks,
-                ready_at: t,
-                wlocked_until: 0,
-                alive: true,
-            },
-        );
-        t
-    }
-
-    /// Apply completions of in-flight RDMA batches up to `now`.
-    fn complete_inflight(&mut self, cl: &mut ClusterState, now: Ns) {
-        let mut i = 0;
-        while i < self.inflight.len() {
-            if self.inflight[i].done <= now {
-                let inflight = self.inflight.swap_remove(i);
-                for ws in inflight.sets {
-                    for &slot in &ws.slots {
-                        if self.mempool.mark_reclaimable(slot) {
-                            // page remains cached locally until recycled
-                        }
-                    }
-                    for p in ws.page..ws.page + ws.pages() {
-                        self.remote_ready.set(p);
-                    }
-                    // stamp activity tags on the primary block
-                    let unit = self.units.unit_of(ws.page);
-                    if let Some(u) = self.units.get(unit) {
-                        if let (Some(&n), Some(&b)) =
-                            (u.nodes.first(), u.blocks.first())
-                        {
-                            cl.mrpools[n].touch_write(b, inflight.done);
-                        }
-                    }
-                    self.reclaim_q.push(ws);
-                }
-            } else {
-                i += 1;
-            }
-        }
-    }
-
-    /// Drive the remote sender thread: send coalesced batches whose
-    /// service can start at or before `now`.
-    fn drive_sender(&mut self, cl: &mut ClusterState, now: Ns) {
-        self.complete_inflight(cl, now);
-        while !self.staging.is_empty() && self.sender_thread.busy_until() <= now
-        {
-            let start = self.sender_thread.busy_until().max(
-                self.staging.peek().map(|w| w.enqueued_at).unwrap_or(0),
-            );
-            if start > now {
-                break;
-            }
-            self.send_one_batch(cl, start);
-        }
-    }
-
-    /// Send one coalesced batch at (no earlier than) `t0`; returns its
-    /// completion time. Coalescing only merges write sets that target the
-    /// same address-space unit (one RDMA message lands in one MR block).
-    fn send_one_batch(&mut self, cl: &mut ClusterState, t0: Ns) -> Ns {
-        debug_assert!(!self.staging.is_empty());
-        let max = if self.vcfg.coalescing {
-            self.vcfg.rdma_msg_bytes
-        } else {
-            1 // force single write set per message
-        };
-        let unit = self
-            .units
-            .unit_of(self.staging.peek().expect("non-empty").page);
-        let mut batch = Vec::new();
-        let mut bytes = 0u64;
-        while let Some(front) = self.staging.peek() {
-            let same_unit = self.units.unit_of(front.page) == unit;
-            if !batch.is_empty() && (bytes + front.bytes > max || !same_unit)
-            {
-                break;
-            }
-            let ws = self.staging.pop().unwrap();
-            bytes += ws.bytes;
-            batch.push(ws);
-        }
-        // mapping (behind the mempool — charged here, on sender thread)
-        let ready = self.ensure_unit(cl, t0, unit);
-        let u = self.units.get(unit).unwrap();
-        let mut t = t0.max(ready).max(u.wlocked_until);
-        // mrpool get + one-sided write per replica (queue on our NIC)
-        t += self.lat.mrpool_get;
-        let nodes = u.nodes.clone();
-        let mut done = t;
-        for &n in &nodes {
-            let verb = cl.fabric.rdma_write(t, cl.sender, n, bytes);
-            done = done.max(verb.end);
-        }
-        // optional disk backup, off the critical path
-        if self.vcfg.disk_backup {
-            cl.disks[cl.sender].write_async(t, bytes);
-            for ws in &batch {
-                for p in ws.page..ws.page + ws.pages() {
-                    self.disk_valid.set(p);
-                }
-            }
-            self.metrics.disk_writes += 1;
-        }
-        // The sender thread is busy only for its CPU work (mapping waits
-        // + mrpool get + posting the WQE, ~300 ns); the verb completes
-        // asynchronously on the NIC (tracked via `inflight`), so many
-        // messages pipeline — and un-coalesced small messages flood the
-        // WQE cache, which is exactly the §3.3 argument for batching.
-        let post_done = t + 300;
-        self.sender_thread.serve(t0, post_done.saturating_sub(t0));
-        self.inflight.push(Inflight { done, sets: batch });
-        done
-    }
-
-    /// Block until at least one mempool slot can be recycled: force the
-    /// sender pipeline forward and apply the earliest completion.
-    /// Returns the time the caller may retry.
-    fn wait_for_reclaimable(&mut self, cl: &mut ClusterState, now: Ns) -> Ns {
-        // Earliest in-flight completion?
-        if let Some(min_done) =
-            self.inflight.iter().map(|f| f.done).min()
-        {
-            let t = min_done.max(now);
-            self.complete_inflight(cl, min_done);
-            return t;
-        }
-        if !self.staging.is_empty() {
-            let start = self.sender_thread.busy_until().max(now);
-            let done = self.send_one_batch(cl, start);
-            self.complete_inflight(cl, done);
-            return done.max(now);
-        }
-        // Nothing pending: caller's alloc should succeed after growth or
-        // is genuinely out of memory; avoid infinite loops by advancing.
-        now + 1
-    }
-
-    /// Synchronous write (Valet-RemoteOnly ablation): radix + copy + wait
-    /// for the RDMA send like Infiniswap, but keep coalescing disabled
-    /// and no disk redirect (mapping stalls the request instead).
-    fn write_sync(
-        &mut self,
-        cl: &mut ClusterState,
-        now: Ns,
-        page: u64,
-        bytes: u64,
-    ) -> Access {
-        let mut t = now + self.lat.radix_insert;
-        self.metrics.write_parts.add("radix", self.lat.radix_insert);
-        let unit = self.units.unit_of(page);
-        let ready = self.ensure_unit(cl, t, unit);
-        if ready > t {
-            self.metrics.write_parts.add("mapping", ready - t);
-            t = ready;
-        }
-        let copy = self.lat.copy(bytes);
-        t += copy;
-        self.metrics.write_parts.add("copy", copy);
-        let u = self.units.get(unit).unwrap();
-        let nodes = u.nodes.clone();
-        let mut done = t + self.lat.mrpool_get;
-        for &n in &nodes {
-            let verb = cl.fabric.rdma_write(t, cl.sender, n, bytes);
-            done = done.max(verb.end);
-        }
-        self.metrics.write_parts.add("rdma", done - t);
-        for p in page..page + pages_for(bytes) {
-            self.remote_ready.set(p);
-        }
-        self.metrics.write_latency.record(done - now);
-        Access {
-            end: done,
-            source: Source::Remote,
-        }
+        self.coord.mapped_units()
     }
 }
 
@@ -336,134 +64,15 @@ impl PagingBackend for ValetBackend {
         page: u64,
         bytes: u64,
     ) -> Access {
-        if self.sync_mode {
-            return self.write_sync(cl, now, page, bytes);
-        }
-        let npages = pages_for(bytes);
-        let mut t = now + self.lat.radix_insert;
-        self.metrics.write_parts.add("radix", self.lat.radix_insert);
-
-        let mut slots = Vec::with_capacity(npages as usize);
-        for p in page..page + npages {
-            if let Some(slot) = self.gpt.get(p) {
-                // Overwrite in place (§5.2): newer write set supersedes.
-                let flags = self.mempool.flags(slot);
-                if flags.reclaimable {
-                    self.mempool.unmark_reclaimable(slot);
-                } else {
-                    self.mempool.bump_update(slot);
-                }
-                self.remote_ready.clear(p); // remote copy now stale
-                slots.push(slot);
-                continue;
-            }
-            // Allocate a slot, stalling on backpressure if required.
-            loop {
-                match self.mempool.alloc(p, self.host_free_pages) {
-                    Ok(a) => {
-                        if let Some(evicted) = a.evicted_page {
-                            self.gpt.remove(evicted);
-                        }
-                        self.gpt.insert(p, a.slot);
-                        slots.push(a.slot);
-                        break;
-                    }
-                    Err(AllocFail::NoReclaimable) => {
-                        let retry = self.wait_for_reclaimable(cl, t);
-                        if retry > t {
-                            self.metrics
-                                .write_parts
-                                .add("stall", retry - t);
-                            t = retry;
-                        }
-                    }
-                }
-            }
-        }
-
-        let copy = self.lat.copy(bytes);
-        t += copy;
-        self.metrics.write_parts.add("copy", copy);
-        t += self.lat.staging_enqueue;
-        self.metrics
-            .write_parts
-            .add("enqueue", self.lat.staging_enqueue);
-
-        self.staging.push(WriteSet {
-            page,
-            slots,
-            bytes,
-            enqueued_at: t,
-        });
-        self.metrics.write_latency.record(t - now);
-        // opportunistically push the background pipeline forward
-        self.drive_sender(cl, t);
-        Access {
-            end: t,
-            source: Source::LocalPool,
-        }
+        self.coord.write(cl, now, page, bytes)
     }
 
     fn read(&mut self, cl: &mut ClusterState, now: Ns, page: u64) -> Access {
-        let mut t = now + self.lat.radix_lookup;
-        self.metrics.read_parts.add("radix", self.lat.radix_lookup);
-        if let Some(slot) = self.gpt.get(page) {
-            // Local mempool hit — the redesigned critical path's payoff.
-            t += self.lat.copy_read_page;
-            self.metrics
-                .read_parts
-                .add("copy", self.lat.copy_read_page);
-            self.mempool.touch(slot);
-            self.metrics.local_hits += 1;
-            self.metrics.read_latency.record(t - now);
-            return Access {
-                end: t,
-                source: Source::LocalPool,
-            };
-        }
-        let unit_id = self.units.unit_of(page);
-        let remote_ok = self
-            .units
-            .get(unit_id)
-            .map(|u| u.alive && self.remote_ready.get(page))
-            .unwrap_or(false);
-        if remote_ok {
-            let u = self.units.get(unit_id).unwrap();
-            let primary = u.nodes[0];
-            let ready_at = u.ready_at;
-            t = t.max(ready_at);
-            t += self.lat.mrpool_get;
-            self.metrics
-                .read_parts
-                .add("mrpool", self.lat.mrpool_get);
-            let verb = cl.fabric.rdma_read(t, cl.sender, primary, PAGE_SIZE);
-            self.metrics.read_parts.add("rdma", verb.end - t);
-            t = verb.end + self.lat.copy_read_page;
-            self.metrics
-                .read_parts
-                .add("copy", self.lat.copy_read_page);
-            self.metrics.remote_hits += 1;
-            self.metrics.read_latency.record(t - now);
-            return Access {
-                end: t,
-                source: Source::Remote,
-            };
-        }
-        // Remote copy unavailable: disk (Table 3 fallback).
-        let end = cl.disks[cl.sender].read(t, PAGE_SIZE);
-        self.metrics.read_parts.add("disk", end - t);
-        self.metrics.disk_reads += 1;
-        self.metrics.read_latency.record(end - now);
-        Access {
-            end,
-            source: Source::Disk,
-        }
+        self.coord.read(cl, now, page)
     }
 
     fn pump(&mut self, cl: &mut ClusterState, now: Ns) {
-        self.drive_sender(cl, now);
-        // mempool resize checks against current host pressure
-        self.mempool.shrink(self.host_free_pages);
+        self.coord.pump(cl, now);
     }
 
     fn remote_pressure(
@@ -473,96 +82,23 @@ impl PagingBackend for ValetBackend {
         node: NodeId,
         bytes: u64,
     ) -> PressureOutcome {
-        let mut out = PressureOutcome {
-            done_at: now,
-            ..Default::default()
-        };
-        let mut t = now;
-        while out.reclaimed_bytes < bytes {
-            // Activity-based victim selection ON the pressured node —
-            // purely local metadata, zero sender queries (§3.5).
-            let choice = match self.victim_policy.select(&cl.mrpools[node], t)
-            {
-                Some(c) => c,
-                None => break,
-            };
-            let block_bytes = cl.mrpools[node]
-                .get(choice.block)
-                .map(|b| b.bytes)
-                .unwrap_or(self.units.unit_bytes);
-            let unit_id = self.units.unit_of_block(node, choice.block);
-            // Pick a destination: least-pressured other peer.
-            let cands: Vec<_> = cl
-                .candidates()
-                .into_iter()
-                .filter(|c| c.node != node && c.free_bytes >= block_bytes)
-                .collect();
-            let dst = cands
-                .iter()
-                .max_by_key(|c| c.free_bytes)
-                .map(|c| c.node);
-            match (unit_id, dst) {
-                (Some(unit_id), Some(dst)) => {
-                    if let Some(b) = cl.mrpools[node].get_mut(choice.block) {
-                        b.state = MrState::Migrating;
-                    }
-                    let mig = migration::simulate(
-                        &mut cl.fabric,
-                        &self.lat,
-                        t,
-                        cl.sender,
-                        node,
-                        dst,
-                        block_bytes,
-                        2,
-                    );
-                    // destination registers the block when the copy starts
-                    let new_block = cl.mrpools[dst].register(
-                        cl.sender,
-                        block_bytes,
-                        mig.copy_start,
-                    );
-                    cl.mrpools[node].release(choice.block);
-                    let u = self.units.get_mut(unit_id).unwrap();
-                    for (n, b) in
-                        u.nodes.iter_mut().zip(u.blocks.iter_mut())
-                    {
-                        if *n == node && *b == choice.block {
-                            *n = dst;
-                            *b = new_block;
-                        }
-                    }
-                    u.wlocked_until = u.wlocked_until.max(mig.done);
-                    out.migrated += 1;
-                    out.reclaimed_bytes += block_bytes;
-                    // source's memory is free once the copy is out
-                    t = mig.copy_end;
-                    out.done_at = out.done_at.max(mig.done);
-                }
-                _ => {
-                    // No destination with room (or untracked block):
-                    // last resort — delete like the baselines would.
-                    cl.mrpools[node].release(choice.block);
-                    if let Some(unit_id) = unit_id {
-                        if let Some(u) = self.units.get_mut(unit_id) {
-                            u.alive = false;
-                        }
-                    }
-                    out.deleted += 1;
-                    out.reclaimed_bytes += block_bytes;
-                    out.done_at = out.done_at.max(t);
-                }
-            }
-        }
-        out
+        self.coord.remote_pressure(cl, now, node, bytes)
+    }
+
+    fn host_pressure(&mut self, free_pages: u64) {
+        self.coord.set_host_free_pages(free_pages);
     }
 
     fn metrics(&self) -> &RunMetrics {
-        &self.metrics
+        self.coord.metrics()
     }
 
     fn metrics_mut(&mut self) -> &mut RunMetrics {
-        &mut self.metrics
+        self.coord.metrics_mut()
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
     }
 
     fn name(&self) -> &'static str {
@@ -573,8 +109,10 @@ impl PagingBackend for ValetBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backends::Source;
     use crate::config::Config;
-    use crate::sim::{ms, us};
+    use crate::sim::{ms, secs, us};
+    use crate::PAGE_SIZE;
 
     fn setup() -> (Config, ClusterState, ValetBackend) {
         let mut cfg = Config::default();
@@ -588,19 +126,16 @@ mod tests {
     }
 
     #[test]
-    fn write_completes_locally_in_microseconds() {
+    fn delegates_write_path_to_coordinator() {
         let (_cfg, mut cl, mut be) = setup();
         let a = be.write(&mut cl, 0, 0, 64 * 1024);
         assert_eq!(a.source, Source::LocalPool);
-        // Table 7a: write total ≈ 35.31 µs (radix 23.9 + copy 9.73 +
-        // enqueue 1.68)
-        let total = a.end;
-        assert!(
-            (total as f64 - 35_310.0).abs() < 500.0,
-            "write latency {total}"
-        );
-        // connection/mapping must NOT be on the critical path
-        assert!(total < ms(1));
+        // Table 7a: write total ≈ 35.31 µs — the coordinator's critical
+        // path, observed unchanged through the backend adapter.
+        assert!((a.end as f64 - 35_310.0).abs() < 500.0, "{}", a.end);
+        // the coordinator carries the staged state
+        assert_eq!(be.coordinator().pending_write_sets(), 1);
+        assert_eq!(be.metrics().write_latency.count(), 1);
     }
 
     #[test]
@@ -609,52 +144,8 @@ mod tests {
         let w = be.write(&mut cl, 0, 0, 64 * 1024);
         let r = be.read(&mut cl, w.end, 0);
         assert_eq!(r.source, Source::LocalPool);
-        // Table 7a: local hit = radix 1.39 + copy 2.11 = 3.5 µs
         let lat = r.end - w.end;
         assert!((lat as f64 - 3_500.0).abs() < 200.0, "local read {lat}");
-    }
-
-    #[test]
-    fn evicted_pages_read_from_remote() {
-        let (_cfg, mut cl, mut be) = setup();
-        // Fill the 64-page pool far beyond capacity so early pages get
-        // recycled after their batches complete.
-        let mut t = 0;
-        for blk in 0..40u64 {
-            let a = be.write(&mut cl, t, blk * 16, 16 * PAGE_SIZE);
-            t = a.end;
-        }
-        // let background sending finish
-        t += crate::sim::secs(2);
-        be.pump(&mut cl, t);
-        // force reclaim of everything reclaimable by writing more
-        for blk in 40..44u64 {
-            let a = be.write(&mut cl, t, blk * 16, 16 * PAGE_SIZE);
-            t = a.end;
-        }
-        t += crate::sim::secs(2);
-        be.pump(&mut cl, t);
-        // page 0 should long be evicted from the pool → remote read
-        let r = be.read(&mut cl, t, 0);
-        assert_eq!(r.source, Source::Remote, "metrics: {:?}", be.metrics());
-        // Table 7a remote read ≈ 36.5 rdma + 2.13 copy + 0.14 mrpool
-        let lat = r.end - t;
-        assert!((lat as f64 - 41_000.0).abs() < 5_000.0, "remote {lat}");
-        assert!(be.metrics().remote_hits > 0);
-    }
-
-    #[test]
-    fn connection_mapping_hidden_from_write_path() {
-        let (_cfg, mut cl, mut be) = setup();
-        // First-ever write triggers connection (200 ms) + mapping (62 ms)
-        // on the background; the write itself returns in ~35 µs.
-        let a = be.write(&mut cl, 0, 0, 64 * 1024);
-        assert!(a.end < us(100));
-        assert!(be.mapped_units() <= 1); // mapping may lag the write
-        // after pumping past the window the unit exists
-        be.pump(&mut cl, ms(400));
-        assert_eq!(be.mapped_units(), 1);
-        assert_eq!(cl.fabric.connections_made, 1);
     }
 
     #[test]
@@ -689,24 +180,6 @@ mod tests {
     }
 
     #[test]
-    fn sync_mode_waits_for_rdma() {
-        let mut cfg = Config::default();
-        cfg.cluster.nodes = 3;
-        cfg.valet.min_pool_pages = 0;
-        cfg.valet.max_pool_pages = 0;
-        cfg.valet.mr_block_bytes = 1 << 20;
-        let mut cl = ClusterState::new(&cfg);
-        let mut be = ValetBackend::new(&cfg);
-        let a = be.write(&mut cl, 0, 0, 64 * 1024);
-        assert_eq!(a.source, Source::Remote);
-        // first write pays connection + mapping synchronously
-        assert!(a.end > ms(200));
-        let b = be.write(&mut cl, a.end, 16, 64 * 1024);
-        // subsequent writes still pay RDMA round trip
-        assert!(b.end - a.end > us(40));
-    }
-
-    #[test]
     fn migration_keeps_data_readable_never_disk() {
         let (_cfg, mut cl, mut be) = setup();
         let mut t = 0;
@@ -714,21 +187,19 @@ mod tests {
             let a = be.write(&mut cl, t, blk * 16, 16 * PAGE_SIZE);
             t = a.end;
         }
-        t += crate::sim::secs(2);
+        t += secs(2);
         be.pump(&mut cl, t);
         // find which node holds unit 0 and pressure it
-        let holder = be.units.get(0).map(|u| u.nodes[0]).unwrap();
+        let holder =
+            be.coordinator().units().get(0).map(|u| u.nodes[0]).unwrap();
         let out = be.remote_pressure(&mut cl, t, holder, 1);
         assert!(out.migrated >= 1);
         assert_eq!(out.deleted, 0);
         // reads of migrated data still come from remote (never disk)
         let before = be.metrics().disk_reads;
-        let r = be.read(&mut cl, out.done_at, 0);
-        // page 0 may still be cached locally; force check on a page that
-        // was definitely evicted — read several
-        let mut sources = vec![r.source];
-        let mut tt = r.end;
-        for p in [1u64, 17, 33, 65, 129] {
+        let mut tt = out.done_at;
+        let mut sources = Vec::new();
+        for p in [0u64, 1, 17, 33, 65, 129] {
             let rr = be.read(&mut cl, tt, p);
             tt = rr.end;
             sources.push(rr.source);
@@ -747,12 +218,20 @@ mod tests {
         let mut cl = ClusterState::new(&cfg);
         let mut be = ValetBackend::new(&cfg);
         let a = be.write(&mut cl, 0, 0, 64 * 1024);
-        be.pump(&mut cl, a.end + crate::sim::secs(1));
-        let u = be.units.get(0).unwrap();
+        be.pump(&mut cl, a.end + secs(1));
+        let u = be.coordinator().units().get(0).unwrap();
         assert_eq!(u.nodes.len(), 2);
         assert_ne!(u.nodes[0], u.nodes[1]);
         let total_blocks: usize =
             cl.mrpools.iter().map(|p| p.len()).sum();
         assert_eq!(total_blocks, 2);
+    }
+
+    #[test]
+    fn host_pressure_reaches_the_coordinator() {
+        let (_cfg, mut cl, mut be) = setup();
+        be.host_pressure(12_345);
+        assert_eq!(be.coordinator().host_free_pages(), 12_345);
+        let _ = be.write(&mut cl, 0, 0, PAGE_SIZE);
     }
 }

@@ -86,14 +86,15 @@ impl Cluster {
                     m.native_bytes = m.native_bytes.saturating_sub(bytes);
                 }
                 ClusterEvent::SenderHostFree { pages } => {
-                    // only the Valet backend consumes this; forwarded via
-                    // pump below using a downcast-free channel: the
-                    // backend reads it from the monitor.
+                    // Mirror the new free level into the sender's monitor
+                    // and hand it to the backend: Valet's coordinator
+                    // re-caps its mempool against it on the next pump.
                     let sender = self.state.sender;
                     let m = &mut self.state.monitors[sender];
                     m.native_bytes = m
                         .total_bytes
                         .saturating_sub(pages * crate::PAGE_SIZE);
+                    self.backend.host_pressure(pages);
                 }
             }
         }
@@ -173,6 +174,24 @@ mod tests {
         });
         cl.advance(ms(3));
         assert_eq!(cl.state.monitors[1].native_bytes, 0);
+    }
+
+    #[test]
+    fn sender_host_free_reaches_valet_coordinator() {
+        use crate::backends::valet::ValetBackend;
+        let mut cfg = Config::default();
+        cfg.cluster.nodes = 3;
+        cfg.valet.min_pool_pages = 64;
+        cfg.valet.max_pool_pages = 1 << 20;
+        let mut cl = Cluster::new(&cfg, BackendKind::Valet);
+        cl.schedule(ms(1), ClusterEvent::SenderHostFree { pages: 77 });
+        cl.advance(ms(2));
+        let be = cl
+            .backend
+            .as_any()
+            .downcast_ref::<ValetBackend>()
+            .expect("valet backend");
+        assert_eq!(be.coordinator().host_free_pages(), 77);
     }
 
     #[test]

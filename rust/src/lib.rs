@@ -25,6 +25,7 @@
 //! | module | role |
 //! |---|---|
 //! | [`config`] | cluster/policy/latency configuration (TOML subset + CLI) |
+//! | [`coordinator`] | unified Figure-6 orchestration: GPT → mempool → staging → remote sender → reclaim, with eviction/migration hooks (§3.4–§3.5) |
 //! | [`sim`] | virtual clock, FIFO resource servers, event queue |
 //! | [`simnet`] | RDMA fabric model: connections, MRs, verbs, WQE cache |
 //! | [`simdisk`] | disk latency model |
@@ -50,6 +51,7 @@ pub mod bench;
 pub mod cluster;
 pub mod config;
 pub mod container;
+pub mod coordinator;
 pub mod eviction;
 pub mod gpt;
 pub mod mempool;

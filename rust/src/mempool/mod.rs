@@ -123,6 +123,12 @@ impl Mempool {
         self.capacity
     }
 
+    /// Guaranteed minimum pool size in pages (`min_pool_pages`, §4.1):
+    /// grow/shrink never moves `capacity` below this floor.
+    pub fn min_pages(&self) -> u64 {
+        self.min_pages
+    }
+
     /// Pages currently holding data.
     pub fn used(&self) -> u64 {
         self.capacity - self.free.len() as u64

@@ -66,6 +66,12 @@ impl StagingQueue {
         self.q.front()
     }
 
+    /// Virtual time the front write set entered staging — the earliest
+    /// moment the remote sender may begin its next batch.
+    pub fn front_enqueued_at(&self) -> Option<Ns> {
+        self.q.front().map(|w| w.enqueued_at)
+    }
+
     /// Remove the front write set (it has been sent).
     pub fn pop(&mut self) -> Option<WriteSet> {
         let ws = self.q.pop_front()?;
@@ -164,6 +170,17 @@ mod tests {
         assert_eq!(s.pop().unwrap().page, 1);
         assert_eq!(s.pop().unwrap().page, 2);
         assert!(s.pop().is_none());
+    }
+
+    #[test]
+    fn front_enqueued_at_tracks_front() {
+        let mut s = StagingQueue::new();
+        assert_eq!(s.front_enqueued_at(), None);
+        s.push(ws(1, 10, 5));
+        s.push(ws(2, 10, 9));
+        assert_eq!(s.front_enqueued_at(), Some(5));
+        s.pop();
+        assert_eq!(s.front_enqueued_at(), Some(9));
     }
 
     #[test]

@@ -1,11 +1,21 @@
-//! PJRT runtime: loads the AOT-compiled HLO artifacts produced by
-//! `python/compile/aot.py` and executes them on the CPU PJRT client —
-//! the L3↔L2 bridge. Python never runs at request time; the rust binary
-//! is self-contained once `artifacts/` exists.
+//! PJRT runtime bridge: loads the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and executes them — the L3↔L2 bridge. Python
+//! never runs at request time.
 //!
-//! Interchange format is HLO **text** (see /opt/xla-example/README.md):
-//! jax ≥ 0.5 emits HloModuleProto with 64-bit instruction ids that the
-//! crate's xla_extension 0.5.1 rejects; the text parser reassigns ids.
+//! The offline toolchain image carries **no crate registry**, so this
+//! module has two build modes:
+//!
+//! * default (no features): a dependency-free stub. [`Literal`] is an
+//!   in-crate host tensor, the literal builders and spec plumbing all
+//!   work, but [`Runtime::load`] registers no executables — callers see
+//!   "artifact not loaded" from [`Runtime::get`] and fall back (the CLI's
+//!   `valet ml` substitutes a constant per-step cost and says so).
+//! * `--features pjrt`: the real PJRT CPU client via an `xla` crate
+//!   (xla_extension 0.5.x; interchange format is HLO **text** because
+//!   jax ≥ 0.5 emits HloModuleProto with 64-bit instruction ids that
+//!   xla_extension 0.5.1 rejects — the text parser reassigns ids). The
+//!   dependency must be patched into `Cargo.toml` where a registry is
+//!   available; see the manifest's feature note.
 
 mod artifacts;
 
@@ -14,122 +24,102 @@ pub use artifacts::{ArtifactSpec, ARTIFACT_SPECS, GBOOST_D, GBOOST_N, KMEANS_D, 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, Context, Result};
+/// Runtime error: a message chain (the offline build carries no `anyhow`;
+/// this covers the same "context + cause" reporting the module needs).
+#[derive(Clone, Debug)]
+pub struct RuntimeError(String);
 
-/// A loaded, compiled artifact.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    /// Spec (name + input shapes) for validation.
-    pub spec: &'static ArtifactSpec,
-}
+impl RuntimeError {
+    /// Build from any displayable message.
+    pub fn msg(m: impl std::fmt::Display) -> Self {
+        RuntimeError(m.to_string())
+    }
 
-impl Executable {
-    /// Execute with the given literals; returns the flattened tuple of
-    /// outputs (aot.py lowers with `return_tuple=True`).
-    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        if inputs.len() != self.spec.inputs.len() {
-            return Err(anyhow!(
-                "{}: expected {} inputs, got {}",
-                self.spec.name,
-                self.spec.inputs.len(),
-                inputs.len()
-            ));
-        }
-        let mut result = self.exe.execute::<xla::Literal>(inputs)?[0][0]
-            .to_literal_sync()?;
-        let tuple = result.decompose_tuple()?;
-        Ok(tuple)
+    /// Wrap with leading context ("context: cause").
+    pub fn context(self, c: impl std::fmt::Display) -> Self {
+        RuntimeError(format!("{c}: {}", self.0))
     }
 }
 
-/// The runtime: one PJRT CPU client + the compiled executables.
-pub struct Runtime {
-    #[allow(dead_code)]
-    client: xla::PjRtClient,
-    exes: HashMap<&'static str, Executable>,
-    /// Where artifacts were loaded from.
-    pub dir: PathBuf,
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
 }
 
-impl Runtime {
-    /// Create the CPU client and compile every artifact found in `dir`
-    /// that matches a known spec. Missing artifacts are skipped (callers
-    /// check [`Runtime::get`]).
-    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
-        let dir = dir.as_ref().to_path_buf();
-        let client =
-            xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let mut exes = HashMap::new();
-        for spec in ARTIFACT_SPECS {
-            let path = dir.join(format!("{}.hlo.txt", spec.name));
-            if !path.exists() {
-                continue;
-            }
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().unwrap(),
-            )
-            .with_context(|| format!("parsing {}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .with_context(|| format!("compiling {}", spec.name))?;
-            exes.insert(spec.name, Executable { exe, spec });
-        }
-        Ok(Runtime { client, exes, dir })
+impl std::error::Error for RuntimeError {}
+
+/// Result alias used across the runtime API.
+pub type Result<T> = std::result::Result<T, RuntimeError>;
+
+// ---------------------------------------------------------------------
+// Host tensor literal
+// ---------------------------------------------------------------------
+
+/// A host-side tensor literal (f32 payload + shape). In the default
+/// build this is the in-crate stand-in for `xla::Literal`; the pjrt
+/// feature converts at the execution boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Dimensions (empty = scalar).
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
     }
 
-    /// Default artifact location (repo-root `artifacts/`), overridable
-    /// via the VALET_ARTIFACTS environment variable.
-    pub fn default_dir() -> PathBuf {
-        if let Ok(p) = std::env::var("VALET_ARTIFACTS") {
-            return PathBuf::from(p);
-        }
-        PathBuf::from("artifacts")
+    /// Element count.
+    pub fn len(&self) -> usize {
+        self.data.len()
     }
 
-    /// Fetch a compiled artifact by name.
-    pub fn get(&self, name: &str) -> Result<&Executable> {
-        self.exes.get(name).ok_or_else(|| {
-            anyhow!("artifact '{name}' not loaded (run `make artifacts`)")
-        })
-    }
-
-    /// Names of everything loaded.
-    pub fn loaded(&self) -> Vec<&'static str> {
-        let mut v: Vec<_> = self.exes.keys().copied().collect();
-        v.sort();
-        v
+    /// True for a zero-element literal.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
     }
 }
 
 /// Build a rank-N f32 literal from a flat slice.
-pub fn f32_literal(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+pub fn f32_literal(data: &[f32], dims: &[i64]) -> Result<Literal> {
     let n: i64 = dims.iter().product();
     if n as usize != data.len() {
-        return Err(anyhow!("shape {:?} != len {}", dims, data.len()));
+        return Err(RuntimeError::msg(format!(
+            "shape {:?} != len {}",
+            dims,
+            data.len()
+        )));
     }
-    Ok(xla::Literal::vec1(data).reshape(dims)?)
+    Ok(Literal {
+        data: data.to_vec(),
+        dims: dims.to_vec(),
+    })
 }
 
 /// Build a scalar f32 literal (rank 0).
-pub fn f32_scalar(v: f32) -> Result<xla::Literal> {
-    Ok(xla::Literal::scalar(v))
+pub fn f32_scalar(v: f32) -> Result<Literal> {
+    Ok(Literal {
+        data: vec![v],
+        dims: Vec::new(),
+    })
 }
 
 /// Extract an f32 vector from a literal.
-pub fn to_f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
-    Ok(lit.to_vec::<f32>()?)
+pub fn to_f32_vec(lit: &Literal) -> Result<Vec<f32>> {
+    Ok(lit.data.clone())
 }
 
-/// Extract an i32 vector from a literal.
-pub fn to_i32_vec(lit: &xla::Literal) -> Result<Vec<i32>> {
-    Ok(lit.to_vec::<i32>()?)
+/// Extract an i32 vector from a literal (rounded element-wise — PJRT
+/// returns integer outputs in their own literals; the stub stores f32).
+pub fn to_i32_vec(lit: &Literal) -> Result<Vec<i32>> {
+    Ok(lit.data.iter().map(|&v| v as i32).collect())
 }
-
 
 /// Random (seeded) input literals matching a spec — used by examples and
 /// benches to measure step compute without real data.
-pub fn random_inputs(spec: &ArtifactSpec) -> Result<Vec<xla::Literal>> {
+pub fn random_inputs(spec: &ArtifactSpec) -> Result<Vec<Literal>> {
     let mut rng = crate::util::Rng::new(0xA07);
     spec.inputs
         .iter()
@@ -147,12 +137,171 @@ pub fn random_inputs(spec: &ArtifactSpec) -> Result<Vec<xla::Literal>> {
         .collect()
 }
 
+// ---------------------------------------------------------------------
+// Executable + Runtime
+// ---------------------------------------------------------------------
+
+/// A loaded, compiled artifact.
+pub struct Executable {
+    #[cfg(feature = "pjrt")]
+    exe: xla::PjRtLoadedExecutable,
+    /// Spec (name + input shapes) for validation.
+    pub spec: &'static ArtifactSpec,
+}
+
+impl Executable {
+    /// Execute with the given literals; returns the flattened tuple of
+    /// outputs (aot.py lowers with `return_tuple=True`).
+    pub fn run(&self, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        if inputs.len() != self.spec.inputs.len() {
+            return Err(RuntimeError::msg(format!(
+                "{}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            )));
+        }
+        self.run_inner(inputs)
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn run_inner(&self, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        let xla_inputs: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|l| {
+                let lit = xla::Literal::vec1(&l.data);
+                if l.dims.is_empty() {
+                    Ok(lit.reshape(&[])?)
+                } else {
+                    Ok(lit.reshape(&l.dims)?)
+                }
+            })
+            .collect::<std::result::Result<_, xla::Error>>()
+            .map_err(RuntimeError::msg)?;
+        let mut result = self
+            .exe
+            .execute::<xla::Literal>(&xla_inputs)
+            .map_err(RuntimeError::msg)?[0][0]
+            .to_literal_sync()
+            .map_err(RuntimeError::msg)?;
+        let tuple = result.decompose_tuple().map_err(RuntimeError::msg)?;
+        tuple
+            .iter()
+            .map(|t| {
+                // Outputs may be F32 or S32 (kmeans_step's assignment
+                // vector is S32); the host Literal stores f32, which is
+                // exact for the index-sized integers the artifacts emit
+                // and round-trips through to_i32_vec. Output shapes are
+                // flattened to rank 1 — callers consume flat vectors via
+                // to_f32_vec / to_i32_vec.
+                let data: Vec<f32> = match t.to_vec::<f32>() {
+                    Ok(v) => v,
+                    Err(_) => t
+                        .to_vec::<i32>()
+                        .map_err(RuntimeError::msg)?
+                        .into_iter()
+                        .map(|v| v as f32)
+                        .collect(),
+                };
+                f32_literal(&data, &[data.len() as i64])
+            })
+            .collect()
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn run_inner(&self, _inputs: &[Literal]) -> Result<Vec<Literal>> {
+        Err(RuntimeError::msg(format!(
+            "{}: PJRT execution unavailable (build with --features pjrt)",
+            self.spec.name
+        )))
+    }
+}
+
+/// The runtime: the compiled executables (+ the PJRT CPU client when the
+/// pjrt feature is on).
+pub struct Runtime {
+    #[cfg(feature = "pjrt")]
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    exes: HashMap<&'static str, Executable>,
+    /// Where artifacts were loaded from.
+    pub dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create the runtime over `dir`. With the pjrt feature, compiles
+    /// every artifact found there that matches a known spec; without it,
+    /// nothing loads (callers check [`Runtime::get`] and fall back).
+    /// Missing artifacts are always skipped, never an error.
+    #[cfg(feature = "pjrt")]
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let client = xla::PjRtClient::cpu()
+            .map_err(RuntimeError::msg)
+            .map_err(|e| e.context("creating PJRT CPU client"))?;
+        let mut exes = HashMap::new();
+        for spec in ARTIFACT_SPECS {
+            let path = dir.join(format!("{}.hlo.txt", spec.name));
+            if !path.exists() {
+                continue;
+            }
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().unwrap(),
+            )
+            .map_err(RuntimeError::msg)
+            .map_err(|e| e.context(format!("parsing {}", path.display())))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(RuntimeError::msg)
+                .map_err(|e| e.context(format!("compiling {}", spec.name)))?;
+            exes.insert(spec.name, Executable { exe, spec });
+        }
+        Ok(Runtime { client, exes, dir })
+    }
+
+    /// Stub load: records the directory, registers nothing.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        Ok(Runtime {
+            exes: HashMap::new(),
+            dir: dir.as_ref().to_path_buf(),
+        })
+    }
+
+    /// Default artifact location (repo-root `artifacts/`), overridable
+    /// via the VALET_ARTIFACTS environment variable.
+    pub fn default_dir() -> PathBuf {
+        if let Ok(p) = std::env::var("VALET_ARTIFACTS") {
+            return PathBuf::from(p);
+        }
+        PathBuf::from("artifacts")
+    }
+
+    /// Fetch a compiled artifact by name.
+    pub fn get(&self, name: &str) -> Result<&Executable> {
+        self.exes.get(name).ok_or_else(|| {
+            RuntimeError::msg(format!(
+                "artifact '{name}' not loaded (run `make artifacts` and \
+                 build with --features pjrt)"
+            ))
+        })
+    }
+
+    /// Names of everything loaded.
+    pub fn loaded(&self) -> Vec<&'static str> {
+        let mut v: Vec<_> = self.exes.keys().copied().collect();
+        v.sort();
+        v
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    // Runtime tests that need artifacts live in rust/tests/ (integration,
-    // after `make artifacts`); here we only check spec plumbing.
+    // Runtime tests that need artifacts + PJRT live in rust/tests/
+    // (integration, pjrt feature); here we check spec + literal plumbing.
 
     #[test]
     fn specs_are_wellformed() {
@@ -165,15 +314,37 @@ mod tests {
     #[test]
     fn literal_builders() {
         let l = f32_literal(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
-        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(to_f32_vec(&l).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(l.dims(), &[2, 2]);
         assert!(f32_literal(&[1.0], &[2]).is_err());
         let s = f32_scalar(7.5).unwrap();
-        assert_eq!(s.to_vec::<f32>().unwrap(), vec![7.5]);
+        assert_eq!(to_f32_vec(&s).unwrap(), vec![7.5]);
+        assert!(s.dims().is_empty());
+        assert_eq!(to_i32_vec(&s).unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn random_inputs_match_spec_shapes() {
+        for spec in ARTIFACT_SPECS {
+            let ins = random_inputs(spec).unwrap();
+            assert_eq!(ins.len(), spec.inputs.len(), "{}", spec.name);
+            for (lit, want) in ins.iter().zip(spec.inputs) {
+                let n: i64 = want.dims.iter().product::<i64>().max(1);
+                assert_eq!(lit.len() as i64, n, "{}", spec.name);
+            }
+        }
     }
 
     #[test]
     fn missing_artifact_is_reported() {
         let rt = Runtime::load("/nonexistent-dir").unwrap();
         assert!(rt.get("logreg_step").is_err());
+        assert!(rt.loaded().is_empty());
+    }
+
+    #[test]
+    fn error_context_chains() {
+        let e = RuntimeError::msg("cause").context("context");
+        assert_eq!(e.to_string(), "context: cause");
     }
 }

@@ -1,0 +1,176 @@
+//! Integration tests for the unified Coordinator data flow (Figure 6):
+//! mempool-hit vs staged-miss latency ordering, mempool grow/shrink
+//! floor, the §5.2 UPDATE-flag race across write-set completions, and
+//! the live serve path round-tripping through the same coordinator.
+
+use valet::backends::valet::ValetBackend;
+use valet::backends::{ClusterState, PagingBackend, Source};
+use valet::config::{BackendKind, Config};
+use valet::coordinator::Coordinator;
+use valet::serve::{spawn, Request};
+use valet::sim::{secs, us, us_f};
+use valet::PAGE_SIZE;
+
+fn small_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.cluster.nodes = 4;
+    cfg.valet.mr_block_bytes = 1 << 20;
+    cfg.valet.min_pool_pages = 64;
+    cfg.valet.max_pool_pages = 64;
+    cfg
+}
+
+#[test]
+fn mempool_hit_beats_staged_miss_latency() {
+    // The critical-path payoff in one ordering: a locally cached page
+    // reads in ~3.5 µs, a page whose slot was recycled after its write
+    // set became remotely durable pays the one-sided RDMA READ (~41 µs).
+    let cfg = small_cfg();
+    let mut cl = ClusterState::new(&cfg);
+    let mut co = Coordinator::new(&cfg);
+    let mut t = 0;
+    for blk in 0..40u64 {
+        let a = co.write(&mut cl, t, blk * 16, 16 * PAGE_SIZE);
+        t = a.end;
+    }
+    t += secs(2);
+    co.pump(&mut cl, t);
+    // recycle the early pages' slots
+    for blk in 40..44u64 {
+        let a = co.write(&mut cl, t, blk * 16, 16 * PAGE_SIZE);
+        t = a.end;
+    }
+    t += secs(2);
+    co.pump(&mut cl, t);
+
+    let hot = co.read(&mut cl, t, 43 * 16); // just written: in the pool
+    assert_eq!(hot.source, Source::LocalPool);
+    let hot_lat = hot.end - t;
+    let t2 = hot.end;
+    let cold = co.read(&mut cl, t2, 0); // long evicted: remote
+    assert_eq!(cold.source, Source::Remote);
+    let cold_lat = cold.end - t2;
+    assert!(
+        hot_lat * 5 < cold_lat,
+        "hit {hot_lat} ns must be far below miss {cold_lat} ns"
+    );
+    assert!(hot_lat < us(10), "{hot_lat}");
+    assert!(cold_lat > us(30), "{cold_lat}");
+}
+
+#[test]
+fn grow_then_shrink_never_drops_below_min_pages() {
+    let mut cfg = Config::default();
+    cfg.cluster.nodes = 4;
+    cfg.valet.mr_block_bytes = 1 << 20;
+    cfg.valet.min_pool_pages = 64;
+    cfg.valet.max_pool_pages = 4096;
+    let mut cl = ClusterState::new(&cfg);
+    let mut be = ValetBackend::new(&cfg);
+    let mut t = 0;
+    for blk in 0..64u64 {
+        let a = be.write(&mut cl, t, blk * 16, 16 * PAGE_SIZE);
+        t = a.end;
+    }
+    let grown = be.mempool().capacity();
+    assert!(grown > 64, "pool should have grown past the floor: {grown}");
+    // host free memory collapses (container churn event path)
+    be.host_pressure(0);
+    for _ in 0..64 {
+        t += secs(1);
+        be.pump(&mut cl, t);
+        let cap = be.mempool().capacity();
+        assert!(
+            cap >= be.mempool().min_pages(),
+            "capacity {cap} fell below the min_pages floor"
+        );
+        assert!(cap <= grown);
+    }
+}
+
+#[test]
+fn update_pending_slot_survives_older_write_set_reclaim() {
+    // §5.2 / Figure 17: WS1 and WS2 cover the same page; WS1's remote
+    // completion must NOT free the slot (a newer write set owns it), so
+    // the page keeps reading from the mempool throughout.
+    let mut cfg = small_cfg();
+    // Compress the mapping window and stretch the wire so the two write
+    // sets complete at clearly separated virtual times.
+    cfg.latency.connect = us_f(10.0);
+    cfg.latency.map_mr = us_f(10.0);
+    cfg.latency.rdma_per_byte = 1000.0; // 1 µs/byte → ~4 ms per page
+    let mut cl = ClusterState::new(&cfg);
+    let mut co = Coordinator::new(&cfg);
+
+    let a1 = co.write(&mut cl, 0, 7, PAGE_SIZE);
+    let a2 = co.write(&mut cl, a1.end, 7, PAGE_SIZE);
+    let slot = co.slot_of(7).expect("page 7 cached");
+    assert_eq!(
+        co.mempool().flags(slot).update_pending,
+        1,
+        "second write must mark the slot superseded"
+    );
+    assert_eq!(co.pending_write_sets(), 2);
+
+    let mut saw_first_only = false;
+    let mut saw_both = false;
+    let mut t = a2.end;
+    while t < secs(1) {
+        t += us(100);
+        co.pump(&mut cl, t);
+        let completed = co.reclaimable().completed;
+        let flags = co.mempool().flags(slot);
+        if completed == 1 {
+            saw_first_only = true;
+            // the older write set completed: the slot must survive —
+            // pending-supersede consumed, still NOT reclaimable
+            assert_eq!(flags.update_pending, 0);
+            assert!(!flags.reclaimable, "WS1 must not reclaim the slot");
+        }
+        if completed == 2 {
+            saw_both = true;
+            assert!(flags.reclaimable, "WS2's completion reclaims");
+            break;
+        }
+        // the page reads locally at every point in between
+        let r = co.read(&mut cl, t, 7);
+        assert_eq!(r.source, Source::LocalPool, "at t={t}");
+        t = r.end;
+    }
+    assert!(saw_first_only, "never observed WS1-done/WS2-pending window");
+    assert!(saw_both, "write sets never fully drained");
+}
+
+#[test]
+fn serve_roundtrips_go_through_the_coordinator() {
+    let mut cfg = Config::default();
+    cfg.cluster.nodes = 3;
+    cfg.valet.mr_block_bytes = 1 << 20;
+    cfg.valet.min_pool_pages = 256;
+    cfg.valet.max_pool_pages = 1024;
+    let h = spawn(&cfg, BackendKind::Valet);
+    for i in 0..8u64 {
+        let w = h
+            .call(Request::Write { page: i * 16, bytes: 65536 })
+            .unwrap();
+        assert!(w.virtual_ns > 0);
+    }
+    let r = h.call(Request::Read { page: 0 }).unwrap();
+    assert!(r.virtual_ns < 100_000, "local hit expected: {}", r.virtual_ns);
+    // deterministically drive the background past the mapping window
+    for _ in 0..300 {
+        h.call(Request::Pump).unwrap();
+    }
+    let cluster = h.shutdown().unwrap();
+    let be = cluster
+        .backend
+        .as_any()
+        .downcast_ref::<ValetBackend>()
+        .expect("serve runs the Valet backend");
+    // every request flowed through the one Coordinator instance
+    assert_eq!(be.metrics().local_hits, 1);
+    assert!(be.coordinator().mapped_units() >= 1);
+    assert_eq!(be.coordinator().pending_write_sets(), 0);
+    assert_eq!(be.coordinator().reclaimable().completed, 8);
+    assert_eq!(be.staged_bytes(), 0);
+}

@@ -1,6 +1,9 @@
 //! Runtime integration: load every AOT artifact through the PJRT CPU
 //! client and validate numerics against rust-side references — the exact
-//! round-trip the production path uses. Requires `make artifacts`.
+//! round-trip the production path uses. Requires `make artifacts` AND a
+//! pjrt-enabled build (`--features pjrt` with the xla dependency patched
+//! in); the default offline build compiles this file to an empty crate.
+#![cfg(feature = "pjrt")]
 
 use valet::runtime::{
     f32_literal, f32_scalar, random_inputs, to_f32_vec, to_i32_vec,
