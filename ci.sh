@@ -28,4 +28,9 @@ else
     echo "warning: clippy not installed in this toolchain; lint skipped" >&2
 fi
 
+echo "== docs =="
+# The docs gate: missing rustdoc (lib.rs warns on missing_docs) and
+# broken intra-doc links fail the build.
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
 echo "ci.sh: OK"

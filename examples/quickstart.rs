@@ -78,8 +78,11 @@ fn main() {
         valet.mempool().reclaims
     );
     println!(
-        "  reads: {} local / {} remote / {} disk",
-        m.local_hits, m.remote_hits, m.disk_reads
+        "  reads: {} local / {} remote / {} disk ({:.1}% local hit)",
+        m.local_hits,
+        m.remote_hits,
+        m.disk_reads,
+        m.local_hit_ratio() * 100.0
     );
     println!(
         "  write p50 {} p99 {}",

@@ -61,7 +61,10 @@ fn main() {
             fmt::ns(r.metrics.op_latency.mean() as u64),
             fmt::ns(r.metrics.op_latency.p99()),
             format!("{:.1}%", r.metrics.local_hit_ratio() * 100.0),
-            r.metrics.disk_reads.to_string(),
+            format!(
+                "{}/{}/{}",
+                r.metrics.local_hits, r.metrics.remote_hits, r.metrics.disk_reads
+            ),
             format!("{:.1}x", secs / valet_completion),
         ]);
     }
@@ -75,7 +78,7 @@ fn main() {
                 "mean lat",
                 "p99 lat",
                 "local hit",
-                "disk reads",
+                "local/remote/disk",
                 "vs Valet"
             ],
             &rows

@@ -1,0 +1,663 @@
+//! Multi-tenant host memory arbitration (§3, Figure 5): the
+//! host-coordinated mempool budget shared across containers.
+//!
+//! Valet's second contribution "utilizes unused local memory across
+//! containers by managing local memory via Valet host-coordinated memory
+//! pool, which allows containers to dynamically expand and shrink their
+//! memory allocations according to the workload demands". PR 1's
+//! [`crate::coordinator::Coordinator`] served exactly one tenant; this
+//! module arbitrates the shared host pool between several of them:
+//!
+//! * [`HostArbiter`] — the pure ledger. It owns the host pool budget (in
+//!   pages) and leases it to N tenants with weighted shares. A tenant
+//!   under paging pressure borrows idle pages from under-utilized peers
+//!   (demand-driven grow); when host free memory drops, the budget
+//!   shrinks and leases are reclaimed from the most over-share tenant
+//!   first (pressure-driven shrink) — the host-side mirror of the
+//!   least-active-chunk idea the coordinator applies remotely.
+//! * [`TenantGroup`] — the wiring. One [`crate::coordinator::Coordinator`]
+//!   per container, all sharing one [`ClusterState`] substrate, with the
+//!   arbiter's leases driving each coordinator's mempool cap (see
+//!   [`crate::mempool::Mempool::set_lease`]) and its give-back path
+//!   (see [`crate::mempool::Mempool::donate_idle`]).
+//!
+//! The arbiter is a ledger, not a page allocator: leases bound what each
+//! tenant's mempool may grow to, and a lowered lease is enforced
+//! gradually by the tenant's next pumps (free-slot shrink first, then
+//! donation of idle remote-durable pages). The invariant it maintains is
+//! `Σ leases ≤ budget` whenever the budget covers every tenant's
+//! `min_pages` floor; floors win when it does not, exactly like the
+//! single-tenant mempool's `min_pool_pages` floor.
+
+use std::cmp::Reverse;
+
+use crate::backends::{Access, ClusterState, PressureOutcome};
+use crate::config::Config;
+use crate::coordinator::Coordinator;
+use crate::metrics::RunMetrics;
+use crate::sim::Ns;
+use crate::{NodeId, PAGE_SIZE};
+
+/// Identifier of a tenant (0-based, dense — the registration order).
+pub type TenantId = usize;
+
+/// Owner tag the group assigns to tenant `i`'s MR registrations:
+/// `TENANT_OWNER_BASE + i`. Far above any real [`NodeId`], so a tenant's
+/// blocks are distinguishable from single-tenant registrations (which use
+/// the sender's node id) and from other tenants'.
+pub const TENANT_OWNER_BASE: NodeId = 1 << 24;
+
+/// Static description of one tenant: its weight in the fair-share split
+/// and its guaranteed mempool floor.
+#[derive(Clone, Copy, Debug)]
+pub struct TenantSpec {
+    /// Relative share weight (fair share = `budget × weight / Σ weights`).
+    pub weight: u64,
+    /// Guaranteed minimum lease in pages (the tenant's `min_pool_pages`
+    /// floor; neither borrowing nor host pressure moves its lease below
+    /// this).
+    pub min_pages: u64,
+}
+
+impl Default for TenantSpec {
+    fn default() -> Self {
+        TenantSpec {
+            weight: 1,
+            min_pages: 64,
+        }
+    }
+}
+
+/// A point-in-time load snapshot of one tenant's mempool, fed to
+/// [`HostArbiter::rebalance`] each pump.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TenantLoad {
+    /// Pages currently resident in the tenant's mempool.
+    pub used_pages: u64,
+    /// Resident pages that are NOT yet remote-durable — they cannot be
+    /// donated back to the host pool, so donors must keep a lease floor
+    /// above them.
+    pub pinned_pages: u64,
+    /// Allocation backpressure events (mempool exhausted, caller stalled)
+    /// since the last rebalance — the strongest demand signal.
+    pub stalled_allocs: u64,
+    /// Successful allocations since the last rebalance — distinguishes a
+    /// tenant actively growing into its lease from one merely sitting on
+    /// a full cache.
+    pub recent_allocs: u64,
+}
+
+impl TenantLoad {
+    /// True when this snapshot signals demand for more lease: the tenant
+    /// stalled, or it is actively allocating with usage at or past the
+    /// mempool's grow threshold (80 % of its lease).
+    fn demanding(&self, lease: u64) -> bool {
+        self.stalled_allocs > 0
+            || (self.recent_allocs > 0
+                && self.used_pages.saturating_mul(5) >= lease.saturating_mul(4))
+    }
+}
+
+/// Per-tenant ledger entry.
+#[derive(Clone, Copy, Debug)]
+struct Share {
+    weight: u64,
+    min_pages: u64,
+    lease: u64,
+}
+
+/// The host-coordinated pool ledger: budget + weighted leases.
+///
+/// Pure bookkeeping (no coordinator references), so policies are unit-
+/// testable: see the weighted-share convergence and give-back ordering
+/// tests in `tests/arbiter.rs`.
+#[derive(Clone, Debug)]
+pub struct HostArbiter {
+    budget: u64,
+    shares: Vec<Share>,
+    /// Lease grants made to demanding tenants (stats).
+    pub grants: u64,
+    /// Lease reclaims (fairness claw-backs + host-pressure cuts) (stats).
+    pub reclaims: u64,
+}
+
+impl HostArbiter {
+    /// Ledger over a host pool of `budget_pages`.
+    pub fn new(budget_pages: u64) -> Self {
+        HostArbiter {
+            budget: budget_pages.max(1),
+            shares: Vec::new(),
+            grants: 0,
+            reclaims: 0,
+        }
+    }
+
+    /// Register a tenant and reset every lease to its fair share, then
+    /// trim back under the budget (a floored fair share can push the
+    /// raw sum over it — see [`Self::fair_share`]). Registration
+    /// happens at group construction, before any rebalancing.
+    pub fn register(&mut self, spec: TenantSpec) -> TenantId {
+        self.shares.push(Share {
+            weight: spec.weight.max(1),
+            min_pages: spec.min_pages.max(1),
+            lease: 0,
+        });
+        for i in 0..self.shares.len() {
+            self.shares[i].lease = self.fair_share(i);
+        }
+        self.enforce_budget();
+        self.shares.len() - 1
+    }
+
+    /// Number of registered tenants.
+    pub fn tenants(&self) -> usize {
+        self.shares.len()
+    }
+
+    /// Current host pool budget in pages.
+    pub fn budget_pages(&self) -> u64 {
+        self.budget
+    }
+
+    /// Tenant's current lease in pages.
+    pub fn lease(&self, t: TenantId) -> u64 {
+        self.shares[t].lease
+    }
+
+    /// All leases, tenant order.
+    pub fn leases(&self) -> Vec<u64> {
+        self.shares.iter().map(|s| s.lease).collect()
+    }
+
+    /// Sum of all leases.
+    pub fn leased_total(&self) -> u64 {
+        self.shares.iter().map(|s| s.lease).sum()
+    }
+
+    /// Tenant's weighted fair share of the current budget, never below
+    /// its `min_pages` floor.
+    pub fn fair_share(&self, t: TenantId) -> u64 {
+        let total_w: u64 = self.shares.iter().map(|s| s.weight).sum();
+        let w = self.shares[t].weight;
+        let share = ((self.budget as u128 * w as u128) / total_w.max(1) as u128)
+            as u64;
+        share.max(self.shares[t].min_pages)
+    }
+
+    /// The tenant (other than `except`) holding the largest lease above
+    /// its fair share — the first to give back.
+    fn most_over_share(&self, except: TenantId) -> Option<TenantId> {
+        (0..self.shares.len())
+            .filter(|&j| j != except)
+            .filter(|&j| self.shares[j].lease > self.fair_share(j))
+            .max_by_key(|&j| {
+                (self.shares[j].lease - self.fair_share(j), Reverse(j))
+            })
+    }
+
+    /// Pages tenant `j` can donate right now: lease minus what it must
+    /// hold (its floor, its pinned pages, and a slack of 1/8 of its lease
+    /// so donors are not drained to the bone in one round).
+    fn spare(&self, j: TenantId, load: &TenantLoad) -> u64 {
+        let s = &self.shares[j];
+        let keep = (s.lease / 8).max(32);
+        let hold = s.min_pages.max(load.pinned_pages).saturating_add(keep);
+        s.lease.saturating_sub(hold)
+    }
+
+    /// One arbitration round against a load snapshot (one entry per
+    /// tenant, registration order). Two passes:
+    ///
+    /// 1. **Fairness** — a demanding tenant below its fair share claws
+    ///    lease back from tenants above theirs, most over-share first.
+    ///    Under sustained contention leases therefore converge to the
+    ///    weighted split.
+    /// 2. **Idle borrowing** — remaining demand is served from the
+    ///    unleased budget, then from cold peers' spare headroom (again
+    ///    most over-share donors first).
+    ///
+    /// Returns the new leases.
+    pub fn rebalance(&mut self, loads: &[TenantLoad]) -> Vec<u64> {
+        assert_eq!(loads.len(), self.shares.len(), "one load per tenant");
+        let n = self.shares.len();
+        let demanding: Vec<bool> = (0..n)
+            .map(|i| loads[i].demanding(self.shares[i].lease))
+            .collect();
+        let mut want: Vec<u64> = (0..n)
+            .map(|i| {
+                if demanding[i] {
+                    (self.shares[i].lease / 4).max(64)
+                } else {
+                    0
+                }
+            })
+            .collect();
+
+        // Pass 1: fairness claw-back.
+        for i in 0..n {
+            if want[i] == 0 {
+                continue;
+            }
+            let fair_i = self.fair_share(i);
+            while self.shares[i].lease < fair_i && want[i] > 0 {
+                let need = (fair_i - self.shares[i].lease).min(want[i]);
+                let Some(j) = self.most_over_share(i) else { break };
+                let over_j = self.shares[j].lease - self.fair_share(j);
+                let take = need.min(over_j);
+                if take == 0 {
+                    break;
+                }
+                self.shares[j].lease -= take;
+                self.shares[i].lease += take;
+                want[i] -= take;
+                self.reclaims += 1;
+            }
+        }
+
+        // Pass 2: unleased budget, then idle donors.
+        for i in 0..n {
+            while want[i] > 0 {
+                let unleased = self.budget.saturating_sub(self.leased_total());
+                if unleased > 0 {
+                    let take = want[i].min(unleased);
+                    self.shares[i].lease += take;
+                    want[i] -= take;
+                    self.grants += 1;
+                    continue;
+                }
+                // Donors are tenants that were cold this round — a
+                // demanding tenant whose want was satisfied in pass 1
+                // must not be drained right back.
+                let donor = (0..n)
+                    .filter(|&j| j != i && !demanding[j])
+                    .map(|j| (j, self.spare(j, &loads[j])))
+                    .filter(|&(_, sp)| sp > 0)
+                    .max_by_key(|&(j, _)| {
+                        (
+                            self.shares[j]
+                                .lease
+                                .saturating_sub(self.fair_share(j)),
+                            Reverse(j),
+                        )
+                    });
+                let Some((j, sp)) = donor else { break };
+                let take = want[i].min(sp);
+                self.shares[j].lease -= take;
+                self.shares[i].lease += take;
+                want[i] -= take;
+                self.grants += 1;
+            }
+        }
+        self.leases()
+    }
+
+    /// Host free memory changed: set the new budget and, if leases now
+    /// exceed it, reclaim — most over-share tenant first (down to fair
+    /// shares), then largest leases down toward their `min_pages`
+    /// floors. Floors are never violated, so an overcommitted budget
+    /// leaves `Σ leases > budget` (mirroring the mempool's own
+    /// never-below-min rule). Returns the new leases.
+    pub fn set_budget(&mut self, budget_pages: u64) -> Vec<u64> {
+        self.budget = budget_pages.max(1);
+        self.enforce_budget();
+        self.leases()
+    }
+
+    /// Reclaim leases until `Σ leases ≤ budget` (or every tenant sits
+    /// on its floor): most over-share first down to fair shares, then
+    /// largest leases down toward `min_pages`.
+    fn enforce_budget(&mut self) {
+        let n = self.shares.len();
+        // Phase 1: cut over-share tenants down to their fair shares.
+        loop {
+            let excess = self.leased_total().saturating_sub(self.budget);
+            if excess == 0 {
+                break;
+            }
+            let over = (0..n)
+                .filter(|&j| self.shares[j].lease > self.fair_share(j))
+                .max_by_key(|&j| {
+                    (self.shares[j].lease - self.fair_share(j), Reverse(j))
+                });
+            let Some(j) = over else { break };
+            let cut =
+                excess.min(self.shares[j].lease - self.fair_share(j));
+            self.shares[j].lease -= cut;
+            self.reclaims += 1;
+        }
+        // Phase 2: still over (min floors / rounding): cut the largest
+        // leases toward their floors.
+        loop {
+            let excess = self.leased_total().saturating_sub(self.budget);
+            if excess == 0 {
+                break;
+            }
+            let big = (0..n)
+                .filter(|&j| self.shares[j].lease > self.shares[j].min_pages)
+                .max_by_key(|&j| (self.shares[j].lease, Reverse(j)));
+            let Some(j) = big else { break };
+            let cut =
+                excess.min(self.shares[j].lease - self.shares[j].min_pages);
+            self.shares[j].lease -= cut;
+            self.reclaims += 1;
+        }
+    }
+}
+
+/// N per-container coordinators behind one arbiter, sharing one
+/// simulated substrate — the multi-tenant analogue of a single
+/// [`Coordinator`].
+///
+/// Page spaces are per-tenant (each coordinator owns its own GPT and
+/// unit map); MR registrations carry a per-tenant owner tag so victim
+/// selection under remote pressure never evicts another tenant's blocks.
+pub struct TenantGroup {
+    arbiter: HostArbiter,
+    coords: Vec<Coordinator>,
+    stall_base: Vec<u64>,
+    alloc_base: Vec<u64>,
+    host_free_pages: u64,
+    host_free_fraction: f64,
+    max_budget_pages: u64,
+}
+
+impl TenantGroup {
+    /// Build one coordinator per spec. The host pool budget is
+    /// `min(max_pool_pages, host_free_fraction × initial host free)` —
+    /// the same effective cap a single-tenant coordinator starts under —
+    /// and each tenant's mempool floor comes from its spec.
+    pub fn new(cfg: &Config, specs: &[TenantSpec]) -> Self {
+        assert!(!specs.is_empty(), "at least one tenant");
+        let host_free0 = (cfg.cluster.node_mem_bytes / PAGE_SIZE) / 2;
+        let frac_cap =
+            (host_free0 as f64 * cfg.valet.host_free_fraction) as u64;
+        let budget = cfg.valet.max_pool_pages.min(frac_cap).max(1);
+        let mut arbiter = HostArbiter::new(budget);
+        let mut coords = Vec::with_capacity(specs.len());
+        for (i, spec) in specs.iter().enumerate() {
+            let _id = arbiter.register(*spec);
+            debug_assert_eq!(_id, i);
+            let mut tcfg = cfg.clone();
+            tcfg.valet.min_pool_pages = spec.min_pages.max(1);
+            tcfg.valet.max_pool_pages = budget.max(spec.min_pages.max(1));
+            coords.push(
+                Coordinator::new(&tcfg)
+                    .with_owner_tag(TENANT_OWNER_BASE + i),
+            );
+        }
+        let leases = arbiter.leases();
+        for (co, &l) in coords.iter_mut().zip(leases.iter()) {
+            co.set_lease_pages(l);
+        }
+        TenantGroup {
+            arbiter,
+            coords,
+            stall_base: vec![0; specs.len()],
+            alloc_base: vec![0; specs.len()],
+            host_free_pages: host_free0,
+            host_free_fraction: cfg.valet.host_free_fraction,
+            max_budget_pages: cfg.valet.max_pool_pages.max(1),
+        }
+    }
+
+    /// Number of tenants.
+    pub fn tenants(&self) -> usize {
+        self.coords.len()
+    }
+
+    /// The arbiter ledger (leases, budget, grant/reclaim stats).
+    pub fn arbiter(&self) -> &HostArbiter {
+        &self.arbiter
+    }
+
+    /// Tenant's coordinator (metrics, mempool diagnostics).
+    pub fn coordinator(&self, t: TenantId) -> &Coordinator {
+        &self.coords[t]
+    }
+
+    /// Mutable access to a tenant's coordinator (policy hooks).
+    pub fn coordinator_mut(&mut self, t: TenantId) -> &mut Coordinator {
+        &mut self.coords[t]
+    }
+
+    /// Host free pages last reported via [`Self::host_pressure`].
+    pub fn host_free_pages(&self) -> u64 {
+        self.host_free_pages
+    }
+
+    /// Merged run metrics across all tenants (combined hit split etc.).
+    pub fn combined_metrics(&self) -> RunMetrics {
+        let mut m = RunMetrics::default();
+        for co in &self.coords {
+            m.merge(co.metrics());
+        }
+        m
+    }
+
+    /// Swap-out for `tenant` (see [`Coordinator::write`]).
+    pub fn write(
+        &mut self,
+        cl: &mut ClusterState,
+        now: Ns,
+        tenant: TenantId,
+        page: u64,
+        bytes: u64,
+    ) -> Access {
+        self.coords[tenant].write(cl, now, page, bytes)
+    }
+
+    /// Swap-in for `tenant` (see [`Coordinator::read`]).
+    pub fn read(
+        &mut self,
+        cl: &mut ClusterState,
+        now: Ns,
+        tenant: TenantId,
+        page: u64,
+    ) -> Access {
+        self.coords[tenant].read(cl, now, page)
+    }
+
+    /// Drive every tenant's background machinery up to `now`, then run
+    /// one arbitration round against fresh load snapshots and apply the
+    /// resulting leases.
+    pub fn pump(&mut self, cl: &mut ClusterState, now: Ns) {
+        for co in &mut self.coords {
+            co.pump(cl, now);
+        }
+        let mut loads = Vec::with_capacity(self.coords.len());
+        for (i, co) in self.coords.iter().enumerate() {
+            let mp = co.mempool();
+            let used = mp.used();
+            let reclaimable = mp.reclaimable_count() as u64;
+            loads.push(TenantLoad {
+                used_pages: used,
+                pinned_pages: used.saturating_sub(reclaimable),
+                stalled_allocs: mp
+                    .alloc_stalls
+                    .saturating_sub(self.stall_base[i]),
+                recent_allocs: mp.allocs.saturating_sub(self.alloc_base[i]),
+            });
+            self.stall_base[i] = mp.alloc_stalls;
+            self.alloc_base[i] = mp.allocs;
+        }
+        let leases = self.arbiter.rebalance(&loads);
+        for (co, &l) in self.coords.iter_mut().zip(leases.iter()) {
+            co.set_lease_pages(l);
+        }
+    }
+
+    /// Host free memory on the sender changed (container churn): shrink
+    /// the budget to `min(max_pool_pages, host_free_fraction × free)` and
+    /// fan the reclaimed leases out to the coordinators — each enforces
+    /// its lowered lease on its next pump (free-slot shrink, then idle
+    /// donation).
+    pub fn host_pressure(&mut self, free_pages: u64) {
+        self.host_free_pages = free_pages;
+        let frac_cap =
+            (free_pages as f64 * self.host_free_fraction) as u64;
+        let budget = self.max_budget_pages.min(frac_cap).max(1);
+        let leases = self.arbiter.set_budget(budget);
+        for (co, &l) in self.coords.iter_mut().zip(leases.iter()) {
+            co.set_lease_pages(l);
+            co.set_host_free_pages(free_pages);
+        }
+    }
+
+    /// A peer node needs `bytes` of its donated memory back: route each
+    /// reclamation to the tenant owning the globally least-active block
+    /// on that node, so the §3.5 activity order is preserved across
+    /// tenants and no tenant ever evicts another's data.
+    pub fn remote_pressure(
+        &mut self,
+        cl: &mut ClusterState,
+        now: Ns,
+        node: NodeId,
+        bytes: u64,
+    ) -> PressureOutcome {
+        let mut out = PressureOutcome {
+            done_at: now,
+            ..Default::default()
+        };
+        let mut t = now;
+        while out.reclaimed_bytes < bytes {
+            let victim = match cl.mrpools[node].least_active(t) {
+                Some(b) => (b.id, b.owner, b.bytes),
+                None => break,
+            };
+            let (block, owner, block_bytes) = victim;
+            let tenant = owner
+                .checked_sub(TENANT_OWNER_BASE)
+                .filter(|&i| i < self.coords.len());
+            match tenant {
+                Some(tenant) => {
+                    let o =
+                        self.coords[tenant].remote_pressure(cl, t, node, 1);
+                    if o.reclaimed_bytes == 0 {
+                        break;
+                    }
+                    out.reclaimed_bytes += o.reclaimed_bytes;
+                    out.migrated += o.migrated;
+                    out.deleted += o.deleted;
+                    out.done_at = out.done_at.max(o.done_at);
+                    t = t.max(o.done_at);
+                }
+                None => {
+                    // Untracked block (registered outside any tenant):
+                    // delete, like the single-tenant last resort.
+                    cl.mrpools[node].release(block);
+                    out.reclaimed_bytes += block_bytes;
+                    out.deleted += 1;
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hot(used: u64) -> TenantLoad {
+        TenantLoad {
+            used_pages: used,
+            pinned_pages: used,
+            stalled_allocs: 2,
+            recent_allocs: 16,
+        }
+    }
+
+    #[test]
+    fn register_splits_budget_by_weight() {
+        let mut arb = HostArbiter::new(4000);
+        let a = arb.register(TenantSpec { weight: 3, min_pages: 64 });
+        let b = arb.register(TenantSpec { weight: 1, min_pages: 64 });
+        assert_eq!(arb.lease(a), 3000);
+        assert_eq!(arb.lease(b), 1000);
+        assert_eq!(arb.leased_total(), 4000);
+    }
+
+    #[test]
+    fn fair_share_respects_min_floor() {
+        let mut arb = HostArbiter::new(100);
+        let a = arb.register(TenantSpec { weight: 1, min_pages: 90 });
+        let b = arb.register(TenantSpec { weight: 1, min_pages: 1 });
+        assert_eq!(arb.fair_share(a), 90);
+        assert_eq!(arb.fair_share(b), 50);
+        // a floored fair share must not overcommit the budget: the raw
+        // shares (90 + 50) are trimmed back under it at registration
+        assert!(arb.leased_total() <= 100, "{:?}", arb.leases());
+        assert_eq!(arb.lease(a), 90);
+        assert_eq!(arb.lease(b), 10);
+    }
+
+    #[test]
+    fn idle_peer_donates_to_demanding_tenant() {
+        let mut arb = HostArbiter::new(2000);
+        let a = arb.register(TenantSpec::default());
+        let b = arb.register(TenantSpec::default());
+        let cold = TenantLoad::default();
+        arb.rebalance(&[cold, hot(1000)]);
+        assert!(arb.lease(b) > 1000, "lease {}", arb.lease(b));
+        assert!(arb.lease(a) < 1000);
+        assert!(arb.leased_total() <= 2000);
+        assert!(arb.grants > 0);
+    }
+
+    #[test]
+    fn cold_full_tenant_is_not_demanding() {
+        // A tenant sitting on a full cache with no recent allocations
+        // must be a donor, not a demander.
+        let full_cold = TenantLoad {
+            used_pages: 1000,
+            pinned_pages: 0,
+            stalled_allocs: 0,
+            recent_allocs: 0,
+        };
+        assert!(!full_cold.demanding(1000));
+        assert!(hot(1000).demanding(1000));
+    }
+
+    #[test]
+    fn sum_of_leases_never_exceeds_budget() {
+        let mut arb = HostArbiter::new(3000);
+        arb.register(TenantSpec { weight: 2, min_pages: 64 });
+        arb.register(TenantSpec { weight: 1, min_pages: 64 });
+        arb.register(TenantSpec { weight: 1, min_pages: 64 });
+        let loads = [hot(3000), TenantLoad::default(), hot(10)];
+        for round in 0..32 {
+            arb.rebalance(&loads);
+            assert!(
+                arb.leased_total() <= 3000,
+                "round {round}: {:?}",
+                arb.leases()
+            );
+        }
+        arb.set_budget(500);
+        assert!(arb.leased_total() <= 500.max(3 * 64));
+        for t in 0..3 {
+            assert!(arb.lease(t) >= 64, "tenant {t} under floor");
+        }
+    }
+
+    #[test]
+    fn overcommitted_floors_win_over_budget() {
+        let mut arb = HostArbiter::new(1000);
+        arb.register(TenantSpec { weight: 1, min_pages: 400 });
+        arb.register(TenantSpec { weight: 1, min_pages: 400 });
+        arb.set_budget(100);
+        assert_eq!(arb.lease(0), 400);
+        assert_eq!(arb.lease(1), 400);
+    }
+
+    #[test]
+    fn raised_budget_feeds_demand_from_unleased_pool() {
+        let mut arb = HostArbiter::new(1000);
+        let a = arb.register(TenantSpec::default());
+        arb.set_budget(2000);
+        assert_eq!(arb.lease(a), 1000, "raising budget leaves leases");
+        arb.rebalance(&[hot(1000)]);
+        assert!(arb.lease(a) > 1000, "demand draws from unleased pool");
+        assert!(arb.leased_total() <= 2000);
+    }
+}

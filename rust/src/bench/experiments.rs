@@ -1,4 +1,4 @@
-//! One function per paper table/figure (DESIGN.md §6 experiment index).
+//! One function per paper table/figure (ARCHITECTURE.md §5 experiment index).
 //!
 //! Scaling: the paper runs 10 M records / 10 M ops on 32 real machines;
 //! we run the identical pipeline with records/ops scaled by `Scale` so
@@ -854,7 +854,7 @@ pub fn fig23(scale: &Scale) -> Report {
 }
 
 // ---------------------------------------------------------------------
-// Ablations — the design choices DESIGN.md calls out
+// Ablations — the design choices ARCHITECTURE.md calls out
 // ---------------------------------------------------------------------
 
 /// Ablation study over Valet's design knobs:

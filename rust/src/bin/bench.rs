@@ -1,5 +1,5 @@
 //! `valet-bench` — regenerate every table and figure from the paper's
-//! evaluation (§6). See DESIGN.md §6 for the experiment index.
+//! evaluation (§6). See ARCHITECTURE.md for the experiment index.
 //!
 //! ```text
 //! valet-bench all                 # every experiment, default scale

@@ -2,8 +2,17 @@
 //! a timeline of node-level events (native applications allocating and
 //! freeing memory on peers — the remote-pressure generator behind the
 //! eviction experiments, Figures 4/5/23).
+//!
+//! Two assemblies share the same event vocabulary: [`Cluster`] runs one
+//! paging backend (the paper's single-container evaluation), and
+//! [`TenantCluster`] runs a multi-tenant [`TenantGroup`] whose host and
+//! remote pressure events fan out through the
+//! [`crate::arbiter::HostArbiter`].
 
-use crate::backends::{self, ClusterState, PagingBackend, PressureOutcome};
+use crate::arbiter::{TenantGroup, TenantId, TenantSpec};
+use crate::backends::{
+    self, Access, ClusterState, PagingBackend, PressureOutcome,
+};
 use crate::config::{BackendKind, Config};
 use crate::sim::{EventQueue, Ns};
 use crate::NodeId;
@@ -105,21 +114,119 @@ impl Cluster {
     /// is actually registered as remote memory (the bar series in
     /// Figure 5).
     pub fn cluster_mem_utilization(&self) -> f64 {
-        let mut donated = 0u64;
-        let mut capacity = 0u64;
-        for n in 0..self.state.disks.len() {
-            if n == self.state.sender {
-                continue;
+        cluster_mem_utilization(&self.state)
+    }
+}
+
+/// Shared utilization math for both cluster assemblies.
+fn cluster_mem_utilization(state: &ClusterState) -> f64 {
+    let mut donated = 0u64;
+    let mut capacity = 0u64;
+    for n in 0..state.disks.len() {
+        if n == state.sender {
+            continue;
+        }
+        let reg = state.mrpools[n].registered_bytes();
+        donated += reg;
+        capacity += reg + state.donatable(n);
+    }
+    if capacity == 0 {
+        0.0
+    } else {
+        donated as f64 / capacity as f64
+    }
+}
+
+/// A running multi-tenant cluster: substrate + [`TenantGroup`] + event
+/// timeline. The same [`ClusterEvent`] vocabulary as [`Cluster`], but
+/// host pressure ([`ClusterEvent::SenderHostFree`]) shrinks the
+/// arbiter's budget (reclaiming leases most-over-share-first) and peer
+/// pressure routes to the tenant owning the least-active block.
+pub struct TenantCluster {
+    /// Shared simulated substrate.
+    pub state: ClusterState,
+    /// Per-container coordinators behind the host arbiter.
+    pub group: TenantGroup,
+    /// Scheduled node events.
+    pub events: EventQueue<ClusterEvent>,
+    /// Pressure episodes resolved so far.
+    pub pressure_log: Vec<(Ns, NodeId, PressureOutcome)>,
+}
+
+impl TenantCluster {
+    /// Build a cluster hosting one tenant per spec under `cfg`.
+    pub fn new(cfg: &Config, specs: &[TenantSpec]) -> Self {
+        TenantCluster {
+            state: ClusterState::new(cfg),
+            group: TenantGroup::new(cfg, specs),
+            events: EventQueue::new(),
+            pressure_log: Vec::new(),
+        }
+    }
+
+    /// Schedule an event.
+    pub fn schedule(&mut self, at: Ns, ev: ClusterEvent) {
+        self.events.push(at, ev);
+    }
+
+    /// Swap-out for `tenant` through its coordinator.
+    pub fn write(
+        &mut self,
+        now: Ns,
+        tenant: TenantId,
+        page: u64,
+        bytes: u64,
+    ) -> Access {
+        self.group.write(&mut self.state, now, tenant, page, bytes)
+    }
+
+    /// Swap-in for `tenant` through its coordinator.
+    pub fn read(&mut self, now: Ns, tenant: TenantId, page: u64) -> Access {
+        self.group.read(&mut self.state, now, tenant, page)
+    }
+
+    /// Apply all events due at or before `now`, fanning pressure out via
+    /// the arbiter, then pump every tenant (drain + one arbitration
+    /// round).
+    pub fn advance(&mut self, now: Ns) {
+        while let Some((t, ev)) = self.events.pop_due(now) {
+            match ev {
+                ClusterEvent::NativeAlloc { node, bytes } => {
+                    self.state.monitors[node].native_bytes += bytes;
+                    let pressure = self.state.monitors[node].pressure(
+                        self.state.mrpools[node].registered_bytes(),
+                    );
+                    if pressure > 0 {
+                        let out = self.group.remote_pressure(
+                            &mut self.state,
+                            t,
+                            node,
+                            pressure,
+                        );
+                        self.pressure_log.push((t, node, out));
+                    }
+                }
+                ClusterEvent::NativeFree { node, bytes } => {
+                    let m = &mut self.state.monitors[node];
+                    m.native_bytes = m.native_bytes.saturating_sub(bytes);
+                }
+                ClusterEvent::SenderHostFree { pages } => {
+                    let sender = self.state.sender;
+                    let m = &mut self.state.monitors[sender];
+                    m.native_bytes = m
+                        .total_bytes
+                        .saturating_sub(pages * crate::PAGE_SIZE);
+                    self.group.host_pressure(pages);
+                }
             }
-            let reg = self.state.mrpools[n].registered_bytes();
-            donated += reg;
-            capacity += reg + self.state.donatable(n);
         }
-        if capacity == 0 {
-            0.0
-        } else {
-            donated as f64 / capacity as f64
-        }
+        self.group.pump(&mut self.state, now);
+    }
+
+    /// Cluster-wide memory utilization (see
+    /// [`Cluster::cluster_mem_utilization`]).
+    pub fn cluster_mem_utilization(&self) -> f64 {
+        cluster_mem_utilization(&self.state)
     }
 }
 
@@ -192,6 +299,72 @@ mod tests {
             .downcast_ref::<ValetBackend>()
             .expect("valet backend");
         assert_eq!(be.coordinator().host_free_pages(), 77);
+    }
+
+    #[test]
+    fn sender_host_free_fans_out_through_the_arbiter() {
+        let mut cfg = Config::default();
+        cfg.cluster.nodes = 3;
+        cfg.valet.mr_block_bytes = 1 << 20;
+        cfg.valet.min_pool_pages = 64;
+        cfg.valet.max_pool_pages = 1024;
+        let specs = [TenantSpec { weight: 1, min_pages: 64 }; 2];
+        let mut cl = TenantCluster::new(&cfg, &specs);
+        assert_eq!(cl.group.arbiter().budget_pages(), 1024);
+        assert_eq!(cl.group.arbiter().lease(0), 512);
+        // host free memory collapses: the budget shrinks and both
+        // leases are reclaimed down to their floors
+        cl.schedule(ms(1), ClusterEvent::SenderHostFree { pages: 0 });
+        cl.advance(ms(2));
+        assert_eq!(cl.group.arbiter().lease(0), 64);
+        assert_eq!(cl.group.arbiter().lease(1), 64);
+        assert_eq!(cl.group.coordinator(0).lease_pages(), 64);
+        assert!(cl.group.arbiter().reclaims > 0);
+    }
+
+    #[test]
+    fn peer_pressure_routes_to_the_owning_tenant() {
+        let mut cfg = Config::default();
+        cfg.cluster.nodes = 4;
+        cfg.valet.mr_block_bytes = 1 << 20;
+        cfg.valet.min_pool_pages = 64;
+        cfg.valet.max_pool_pages = 256;
+        let specs = [TenantSpec { weight: 1, min_pages: 64 }; 2];
+        let mut cl = TenantCluster::new(&cfg, &specs);
+        // both tenants put data on the peers (disjoint page spaces)
+        let mut t = 0;
+        for blk in 0..24u64 {
+            let a = cl.write(t, 0, blk * 16, 16 * 4096);
+            let b = cl.write(a.end, 1, (1 << 20) + blk * 16, 16 * 4096);
+            t = b.end;
+        }
+        cl.advance(t + secs(2));
+        t += secs(2);
+        // a native app squeezes the busiest peer
+        let peer = (1..4)
+            .max_by_key(|&n| cl.state.mrpools[n].registered_bytes())
+            .unwrap();
+        assert!(!cl.state.mrpools[peer].is_empty());
+        let mem = cl.state.monitors[peer].total_bytes;
+        cl.schedule(
+            t + secs(1),
+            ClusterEvent::NativeAlloc { node: peer, bytes: mem },
+        );
+        cl.advance(t + secs(2));
+        assert_eq!(cl.pressure_log.len(), 1);
+        let (_, n, out) = cl.pressure_log[0];
+        assert_eq!(n, peer);
+        assert!(out.reclaimed_bytes > 0);
+        // no cross-tenant damage: every page of both tenants is still
+        // served from memory (local or remote), never disk
+        let mut tt = t + secs(3);
+        for blk in 0..24u64 {
+            let a = cl.read(tt, 0, blk * 16);
+            let b = cl.read(a.end, 1, (1 << 20) + blk * 16);
+            tt = b.end;
+            assert_ne!(a.source, crate::backends::Source::Disk);
+            assert_ne!(b.source, crate::backends::Source::Disk);
+        }
     }
 
     #[test]

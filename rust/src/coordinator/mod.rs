@@ -69,7 +69,41 @@ struct Inflight {
 
 /// The unified Valet orchestration layer (see module docs for the stage
 /// map). One instance drives the whole Figure-6 pipeline; both the
-/// simulated backend and the live serve mode own exactly one.
+/// simulated backend and the live serve mode own exactly one, and the
+/// multi-tenant [`crate::arbiter::TenantGroup`] owns one per container.
+///
+/// Quickstart (the write → local-hit → background-drain cycle):
+///
+/// ```
+/// use valet::backends::{ClusterState, Source};
+/// use valet::config::Config;
+/// use valet::coordinator::Coordinator;
+/// use valet::sim::secs;
+///
+/// let mut cfg = Config::default();
+/// cfg.cluster.nodes = 4;
+/// cfg.valet.mr_block_bytes = 1 << 20;
+/// cfg.valet.min_pool_pages = 64;
+/// cfg.valet.max_pool_pages = 64;
+///
+/// let mut cl = ClusterState::new(&cfg);
+/// let mut co = Coordinator::new(&cfg);
+///
+/// // Write 64 KB: the critical path ends at the staging queue (~35 µs);
+/// // connection, mapping and RDMA all happen in the background.
+/// let w = co.write(&mut cl, 0, 0, 64 * 1024);
+/// assert_eq!(w.source, Source::LocalPool);
+///
+/// // Read it back: a local mempool hit, far below the write latency.
+/// let r = co.read(&mut cl, w.end, 0);
+/// assert_eq!(r.source, Source::LocalPool);
+/// assert!(r.end - w.end < w.end);
+///
+/// // Drive the remote sender thread: the staged write set becomes
+/// // remotely durable and its slots turn reclaimable.
+/// co.pump(&mut cl, secs(2));
+/// assert_eq!(co.pending_write_sets(), 0);
+/// ```
 pub struct Coordinator {
     lat: LatencyConfig,
     vcfg: ValetConfig,
@@ -94,6 +128,11 @@ pub struct Coordinator {
     /// Host free pages available to the mempool (updated by the cluster
     /// driver as containers allocate/free).
     host_free_pages: u64,
+    /// Owner id stamped on this coordinator's MR registrations. `None`
+    /// (single-tenant) registers as the sender node, exactly as before;
+    /// the multi-tenant arbiter assigns each tenant a distinct tag so
+    /// victim selection never crosses tenants.
+    owner_tag: Option<NodeId>,
     /// True when configured with no mempool (Valet-RemoteOnly ablation in
     /// Figure 21): writes go synchronously to remote memory.
     sync_mode: bool,
@@ -126,8 +165,18 @@ impl Coordinator {
             victim_policy: Box::new(ActivityBased),
             metrics: RunMetrics::default(),
             host_free_pages: (cfg.cluster.node_mem_bytes / PAGE_SIZE) / 2,
+            owner_tag: None,
             sync_mode,
         }
+    }
+
+    /// Tag this coordinator's MR registrations with a distinct owner id
+    /// (multi-tenant arbitration: victim selection under remote pressure
+    /// then only ever sees this tenant's blocks). Single-tenant setups
+    /// leave this unset and register blocks as the sender node.
+    pub fn with_owner_tag(mut self, owner: NodeId) -> Self {
+        self.owner_tag = Some(owner);
+        self
     }
 
     /// Swap in a different eviction policy (the §3.5 hook; the default is
@@ -210,6 +259,32 @@ impl Coordinator {
         self.host_free_pages = pages;
     }
 
+    /// Pages the host arbiter currently leases to this tenant's mempool
+    /// (`u64::MAX` when unleased — single-tenant operation).
+    pub fn lease_pages(&self) -> u64 {
+        self.mempool.lease()
+    }
+
+    /// Update the arbiter lease: the mempool's effective cap becomes
+    /// `min(max_pool_pages, host_free_fraction × host free, lease)`.
+    /// The next pump enforces a lowered lease by shrinking free slots
+    /// and, if that is not enough, donating idle remote-durable pages
+    /// back to the host pool (see [`Self::donate_idle_pages`]).
+    pub fn set_lease_pages(&mut self, pages: u64) {
+        self.mempool.set_lease(pages);
+    }
+
+    /// Give back up to `want` idle (remote-durable, least-recently-used)
+    /// pages to the host pool, dropping their GPT entries — subsequent
+    /// reads of those pages are served remotely. Returns pages donated.
+    pub fn donate_idle_pages(&mut self, want: u64) -> u64 {
+        let evicted = self.mempool.donate_idle(want);
+        for p in &evicted {
+            self.gpt.remove(*p);
+        }
+        evicted.len() as u64
+    }
+
     /// Run metrics.
     pub fn metrics(&self) -> &RunMetrics {
         &self.metrics
@@ -249,9 +324,10 @@ impl Coordinator {
             let (tc, _newc) = cl.fabric.ensure_connected(t, cl.sender, n);
             t = cl.fabric.map_mr(tc, cl.sender);
         }
+        let owner = self.owner_tag.unwrap_or(cl.sender);
         let blocks = nodes
             .iter()
-            .map(|&n| cl.mrpools[n].register(cl.sender, self.units.unit_bytes, t))
+            .map(|&n| cl.mrpools[n].register(owner, self.units.unit_bytes, t))
             .collect();
         self.units.insert(
             unit,
@@ -579,9 +655,17 @@ impl Coordinator {
 
     /// Drive background machinery up to `now`: remote-sender drain plus
     /// the mempool's shrink check against current host pressure (§3.4).
+    /// When free-slot shrinking cannot reach the effective cap (a
+    /// lowered arbiter lease or collapsed host free memory with a full
+    /// pool), idle remote-durable pages are donated back to the host.
     pub fn pump(&mut self, cl: &mut ClusterState, now: Ns) {
         self.drive_sender(cl, now);
         self.mempool.shrink(self.host_free_pages);
+        let cap = self.mempool.effective_cap(self.host_free_pages);
+        let capacity = self.mempool.capacity();
+        if capacity > cap {
+            self.donate_idle_pages(capacity - cap);
+        }
     }
 
     /// A peer needs `bytes` of its donated memory back (§3.5): select
@@ -599,15 +683,25 @@ impl Coordinator {
             done_at: now,
             ..Default::default()
         };
+        let owner = self.owner_tag.unwrap_or(cl.sender);
         let mut t = now;
         while out.reclaimed_bytes < bytes {
             // Victim selection ON the pressured node via the pluggable
             // policy — activity-based by default: purely local metadata,
-            // zero sender queries (§3.5).
-            let choice = match self.victim_policy.select(&cl.mrpools[node], t)
-            {
-                Some(c) => c,
-                None => break,
+            // zero sender queries (§3.5). A tenant-tagged coordinator
+            // selects only among its own blocks.
+            let choice = {
+                let selected = match self.owner_tag {
+                    Some(tag) => {
+                        let view = cl.mrpools[node].owned_by(tag);
+                        self.victim_policy.select(&view, t)
+                    }
+                    None => self.victim_policy.select(&cl.mrpools[node], t),
+                };
+                match selected {
+                    Some(c) => c,
+                    None => break,
+                }
             };
             t += choice.selection_cost; // zero for ActivityBased
             let block_bytes = cl.mrpools[node]
@@ -660,7 +754,7 @@ impl Coordinator {
                     );
                     // destination registers the block when the copy starts
                     let new_block = cl.mrpools[dst].register(
-                        cl.sender,
+                        owner,
                         block_bytes,
                         mig.copy_start,
                     );

@@ -18,7 +18,8 @@
 //! The paper's testbed (32-node 56 Gbps InfiniBand cluster, SATA HDDs,
 //! Linux containers) is replaced by a deterministic simulation calibrated
 //! to the paper's own latency measurements (Table 1 / Table 7); see
-//! DESIGN.md §2 for the substitution argument.
+//! ARCHITECTURE.md for the substitution argument and the end-to-end
+//! data-flow walkthrough.
 //!
 //! ## Crate map
 //!
@@ -26,6 +27,7 @@
 //! |---|---|
 //! | [`config`] | cluster/policy/latency configuration (TOML subset + CLI) |
 //! | [`coordinator`] | unified Figure-6 orchestration: GPT → mempool → staging → remote sender → reclaim, with eviction/migration hooks (§3.4–§3.5) |
+//! | [`arbiter`] | multi-tenant host memory arbitration: weighted leases over the shared host pool, demand-driven grow, pressure-driven give-back (§3, Fig. 5) |
 //! | [`sim`] | virtual clock, FIFO resource servers, event queue |
 //! | [`simnet`] | RDMA fabric model: connections, MRs, verbs, WQE cache |
 //! | [`simdisk`] | disk latency model |
@@ -46,6 +48,9 @@
 //! | [`bench`] | table/figure regeneration harness support |
 //! | [`serve`] | live multi-threaded serving mode (std::thread; no tokio) |
 
+#![warn(missing_docs)]
+
+pub mod arbiter;
 pub mod backends;
 pub mod bench;
 pub mod cluster;

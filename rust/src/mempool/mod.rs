@@ -69,6 +69,10 @@ pub struct Alloc {
 pub struct Mempool {
     slots: Vec<Slot>,
     free: Vec<u32>,
+    /// Slot ids retired by shrink/donation (tombstoned `Slot::Free`
+    /// entries); reused first on growth so the slot vec stays bounded
+    /// under lease oscillation.
+    retired: Vec<u32>,
     /// LRU over *reclaimable* used slots only.
     reclaim_lru: Lru<u32>,
     capacity: u64,
@@ -76,12 +80,22 @@ pub struct Mempool {
     max_pages: u64,
     grow_threshold: f64,
     host_free_fraction: f64,
+    /// Arbiter lease: absolute page cap in multi-tenant operation
+    /// (`u64::MAX` when unleased — the single-tenant default).
+    lease: u64,
     /// Grow events (stats / Figure 8 diagnostics).
     pub grows: u64,
     /// Shrink events (stats).
     pub shrinks: u64,
     /// Pages recycled through the reclaim path (stats).
     pub reclaims: u64,
+    /// Successful allocations (stats; the arbiter's activity signal).
+    pub allocs: u64,
+    /// Failed allocations — pool exhausted, caller stalled (stats; the
+    /// arbiter's backpressure signal).
+    pub alloc_stalls: u64,
+    /// Pages donated back to the host pool (stats).
+    pub donations: u64,
     /// Replacement policy for the reclaim list.
     replacement: Replacement,
 }
@@ -98,15 +112,20 @@ impl Mempool {
         Mempool {
             slots: vec![Slot::Free; cap as usize],
             free: (0..cap as u32).rev().collect(),
+            retired: Vec::new(),
             reclaim_lru: Lru::new(),
             capacity: cap,
             min_pages: cap,
             max_pages: max_pages.max(cap),
             grow_threshold,
             host_free_fraction,
+            lease: u64::MAX,
             grows: 0,
             shrinks: 0,
             reclaims: 0,
+            allocs: 0,
+            alloc_stalls: 0,
+            donations: 0,
             replacement: Replacement::Lru,
         }
     }
@@ -139,20 +158,51 @@ impl Mempool {
         self.used() as f64 / self.capacity.max(1) as f64
     }
 
+    /// Current arbiter lease in pages (`u64::MAX` when unleased — see
+    /// [`crate::arbiter::HostArbiter`]).
+    pub fn lease(&self) -> u64 {
+        self.lease
+    }
+
+    /// Update the arbiter lease. [`Self::effective_cap`] takes the
+    /// minimum of this, `max_pool_pages` and the host-free cap; a
+    /// lowered lease is enforced by the owner's next pump (free-slot
+    /// shrink, then [`Self::donate_idle`]).
+    pub fn set_lease(&mut self, pages: u64) {
+        self.lease = pages;
+    }
+
     /// Effective cap given current host free memory:
-    /// `min(max_pool_pages, host_free_fraction × host_free_pages)`,
-    /// never below `min_pool_pages`.
+    /// `min(max_pool_pages, host_free_fraction × host_free_pages,
+    /// lease)`, never below `min_pool_pages`.
     pub fn effective_cap(&self, host_free_pages: u64) -> u64 {
         let host_cap =
             (host_free_pages as f64 * self.host_free_fraction) as u64;
-        self.max_pages.min(host_cap).max(self.min_pages)
+        self.max_pages
+            .min(host_cap)
+            .min(self.lease)
+            .max(self.min_pages)
     }
 
     fn grow_to(&mut self, new_cap: u64) {
         debug_assert!(new_cap > self.capacity);
-        for i in self.capacity..new_cap {
-            self.slots.push(Slot::Free);
-            self.free.push(i as u32);
+        // Reuse retired (tombstoned) ids first, then mint fresh ids at
+        // slots.len() — NOT at `capacity`: after a shrink or a donation,
+        // capacity and slots.len() diverge, so ids minted from
+        // `capacity..` would alias live Used slots.
+        for _ in self.capacity..new_cap {
+            let id = match self.retired.pop() {
+                Some(id) => id,
+                None => {
+                    self.slots.push(Slot::Free);
+                    (self.slots.len() - 1) as u32
+                }
+            };
+            debug_assert!(matches!(
+                self.slots[id as usize],
+                Slot::Free
+            ));
+            self.free.push(id);
         }
         self.capacity = new_cap;
         self.grows += 1;
@@ -183,6 +233,7 @@ impl Mempool {
                 page,
                 flags: SlotFlags::default(),
             };
+            self.allocs += 1;
             return Ok(Alloc {
                 slot,
                 evicted_page: None,
@@ -204,12 +255,14 @@ impl Mempool {
                 flags: SlotFlags::default(),
             };
             self.reclaims += 1;
+            self.allocs += 1;
             return Ok(Alloc {
                 slot: victim,
                 evicted_page: Some(evicted_page),
                 grew,
             });
         }
+        self.alloc_stalls += 1;
         Err(AllocFail::NoReclaimable)
     }
 
@@ -301,13 +354,47 @@ impl Mempool {
         }
         for _ in 0..can {
             let s = self.free.pop().unwrap();
-            // mark permanently unusable by swapping in a tombstone: we
-            // model release by shrinking capacity only; slot ids stay.
-            let _ = s;
+            // tombstone: the id leaves the pool with its page of
+            // capacity, and is reusable on a later grow
+            self.retired.push(s);
         }
         self.capacity -= can;
         self.shrinks += 1;
         can
+    }
+
+    /// Donate up to `want` idle pages back to the host pool — the
+    /// arbiter's give-back path when a lowered lease cannot be reached
+    /// by releasing free slots alone. Recycles reclaimable
+    /// (remote-durable) slots in replacement order, dropping both the
+    /// slot and one page of capacity each; never shrinks below
+    /// `min_pages`. Returns the evicted pages — the caller must drop
+    /// their GPT entries (their next read is served remotely).
+    pub fn donate_idle(&mut self, want: u64) -> Vec<u64> {
+        let room = self.capacity.saturating_sub(self.min_pages);
+        let take = want.min(room).min(self.reclaim_lru.len() as u64);
+        let mut evicted = Vec::with_capacity(take as usize);
+        for _ in 0..take {
+            let victim = match self.replacement {
+                Replacement::Lru => self.reclaim_lru.pop_lru(),
+                Replacement::Mru => self.reclaim_lru.pop_mru(),
+            };
+            let Some(victim) = victim else { break };
+            if let Slot::Used { page, .. } = &self.slots[victim as usize] {
+                evicted.push(*page);
+            }
+            // The slot leaves the pool entirely (not returned to the
+            // free list): its page of capacity goes back to the host,
+            // and its id is reusable on a later grow.
+            self.slots[victim as usize] = Slot::Free;
+            self.retired.push(victim);
+            self.capacity -= 1;
+            self.donations += 1;
+        }
+        if !evicted.is_empty() {
+            self.shrinks += 1;
+        }
+        evicted
     }
 
     /// Number of reclaimable slots waiting in the LRU.
@@ -448,6 +535,110 @@ mod tests {
         p.shrink(4);
         assert_eq!(p.capacity(), 8);
         assert!(p.shrinks >= 1);
+    }
+
+    #[test]
+    fn lease_caps_effective_cap_and_growth() {
+        let mut p = Mempool::new(8, 1 << 20, 0.5, 1.0);
+        assert_eq!(p.lease(), u64::MAX);
+        p.set_lease(20);
+        assert_eq!(p.effective_cap(1 << 20), 20);
+        for i in 0..200 {
+            if p.alloc(i, 1 << 20).is_err() {
+                break;
+            }
+        }
+        assert!(p.capacity() <= 20, "lease must cap growth: {}", p.capacity());
+        // a lease below the floor is clamped to min_pages
+        p.set_lease(1);
+        assert_eq!(p.effective_cap(1 << 20), 8);
+    }
+
+    #[test]
+    fn alloc_counters_track_activity_and_backpressure() {
+        let mut p = Mempool::new(4, 4, 0.9, 1.0);
+        for i in 0..4 {
+            p.alloc(i, 1 << 20).unwrap();
+        }
+        assert_eq!(p.allocs, 4);
+        assert_eq!(p.alloc_stalls, 0);
+        assert!(p.alloc(99, 1 << 20).is_err());
+        assert_eq!(p.alloc_stalls, 1);
+        p.mark_reclaimable(0);
+        p.alloc(99, 1 << 20).unwrap();
+        assert_eq!(p.allocs, 5);
+    }
+
+    #[test]
+    fn donate_idle_returns_lru_durable_pages_and_shrinks() {
+        let mut p = Mempool::new(2, 64, 0.5, 1.0);
+        let mut slots = Vec::new();
+        for i in 0..10 {
+            slots.push(p.alloc(i, 1 << 20).unwrap().slot);
+        }
+        let cap = p.capacity();
+        // only pages 0..4 are remote-durable; page 0 is touched (MRU)
+        for &s in &slots[..4] {
+            p.mark_reclaimable(s);
+        }
+        p.touch(slots[0]);
+        let evicted = p.donate_idle(3);
+        assert_eq!(evicted, vec![1, 2, 3], "LRU durable pages first");
+        assert_eq!(p.capacity(), cap - 3);
+        assert_eq!(p.used(), 7);
+        assert_eq!(p.donations, 3);
+        // nothing else is durable: further donation is a no-op
+        assert!(p.donate_idle(10).len() <= 1);
+    }
+
+    #[test]
+    fn regrow_after_donate_never_aliases_live_slots() {
+        // Donation leaves tombstones mid-vec; a later grow must mint
+        // fresh slot ids, never ids pointing at live Used entries.
+        let mut p = Mempool::new(8, 64, 0.8, 1.0);
+        let mut pages = Vec::new();
+        for i in 0..16 {
+            let a = p.alloc(i, 1 << 20).unwrap();
+            pages.push((i, a.slot));
+        }
+        for &(_, s) in &pages[..4] {
+            p.mark_reclaimable(s);
+        }
+        assert_eq!(p.donate_idle(4).len(), 4);
+        let live: std::collections::HashSet<u32> =
+            pages[4..].iter().map(|&(_, s)| s).collect();
+        // refill until the pool regrows; every freshly minted slot must
+        // be disjoint from the live ones (a recycle, which legitimately
+        // reuses a slot, reports its evicted page)
+        for i in 100..160 {
+            match p.alloc(i, 1 << 20) {
+                Ok(a) => {
+                    if a.evicted_page.is_none() {
+                        assert!(
+                            !live.contains(&a.slot),
+                            "fresh slot {} aliases a live slot",
+                            a.slot
+                        );
+                    }
+                }
+                Err(_) => break,
+            }
+        }
+        // the live pages' slots still hold their original pages
+        for &(page, slot) in &pages[4..] {
+            assert_eq!(p.page_of(slot), page, "slot {slot} clobbered");
+        }
+    }
+
+    #[test]
+    fn donate_idle_never_shrinks_below_min() {
+        let mut p = Mempool::new(4, 4, 0.9, 1.0);
+        for i in 0..4 {
+            let a = p.alloc(i, 1 << 20).unwrap();
+            p.mark_reclaimable(a.slot);
+        }
+        assert!(p.donate_idle(100).is_empty());
+        assert_eq!(p.capacity(), 4);
     }
 
     #[test]

@@ -125,6 +125,25 @@ impl MrBlockPool {
             .max_by_key(|b| (b.non_activity_duration(now), b.id))
     }
 
+    /// A filtered clone containing only `owner`'s blocks (ids
+    /// preserved) — the victim-selection view a tenant-tagged
+    /// [`crate::coordinator::Coordinator`] hands to its
+    /// [`crate::eviction::VictimPolicy`] so one tenant never evicts
+    /// another tenant's blocks.
+    pub fn owned_by(&self, owner: NodeId) -> MrBlockPool {
+        MrBlockPool {
+            blocks: self
+                .blocks
+                .iter()
+                .filter(|b| b.owner == owner)
+                .cloned()
+                .collect(),
+            next_id: self.next_id,
+            registered: self.registered,
+            released: self.released,
+        }
+    }
+
     /// All blocks (iteration for monitors/tests).
     pub fn blocks(&self) -> &[MrBlock] {
         &self.blocks
@@ -231,6 +250,22 @@ mod tests {
         p.touch_write(newer, 1000);
         p.get_mut(old).unwrap().state = MrState::Migrating;
         assert_eq!(p.least_active(2000).unwrap().id, newer);
+    }
+
+    #[test]
+    fn owned_by_filters_but_preserves_ids() {
+        let mut p = MrBlockPool::new();
+        let a1 = p.register(1, 1 << 20, 0);
+        let b1 = p.register(2, 1 << 20, 0);
+        let a2 = p.register(1, 1 << 20, 0);
+        p.touch_write(a1, 10);
+        p.touch_write(b1, 5);
+        let view = p.owned_by(1);
+        assert_eq!(view.len(), 2);
+        assert!(view.get(a1).is_some() && view.get(a2).is_some());
+        assert!(view.get(b1).is_none());
+        // least-active within the view is owner 1's oldest, not b1
+        assert_eq!(view.least_active(100).unwrap().id, a2);
     }
 
     #[test]

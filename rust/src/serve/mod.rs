@@ -9,7 +9,10 @@
 //! Both this mode and the simulated experiments drive the SAME
 //! implementation of the Figure-6 flow: the leader's requests land in
 //! [`crate::coordinator::Coordinator`] via the Valet backend, so there is
-//! no separate "live" code path to drift out of sync.
+//! no separate "live" code path to drift out of sync. The multi-tenant
+//! entry ([`spawn_tenants`]) serves N containers the same way: requests
+//! carry a tenant id, and the [`crate::arbiter::HostArbiter`] runs
+//! behind the same driver thread, rebalancing leases on every Pump tick.
 //!
 //! This mode demonstrates the *software organization* (Figure 6) with
 //! real concurrency; the latency numbers still come from the calibrated
@@ -23,7 +26,8 @@ use std::sync::Arc;
 use std::thread;
 use std::time::{Duration, Instant};
 
-use crate::cluster::Cluster;
+use crate::arbiter::{TenantId, TenantSpec};
+use crate::cluster::{Cluster, TenantCluster};
 use crate::config::{BackendKind, Config};
 use crate::sim::{ms, Ns};
 
@@ -188,6 +192,166 @@ impl Drop for ServeHandle {
     }
 }
 
+// ---------------------------------------------------------------------
+// Multi-tenant serving
+// ---------------------------------------------------------------------
+
+/// A request to a multi-tenant device: the same vocabulary as
+/// [`Request`] plus the tenant id the block I/O belongs to (see
+/// [`spawn_tenants`]).
+#[derive(Clone, Copy, Debug)]
+pub enum TenantRequest {
+    /// Write `bytes` at `page` of `tenant`'s address space.
+    Write {
+        /// Issuing tenant.
+        tenant: TenantId,
+        /// First page.
+        page: u64,
+        /// Length in bytes.
+        bytes: u64,
+    },
+    /// Read one page of `tenant`'s address space.
+    Read {
+        /// Issuing tenant.
+        tenant: TenantId,
+        /// Page to read.
+        page: u64,
+    },
+    /// Advance the background pipelines (and one arbitration round) by
+    /// one virtual tick.
+    Pump,
+    /// Stop serving.
+    Shutdown,
+}
+
+/// Handle to a running multi-tenant coordinator group.
+pub struct TenantServeHandle {
+    tx: mpsc::Sender<(TenantRequest, mpsc::Sender<Reply>)>,
+    join: Option<thread::JoinHandle<TenantCluster>>,
+    pump_stop: Arc<AtomicBool>,
+    pump_join: Option<thread::JoinHandle<()>>,
+}
+
+/// Spawn the leader thread for a [`TenantCluster`] (one coordinator per
+/// spec behind the shared [`crate::arbiter::HostArbiter`]) plus the same
+/// remote-sender driver thread as [`spawn`]. The arbiter lives behind
+/// the leader: every Pump tick drains all tenants and runs one
+/// arbitration round, so leases keep following demand even when no
+/// requests arrive.
+pub fn spawn_tenants(cfg: &Config, specs: &[TenantSpec]) -> TenantServeHandle {
+    let cfg = cfg.clone();
+    let specs = specs.to_vec();
+    let (tx, rx) = mpsc::channel::<(TenantRequest, mpsc::Sender<Reply>)>();
+    let join = thread::spawn(move || {
+        let mut cluster = TenantCluster::new(&cfg, &specs);
+        let mut vnow: Ns = 0;
+        for (req, reply_tx) in rx.iter() {
+            let wall0 = Instant::now();
+            // An unknown tenant id must not panic the leader: drop the
+            // reply channel instead, so the caller's `call` returns
+            // None while the server keeps serving valid tenants.
+            let tenants = cluster.group.tenants();
+            match req {
+                TenantRequest::Write { tenant, page, bytes } => {
+                    if tenant >= tenants {
+                        drop(reply_tx);
+                        continue;
+                    }
+                    let a = cluster.write(vnow, tenant, page, bytes);
+                    let lat = a.end - vnow;
+                    vnow = a.end;
+                    let _ = reply_tx.send(Reply {
+                        virtual_ns: lat,
+                        wall_ns: wall0.elapsed().as_nanos() as u64,
+                    });
+                }
+                TenantRequest::Read { tenant, page } => {
+                    if tenant >= tenants {
+                        drop(reply_tx);
+                        continue;
+                    }
+                    let a = cluster.read(vnow, tenant, page);
+                    let lat = a.end - vnow;
+                    vnow = a.end;
+                    let _ = reply_tx.send(Reply {
+                        virtual_ns: lat,
+                        wall_ns: wall0.elapsed().as_nanos() as u64,
+                    });
+                }
+                TenantRequest::Pump => {
+                    vnow += PUMP_TICK;
+                    let _ = reply_tx.send(Reply {
+                        virtual_ns: 0,
+                        wall_ns: wall0.elapsed().as_nanos() as u64,
+                    });
+                }
+                TenantRequest::Shutdown => break,
+            }
+            cluster.advance(vnow);
+        }
+        cluster
+    });
+    let pump_stop = Arc::new(AtomicBool::new(false));
+    let pump_tx = tx.clone();
+    let stop = pump_stop.clone();
+    let pump_join = thread::spawn(move || {
+        while !stop.load(Ordering::Relaxed) {
+            let (rtx, _rrx) = mpsc::channel();
+            if pump_tx.send((TenantRequest::Pump, rtx)).is_err() {
+                break; // leader gone
+            }
+            thread::sleep(PUMP_INTERVAL);
+        }
+    });
+    TenantServeHandle {
+        tx,
+        join: Some(join),
+        pump_stop,
+        pump_join: Some(pump_join),
+    }
+}
+
+impl TenantServeHandle {
+    /// Submit a request and wait for its completion.
+    pub fn call(&self, req: TenantRequest) -> Option<Reply> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx.send((req, rtx)).ok()?;
+        rrx.recv().ok()
+    }
+
+    /// Fire-and-forget submit returning the reply channel.
+    pub fn submit(
+        &self,
+        req: TenantRequest,
+    ) -> Option<mpsc::Receiver<Reply>> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx.send((req, rtx)).ok()?;
+        Some(rrx)
+    }
+
+    fn stop_threads(&mut self) -> Option<TenantCluster> {
+        self.pump_stop.store(true, Ordering::Relaxed);
+        let (rtx, _rrx) = mpsc::channel();
+        let _ = self.tx.send((TenantRequest::Shutdown, rtx));
+        let cluster = self.join.take().and_then(|j| j.join().ok());
+        if let Some(p) = self.pump_join.take() {
+            let _ = p.join();
+        }
+        cluster
+    }
+
+    /// Stop the group and return the final multi-tenant cluster state.
+    pub fn shutdown(mut self) -> Option<TenantCluster> {
+        self.stop_threads()
+    }
+}
+
+impl Drop for TenantServeHandle {
+    fn drop(&mut self) {
+        let _ = self.stop_threads();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -252,6 +416,62 @@ mod tests {
     fn drop_shuts_down_cleanly() {
         let h = spawn(&cfg(), BackendKind::LinuxSwap);
         let _ = h.call(Request::Write { page: 0, bytes: 4096 });
+        drop(h); // must not hang
+    }
+
+    #[test]
+    fn tenant_serve_roundtrip_keeps_tenants_separate() {
+        let specs = [TenantSpec { weight: 1, min_pages: 64 }; 2];
+        let h = spawn_tenants(&cfg(), &specs);
+        let w0 = h
+            .call(TenantRequest::Write { tenant: 0, page: 0, bytes: 65536 })
+            .unwrap();
+        assert!(w0.virtual_ns > 0);
+        let w1 = h
+            .call(TenantRequest::Write { tenant: 1, page: 0, bytes: 65536 })
+            .unwrap();
+        assert!(w1.virtual_ns > 0);
+        let r0 = h.call(TenantRequest::Read { tenant: 0, page: 0 }).unwrap();
+        assert!(r0.virtual_ns < 100_000, "{}", r0.virtual_ns);
+        // deterministically drive the background past the mapping window
+        for _ in 0..300 {
+            let _ = h.call(TenantRequest::Pump).unwrap();
+        }
+        let cluster = h.shutdown().unwrap();
+        // page 0 exists in both address spaces, independently
+        assert_eq!(cluster.group.coordinator(0).metrics().local_hits, 1);
+        assert_eq!(cluster.group.coordinator(1).metrics().local_hits, 0);
+        assert_eq!(cluster.group.coordinator(0).pending_write_sets(), 0);
+        assert_eq!(cluster.group.coordinator(1).pending_write_sets(), 0);
+        assert!(cluster.group.arbiter().leased_total() > 0);
+    }
+
+    #[test]
+    fn unknown_tenant_id_fails_the_call_not_the_server() {
+        let specs = [TenantSpec { weight: 1, min_pages: 64 }; 2];
+        let h = spawn_tenants(&cfg(), &specs);
+        // invalid tenant: the call fails (None), the leader survives
+        assert!(h
+            .call(TenantRequest::Write { tenant: 5, page: 0, bytes: 4096 })
+            .is_none());
+        assert!(h.call(TenantRequest::Read { tenant: 9, page: 0 }).is_none());
+        // valid tenants still served afterwards
+        let w = h
+            .call(TenantRequest::Write { tenant: 1, page: 0, bytes: 4096 })
+            .unwrap();
+        assert!(w.virtual_ns > 0);
+        assert!(h.shutdown().is_some());
+    }
+
+    #[test]
+    fn tenant_serve_drop_shuts_down_cleanly() {
+        let specs = [TenantSpec::default()];
+        let h = spawn_tenants(&cfg(), &specs);
+        let _ = h.call(TenantRequest::Write {
+            tenant: 0,
+            page: 0,
+            bytes: 4096,
+        });
         drop(h); // must not hang
     }
 }

@@ -1,6 +1,6 @@
 //! Deterministic PRNG + YCSB-style zipfian generator.
 //!
-//! The whole simulation must be reproducible from a seed (DESIGN.md §7:
+//! The whole simulation must be reproducible from a seed (ARCHITECTURE.md §1:
 //! "determinism under same seed" is a tested invariant), so we carry our
 //! own xoshiro256** implementation instead of depending on `rand` (not
 //! available offline), seeded via splitmix64 like the reference
