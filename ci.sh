@@ -21,6 +21,25 @@ if [ "$FAST" -eq 0 ]; then
 fi
 cargo test -q
 
+echo "== benches compile =="
+# compile-gate the harness=false bench binaries so experiment/bench code
+# cannot silently rot (they are not built by `cargo test`)
+cargo bench --no-run
+
+echo "== experiment smoke =="
+if [ "$FAST" -eq 0 ]; then
+    # every experiment regenerates at small scale, and the --json dump
+    # (the per-PR perf trajectory feed) must be non-empty
+    mkdir -p target
+    cargo run --release --bin valet-bench -- all --small \
+        --json target/bench-smoke.json >/dev/null
+    # at least one {id, metric, value} record must have been emitted
+    grep -q '"metric"' target/bench-smoke.json
+    echo "wrote target/bench-smoke.json"
+else
+    echo "skipped (--fast: needs the release build)"
+fi
+
 echo "== lint =="
 if cargo clippy --version >/dev/null 2>&1; then
     cargo clippy --all-targets -- -D warnings

@@ -46,6 +46,13 @@ fn main() {
                 t.insert(p, 1);
             }
         }));
+        // the serve fast path's pattern: repeated hot-set re-reads;
+        // `lookup` refreshes the leaf cache where `get` cannot
+        let mut lb = 0u64;
+        results.push(bench("gpt/lookup hot block (cached)", 1_000_000, || {
+            lb += 1;
+            black_box(t.lookup((lb % 64) * 7));
+        }));
     }
 
     // Mempool
@@ -131,6 +138,30 @@ fn main() {
             now = a.end;
             black_box(a.end);
         }));
+    }
+
+    // Serve roundtrip: pooled per-handle reply channel (call) vs a
+    // fresh mpsc channel allocated per request (submit — the pre-pool
+    // behavior). The delta is the measured win of the reply-channel
+    // reuse on the live hot path.
+    {
+        use valet::config::BackendKind;
+        use valet::serve::{spawn, Request};
+        let mut cfg = Config::default();
+        cfg.cluster.nodes = 3;
+        cfg.valet.mr_block_bytes = 16 << 20;
+        cfg.valet.min_pool_pages = 4096;
+        cfg.valet.max_pool_pages = 4096;
+        let h = spawn(&cfg, BackendKind::Valet);
+        let _ = h.call(Request::Write { page: 0, bytes: 65536 });
+        results.push(bench("serve/call (pooled reply chan)", 50_000, || {
+            black_box(h.call(Request::Read { page: 0 }).unwrap());
+        }));
+        results.push(bench("serve/submit (fresh chan per op)", 50_000, || {
+            let rx = h.submit(Request::Read { page: 0 }).unwrap();
+            black_box(rx.recv().unwrap());
+        }));
+        drop(h);
     }
 
     println!("\n=== hotpath results ===");

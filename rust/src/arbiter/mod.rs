@@ -98,6 +98,27 @@ impl TenantLoad {
     }
 }
 
+/// Split a page budget (an arbiter lease, a mempool floor/cap, or a host
+/// free-memory share) evenly across `parts` shards, distributing the
+/// remainder to the lowest-indexed shards so `Σ parts == total` exactly.
+/// The unleased sentinel `u64::MAX` splits into all-`u64::MAX`: an
+/// unleased tenant's shards are each unleased too, not capped at
+/// `MAX / parts`. This is how the [`crate::engine::ShardedEngine`] fans a
+/// single-tenant budget out to its per-shard mempools.
+pub fn split_pages(total: u64, parts: usize) -> Vec<u64> {
+    (0..parts.max(1)).map(|i| share_of(total, parts, i)).collect()
+}
+
+/// One shard's slice of [`split_pages`] without allocating the vector —
+/// the form the serve hot path uses while holding the shared lock.
+pub fn share_of(total: u64, parts: usize, idx: usize) -> u64 {
+    let parts = parts.max(1) as u64;
+    if total == u64::MAX {
+        return u64::MAX;
+    }
+    total / parts + u64::from((idx as u64) < total % parts)
+}
+
 /// Per-tenant ledger entry.
 #[derive(Clone, Copy, Debug)]
 struct Share {
@@ -564,6 +585,22 @@ mod tests {
             pinned_pages: used,
             stalled_allocs: 2,
             recent_allocs: 16,
+        }
+    }
+
+    #[test]
+    fn split_pages_is_exact_and_preserves_unleased() {
+        assert_eq!(split_pages(10, 4), vec![3, 3, 2, 2]);
+        assert_eq!(split_pages(64, 1), vec![64]);
+        assert_eq!(split_pages(3, 8).iter().sum::<u64>(), 3);
+        assert_eq!(split_pages(u64::MAX, 4), vec![u64::MAX; 4]);
+        assert_eq!(split_pages(0, 3), vec![0, 0, 0]);
+        // the allocation-free form agrees index-by-index
+        for (total, parts) in [(10u64, 4usize), (3, 8), (u64::MAX, 4)] {
+            let v = split_pages(total, parts);
+            for (i, &s) in v.iter().enumerate() {
+                assert_eq!(share_of(total, parts, i), s, "{total}/{parts}");
+            }
         }
     }
 

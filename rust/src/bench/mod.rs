@@ -8,7 +8,7 @@ pub mod experiments;
 pub mod timing;
 
 /// A regenerated table/figure.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct Report {
     /// Experiment id ("table1", "fig21", ...).
     pub id: &'static str,
@@ -20,9 +20,38 @@ pub struct Report {
     pub rows: Vec<Vec<String>>,
     /// Free-form notes (observations the paper calls out).
     pub notes: Vec<String>,
+    /// Machine-readable headline metrics `(metric, value)` — dumped as
+    /// `{id, metric, value}` records by `valet-bench --json` so the perf
+    /// trajectory can be tracked per PR.
+    pub kv: Vec<(String, f64)>,
 }
 
 impl Report {
+    /// Record one machine-readable headline metric.
+    pub fn push_kv(&mut self, metric: impl Into<String>, value: f64) {
+        self.kv.push((metric.into(), value));
+    }
+
+    /// Render this report's headline metrics as JSON records
+    /// `[{"id":…,"metric":…,"value":…}, …]` (one line per record, no
+    /// enclosing brackets — callers concatenate reports).
+    pub fn json_records(&self) -> Vec<String> {
+        self.kv
+            .iter()
+            .map(|(metric, value)| {
+                format!(
+                    "{{\"id\":\"{}\",\"metric\":\"{}\",\"value\":{}}}",
+                    self.id,
+                    metric.replace('"', "'"),
+                    if value.is_finite() {
+                        format!("{value}")
+                    } else {
+                        "null".to_string()
+                    }
+                )
+            })
+            .collect()
+    }
     /// Render as an ASCII table with title + notes.
     pub fn render(&self) -> String {
         let mut s = format!("== {} — {} ==\n", self.id, self.title);
@@ -42,5 +71,27 @@ impl Report {
             s.push('\n');
         }
         s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_records_render_id_metric_value() {
+        let mut r = Report {
+            id: "x",
+            ..Default::default()
+        };
+        r.push_kv("tp", 1.5);
+        r.push_kv("bad", f64::NAN);
+        let recs = r.json_records();
+        assert_eq!(
+            recs[0],
+            "{\"id\":\"x\",\"metric\":\"tp\",\"value\":1.5}"
+        );
+        assert!(recs[1].ends_with("\"value\":null}"), "{}", recs[1]);
+        assert!(Report::default().json_records().is_empty());
     }
 }

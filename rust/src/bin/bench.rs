@@ -6,6 +6,9 @@
 //! valet-bench table1 fig21 ...    # selected experiments
 //! valet-bench all --small         # quick pass (CI)
 //! valet-bench all --csv results/  # also dump CSVs
+//! valet-bench all --json out.json # dump machine-readable {id, metric,
+//!                                 # value} records (the per-PR perf
+//!                                 # trajectory feed)
 //! ```
 
 use std::process::ExitCode;
@@ -15,21 +18,26 @@ use valet::bench::experiments::{all_ids, run, Scale};
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let small = args.iter().any(|a| a == "--small");
-    let csv_dir = args
-        .iter()
-        .position(|a| a == "--csv")
-        .and_then(|i| args.get(i + 1))
-        .cloned();
+    let flag_value = |name: &str| {
+        args.iter()
+            .position(|a| a == name)
+            .and_then(|i| args.get(i + 1))
+            .cloned()
+    };
+    let csv_dir = flag_value("--csv");
+    let json_path = flag_value("--json");
     let scale = if small { Scale::small() } else { Scale::default() };
     let mut ids: Vec<String> = args
         .iter()
         .filter(|a| !a.starts_with("--"))
         .filter(|a| csv_dir.as_deref() != Some(a.as_str()))
+        .filter(|a| json_path.as_deref() != Some(a.as_str()))
         .cloned()
         .collect();
     if ids.is_empty() || ids.iter().any(|i| i == "all") {
         ids = all_ids().iter().map(|s| s.to_string()).collect();
     }
+    let mut json_records: Vec<String> = Vec::new();
     for id in &ids {
         let t0 = std::time::Instant::now();
         match run(id, &scale) {
@@ -40,6 +48,7 @@ fn main() -> ExitCode {
                     id,
                     t0.elapsed().as_secs_f64()
                 );
+                json_records.extend(report.json_records());
                 if let Some(dir) = &csv_dir {
                     let _ = std::fs::create_dir_all(dir);
                     let path = format!("{dir}/{id}.csv");
@@ -54,6 +63,23 @@ fn main() -> ExitCode {
                     all_ids().join(" ")
                 );
                 return ExitCode::from(2);
+            }
+        }
+    }
+    if let Some(path) = &json_path {
+        let body = if json_records.is_empty() {
+            "[]\n".to_string()
+        } else {
+            format!("[\n  {}\n]\n", json_records.join(",\n  "))
+        };
+        match std::fs::write(path, body) {
+            Ok(()) => eprintln!(
+                "wrote {path} ({} records)",
+                json_records.len()
+            ),
+            Err(e) => {
+                eprintln!("error writing {path}: {e}");
+                return ExitCode::FAILURE;
             }
         }
     }

@@ -14,6 +14,7 @@ use crate::backends::{
     self, Access, ClusterState, PagingBackend, PressureOutcome,
 };
 use crate::config::{BackendKind, Config};
+use crate::engine::ShardedEngine;
 use crate::sim::{EventQueue, Ns};
 use crate::NodeId;
 
@@ -40,6 +41,112 @@ pub enum ClusterEvent {
         /// New free-page count available to the mempool.
         pages: u64,
     },
+}
+
+/// Who handles the backend-facing half of a [`ClusterEvent`]: all three
+/// cluster assemblies share one event semantics (below, in
+/// `apply_events`) and differ only in this pair of hooks.
+trait EventTarget {
+    /// A peer node needs `bytes` of its donated memory back.
+    fn on_remote_pressure(
+        &mut self,
+        cl: &mut ClusterState,
+        now: Ns,
+        node: NodeId,
+        bytes: u64,
+    ) -> PressureOutcome;
+    /// Host free memory on the sender changed to `pages`.
+    fn on_host_free(&mut self, pages: u64);
+}
+
+impl EventTarget for dyn PagingBackend {
+    fn on_remote_pressure(
+        &mut self,
+        cl: &mut ClusterState,
+        now: Ns,
+        node: NodeId,
+        bytes: u64,
+    ) -> PressureOutcome {
+        self.remote_pressure(cl, now, node, bytes)
+    }
+
+    fn on_host_free(&mut self, pages: u64) {
+        self.host_pressure(pages);
+    }
+}
+
+impl EventTarget for TenantGroup {
+    fn on_remote_pressure(
+        &mut self,
+        cl: &mut ClusterState,
+        now: Ns,
+        node: NodeId,
+        bytes: u64,
+    ) -> PressureOutcome {
+        TenantGroup::remote_pressure(self, cl, now, node, bytes)
+    }
+
+    fn on_host_free(&mut self, pages: u64) {
+        TenantGroup::host_pressure(self, pages);
+    }
+}
+
+impl EventTarget for ShardedEngine {
+    fn on_remote_pressure(
+        &mut self,
+        cl: &mut ClusterState,
+        now: Ns,
+        node: NodeId,
+        bytes: u64,
+    ) -> PressureOutcome {
+        ShardedEngine::remote_pressure(self, cl, now, node, bytes)
+    }
+
+    fn on_host_free(&mut self, pages: u64) {
+        self.set_host_free_pages(pages);
+    }
+}
+
+/// Apply all events due at or before `now` — THE event semantics, shared
+/// by every assembly: native allocations raise remote pressure when they
+/// squeeze a peer's MR pool, native frees relax it, and sender host-free
+/// changes update the sender's monitor before reaching the target.
+fn apply_events<T: EventTarget + ?Sized>(
+    state: &mut ClusterState,
+    events: &mut EventQueue<ClusterEvent>,
+    pressure_log: &mut Vec<(Ns, NodeId, PressureOutcome)>,
+    target: &mut T,
+    now: Ns,
+) {
+    while let Some((t, ev)) = events.pop_due(now) {
+        match ev {
+            ClusterEvent::NativeAlloc { node, bytes } => {
+                state.monitors[node].native_bytes += bytes;
+                let pressure = state.monitors[node]
+                    .pressure(state.mrpools[node].registered_bytes());
+                if pressure > 0 {
+                    let out =
+                        target.on_remote_pressure(state, t, node, pressure);
+                    pressure_log.push((t, node, out));
+                }
+            }
+            ClusterEvent::NativeFree { node, bytes } => {
+                let m = &mut state.monitors[node];
+                m.native_bytes = m.native_bytes.saturating_sub(bytes);
+            }
+            ClusterEvent::SenderHostFree { pages } => {
+                // Mirror the new free level into the sender's monitor
+                // and hand it to the target: Valet's mempool cap follows
+                // it on the next pump.
+                let sender = state.sender;
+                let m = &mut state.monitors[sender];
+                m.native_bytes = m
+                    .total_bytes
+                    .saturating_sub(pages * crate::PAGE_SIZE);
+                target.on_host_free(pages);
+            }
+        }
+    }
 }
 
 /// A running cluster: substrate + backend + event timeline.
@@ -70,43 +177,16 @@ impl Cluster {
         self.events.push(at, ev);
     }
 
-    /// Apply all events due at or before `now`, triggering remote
-    /// pressure handling when native allocations squeeze MR pools.
+    /// Apply all events due at or before `now` (see `apply_events`),
+    /// then pump the backend.
     pub fn advance(&mut self, now: Ns) {
-        while let Some((t, ev)) = self.events.pop_due(now) {
-            match ev {
-                ClusterEvent::NativeAlloc { node, bytes } => {
-                    self.state.monitors[node].native_bytes += bytes;
-                    let pressure = self.state.monitors[node].pressure(
-                        self.state.mrpools[node].registered_bytes(),
-                    );
-                    if pressure > 0 {
-                        let out = self.backend.remote_pressure(
-                            &mut self.state,
-                            t,
-                            node,
-                            pressure,
-                        );
-                        self.pressure_log.push((t, node, out));
-                    }
-                }
-                ClusterEvent::NativeFree { node, bytes } => {
-                    let m = &mut self.state.monitors[node];
-                    m.native_bytes = m.native_bytes.saturating_sub(bytes);
-                }
-                ClusterEvent::SenderHostFree { pages } => {
-                    // Mirror the new free level into the sender's monitor
-                    // and hand it to the backend: Valet's coordinator
-                    // re-caps its mempool against it on the next pump.
-                    let sender = self.state.sender;
-                    let m = &mut self.state.monitors[sender];
-                    m.native_bytes = m
-                        .total_bytes
-                        .saturating_sub(pages * crate::PAGE_SIZE);
-                    self.backend.host_pressure(pages);
-                }
-            }
-        }
+        apply_events(
+            &mut self.state,
+            &mut self.events,
+            &mut self.pressure_log,
+            &mut *self.backend,
+            now,
+        );
         self.backend.pump(&mut self.state, now);
     }
 
@@ -185,42 +265,80 @@ impl TenantCluster {
         self.group.read(&mut self.state, now, tenant, page)
     }
 
-    /// Apply all events due at or before `now`, fanning pressure out via
-    /// the arbiter, then pump every tenant (drain + one arbitration
-    /// round).
+    /// Apply all events due at or before `now` (see `apply_events`;
+    /// pressure fans out via the arbiter), then pump every tenant
+    /// (drain + one arbitration round).
     pub fn advance(&mut self, now: Ns) {
-        while let Some((t, ev)) = self.events.pop_due(now) {
-            match ev {
-                ClusterEvent::NativeAlloc { node, bytes } => {
-                    self.state.monitors[node].native_bytes += bytes;
-                    let pressure = self.state.monitors[node].pressure(
-                        self.state.mrpools[node].registered_bytes(),
-                    );
-                    if pressure > 0 {
-                        let out = self.group.remote_pressure(
-                            &mut self.state,
-                            t,
-                            node,
-                            pressure,
-                        );
-                        self.pressure_log.push((t, node, out));
-                    }
-                }
-                ClusterEvent::NativeFree { node, bytes } => {
-                    let m = &mut self.state.monitors[node];
-                    m.native_bytes = m.native_bytes.saturating_sub(bytes);
-                }
-                ClusterEvent::SenderHostFree { pages } => {
-                    let sender = self.state.sender;
-                    let m = &mut self.state.monitors[sender];
-                    m.native_bytes = m
-                        .total_bytes
-                        .saturating_sub(pages * crate::PAGE_SIZE);
-                    self.group.host_pressure(pages);
-                }
-            }
-        }
+        apply_events(
+            &mut self.state,
+            &mut self.events,
+            &mut self.pressure_log,
+            &mut self.group,
+            now,
+        );
         self.group.pump(&mut self.state, now);
+    }
+
+    /// Cluster-wide memory utilization (see
+    /// [`Cluster::cluster_mem_utilization`]).
+    pub fn cluster_mem_utilization(&self) -> f64 {
+        cluster_mem_utilization(&self.state)
+    }
+}
+
+/// A running sharded cluster: substrate + [`ShardedEngine`] + event
+/// timeline — the simulation-side assembly of the sharded request
+/// engine, mirroring [`Cluster`] (whose backend is a one-shard engine
+/// behind the `Coordinator` wrapper). Used by the shard-equivalence
+/// regression tests and the sharded experiments.
+pub struct ShardedCluster {
+    /// Shared simulated substrate.
+    pub state: ClusterState,
+    /// The sharded engine under test.
+    pub engine: ShardedEngine,
+    /// Scheduled node events.
+    pub events: EventQueue<ClusterEvent>,
+    /// Pressure episodes resolved so far.
+    pub pressure_log: Vec<(Ns, NodeId, PressureOutcome)>,
+}
+
+impl ShardedCluster {
+    /// Build a cluster running an `S`-shard engine under `cfg`.
+    pub fn new(cfg: &Config, shards: usize) -> Self {
+        ShardedCluster {
+            state: ClusterState::new(cfg),
+            engine: ShardedEngine::new(cfg, shards),
+            events: EventQueue::new(),
+            pressure_log: Vec::new(),
+        }
+    }
+
+    /// Schedule an event.
+    pub fn schedule(&mut self, at: Ns, ev: ClusterEvent) {
+        self.events.push(at, ev);
+    }
+
+    /// Swap-out through the engine (see [`ShardedEngine::write`]).
+    pub fn write(&mut self, now: Ns, page: u64, bytes: u64) -> Access {
+        self.engine.write(&mut self.state, now, page, bytes)
+    }
+
+    /// Swap-in through the engine (see [`ShardedEngine::read`]).
+    pub fn read(&mut self, now: Ns, page: u64) -> Access {
+        self.engine.read(&mut self.state, now, page)
+    }
+
+    /// Apply all events due at or before `now` (see `apply_events`),
+    /// then pump the engine.
+    pub fn advance(&mut self, now: Ns) {
+        apply_events(
+            &mut self.state,
+            &mut self.events,
+            &mut self.pressure_log,
+            &mut self.engine,
+            now,
+        );
+        self.engine.pump(&mut self.state, now);
     }
 
     /// Cluster-wide memory utilization (see
@@ -365,6 +483,37 @@ mod tests {
             assert_ne!(a.source, crate::backends::Source::Disk);
             assert_ne!(b.source, crate::backends::Source::Disk);
         }
+    }
+
+    #[test]
+    fn sharded_cluster_mirrors_single_cluster_events() {
+        let mut cfg = Config::default();
+        cfg.cluster.nodes = 4;
+        cfg.valet.mr_block_bytes = 1 << 20;
+        cfg.valet.min_pool_pages = 256;
+        cfg.valet.max_pool_pages = 256;
+        let mut cl = ShardedCluster::new(&cfg, 4);
+        let mut t = 0;
+        for blk in 0..32u64 {
+            let a = cl.write(t, blk * 16, 16 * 4096);
+            t = a.end;
+        }
+        cl.advance(t + secs(2));
+        t += secs(2);
+        assert_eq!(cl.engine.pending_write_sets(), 0);
+        // a peer's native app claims everything → pressure on the engine
+        let peer = (1..4)
+            .max_by_key(|&n| cl.state.mrpools[n].registered_bytes())
+            .unwrap();
+        let mem = cl.state.monitors[peer].total_bytes;
+        cl.schedule(t, ClusterEvent::NativeAlloc { node: peer, bytes: mem });
+        cl.advance(t + secs(1));
+        assert_eq!(cl.pressure_log.len(), 1);
+        assert!(cl.pressure_log[0].2.reclaimed_bytes > 0);
+        // host-free collapse reaches the engine
+        cl.schedule(t + secs(2), ClusterEvent::SenderHostFree { pages: 99 });
+        cl.advance(t + secs(3));
+        assert_eq!(cl.engine.host_free_pages(), 99);
     }
 
     #[test]

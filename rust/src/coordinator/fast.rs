@@ -1,0 +1,186 @@
+//! The shard-local **fast path**: everything a request touches before it
+//! hands off to the shared remote sender — GPT, mempool, staging queue,
+//! reclaimable queue, the §5.2 page bitmaps and this shard's metrics.
+//!
+//! One [`ShardFastPath`] is the state a single serve worker thread owns
+//! exclusively (see [`crate::serve::spawn_sharded`]): a local-cache read
+//! hit completes entirely inside it, with no lock and no access to the
+//! shared slow path. The single-shard [`crate::coordinator::Coordinator`]
+//! owns exactly one; the [`crate::engine::ShardedEngine`] owns `S` of
+//! them, page-space interleaved by stripe (see
+//! [`crate::engine::ShardedEngine::shard_of`]).
+
+use crate::backends::{Access, Source};
+use crate::config::LatencyConfig;
+use crate::gpt::RadixGpt;
+use crate::mempool::Mempool;
+use crate::metrics::RunMetrics;
+use crate::queues::{ReclaimableQueue, StagingQueue, WriteSet};
+use crate::sim::Ns;
+use crate::util::PageBitmap;
+
+/// Shard-local request state: the first three Figure-7 stages (GPT →
+/// mempool → staging) plus the reclaim bookkeeping those stages need.
+pub struct ShardFastPath {
+    /// Radix-tree Global Page Table for this shard's pages (§4.1).
+    pub gpt: RadixGpt,
+    /// This shard's slice of the host-coordinated mempool (§3.4).
+    pub mempool: Mempool,
+    /// Write sets staged for the shared remote sender.
+    pub staging: StagingQueue,
+    /// Write sets whose remote copies are durable.
+    pub reclaim_q: ReclaimableQueue,
+    /// Pages whose remote copy is valid (the §5.2 per-page bitmap).
+    pub remote_ready: PageBitmap,
+    /// Pages with a disk-backup copy.
+    pub disk_valid: PageBitmap,
+    /// This shard's run metrics (merged across shards for reporting).
+    pub metrics: RunMetrics,
+}
+
+impl ShardFastPath {
+    /// Build a shard over a `[min_pages, max_pages]` mempool slice.
+    pub fn new(
+        min_pages: u64,
+        max_pages: u64,
+        grow_threshold: f64,
+        host_free_fraction: f64,
+        replacement: crate::config::Replacement,
+    ) -> Self {
+        ShardFastPath {
+            gpt: RadixGpt::new(),
+            mempool: Mempool::new(
+                min_pages.max(1),
+                max_pages.max(1),
+                grow_threshold,
+                host_free_fraction,
+            )
+            .with_replacement(replacement),
+            staging: StagingQueue::new(),
+            reclaim_q: ReclaimableQueue::new(),
+            remote_ready: PageBitmap::new(),
+            disk_valid: PageBitmap::new(),
+            metrics: RunMetrics::default(),
+        }
+    }
+
+    /// The lock-free read fast path: GPT hit → serve from the mempool.
+    /// Returns `None` on a miss — the caller must take the shared slow
+    /// path (remote read or disk). This is the only request-path code a
+    /// serve worker runs without holding the shared-state lock, which is
+    /// exactly why parallel shards scale on read-heavy workloads (§4.1
+    /// "parallel reads").
+    pub fn try_read_local(
+        &mut self,
+        lat: &LatencyConfig,
+        now: Ns,
+        page: u64,
+    ) -> Option<Access> {
+        let t = now + lat.radix_lookup;
+        let slot = self.gpt.lookup(page)?;
+        self.metrics.read_parts.add("radix", lat.radix_lookup);
+        let end = t + lat.copy_read_page;
+        self.metrics.read_parts.add("copy", lat.copy_read_page);
+        self.mempool.touch(slot);
+        self.metrics.local_hits += 1;
+        self.metrics.read_latency.record(end - now);
+        Some(Access {
+            end,
+            source: Source::LocalPool,
+        })
+    }
+
+    /// Apply one remotely-durable write set to this shard: slots become
+    /// recyclable (unless superseded — §5.2 UPDATE flag), the pages'
+    /// remote copies become readable, and the set enters the reclaimable
+    /// queue. Called when the owning worker drains its completion
+    /// mailbox from the shared sender.
+    pub fn apply_durable(&mut self, ws: WriteSet) {
+        for &slot in &ws.slots {
+            // marks the slot reclaimable unless a newer write set
+            // superseded it (§5.2); the page itself stays cached locally
+            // until the slot is recycled
+            let _ = self.mempool.mark_reclaimable(slot);
+        }
+        for p in ws.page..ws.page + ws.pages() {
+            self.remote_ready.set(p);
+        }
+        self.reclaim_q.push(ws);
+    }
+
+    /// Give back up to `want` idle (remote-durable, least-recently-used)
+    /// pages to the host pool, dropping their GPT entries — subsequent
+    /// reads of those pages are served remotely. Returns pages donated.
+    pub fn donate_idle_pages(&mut self, want: u64) -> u64 {
+        let evicted = self.mempool.donate_idle(want);
+        for p in &evicted {
+            self.gpt.remove(*p);
+        }
+        evicted.len() as u64
+    }
+
+    /// Mempool shrink check + idle donation against this shard's slice of
+    /// host free memory (§3.4): free slots release first; if that cannot
+    /// reach the effective cap (lowered lease / collapsed host free),
+    /// idle remote-durable pages are donated back.
+    pub fn resize_for_host(&mut self, host_free_pages: u64) {
+        self.mempool.shrink(host_free_pages);
+        let cap = self.mempool.effective_cap(host_free_pages);
+        let capacity = self.mempool.capacity();
+        if capacity > cap {
+            self.donate_idle_pages(capacity - cap);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{LatencyConfig, Replacement};
+
+    fn shard() -> ShardFastPath {
+        ShardFastPath::new(8, 64, 0.8, 1.0, Replacement::Lru)
+    }
+
+    #[test]
+    fn local_hit_needs_no_slow_path() {
+        let lat = LatencyConfig::default();
+        let mut s = shard();
+        assert!(s.try_read_local(&lat, 0, 7).is_none());
+        let a = s.mempool.alloc(7, 1 << 20).unwrap();
+        s.gpt.insert(7, a.slot);
+        let hit = s.try_read_local(&lat, 0, 7).unwrap();
+        assert_eq!(hit.source, Source::LocalPool);
+        assert_eq!(hit.end, lat.radix_lookup + lat.copy_read_page);
+        assert_eq!(s.metrics.local_hits, 1);
+    }
+
+    #[test]
+    fn apply_durable_reclaims_and_marks_remote_ready() {
+        let mut s = shard();
+        let a = s.mempool.alloc(3, 1 << 20).unwrap();
+        s.gpt.insert(3, a.slot);
+        s.apply_durable(WriteSet {
+            page: 3,
+            slots: vec![a.slot],
+            bytes: 4096,
+            enqueued_at: 0,
+        });
+        assert!(s.mempool.flags(a.slot).reclaimable);
+        assert!(s.remote_ready.get(3));
+        assert_eq!(s.reclaim_q.completed, 1);
+    }
+
+    #[test]
+    fn donate_idle_drops_gpt_entries() {
+        let mut s = shard();
+        for p in 0..4u64 {
+            let a = s.mempool.alloc(p, 1 << 20).unwrap();
+            s.gpt.insert(p, a.slot);
+            s.mempool.mark_reclaimable(a.slot);
+        }
+        let donated = s.donate_idle_pages(2);
+        assert_eq!(donated, 2);
+        assert_eq!(s.gpt.len(), 2);
+    }
+}

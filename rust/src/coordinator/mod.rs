@@ -1,11 +1,24 @@
 //! The unified orchestration layer — the paper's L3 contribution as one
 //! first-class subsystem instead of a flow inlined into a backend.
 //!
-//! [`Coordinator`] owns the Figure-6 software organization end to end and
-//! is shared by the simulated path ([`crate::backends::valet`] delegates
-//! its entire hot path here) and the live serving path ([`crate::serve`]
-//! runs its leader + remote-sender threads against the same type), so
-//! there is exactly one implementation of the critical-path redesign.
+//! Since the sharded-engine refactor this module is **layered**:
+//!
+//! * [`fast::ShardFastPath`] — the shard-local fast path (GPT + mempool
+//!   + staging/reclaimable queues + §5.2 bitmaps + metrics). A local
+//!   read hit never leaves it.
+//! * [`sender::RemoteSender`] — the shared slow path (remote sender
+//!   thread timeline, coalescing batcher, unit map, placement,
+//!   migration/eviction machinery, per-shard completion mailboxes).
+//! * [`crate::engine::ShardedEngine`] — `S` fast paths behind one slow
+//!   path, page-space interleaved by stripe.
+//!
+//! [`Coordinator`] is the single-context view: a thin wrapper over a
+//! one-shard engine that keeps the PR-1 API (and, bit for bit, the PR-1
+//! behavior — see `tests/sharding.rs`). The simulated path
+//! ([`crate::backends::valet`] delegates its entire hot path here), the
+//! live serving path ([`crate::serve`]) and the multi-tenant
+//! [`crate::arbiter::TenantGroup`] all drive this same implementation,
+//! so there is exactly one realization of the critical-path redesign.
 //!
 //! ## Stage map (Figure 6, §3.4–§3.5)
 //!
@@ -15,10 +28,10 @@
 //! | GPT lookup | radix-tree Global Page Table (§4.1) | [`crate::gpt::RadixGpt`] via `slot_of` |
 //! | mempool hit / miss | host-coordinated pool, grow/shrink (§3.4, Table 2) | [`crate::mempool::Mempool`] alloc + backpressure |
 //! | staging-queue push | "request ends" after enqueue (Fig. 7) | [`crate::queues::StagingQueue`] |
-//! | remote-sender drain | Remote Sender Thread (§4.1) | `drive_sender` / `send_one_batch` on a [`Server`] timeline |
+//! | remote-sender drain | Remote Sender Thread (§4.1) | [`sender::RemoteSender`] on a [`crate::sim::Server`] timeline |
 //! | reclaimable recycle | Update/Reclaimable flags (§5.2) | [`crate::queues::ReclaimableQueue`] + slot flags |
 //! | eviction hook | activity-based victim selection (§3.5) | pluggable [`VictimPolicy`] (`with_victim_policy`) |
-//! | migration hook | sender-driven protocol (§3.5, Fig. 14) | [`MigrationSm`] driven event-by-event in `remote_pressure` |
+//! | migration hook | sender-driven protocol (§3.5, Fig. 14) | [`crate::migration::MigrationSm`] driven event-by-event in `remote_pressure` |
 //!
 //! ### Write path (critical path = first three stages only, Figure 7)
 //! 1. radix-tree insert into the GPT,
@@ -38,39 +51,31 @@
 //! ### Remote pressure (§3.5)
 //! The pressured peer picks a victim with the pluggable [`VictimPolicy`]
 //! (activity-based by default: local tags, zero queries), then the
-//! coordinator drives one [`MigrationSm`] instance through the Figure-14
+//! sender drives one migration state machine through the Figure-14
 //! protocol — PressureReport → DestChosen → PrepareAcked → CopyDone →
-//! CommitAcked — performing each emitted [`MigAction`] against the fabric
-//! model. Writes to the migrating unit stay parked (write-locked) until
-//! commit; reads keep hitting the source.
+//! CommitAcked. Writes to the migrating unit stay parked (write-locked)
+//! until commit; reads keep hitting the source.
 
-use crate::backends::{Access, ClusterState, PressureOutcome, Source, Unit, UnitMap};
-use crate::config::{Config, LatencyConfig, ValetConfig};
-use crate::eviction::{ActivityBased, VictimPolicy};
-use crate::gpt::RadixGpt;
-use crate::mempool::{AllocFail, Mempool};
+pub mod fast;
+pub mod sender;
+
+use crate::backends::{Access, ClusterState, PressureOutcome, UnitMap};
+use crate::config::Config;
+use crate::engine::ShardedEngine;
+use crate::eviction::VictimPolicy;
+use crate::mempool::Mempool;
 use crate::metrics::RunMetrics;
-use crate::migration::{self, MigAction, MigEvent, MigState, MigrationSm};
-use crate::mrpool::MrState;
-use crate::placement::{Placement, PowerOfTwo};
-use crate::queues::{ReclaimableQueue, StagingQueue, WriteSet};
-use crate::replication::choose_replicas;
-use crate::sim::{Ns, Server};
-use crate::util::PageBitmap;
-use crate::{pages_for, NodeId, PAGE_SIZE};
-
-/// One coalesced RDMA message in flight: completion time + the write sets
-/// it carries.
-#[derive(Clone, Debug)]
-struct Inflight {
-    done: Ns,
-    sets: Vec<WriteSet>,
-}
+use crate::placement::Placement;
+use crate::queues::{ReclaimableQueue, StagingQueue};
+use crate::sim::Ns;
+use crate::NodeId;
 
 /// The unified Valet orchestration layer (see module docs for the stage
-/// map). One instance drives the whole Figure-6 pipeline; both the
-/// simulated backend and the live serve mode own exactly one, and the
-/// multi-tenant [`crate::arbiter::TenantGroup`] owns one per container.
+/// map): the single-context view of a one-shard
+/// [`crate::engine::ShardedEngine`]. One instance drives the whole
+/// Figure-6 pipeline; both the simulated backend and the live serve mode
+/// own exactly one, and the multi-tenant [`crate::arbiter::TenantGroup`]
+/// owns one per container.
 ///
 /// Quickstart (the write → local-hit → background-drain cycle):
 ///
@@ -105,68 +110,14 @@ struct Inflight {
 /// assert_eq!(co.pending_write_sets(), 0);
 /// ```
 pub struct Coordinator {
-    lat: LatencyConfig,
-    vcfg: ValetConfig,
-    gpt: RadixGpt,
-    mempool: Mempool,
-    staging: StagingQueue,
-    reclaim_q: ReclaimableQueue,
-    /// Remote sender thread's timeline (one batch in service at a time;
-    /// batches pipeline on the NIC beneath it).
-    sender_thread: Server,
-    units: UnitMap,
-    /// Pluggable placement hook (§4.3; power-of-two choices by default).
-    placement: Box<dyn Placement + Send>,
-    /// Pages whose remote copy is valid (the §5.2 per-page bitmap).
-    remote_ready: PageBitmap,
-    /// Pages with a disk-backup copy.
-    disk_valid: PageBitmap,
-    inflight: Vec<Inflight>,
-    /// Pluggable eviction hook (§3.5; activity-based by default).
-    victim_policy: Box<dyn VictimPolicy + Send>,
-    metrics: RunMetrics,
-    /// Host free pages available to the mempool (updated by the cluster
-    /// driver as containers allocate/free).
-    host_free_pages: u64,
-    /// Owner id stamped on this coordinator's MR registrations. `None`
-    /// (single-tenant) registers as the sender node, exactly as before;
-    /// the multi-tenant arbiter assigns each tenant a distinct tag so
-    /// victim selection never crosses tenants.
-    owner_tag: Option<NodeId>,
-    /// True when configured with no mempool (Valet-RemoteOnly ablation in
-    /// Figure 21): writes go synchronously to remote memory.
-    sync_mode: bool,
+    engine: ShardedEngine,
 }
 
 impl Coordinator {
     /// Build from config.
     pub fn new(cfg: &Config) -> Self {
-        let sync_mode =
-            cfg.valet.min_pool_pages == 0 && cfg.valet.max_pool_pages == 0;
         Coordinator {
-            lat: cfg.latency.clone(),
-            vcfg: cfg.valet.clone(),
-            gpt: RadixGpt::new(),
-            mempool: Mempool::new(
-                cfg.valet.min_pool_pages.max(1),
-                cfg.valet.max_pool_pages.max(1),
-                cfg.valet.grow_threshold,
-                cfg.valet.host_free_fraction,
-            )
-            .with_replacement(cfg.valet.replacement),
-            staging: StagingQueue::new(),
-            reclaim_q: ReclaimableQueue::new(),
-            sender_thread: Server::new(),
-            units: UnitMap::new(cfg.valet.mr_block_bytes),
-            placement: Box::new(PowerOfTwo::new(cfg.cluster.seed)),
-            remote_ready: PageBitmap::new(),
-            disk_valid: PageBitmap::new(),
-            inflight: Vec::new(),
-            victim_policy: Box::new(ActivityBased),
-            metrics: RunMetrics::default(),
-            host_free_pages: (cfg.cluster.node_mem_bytes / PAGE_SIZE) / 2,
-            owner_tag: None,
-            sync_mode,
+            engine: ShardedEngine::new(cfg, 1),
         }
     }
 
@@ -175,17 +126,17 @@ impl Coordinator {
     /// then only ever sees this tenant's blocks). Single-tenant setups
     /// leave this unset and register blocks as the sender node.
     pub fn with_owner_tag(mut self, owner: NodeId) -> Self {
-        self.owner_tag = Some(owner);
+        self.engine.set_owner_tag(owner);
         self
     }
 
     /// Swap in a different eviction policy (the §3.5 hook; the default is
-    /// [`ActivityBased`]).
+    /// [`crate::eviction::ActivityBased`]).
     pub fn with_victim_policy(
         mut self,
         policy: Box<dyn VictimPolicy + Send>,
     ) -> Self {
-        self.victim_policy = policy;
+        self.engine.set_victim_policy(policy);
         self
     }
 
@@ -195,74 +146,78 @@ impl Coordinator {
         mut self,
         placement: Box<dyn Placement + Send>,
     ) -> Self {
-        self.placement = placement;
+        self.engine.set_placement(placement);
         self
     }
 
     // -- diagnostics / introspection ----------------------------------
 
+    /// The one-shard engine behind this coordinator.
+    pub fn engine(&self) -> &ShardedEngine {
+        &self.engine
+    }
+
     /// Mempool occupancy/capacity diagnostics.
     pub fn mempool(&self) -> &Mempool {
-        &self.mempool
+        &self.engine.shard(0).mempool
     }
 
     /// The staging queue (write sets not yet remotely durable).
     pub fn staging(&self) -> &StagingQueue {
-        &self.staging
+        &self.engine.shard(0).staging
     }
 
     /// The reclaimable queue (write sets whose remote copy is durable).
     pub fn reclaimable(&self) -> &ReclaimableQueue {
-        &self.reclaim_q
+        &self.engine.shard(0).reclaim_q
     }
 
     /// The remote address-space unit map.
     pub fn units(&self) -> &UnitMap {
-        &self.units
+        self.engine.sender().units()
     }
 
     /// Staged (not yet remotely durable) bytes.
     pub fn staged_bytes(&self) -> u64 {
-        self.staging.bytes()
+        self.engine.staged_bytes()
     }
 
     /// Number of mapped address-space units.
     pub fn mapped_units(&self) -> usize {
-        self.units.len()
+        self.engine.mapped_units()
     }
 
     /// Mempool slot currently holding `page`, if it is locally cached
     /// (GPT lookup without charging latency — diagnostics only).
     pub fn slot_of(&self, page: u64) -> Option<u32> {
-        self.gpt.get(page)
+        self.engine.slot_of(page)
     }
 
     /// Write sets not yet durable: staged + carried by in-flight RDMA.
     pub fn pending_write_sets(&self) -> usize {
-        self.staging.len()
-            + self.inflight.iter().map(|f| f.sets.len()).sum::<usize>()
+        self.engine.pending_write_sets()
     }
 
     /// Name of the active eviction policy.
     pub fn victim_policy_name(&self) -> &'static str {
-        self.victim_policy.name()
+        self.engine.sender().victim_policy_name()
     }
 
     /// Host free pages currently granted to the mempool's cap.
     pub fn host_free_pages(&self) -> u64 {
-        self.host_free_pages
+        self.engine.host_free_pages()
     }
 
     /// Update host free memory (container churn on the sender node); the
     /// next pump's grow/shrink check runs against this value.
     pub fn set_host_free_pages(&mut self, pages: u64) {
-        self.host_free_pages = pages;
+        self.engine.set_host_free_pages(pages);
     }
 
     /// Pages the host arbiter currently leases to this tenant's mempool
     /// (`u64::MAX` when unleased — single-tenant operation).
     pub fn lease_pages(&self) -> u64 {
-        self.mempool.lease()
+        self.engine.lease_pages()
     }
 
     /// Update the arbiter lease: the mempool's effective cap becomes
@@ -271,247 +226,24 @@ impl Coordinator {
     /// and, if that is not enough, donating idle remote-durable pages
     /// back to the host pool (see [`Self::donate_idle_pages`]).
     pub fn set_lease_pages(&mut self, pages: u64) {
-        self.mempool.set_lease(pages);
+        self.engine.set_lease_pages(pages);
     }
 
     /// Give back up to `want` idle (remote-durable, least-recently-used)
     /// pages to the host pool, dropping their GPT entries — subsequent
     /// reads of those pages are served remotely. Returns pages donated.
     pub fn donate_idle_pages(&mut self, want: u64) -> u64 {
-        let evicted = self.mempool.donate_idle(want);
-        for p in &evicted {
-            self.gpt.remove(*p);
-        }
-        evicted.len() as u64
+        self.engine.donate_idle_pages(want)
     }
 
     /// Run metrics.
     pub fn metrics(&self) -> &RunMetrics {
-        &self.metrics
+        &self.engine.shard(0).metrics
     }
 
     /// Mutable run metrics.
     pub fn metrics_mut(&mut self) -> &mut RunMetrics {
-        &mut self.metrics
-    }
-
-    // -- background machinery (remote sender timeline) ----------------
-
-    /// Ensure `unit` has a remote mapping; returns when it is usable.
-    /// Charged on the *sender thread* timeline — never the request path.
-    fn ensure_unit(&mut self, cl: &mut ClusterState, now: Ns, unit: u64) -> Ns {
-        if let Some(u) = self.units.get(unit) {
-            if u.alive {
-                return u.ready_at;
-            }
-        }
-        // (Re)map: pick primary via the placement hook, then replicas.
-        let cands = cl.candidates();
-        let primary = self
-            .placement
-            .pick(&cands)
-            .expect("cluster has at least one peer");
-        let cand_nodes: Vec<NodeId> = cands.iter().map(|c| c.node).collect();
-        let nodes = choose_replicas(
-            cl.sender,
-            primary,
-            &cand_nodes,
-            self.vcfg.replicas.max(1),
-        );
-        // Connection (if new) + mapping, charged sequentially per node.
-        let mut t = now;
-        for &n in &nodes {
-            let (tc, _newc) = cl.fabric.ensure_connected(t, cl.sender, n);
-            t = cl.fabric.map_mr(tc, cl.sender);
-        }
-        let owner = self.owner_tag.unwrap_or(cl.sender);
-        let blocks = nodes
-            .iter()
-            .map(|&n| cl.mrpools[n].register(owner, self.units.unit_bytes, t))
-            .collect();
-        self.units.insert(
-            unit,
-            Unit {
-                nodes,
-                blocks,
-                ready_at: t,
-                wlocked_until: 0,
-                alive: true,
-            },
-        );
-        t
-    }
-
-    /// Apply completions of in-flight RDMA batches up to `now`: each
-    /// completed write set moves to the reclaimable queue and its slots
-    /// become recyclable (unless superseded — §5.2 UPDATE flag).
-    fn complete_inflight(&mut self, cl: &mut ClusterState, now: Ns) {
-        let mut i = 0;
-        while i < self.inflight.len() {
-            if self.inflight[i].done <= now {
-                let inflight = self.inflight.swap_remove(i);
-                for ws in inflight.sets {
-                    for &slot in &ws.slots {
-                        // marks the slot reclaimable unless a newer write
-                        // set superseded it (§5.2); the page itself stays
-                        // cached locally until the slot is recycled
-                        let _ = self.mempool.mark_reclaimable(slot);
-                    }
-                    for p in ws.page..ws.page + ws.pages() {
-                        self.remote_ready.set(p);
-                    }
-                    // stamp activity tags on the primary block
-                    let unit = self.units.unit_of(ws.page);
-                    if let Some(u) = self.units.get(unit) {
-                        if let (Some(&n), Some(&b)) =
-                            (u.nodes.first(), u.blocks.first())
-                        {
-                            cl.mrpools[n].touch_write(b, inflight.done);
-                        }
-                    }
-                    self.reclaim_q.push(ws);
-                }
-            } else {
-                i += 1;
-            }
-        }
-    }
-
-    /// Drive the remote sender thread: send coalesced batches whose
-    /// service can start at or before `now`.
-    fn drive_sender(&mut self, cl: &mut ClusterState, now: Ns) {
-        self.complete_inflight(cl, now);
-        while !self.staging.is_empty() && self.sender_thread.busy_until() <= now
-        {
-            let start = self
-                .sender_thread
-                .busy_until()
-                .max(self.staging.front_enqueued_at().unwrap_or(0));
-            if start > now {
-                break;
-            }
-            self.send_one_batch(cl, start);
-        }
-    }
-
-    /// Send one coalesced batch at (no earlier than) `t0`; returns its
-    /// completion time. Coalescing only merges write sets that target the
-    /// same address-space unit (one RDMA message lands in one MR block).
-    fn send_one_batch(&mut self, cl: &mut ClusterState, t0: Ns) -> Ns {
-        debug_assert!(!self.staging.is_empty());
-        let max = if self.vcfg.coalescing {
-            self.vcfg.rdma_msg_bytes
-        } else {
-            1 // force single write set per message
-        };
-        let unit = self
-            .units
-            .unit_of(self.staging.peek().expect("non-empty").page);
-        let mut batch = Vec::new();
-        let mut bytes = 0u64;
-        while let Some(front) = self.staging.peek() {
-            let same_unit = self.units.unit_of(front.page) == unit;
-            if !batch.is_empty() && (bytes + front.bytes > max || !same_unit)
-            {
-                break;
-            }
-            let ws = self.staging.pop().unwrap();
-            bytes += ws.bytes;
-            batch.push(ws);
-        }
-        // mapping (behind the mempool — charged here, on sender thread)
-        let ready = self.ensure_unit(cl, t0, unit);
-        let u = self.units.get(unit).unwrap();
-        let mut t = t0.max(ready).max(u.wlocked_until);
-        // mrpool get + one-sided write per replica (queue on our NIC)
-        t += self.lat.mrpool_get;
-        let nodes = u.nodes.clone();
-        let mut done = t;
-        for &n in &nodes {
-            let verb = cl.fabric.rdma_write(t, cl.sender, n, bytes);
-            done = done.max(verb.end);
-        }
-        // optional disk backup, off the critical path
-        if self.vcfg.disk_backup {
-            cl.disks[cl.sender].write_async(t, bytes);
-            for ws in &batch {
-                for p in ws.page..ws.page + ws.pages() {
-                    self.disk_valid.set(p);
-                }
-            }
-            self.metrics.disk_writes += 1;
-        }
-        // The sender thread is busy only for its CPU work (mapping waits
-        // + mrpool get + posting the WQE, ~300 ns); the verb completes
-        // asynchronously on the NIC (tracked via `inflight`), so many
-        // messages pipeline — and un-coalesced small messages flood the
-        // WQE cache, which is exactly the §3.3 argument for batching.
-        let post_done = t + 300;
-        self.sender_thread.serve(t0, post_done.saturating_sub(t0));
-        self.inflight.push(Inflight { done, sets: batch });
-        done
-    }
-
-    /// Block until at least one mempool slot can be recycled: force the
-    /// sender pipeline forward and apply the earliest completion.
-    /// Returns the time the caller may retry.
-    fn wait_for_reclaimable(&mut self, cl: &mut ClusterState, now: Ns) -> Ns {
-        // Earliest in-flight completion?
-        if let Some(min_done) =
-            self.inflight.iter().map(|f| f.done).min()
-        {
-            let t = min_done.max(now);
-            self.complete_inflight(cl, min_done);
-            return t;
-        }
-        if !self.staging.is_empty() {
-            let start = self.sender_thread.busy_until().max(now);
-            let done = self.send_one_batch(cl, start);
-            self.complete_inflight(cl, done);
-            return done.max(now);
-        }
-        // Nothing pending: caller's alloc should succeed after growth or
-        // is genuinely out of memory; avoid infinite loops by advancing.
-        now + 1
-    }
-
-    /// Synchronous write (Valet-RemoteOnly ablation): radix + copy + wait
-    /// for the RDMA send like Infiniswap, but keep coalescing disabled
-    /// and no disk redirect (mapping stalls the request instead).
-    fn write_sync(
-        &mut self,
-        cl: &mut ClusterState,
-        now: Ns,
-        page: u64,
-        bytes: u64,
-    ) -> Access {
-        let mut t = now + self.lat.radix_insert;
-        self.metrics.write_parts.add("radix", self.lat.radix_insert);
-        let unit = self.units.unit_of(page);
-        let ready = self.ensure_unit(cl, t, unit);
-        if ready > t {
-            self.metrics.write_parts.add("mapping", ready - t);
-            t = ready;
-        }
-        let copy = self.lat.copy(bytes);
-        t += copy;
-        self.metrics.write_parts.add("copy", copy);
-        let u = self.units.get(unit).unwrap();
-        let nodes = u.nodes.clone();
-        let mut done = t + self.lat.mrpool_get;
-        for &n in &nodes {
-            let verb = cl.fabric.rdma_write(t, cl.sender, n, bytes);
-            done = done.max(verb.end);
-        }
-        self.metrics.write_parts.add("rdma", done - t);
-        for p in page..page + pages_for(bytes) {
-            self.remote_ready.set(p);
-        }
-        self.metrics.write_latency.record(done - now);
-        Access {
-            end: done,
-            source: Source::Remote,
-        }
+        &mut self.engine.shard_mut(0).metrics
     }
 
     // -- the front-end request path -----------------------------------
@@ -527,130 +259,13 @@ impl Coordinator {
         page: u64,
         bytes: u64,
     ) -> Access {
-        if self.sync_mode {
-            return self.write_sync(cl, now, page, bytes);
-        }
-        let npages = pages_for(bytes);
-        let mut t = now + self.lat.radix_insert;
-        self.metrics.write_parts.add("radix", self.lat.radix_insert);
-
-        let mut slots = Vec::with_capacity(npages as usize);
-        for p in page..page + npages {
-            if let Some(slot) = self.gpt.get(p) {
-                // Overwrite in place (§5.2): newer write set supersedes.
-                let flags = self.mempool.flags(slot);
-                if flags.reclaimable {
-                    self.mempool.unmark_reclaimable(slot);
-                } else {
-                    self.mempool.bump_update(slot);
-                }
-                self.remote_ready.clear(p); // remote copy now stale
-                slots.push(slot);
-                continue;
-            }
-            // Allocate a slot, stalling on backpressure if required.
-            loop {
-                match self.mempool.alloc(p, self.host_free_pages) {
-                    Ok(a) => {
-                        if let Some(evicted) = a.evicted_page {
-                            self.gpt.remove(evicted);
-                        }
-                        self.gpt.insert(p, a.slot);
-                        slots.push(a.slot);
-                        break;
-                    }
-                    Err(AllocFail::NoReclaimable) => {
-                        let retry = self.wait_for_reclaimable(cl, t);
-                        if retry > t {
-                            self.metrics
-                                .write_parts
-                                .add("stall", retry - t);
-                            t = retry;
-                        }
-                    }
-                }
-            }
-        }
-
-        let copy = self.lat.copy(bytes);
-        t += copy;
-        self.metrics.write_parts.add("copy", copy);
-        t += self.lat.staging_enqueue;
-        self.metrics
-            .write_parts
-            .add("enqueue", self.lat.staging_enqueue);
-
-        self.staging.push(WriteSet {
-            page,
-            slots,
-            bytes,
-            enqueued_at: t,
-        });
-        self.metrics.write_latency.record(t - now);
-        // opportunistically push the background pipeline forward
-        self.drive_sender(cl, t);
-        Access {
-            end: t,
-            source: Source::LocalPool,
-        }
+        self.engine.write(cl, now, page, bytes)
     }
 
     /// Front-end read (swap-in): GPT lookup → mempool hit, else one-sided
     /// RDMA READ from the unit's primary, else disk (Table 3 fallback).
     pub fn read(&mut self, cl: &mut ClusterState, now: Ns, page: u64) -> Access {
-        let mut t = now + self.lat.radix_lookup;
-        self.metrics.read_parts.add("radix", self.lat.radix_lookup);
-        if let Some(slot) = self.gpt.get(page) {
-            // Local mempool hit — the redesigned critical path's payoff.
-            t += self.lat.copy_read_page;
-            self.metrics
-                .read_parts
-                .add("copy", self.lat.copy_read_page);
-            self.mempool.touch(slot);
-            self.metrics.local_hits += 1;
-            self.metrics.read_latency.record(t - now);
-            return Access {
-                end: t,
-                source: Source::LocalPool,
-            };
-        }
-        let unit_id = self.units.unit_of(page);
-        let remote_ok = self
-            .units
-            .get(unit_id)
-            .map(|u| u.alive && self.remote_ready.get(page))
-            .unwrap_or(false);
-        if remote_ok {
-            let u = self.units.get(unit_id).unwrap();
-            let primary = u.nodes[0];
-            let ready_at = u.ready_at;
-            t = t.max(ready_at);
-            t += self.lat.mrpool_get;
-            self.metrics
-                .read_parts
-                .add("mrpool", self.lat.mrpool_get);
-            let verb = cl.fabric.rdma_read(t, cl.sender, primary, PAGE_SIZE);
-            self.metrics.read_parts.add("rdma", verb.end - t);
-            t = verb.end + self.lat.copy_read_page;
-            self.metrics
-                .read_parts
-                .add("copy", self.lat.copy_read_page);
-            self.metrics.remote_hits += 1;
-            self.metrics.read_latency.record(t - now);
-            return Access {
-                end: t,
-                source: Source::Remote,
-            };
-        }
-        // Remote copy unavailable: disk (Table 3 fallback).
-        let end = cl.disks[cl.sender].read(t, PAGE_SIZE);
-        self.metrics.read_parts.add("disk", end - t);
-        self.metrics.disk_reads += 1;
-        self.metrics.read_latency.record(end - now);
-        Access {
-            end,
-            source: Source::Disk,
-        }
+        self.engine.read(cl, now, page)
     }
 
     /// Drive background machinery up to `now`: remote-sender drain plus
@@ -659,13 +274,7 @@ impl Coordinator {
     /// lowered arbiter lease or collapsed host free memory with a full
     /// pool), idle remote-durable pages are donated back to the host.
     pub fn pump(&mut self, cl: &mut ClusterState, now: Ns) {
-        self.drive_sender(cl, now);
-        self.mempool.shrink(self.host_free_pages);
-        let cap = self.mempool.effective_cap(self.host_free_pages);
-        let capacity = self.mempool.capacity();
-        if capacity > cap {
-            self.donate_idle_pages(capacity - cap);
-        }
+        self.engine.pump(cl, now);
     }
 
     /// A peer needs `bytes` of its donated memory back (§3.5): select
@@ -679,141 +288,19 @@ impl Coordinator {
         node: NodeId,
         bytes: u64,
     ) -> PressureOutcome {
-        let mut out = PressureOutcome {
-            done_at: now,
-            ..Default::default()
-        };
-        let owner = self.owner_tag.unwrap_or(cl.sender);
-        let mut t = now;
-        while out.reclaimed_bytes < bytes {
-            // Victim selection ON the pressured node via the pluggable
-            // policy — activity-based by default: purely local metadata,
-            // zero sender queries (§3.5). A tenant-tagged coordinator
-            // selects only among its own blocks.
-            let choice = {
-                let selected = match self.owner_tag {
-                    Some(tag) => {
-                        let view = cl.mrpools[node].owned_by(tag);
-                        self.victim_policy.select(&view, t)
-                    }
-                    None => self.victim_policy.select(&cl.mrpools[node], t),
-                };
-                match selected {
-                    Some(c) => c,
-                    None => break,
-                }
-            };
-            t += choice.selection_cost; // zero for ActivityBased
-            let block_bytes = cl.mrpools[node]
-                .get(choice.block)
-                .map(|b| b.bytes)
-                .unwrap_or(self.units.unit_bytes);
-            let unit_id = self.units.unit_of_block(node, choice.block);
-            // Pick a destination: least-pressured other peer.
-            let cands: Vec<_> = cl
-                .candidates()
-                .into_iter()
-                .filter(|c| c.node != node && c.free_bytes >= block_bytes)
-                .collect();
-            let dst = cands
-                .iter()
-                .max_by_key(|c| c.free_bytes)
-                .map(|c| c.node);
-            match (unit_id, dst) {
-                (Some(unit_id), Some(dst)) => {
-                    // Drive the Figure-14 protocol state machine; every
-                    // transition below mirrors an action the coordinator
-                    // actually performs against the fabric model.
-                    let mut sm = MigrationSm::new();
-                    sm.on_event(MigEvent::PressureReport {
-                        block: choice.block,
-                        src: node,
-                    })
-                    .expect("fresh machine accepts a pressure report");
-                    // QueryCandidates was performed above (cl.candidates).
-                    let actions = sm
-                        .on_event(MigEvent::DestChosen { dst })
-                        .expect("destination differs from source");
-                    let park_writes =
-                        actions.contains(&MigAction::StopWrites);
-                    debug_assert!(sm.writes_parked());
-                    if let Some(b) = cl.mrpools[node].get_mut(choice.block) {
-                        b.state = MrState::Migrating;
-                    }
-                    sm.on_event(MigEvent::PrepareAcked)
-                        .expect("preparing accepts ack");
-                    let mig = migration::simulate(
-                        &mut cl.fabric,
-                        &self.lat,
-                        t,
-                        cl.sender,
-                        node,
-                        dst,
-                        block_bytes,
-                        2,
-                    );
-                    // destination registers the block when the copy starts
-                    let new_block = cl.mrpools[dst].register(
-                        owner,
-                        block_bytes,
-                        mig.copy_start,
-                    );
-                    cl.mrpools[node].release(choice.block);
-                    sm.on_event(MigEvent::CopyDone)
-                        .expect("copying accepts copy-done");
-                    let final_actions = sm
-                        .on_event(MigEvent::CommitAcked)
-                        .expect("committing accepts ack");
-                    debug_assert!(final_actions
-                        .contains(&MigAction::FlushParkedWrites));
-                    debug_assert_eq!(sm.state(), MigState::Done);
-                    // COMMIT: remap the unit's replica slot to dst; the
-                    // parked-writes flush is modeled by the write lock
-                    // expiring at mig.done.
-                    let u = self.units.get_mut(unit_id).unwrap();
-                    for (n, b) in
-                        u.nodes.iter_mut().zip(u.blocks.iter_mut())
-                    {
-                        if *n == node && *b == choice.block {
-                            *n = dst;
-                            *b = new_block;
-                        }
-                    }
-                    if park_writes {
-                        u.wlocked_until = u.wlocked_until.max(mig.done);
-                    }
-                    out.migrated += 1;
-                    out.reclaimed_bytes += block_bytes;
-                    // source's memory is free once the copy is out
-                    t = mig.copy_end;
-                    out.done_at = out.done_at.max(mig.done);
-                }
-                _ => {
-                    // No destination with room (or untracked block):
-                    // last resort — delete like the baselines would.
-                    cl.mrpools[node].release(choice.block);
-                    if let Some(unit_id) = unit_id {
-                        if let Some(u) = self.units.get_mut(unit_id) {
-                            u.alive = false;
-                        }
-                    }
-                    out.deleted += 1;
-                    out.reclaimed_bytes += block_bytes;
-                    out.done_at = out.done_at.max(t);
-                }
-            }
-        }
-        out
+        self.engine.remote_pressure(cl, now, node, bytes)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backends::Source;
     use crate::config::Config;
     use crate::eviction::BatchedQueryRandom;
     use crate::placement::RoundRobin;
     use crate::sim::{ms, secs, us};
+    use crate::PAGE_SIZE;
 
     fn setup() -> (Config, ClusterState, Coordinator) {
         let mut cfg = Config::default();

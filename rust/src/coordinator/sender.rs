@@ -1,0 +1,463 @@
+//! The shared **slow path**: the Remote Sender Thread (§4.1) plus every
+//! piece of state the shards share — the unit map, placement, in-flight
+//! RDMA batches, and the §3.5 eviction/migration machinery.
+//!
+//! One [`RemoteSender`] serves all shards: it drains their staging
+//! queues through the coalescing batcher one batch at a time (the single
+//! sender-thread timeline the paper describes), and hands completed
+//! write sets back through per-shard mailboxes so each shard worker can
+//! apply them to its own mempool without sharing it. Writes are thereby
+//! serialized only within a shard; the sender serializes nothing but its
+//! own CPU time.
+
+use crate::backends::{ClusterState, PressureOutcome, Unit, UnitMap};
+use crate::config::{Config, LatencyConfig, ValetConfig};
+use crate::coordinator::fast::ShardFastPath;
+use crate::eviction::{ActivityBased, VictimPolicy};
+use crate::migration::{self, MigAction, MigEvent, MigState, MigrationSm};
+use crate::mrpool::MrState;
+use crate::placement::{Placement, PowerOfTwo};
+use crate::queues::WriteSet;
+use crate::replication::choose_replicas;
+use crate::sim::{Ns, Server};
+use crate::NodeId;
+
+/// One coalesced RDMA message in flight: completion time, the shard its
+/// write sets belong to, and the sets themselves.
+#[derive(Clone, Debug)]
+struct Inflight {
+    done: Ns,
+    shard: usize,
+    sets: Vec<WriteSet>,
+}
+
+/// The shared remote-sender slow path (see module docs).
+pub struct RemoteSender {
+    lat: LatencyConfig,
+    vcfg: ValetConfig,
+    /// Remote sender thread's timeline (one batch in service at a time;
+    /// batches pipeline on the NIC beneath it).
+    thread: Server,
+    units: UnitMap,
+    /// Pluggable placement hook (§4.3; power-of-two choices by default).
+    placement: Box<dyn Placement + Send>,
+    inflight: Vec<Inflight>,
+    /// Per-shard completion mailboxes: durable write sets waiting for
+    /// their owning shard to apply them (FIFO per shard).
+    done: Vec<Vec<WriteSet>>,
+    /// Pluggable eviction hook (§3.5; activity-based by default).
+    victim_policy: Box<dyn VictimPolicy + Send>,
+    /// Owner id stamped on MR registrations (multi-tenant arbitration);
+    /// `None` registers as the sender node.
+    owner_tag: Option<NodeId>,
+}
+
+impl RemoteSender {
+    /// Build the slow path for `shards` fast paths.
+    pub fn new(cfg: &Config, shards: usize) -> Self {
+        RemoteSender {
+            lat: cfg.latency.clone(),
+            vcfg: cfg.valet.clone(),
+            thread: Server::new(),
+            units: UnitMap::new(cfg.valet.mr_block_bytes),
+            placement: Box::new(PowerOfTwo::new(cfg.cluster.seed)),
+            inflight: Vec::new(),
+            done: vec![Vec::new(); shards.max(1)],
+            victim_policy: Box::new(ActivityBased),
+            owner_tag: None,
+        }
+    }
+
+    // -- configuration hooks ------------------------------------------
+
+    /// Tag MR registrations with a distinct owner id (multi-tenant
+    /// arbitration: victim selection under remote pressure then only
+    /// ever sees this tenant's blocks).
+    pub fn set_owner_tag(&mut self, owner: NodeId) {
+        self.owner_tag = Some(owner);
+    }
+
+    /// Swap in a different eviction policy (the §3.5 hook).
+    pub fn set_victim_policy(&mut self, policy: Box<dyn VictimPolicy + Send>) {
+        self.victim_policy = policy;
+    }
+
+    /// Swap in a different placement policy (the §4.3 hook).
+    pub fn set_placement(&mut self, placement: Box<dyn Placement + Send>) {
+        self.placement = placement;
+    }
+
+    // -- diagnostics --------------------------------------------------
+
+    /// The latency model the whole pipeline is calibrated to.
+    pub fn lat(&self) -> &LatencyConfig {
+        &self.lat
+    }
+
+    /// Valet policy knobs.
+    pub fn vcfg(&self) -> &ValetConfig {
+        &self.vcfg
+    }
+
+    /// The remote address-space unit map.
+    pub fn units(&self) -> &UnitMap {
+        &self.units
+    }
+
+    /// Name of the active eviction policy.
+    pub fn victim_policy_name(&self) -> &'static str {
+        self.victim_policy.name()
+    }
+
+    /// When the sender thread is next idle.
+    pub fn busy_until(&self) -> Ns {
+        self.thread.busy_until()
+    }
+
+    /// Write sets carried by in-flight RDMA batches plus durable sets
+    /// not yet applied by their shard.
+    pub fn inflight_write_sets(&self) -> usize {
+        self.inflight.iter().map(|f| f.sets.len()).sum::<usize>()
+            + self.done.iter().map(|d| d.len()).sum::<usize>()
+    }
+
+    /// Earliest completion among in-flight batches carrying `shard`'s
+    /// write sets.
+    pub fn inflight_min_done(&self, shard: usize) -> Option<Ns> {
+        self.inflight
+            .iter()
+            .filter(|f| f.shard == shard)
+            .map(|f| f.done)
+            .min()
+    }
+
+    // -- the sender-thread pipeline -----------------------------------
+
+    /// Ensure `unit` has a remote mapping; returns when it is usable.
+    /// Charged on the *sender thread* timeline — never the request path.
+    fn ensure_unit(&mut self, cl: &mut ClusterState, now: Ns, unit: u64) -> Ns {
+        if let Some(u) = self.units.get(unit) {
+            if u.alive {
+                return u.ready_at;
+            }
+        }
+        // (Re)map: pick primary via the placement hook, then replicas.
+        let cands = cl.candidates();
+        let primary = self
+            .placement
+            .pick(&cands)
+            .expect("cluster has at least one peer");
+        let cand_nodes: Vec<NodeId> = cands.iter().map(|c| c.node).collect();
+        let nodes = choose_replicas(
+            cl.sender,
+            primary,
+            &cand_nodes,
+            self.vcfg.replicas.max(1),
+        );
+        // Connection (if new) + mapping, charged sequentially per node.
+        let mut t = now;
+        for &n in &nodes {
+            let (tc, _newc) = cl.fabric.ensure_connected(t, cl.sender, n);
+            t = cl.fabric.map_mr(tc, cl.sender);
+        }
+        let owner = self.owner_tag.unwrap_or(cl.sender);
+        let blocks = nodes
+            .iter()
+            .map(|&n| cl.mrpools[n].register(owner, self.units.unit_bytes, t))
+            .collect();
+        self.units.insert(
+            unit,
+            Unit {
+                nodes,
+                blocks,
+                ready_at: t,
+                wlocked_until: 0,
+                alive: true,
+            },
+        );
+        t
+    }
+
+    /// Apply completions of in-flight RDMA batches up to `now`: stamp
+    /// activity tags on the primary blocks and move each completed write
+    /// set into its shard's mailbox (the owning shard applies it via
+    /// [`ShardFastPath::apply_durable`] when it next drains the mailbox).
+    pub fn complete_inflight(&mut self, cl: &mut ClusterState, now: Ns) {
+        let mut i = 0;
+        while i < self.inflight.len() {
+            if self.inflight[i].done <= now {
+                let inflight = self.inflight.swap_remove(i);
+                for ws in inflight.sets {
+                    // stamp activity tags on the primary block
+                    let unit = self.units.unit_of(ws.page);
+                    if let Some(u) = self.units.get(unit) {
+                        if let (Some(&n), Some(&b)) =
+                            (u.nodes.first(), u.blocks.first())
+                        {
+                            cl.mrpools[n].touch_write(b, inflight.done);
+                        }
+                    }
+                    self.done[inflight.shard].push(ws);
+                }
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Drain `shard`'s completion mailbox (FIFO).
+    pub fn take_done(&mut self, shard: usize) -> Vec<WriteSet> {
+        std::mem::take(&mut self.done[shard])
+    }
+
+    /// Send one coalesced batch from `fast`'s staging queue at (no
+    /// earlier than) `t0`; returns its completion time. Coalescing only
+    /// merges write sets that target the same address-space unit (one
+    /// RDMA message lands in one MR block).
+    pub fn send_one_batch(
+        &mut self,
+        cl: &mut ClusterState,
+        t0: Ns,
+        shard: usize,
+        fast: &mut ShardFastPath,
+    ) -> Ns {
+        debug_assert!(!fast.staging.is_empty());
+        let max = if self.vcfg.coalescing {
+            self.vcfg.rdma_msg_bytes
+        } else {
+            1 // force single write set per message
+        };
+        let unit = self
+            .units
+            .unit_of(fast.staging.peek().expect("non-empty").page);
+        let mut batch = Vec::new();
+        let mut bytes = 0u64;
+        while let Some(front) = fast.staging.peek() {
+            let same_unit = self.units.unit_of(front.page) == unit;
+            if !batch.is_empty() && (bytes + front.bytes > max || !same_unit)
+            {
+                break;
+            }
+            let ws = fast.staging.pop().unwrap();
+            bytes += ws.bytes;
+            batch.push(ws);
+        }
+        // mapping (behind the mempool — charged here, on sender thread)
+        let ready = self.ensure_unit(cl, t0, unit);
+        let u = self.units.get(unit).unwrap();
+        let mut t = t0.max(ready).max(u.wlocked_until);
+        // mrpool get + one-sided write per replica (queue on our NIC)
+        t += self.lat.mrpool_get;
+        let nodes = u.nodes.clone();
+        let mut done = t;
+        for &n in &nodes {
+            let verb = cl.fabric.rdma_write(t, cl.sender, n, bytes);
+            done = done.max(verb.end);
+        }
+        // optional disk backup, off the critical path
+        if self.vcfg.disk_backup {
+            cl.disks[cl.sender].write_async(t, bytes);
+            for ws in &batch {
+                for p in ws.page..ws.page + ws.pages() {
+                    fast.disk_valid.set(p);
+                }
+            }
+            fast.metrics.disk_writes += 1;
+        }
+        // The sender thread is busy only for its CPU work (mapping waits
+        // + mrpool get + posting the WQE, ~300 ns); the verb completes
+        // asynchronously on the NIC (tracked via `inflight`), so many
+        // messages pipeline — and un-coalesced small messages flood the
+        // WQE cache, which is exactly the §3.3 argument for batching.
+        let post_done = t + 300;
+        self.thread.serve(t0, post_done.saturating_sub(t0));
+        self.inflight.push(Inflight {
+            done,
+            shard,
+            sets: batch,
+        });
+        done
+    }
+
+    /// Synchronous write (Valet-RemoteOnly ablation): radix + copy + wait
+    /// for the RDMA send like Infiniswap, but keep coalescing disabled
+    /// and no disk redirect (mapping stalls the request instead).
+    pub fn write_sync(
+        &mut self,
+        cl: &mut ClusterState,
+        now: Ns,
+        page: u64,
+        bytes: u64,
+        fast: &mut ShardFastPath,
+    ) -> crate::backends::Access {
+        use crate::backends::{Access, Source};
+        let mut t = now + self.lat.radix_insert;
+        fast.metrics.write_parts.add("radix", self.lat.radix_insert);
+        let unit = self.units.unit_of(page);
+        let ready = self.ensure_unit(cl, t, unit);
+        if ready > t {
+            fast.metrics.write_parts.add("mapping", ready - t);
+            t = ready;
+        }
+        let copy = self.lat.copy(bytes);
+        t += copy;
+        fast.metrics.write_parts.add("copy", copy);
+        let u = self.units.get(unit).unwrap();
+        let nodes = u.nodes.clone();
+        let mut done = t + self.lat.mrpool_get;
+        for &n in &nodes {
+            let verb = cl.fabric.rdma_write(t, cl.sender, n, bytes);
+            done = done.max(verb.end);
+        }
+        fast.metrics.write_parts.add("rdma", done - t);
+        for p in page..page + crate::pages_for(bytes) {
+            fast.remote_ready.set(p);
+        }
+        fast.metrics.write_latency.record(done - now);
+        Access {
+            end: done,
+            source: Source::Remote,
+        }
+    }
+
+    // -- remote pressure (§3.5) ---------------------------------------
+
+    /// A peer needs `bytes` of its donated memory back: select victims
+    /// via the pluggable policy and migrate each one through the
+    /// sender-driven protocol state machine; delete only as a last
+    /// resort (no destination with room). Entirely slow-path state, so
+    /// pressure handling never blocks shard fast paths.
+    pub fn remote_pressure(
+        &mut self,
+        cl: &mut ClusterState,
+        now: Ns,
+        node: NodeId,
+        bytes: u64,
+    ) -> PressureOutcome {
+        let mut out = PressureOutcome {
+            done_at: now,
+            ..Default::default()
+        };
+        let owner = self.owner_tag.unwrap_or(cl.sender);
+        let mut t = now;
+        while out.reclaimed_bytes < bytes {
+            // Victim selection ON the pressured node via the pluggable
+            // policy — activity-based by default: purely local metadata,
+            // zero sender queries (§3.5). A tenant-tagged sender selects
+            // only among its own blocks.
+            let choice = {
+                let selected = match self.owner_tag {
+                    Some(tag) => {
+                        let view = cl.mrpools[node].owned_by(tag);
+                        self.victim_policy.select(&view, t)
+                    }
+                    None => self.victim_policy.select(&cl.mrpools[node], t),
+                };
+                match selected {
+                    Some(c) => c,
+                    None => break,
+                }
+            };
+            t += choice.selection_cost; // zero for ActivityBased
+            let block_bytes = cl.mrpools[node]
+                .get(choice.block)
+                .map(|b| b.bytes)
+                .unwrap_or(self.units.unit_bytes);
+            let unit_id = self.units.unit_of_block(node, choice.block);
+            // Pick a destination: least-pressured other peer.
+            let cands: Vec<_> = cl
+                .candidates()
+                .into_iter()
+                .filter(|c| c.node != node && c.free_bytes >= block_bytes)
+                .collect();
+            let dst = cands
+                .iter()
+                .max_by_key(|c| c.free_bytes)
+                .map(|c| c.node);
+            match (unit_id, dst) {
+                (Some(unit_id), Some(dst)) => {
+                    // Drive the Figure-14 protocol state machine; every
+                    // transition below mirrors an action the sender
+                    // actually performs against the fabric model.
+                    let mut sm = MigrationSm::new();
+                    sm.on_event(MigEvent::PressureReport {
+                        block: choice.block,
+                        src: node,
+                    })
+                    .expect("fresh machine accepts a pressure report");
+                    // QueryCandidates was performed above (cl.candidates).
+                    let actions = sm
+                        .on_event(MigEvent::DestChosen { dst })
+                        .expect("destination differs from source");
+                    let park_writes =
+                        actions.contains(&MigAction::StopWrites);
+                    debug_assert!(sm.writes_parked());
+                    if let Some(b) = cl.mrpools[node].get_mut(choice.block) {
+                        b.state = MrState::Migrating;
+                    }
+                    sm.on_event(MigEvent::PrepareAcked)
+                        .expect("preparing accepts ack");
+                    let mig = migration::simulate(
+                        &mut cl.fabric,
+                        &self.lat,
+                        t,
+                        cl.sender,
+                        node,
+                        dst,
+                        block_bytes,
+                        2,
+                    );
+                    // destination registers the block when the copy starts
+                    let new_block = cl.mrpools[dst].register(
+                        owner,
+                        block_bytes,
+                        mig.copy_start,
+                    );
+                    cl.mrpools[node].release(choice.block);
+                    sm.on_event(MigEvent::CopyDone)
+                        .expect("copying accepts copy-done");
+                    let final_actions = sm
+                        .on_event(MigEvent::CommitAcked)
+                        .expect("committing accepts ack");
+                    debug_assert!(final_actions
+                        .contains(&MigAction::FlushParkedWrites));
+                    debug_assert_eq!(sm.state(), MigState::Done);
+                    // COMMIT: remap the unit's replica slot to dst; the
+                    // parked-writes flush is modeled by the write lock
+                    // expiring at mig.done.
+                    let u = self.units.get_mut(unit_id).unwrap();
+                    for (n, b) in
+                        u.nodes.iter_mut().zip(u.blocks.iter_mut())
+                    {
+                        if *n == node && *b == choice.block {
+                            *n = dst;
+                            *b = new_block;
+                        }
+                    }
+                    if park_writes {
+                        u.wlocked_until = u.wlocked_until.max(mig.done);
+                    }
+                    out.migrated += 1;
+                    out.reclaimed_bytes += block_bytes;
+                    // source's memory is free once the copy is out
+                    t = mig.copy_end;
+                    out.done_at = out.done_at.max(mig.done);
+                }
+                _ => {
+                    // No destination with room (or untracked block):
+                    // last resort — delete like the baselines would.
+                    cl.mrpools[node].release(choice.block);
+                    if let Some(unit_id) = unit_id {
+                        if let Some(u) = self.units.get_mut(unit_id) {
+                            u.alive = false;
+                        }
+                    }
+                    out.deleted += 1;
+                    out.reclaimed_bytes += block_bytes;
+                    out.done_at = out.done_at.max(t);
+                }
+            }
+        }
+        out
+    }
+}

@@ -1,0 +1,792 @@
+//! The sharded request engine: `S` shard-local fast paths
+//! ([`crate::coordinator::fast::ShardFastPath`]) behind one shared slow
+//! path ([`crate::coordinator::sender::RemoteSender`]).
+//!
+//! Valet's §4.1 design allows parallel reads while serializing only
+//! writes for consistency. The single [`crate::coordinator::Coordinator`]
+//! realizes that design for one execution context; this engine partitions
+//! the page space so `S` contexts can run the fast path concurrently:
+//!
+//! ```text
+//!            requests (page-routed: shard_of = (page / stripe) % S)
+//!      ┌───────────┬───────────┬───────────┐
+//!      ▼           ▼           ▼           ▼
+//!  ┌────────┐  ┌────────┐  ┌────────┐  ┌────────┐   shard-local FAST path
+//!  │shard 0 │  │shard 1 │  │shard 2 │  │shard 3 │   (GPT + mempool +
+//!  │GPT     │  │GPT     │  │GPT     │  │GPT     │    staging queue;
+//!  │mempool │  │mempool │  │mempool │  │mempool │    write ORDER is a
+//!  │staging │  │staging │  │staging │  │staging │    per-shard property)
+//!  └───┬────┘  └───┬────┘  └───┬────┘  └───┬────┘
+//!      └───────────┴─────┬─────┴───────────┘
+//!                        ▼                           shared SLOW path
+//!            ┌──────────────────────┐
+//!            │ RemoteSender          │  one sender-thread timeline,
+//!            │  coalescing batcher   │  per-shard completion mailboxes,
+//!            │  unit map + placement │  migration / remote pressure,
+//!            │  victim policy        │  arbiter leases split per shard
+//!            └──────────────────────┘
+//! ```
+//!
+//! ## Partitioning
+//!
+//! The page space is interleaved at *stripe* granularity, where one
+//! stripe is one block-I/O request (`block_io_bytes / PAGE_SIZE` pages):
+//! `shard_of(page) = (page / stripe) % S`. Stripe (rather than raw
+//! `page % S`) interleaving keeps every page of one block-I/O request in
+//! one shard, so a request is handled by exactly one worker and a read
+//! of any page routes to the shard that cached it. Writes larger than a
+//! stripe are split at stripe boundaries and land on consecutive shards
+//! (which is where multi-shard write parallelism comes from).
+//!
+//! ## `S = 1` is the PR-1 Coordinator
+//!
+//! With one shard the engine executes the identical sequence of
+//! operations as the pre-shard `Coordinator` (which is now a thin
+//! wrapper over this engine): same latencies, same metrics, same hit
+//! splits, bit for bit. `tests/sharding.rs` pins this equivalence.
+//!
+//! ## Resource splitting
+//!
+//! The mempool floor/cap, the host-free share and the arbiter lease are
+//! split across shards with [`crate::arbiter::split_pages`] (remainder
+//! to the lowest shards), so shard totals always equal the single-shard
+//! budget.
+
+use crate::arbiter::{share_of, split_pages};
+use crate::backends::{Access, ClusterState, PressureOutcome, Source};
+use crate::config::Config;
+use crate::coordinator::fast::ShardFastPath;
+use crate::coordinator::sender::RemoteSender;
+use crate::mempool::AllocFail;
+use crate::metrics::RunMetrics;
+use crate::queues::{self, WriteSet};
+use crate::sim::Ns;
+use crate::{pages_for, NodeId, PAGE_SIZE};
+
+// ---------------------------------------------------------------------
+// Per-shard request orchestration (shared by the simulated engine and
+// the live serve workers — exactly one implementation of each stage).
+// ---------------------------------------------------------------------
+
+/// Drain `shard`'s completion mailbox into its fast path.
+pub fn apply_mailbox(
+    sender: &mut RemoteSender,
+    fast: &mut ShardFastPath,
+    shard: usize,
+) {
+    for ws in sender.take_done(shard) {
+        fast.apply_durable(ws);
+    }
+}
+
+/// Drive the shared sender for one shard: apply completions, then send
+/// coalesced batches from this shard's staging queue whose service can
+/// start at or before `now`.
+pub fn drive_shard(
+    sender: &mut RemoteSender,
+    fast: &mut ShardFastPath,
+    cl: &mut ClusterState,
+    now: Ns,
+    shard: usize,
+) {
+    sender.complete_inflight(cl, now);
+    apply_mailbox(sender, fast, shard);
+    while !fast.staging.is_empty() && sender.busy_until() <= now {
+        let start = sender
+            .busy_until()
+            .max(fast.staging.front_enqueued_at().unwrap_or(0));
+        if start > now {
+            break;
+        }
+        sender.send_one_batch(cl, start, shard, fast);
+    }
+}
+
+/// Block until at least one of this shard's mempool slots can be
+/// recycled: force the sender pipeline forward and apply the earliest
+/// completion carrying this shard's write sets. Returns the time the
+/// caller may retry.
+fn wait_for_reclaimable(
+    sender: &mut RemoteSender,
+    fast: &mut ShardFastPath,
+    cl: &mut ClusterState,
+    now: Ns,
+    shard: usize,
+) -> Ns {
+    // Durable write sets may already sit in this shard's mailbox (a
+    // DIFFERENT shard's drive completed our batches without applying
+    // them): applying them frees slots with no time passing. Without
+    // this check the alloc-retry loop would spin forever — the sets are
+    // neither in flight nor staged. A no-op at S=1, where every
+    // complete_inflight is immediately followed by an apply.
+    let parked = sender.take_done(shard);
+    if !parked.is_empty() {
+        for ws in parked {
+            fast.apply_durable(ws);
+        }
+        return now;
+    }
+    // Earliest in-flight completion with our write sets?
+    if let Some(min_done) = sender.inflight_min_done(shard) {
+        let t = min_done.max(now);
+        sender.complete_inflight(cl, min_done);
+        apply_mailbox(sender, fast, shard);
+        return t;
+    }
+    if !fast.staging.is_empty() {
+        let start = sender.busy_until().max(now);
+        let done = sender.send_one_batch(cl, start, shard, fast);
+        sender.complete_inflight(cl, done);
+        apply_mailbox(sender, fast, shard);
+        return done.max(now);
+    }
+    // Nothing pending: caller's alloc should succeed after growth or
+    // is genuinely out of memory; avoid infinite loops by advancing.
+    now + 1
+}
+
+/// One shard's write critical path (Figure 7): GPT insert, copy into the
+/// shard's mempool (with grow/backpressure per §3.4), staging-queue push
+/// — then the request ends; the shared sender drains in the background.
+#[allow(clippy::too_many_arguments)]
+pub fn shard_write(
+    sender: &mut RemoteSender,
+    fast: &mut ShardFastPath,
+    cl: &mut ClusterState,
+    shard: usize,
+    now: Ns,
+    page: u64,
+    bytes: u64,
+    host_free_pages: u64,
+) -> Access {
+    let radix_insert = sender.lat().radix_insert;
+    let staging_enqueue = sender.lat().staging_enqueue;
+    let copy = sender.lat().copy(bytes);
+    let npages = pages_for(bytes);
+    let mut t = now + radix_insert;
+    fast.metrics.write_parts.add("radix", radix_insert);
+
+    let mut slots = Vec::with_capacity(npages as usize);
+    for p in page..page + npages {
+        if let Some(slot) = fast.gpt.lookup(p) {
+            // Overwrite in place (§5.2): newer write set supersedes.
+            let flags = fast.mempool.flags(slot);
+            if flags.reclaimable {
+                fast.mempool.unmark_reclaimable(slot);
+            } else {
+                fast.mempool.bump_update(slot);
+            }
+            fast.remote_ready.clear(p); // remote copy now stale
+            slots.push(slot);
+            continue;
+        }
+        // Allocate a slot, stalling on backpressure if required.
+        loop {
+            match fast.mempool.alloc(p, host_free_pages) {
+                Ok(a) => {
+                    if let Some(evicted) = a.evicted_page {
+                        fast.gpt.remove(evicted);
+                    }
+                    fast.gpt.insert(p, a.slot);
+                    slots.push(a.slot);
+                    break;
+                }
+                Err(AllocFail::NoReclaimable) => {
+                    let retry =
+                        wait_for_reclaimable(sender, fast, cl, t, shard);
+                    if retry > t {
+                        fast.metrics.write_parts.add("stall", retry - t);
+                        t = retry;
+                    }
+                }
+            }
+        }
+    }
+
+    t += copy;
+    fast.metrics.write_parts.add("copy", copy);
+    t += staging_enqueue;
+    fast.metrics.write_parts.add("enqueue", staging_enqueue);
+
+    fast.staging.push(WriteSet {
+        page,
+        slots,
+        bytes,
+        enqueued_at: t,
+    });
+    fast.metrics.write_latency.record(t - now);
+    // opportunistically push the background pipeline forward
+    drive_shard(sender, fast, cl, t, shard);
+    Access {
+        end: t,
+        source: Source::LocalPool,
+    }
+}
+
+/// One shard's read miss path: one-sided RDMA READ from the unit's
+/// primary, else disk (Table 3 fallback). The local-hit fast path is
+/// [`ShardFastPath::try_read_local`] — call that first; this function
+/// assumes it returned `None`.
+pub fn shard_read_miss(
+    sender: &RemoteSender,
+    fast: &mut ShardFastPath,
+    cl: &mut ClusterState,
+    now: Ns,
+    page: u64,
+) -> Access {
+    let lat = sender.lat();
+    let mut t = now + lat.radix_lookup;
+    fast.metrics.read_parts.add("radix", lat.radix_lookup);
+    let unit_id = sender.units().unit_of(page);
+    let remote_ok = sender
+        .units()
+        .get(unit_id)
+        .map(|u| u.alive && fast.remote_ready.get(page))
+        .unwrap_or(false);
+    if remote_ok {
+        let u = sender.units().get(unit_id).unwrap();
+        let primary = u.nodes[0];
+        let ready_at = u.ready_at;
+        t = t.max(ready_at);
+        t += lat.mrpool_get;
+        fast.metrics.read_parts.add("mrpool", lat.mrpool_get);
+        let verb = cl.fabric.rdma_read(t, cl.sender, primary, PAGE_SIZE);
+        fast.metrics.read_parts.add("rdma", verb.end - t);
+        t = verb.end + lat.copy_read_page;
+        fast.metrics.read_parts.add("copy", lat.copy_read_page);
+        fast.metrics.remote_hits += 1;
+        fast.metrics.read_latency.record(t - now);
+        return Access {
+            end: t,
+            source: Source::Remote,
+        };
+    }
+    // Remote copy unavailable: disk (Table 3 fallback).
+    let end = cl.disks[cl.sender].read(t, PAGE_SIZE);
+    fast.metrics.read_parts.add("disk", end - t);
+    fast.metrics.disk_reads += 1;
+    fast.metrics.read_latency.record(end - now);
+    Access {
+        end,
+        source: Source::Disk,
+    }
+}
+
+/// The one routing rule: the shard owning `page` is
+/// `(page / stripe) % shards`. Every router (the engine and the sharded
+/// serve front-end) must call this — hand-copies would silently drift.
+pub fn shard_of_page(page: u64, stripe_pages: u64, shards: usize) -> usize {
+    ((page / stripe_pages.max(1)) % shards.max(1) as u64) as usize
+}
+
+/// Split a write request at stripe boundaries into contiguous pieces,
+/// each of which maps to exactly one shard (also used by the sharded
+/// serve front-end to fan a large write out to its workers).
+pub(crate) fn split_stripes(
+    page: u64,
+    bytes: u64,
+    stripe: u64,
+) -> Vec<(u64, u64)> {
+    let npages = pages_for(bytes);
+    if npages == 0 {
+        return vec![(page, bytes)];
+    }
+    let end_page = page + npages;
+    let mut out = Vec::new();
+    let mut p = page;
+    let mut remaining = bytes;
+    while p < end_page {
+        let stripe_end = (p / stripe + 1) * stripe;
+        let piece_pages = stripe_end.min(end_page) - p;
+        let piece_bytes = remaining.min(piece_pages * PAGE_SIZE);
+        out.push((p, piece_bytes));
+        remaining -= piece_bytes;
+        p += piece_pages;
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// The engine
+// ---------------------------------------------------------------------
+
+/// `S` shard fast paths behind one shared remote sender (module docs).
+pub struct ShardedEngine {
+    shards: Vec<ShardFastPath>,
+    sender: RemoteSender,
+    /// Pages per stripe (one block-I/O request).
+    stripe_pages: u64,
+    /// Host free pages available to the mempools (split per shard).
+    host_free_pages: u64,
+    /// Arbiter lease total (`u64::MAX` = unleased; split per shard).
+    lease_total: u64,
+    /// True when configured with no mempool (Valet-RemoteOnly ablation):
+    /// writes go synchronously to remote memory.
+    sync_mode: bool,
+}
+
+impl ShardedEngine {
+    /// Build an engine with `shards` partitions from config. `shards = 1`
+    /// reproduces the single [`crate::coordinator::Coordinator`] exactly.
+    pub fn new(cfg: &Config, shards: usize) -> Self {
+        let shards = shards.max(1);
+        let sync_mode =
+            cfg.valet.min_pool_pages == 0 && cfg.valet.max_pool_pages == 0;
+        let stripe_pages = (cfg.valet.block_io_bytes / PAGE_SIZE).max(1);
+        // With S > 1, clamp each shard's pool to at least one stripe:
+        // a block-I/O write must always fit its shard's pool, or the
+        // alloc-backpressure loop could never make progress (nothing
+        // staged, nothing in flight, nothing reclaimable). Splitting
+        // can push a previously-safe `max_pool_pages` under that line.
+        // S = 1 is left exactly as configured (PR-1 equivalence).
+        let clamp = if shards > 1 { stripe_pages } else { 1 };
+        let mins = split_pages(cfg.valet.min_pool_pages, shards);
+        let maxs = split_pages(cfg.valet.max_pool_pages, shards);
+        let fasts = (0..shards)
+            .map(|i| {
+                ShardFastPath::new(
+                    mins[i].max(clamp),
+                    maxs[i].max(clamp),
+                    cfg.valet.grow_threshold,
+                    cfg.valet.host_free_fraction,
+                    cfg.valet.replacement,
+                )
+            })
+            .collect();
+        ShardedEngine {
+            shards: fasts,
+            sender: RemoteSender::new(cfg, shards),
+            stripe_pages,
+            host_free_pages: (cfg.cluster.node_mem_bytes / PAGE_SIZE) / 2,
+            lease_total: u64::MAX,
+            sync_mode,
+        }
+    }
+
+    // -- partitioning -------------------------------------------------
+
+    /// Number of shards.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Pages per stripe (the interleave granularity).
+    pub fn stripe_pages(&self) -> u64 {
+        self.stripe_pages
+    }
+
+    /// The shard owning `page`: see [`shard_of_page`].
+    pub fn shard_of(&self, page: u64) -> usize {
+        shard_of_page(page, self.stripe_pages, self.shards.len())
+    }
+
+    /// True when configured with no mempool (Valet-RemoteOnly ablation,
+    /// `min_pool_pages == max_pool_pages == 0`): writes go synchronously
+    /// to remote memory. The serve front-ends must honor this too.
+    pub fn is_sync_mode(&self) -> bool {
+        self.sync_mode
+    }
+
+    // -- configuration hooks (mirror the Coordinator builders) --------
+
+    /// Tag MR registrations with a distinct owner id (multi-tenant).
+    pub fn set_owner_tag(&mut self, owner: NodeId) {
+        self.sender.set_owner_tag(owner);
+    }
+
+    /// Swap in a different eviction policy (§3.5 hook).
+    pub fn set_victim_policy(
+        &mut self,
+        policy: Box<dyn crate::eviction::VictimPolicy + Send>,
+    ) {
+        self.sender.set_victim_policy(policy);
+    }
+
+    /// Swap in a different placement policy (§4.3 hook).
+    pub fn set_placement(
+        &mut self,
+        placement: Box<dyn crate::placement::Placement + Send>,
+    ) {
+        self.sender.set_placement(placement);
+    }
+
+    // -- diagnostics --------------------------------------------------
+
+    /// Shard fast paths, index order.
+    pub fn shards(&self) -> &[ShardFastPath] {
+        &self.shards
+    }
+
+    /// One shard's fast path.
+    pub fn shard(&self, i: usize) -> &ShardFastPath {
+        &self.shards[i]
+    }
+
+    /// Mutable access to one shard's fast path.
+    pub fn shard_mut(&mut self, i: usize) -> &mut ShardFastPath {
+        &mut self.shards[i]
+    }
+
+    /// The shared slow path.
+    pub fn sender(&self) -> &RemoteSender {
+        &self.sender
+    }
+
+    /// Mutable access to the shared slow path.
+    pub fn sender_mut(&mut self) -> &mut RemoteSender {
+        &mut self.sender
+    }
+
+    /// Take the engine apart into its layers (the sharded serve mode
+    /// hands each fast path to its worker thread and puts the sender
+    /// behind the shared lock).
+    pub fn into_parts(self) -> (Vec<ShardFastPath>, RemoteSender) {
+        (self.shards, self.sender)
+    }
+
+    /// Reassemble an engine from parts (serve shutdown), preserving the
+    /// host-free level the session actually ran with. The lease resets
+    /// to unleased — the sharded serve mode has no arbiter lease path.
+    pub fn from_parts(
+        cfg: &Config,
+        shards: Vec<ShardFastPath>,
+        sender: RemoteSender,
+        host_free_pages: u64,
+    ) -> Self {
+        let sync_mode =
+            cfg.valet.min_pool_pages == 0 && cfg.valet.max_pool_pages == 0;
+        ShardedEngine {
+            shards,
+            sender,
+            stripe_pages: (cfg.valet.block_io_bytes / PAGE_SIZE).max(1),
+            host_free_pages,
+            lease_total: u64::MAX,
+            sync_mode,
+        }
+    }
+
+    /// Staged (not yet remotely durable) bytes across all shards.
+    pub fn staged_bytes(&self) -> u64 {
+        self.shards.iter().map(|s| s.staging.bytes()).sum()
+    }
+
+    /// Number of mapped address-space units.
+    pub fn mapped_units(&self) -> usize {
+        self.sender.units().len()
+    }
+
+    /// Mempool slot currently holding `page`, if it is locally cached
+    /// (GPT lookup without charging latency — diagnostics only).
+    pub fn slot_of(&self, page: u64) -> Option<u32> {
+        self.shards[self.shard_of(page)].gpt.get(page)
+    }
+
+    /// Write sets not yet durable: staged + carried by in-flight RDMA.
+    pub fn pending_write_sets(&self) -> usize {
+        self.shards.iter().map(|s| s.staging.len()).sum::<usize>()
+            + self.sender.inflight_write_sets()
+    }
+
+    /// Run metrics merged across all shards.
+    pub fn combined_metrics(&self) -> RunMetrics {
+        let mut m = RunMetrics::default();
+        for s in &self.shards {
+            m.merge(&s.metrics);
+        }
+        m
+    }
+
+    // -- host/lease accounting ----------------------------------------
+
+    /// Host free pages currently granted to the mempools.
+    pub fn host_free_pages(&self) -> u64 {
+        self.host_free_pages
+    }
+
+    /// Update host free memory (container churn on the sender node); the
+    /// next pump's grow/shrink check runs against each shard's split.
+    pub fn set_host_free_pages(&mut self, pages: u64) {
+        self.host_free_pages = pages;
+    }
+
+    /// This shard's split of the current host free pages (allocation-
+    /// free — computed per request on the write path).
+    pub fn host_share(&self, shard: usize) -> u64 {
+        share_of(self.host_free_pages, self.shards.len(), shard)
+    }
+
+    /// Pages the host arbiter currently leases to this engine
+    /// (`u64::MAX` when unleased — single-tenant operation).
+    pub fn lease_pages(&self) -> u64 {
+        self.lease_total
+    }
+
+    /// Update the arbiter lease, splitting it across the shard mempools
+    /// ([`split_pages`]); each shard enforces its slice on the next pump.
+    pub fn set_lease_pages(&mut self, pages: u64) {
+        self.lease_total = pages;
+        let leases = split_pages(pages, self.shards.len());
+        for (fast, &l) in self.shards.iter_mut().zip(leases.iter()) {
+            fast.mempool.set_lease(l);
+        }
+    }
+
+    /// Give back up to `want` idle pages to the host pool, draining
+    /// shards in index order. Returns pages donated.
+    pub fn donate_idle_pages(&mut self, want: u64) -> u64 {
+        let mut donated = 0;
+        for fast in &mut self.shards {
+            if donated >= want {
+                break;
+            }
+            donated += fast.donate_idle_pages(want - donated);
+        }
+        donated
+    }
+
+    // -- the request path ---------------------------------------------
+
+    /// Front-end write (swap-out). A request larger than one stripe is
+    /// split at stripe boundaries; in virtual time the pieces start
+    /// concurrently on their shards (write *ordering* is a per-shard
+    /// property) and the request completes when the slowest piece does.
+    /// In the live serve mode the pieces' workers still serialize on
+    /// the shared slow-path lock — see [`crate::serve`]. With `S = 1`
+    /// there is no split and this is exactly the single-coordinator
+    /// write.
+    pub fn write(
+        &mut self,
+        cl: &mut ClusterState,
+        now: Ns,
+        page: u64,
+        bytes: u64,
+    ) -> Access {
+        if self.shards.len() == 1 {
+            return self.write_piece(cl, now, 0, page, bytes);
+        }
+        let mut end = now;
+        let mut source = Source::LocalPool;
+        for (p0, b) in split_stripes(page, bytes, self.stripe_pages) {
+            let s = self.shard_of(p0);
+            let a = self.write_piece(cl, now, s, p0, b);
+            end = end.max(a.end);
+            source = a.source;
+        }
+        Access { end, source }
+    }
+
+    fn write_piece(
+        &mut self,
+        cl: &mut ClusterState,
+        now: Ns,
+        shard: usize,
+        page: u64,
+        bytes: u64,
+    ) -> Access {
+        let host = self.host_share(shard);
+        let sync = self.sync_mode;
+        let ShardedEngine { shards, sender, .. } = self;
+        let fast = &mut shards[shard];
+        if sync {
+            return sender.write_sync(cl, now, page, bytes, fast);
+        }
+        shard_write(sender, fast, cl, shard, now, page, bytes, host)
+    }
+
+    /// Front-end read (swap-in): route to the owning shard; GPT hit →
+    /// mempool (the lock-free fast path in serve mode), else the shared
+    /// slow path (remote RDMA READ / disk).
+    pub fn read(
+        &mut self,
+        cl: &mut ClusterState,
+        now: Ns,
+        page: u64,
+    ) -> Access {
+        let shard = self.shard_of(page);
+        let ShardedEngine { shards, sender, .. } = self;
+        let fast = &mut shards[shard];
+        if let Some(a) = fast.try_read_local(sender.lat(), now, page) {
+            return a;
+        }
+        shard_read_miss(sender, fast, cl, now, page)
+    }
+
+    /// Drive background machinery up to `now`: drain every shard's
+    /// staging queue through the shared sender (globally oldest-first,
+    /// deterministic) plus each shard's mempool shrink check against its
+    /// host-free split (§3.4).
+    pub fn pump(&mut self, cl: &mut ClusterState, now: Ns) {
+        self.drive_all(cl, now);
+        let (hf, n) = (self.host_free_pages, self.shards.len());
+        for (i, fast) in self.shards.iter_mut().enumerate() {
+            fast.resize_for_host(share_of(hf, n, i));
+        }
+    }
+
+    /// The single pump/sender driver: apply completions, then repeatedly
+    /// pick the shard whose staging front entered first and send one
+    /// coalesced batch from it.
+    fn drive_all(&mut self, cl: &mut ClusterState, now: Ns) {
+        let ShardedEngine { shards, sender, .. } = self;
+        sender.complete_inflight(cl, now);
+        for (i, fast) in shards.iter_mut().enumerate() {
+            apply_mailbox(sender, fast, i);
+        }
+        loop {
+            let Some(s) =
+                queues::earliest_front(shards.iter().map(|f| &f.staging))
+            else {
+                break;
+            };
+            if sender.busy_until() > now {
+                break;
+            }
+            let start = sender
+                .busy_until()
+                .max(shards[s].staging.front_enqueued_at().unwrap_or(0));
+            if start > now {
+                break;
+            }
+            sender.send_one_batch(cl, start, s, &mut shards[s]);
+        }
+    }
+
+    /// A peer needs `bytes` of its donated memory back (§3.5): handled
+    /// entirely on the shared slow path (victim selection + migration).
+    pub fn remote_pressure(
+        &mut self,
+        cl: &mut ClusterState,
+        now: Ns,
+        node: NodeId,
+        bytes: u64,
+    ) -> PressureOutcome {
+        self.sender.remote_pressure(cl, now, node, bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::secs;
+
+    fn cfg(shards_pool: u64) -> Config {
+        let mut cfg = Config::default();
+        cfg.cluster.nodes = 4;
+        cfg.valet.mr_block_bytes = 1 << 20;
+        cfg.valet.min_pool_pages = shards_pool;
+        cfg.valet.max_pool_pages = shards_pool;
+        cfg
+    }
+
+    #[test]
+    fn stripe_routing_keeps_a_block_in_one_shard() {
+        let e = ShardedEngine::new(&cfg(256), 4);
+        assert_eq!(e.stripe_pages(), 16);
+        // all 16 pages of one 64 KB block route to the same shard
+        for blk in 0..8u64 {
+            let s0 = e.shard_of(blk * 16);
+            for p in blk * 16..blk * 16 + 16 {
+                assert_eq!(e.shard_of(p), s0, "page {p}");
+            }
+        }
+        // consecutive blocks land on consecutive shards
+        assert_ne!(e.shard_of(0), e.shard_of(16));
+    }
+
+    #[test]
+    fn split_stripes_covers_exactly_the_request() {
+        let pieces = split_stripes(0, 64 * 4096, 16);
+        assert_eq!(pieces, vec![
+            (0, 16 * 4096),
+            (16, 16 * 4096),
+            (32, 16 * 4096),
+            (48, 16 * 4096)
+        ]);
+        // unaligned start + partial tail page
+        let pieces = split_stripes(10, 10 * 4096 + 100, 16);
+        assert_eq!(pieces[0], (10, 6 * 4096));
+        assert_eq!(pieces[1], (16, 4 * 4096 + 100));
+        let total: u64 = pieces.iter().map(|p| p.1).sum();
+        assert_eq!(total, 10 * 4096 + 100);
+        // zero-byte request still routes somewhere
+        assert_eq!(split_stripes(5, 0, 16), vec![(5, 0)]);
+    }
+
+    #[test]
+    fn multi_shard_writes_spread_and_read_back_locally() {
+        let cfg = cfg(1024);
+        let mut cl = ClusterState::new(&cfg);
+        let mut e = ShardedEngine::new(&cfg, 4);
+        let mut t = 0;
+        for blk in 0..16u64 {
+            let a = e.write(&mut cl, t, blk * 16, 16 * PAGE_SIZE);
+            assert_eq!(a.source, Source::LocalPool);
+            t = a.end;
+        }
+        // every shard holds some pages
+        for (i, s) in e.shards().iter().enumerate() {
+            assert!(!s.gpt.is_empty(), "shard {i} empty");
+        }
+        // reads route to the owning shard and hit locally
+        for blk in 0..16u64 {
+            let r = e.read(&mut cl, t, blk * 16 + 3);
+            assert_eq!(r.source, Source::LocalPool, "block {blk}");
+            t = r.end;
+        }
+        assert_eq!(e.combined_metrics().local_hits, 16);
+    }
+
+    #[test]
+    fn one_big_write_lands_on_every_shard_and_drains() {
+        let cfg = cfg(1024);
+        let mut cl = ClusterState::new(&cfg);
+        let mut e = ShardedEngine::new(&cfg, 4);
+        // 4 stripes in one request → one piece per shard
+        let a = e.write(&mut cl, 0, 0, 4 * 16 * PAGE_SIZE);
+        assert_eq!(a.source, Source::LocalPool);
+        assert_eq!(e.pending_write_sets(), 4);
+        e.pump(&mut cl, secs(2));
+        assert_eq!(e.pending_write_sets(), 0);
+        assert_eq!(e.staged_bytes(), 0);
+        for s in e.shards() {
+            assert_eq!(s.reclaim_q.completed, 1);
+        }
+    }
+
+    #[test]
+    fn tiny_split_pools_clamp_to_one_stripe() {
+        // max_pool_pages = 64 is fine unsharded but splits to 8 pages
+        // at S=8 — under one 16-page stripe. The clamp keeps every
+        // shard able to hold a full block-I/O write (no livelock).
+        let cfg = cfg(64);
+        let mut cl = ClusterState::new(&cfg);
+        let mut e = ShardedEngine::new(&cfg, 8);
+        for s in e.shards() {
+            assert!(s.mempool.capacity() >= e.stripe_pages());
+        }
+        let a = e.write(&mut cl, 0, 0, 16 * PAGE_SIZE);
+        assert_eq!(a.source, Source::LocalPool);
+    }
+
+    #[test]
+    fn lease_split_sums_to_total() {
+        let mut e = ShardedEngine::new(&cfg(256), 4);
+        assert_eq!(e.lease_pages(), u64::MAX);
+        e.set_lease_pages(103);
+        assert_eq!(e.lease_pages(), 103);
+        let sum: u64 =
+            e.shards().iter().map(|s| s.mempool.lease()).sum();
+        assert_eq!(sum, 103);
+    }
+
+    #[test]
+    fn sync_mode_split_still_goes_remote() {
+        let mut cfg = cfg(0);
+        cfg.valet.min_pool_pages = 0;
+        cfg.valet.max_pool_pages = 0;
+        let mut cl = ClusterState::new(&cfg);
+        let mut e = ShardedEngine::new(&cfg, 2);
+        let a = e.write(&mut cl, 0, 0, 32 * PAGE_SIZE);
+        assert_eq!(a.source, Source::Remote);
+    }
+}

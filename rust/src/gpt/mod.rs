@@ -200,6 +200,43 @@ impl RadixGpt {
         }
     }
 
+    /// Look up the slot mapped for `page`, updating the leaf cache on the
+    /// way down. Unlike [`Self::get`] (read-only, cannot refresh the
+    /// cache), this keeps repeated reads inside one 64-page leaf on the
+    /// short path even when the reads were not preceded by inserts — the
+    /// serve fast path's access pattern (hot-set re-reads). Same result
+    /// as `get` for every input; only the cache state differs.
+    #[inline]
+    pub fn lookup(&mut self, page: u64) -> Option<u32> {
+        if page >> BITS == self.cache_group && self.cache_leaf != EMPTY {
+            let v = self.nodes[self.cache_leaf as usize].slots
+                [(page & (FANOUT as u64 - 1)) as usize];
+            return if v == EMPTY { None } else { Some(v) };
+        }
+        if self.root == EMPTY || page > self.capacity() {
+            return None;
+        }
+        let mut node = self.root;
+        for level in (1..self.height).rev() {
+            let idx = ((page >> (level * BITS as u32)) & (FANOUT as u64 - 1))
+                as usize;
+            node = self.nodes[node as usize].slots[idx];
+            if node == EMPTY {
+                return None;
+            }
+        }
+        // Cache the leaf: the next lookup in this 64-page group is O(1).
+        self.cache_group = page >> BITS;
+        self.cache_leaf = node;
+        let v = self.nodes[node as usize].slots
+            [(page & (FANOUT as u64 - 1)) as usize];
+        if v == EMPTY {
+            None
+        } else {
+            Some(v)
+        }
+    }
+
     /// Unmap `page`, returning its slot if it was mapped. Frees nodes
     /// that become empty (the "shrink dynamically" half).
     pub fn remove(&mut self, page: u64) -> Option<u32> {
@@ -305,6 +342,22 @@ mod tests {
             assert_eq!(t.get(p), Some((p * 3) as u32));
         }
         assert_eq!(t.get(4096), None);
+    }
+
+    #[test]
+    fn lookup_matches_get_and_warms_cache() {
+        let mut t = RadixGpt::new();
+        for p in (0..2048u64).step_by(3) {
+            t.insert(p, p as u32);
+        }
+        // invalidate the insert-time cache, then lookup from cold
+        t.remove(10_000_000);
+        for p in 0..2048u64 {
+            assert_eq!(t.lookup(p), t.get(p), "page {p}");
+        }
+        // after a lookup in a group, reads in that group hit the cache
+        assert_eq!(t.lookup(63), t.get(63));
+        assert_eq!(t.lookup(0), t.get(0));
     }
 
     #[test]

@@ -26,7 +26,8 @@
 //! | module | role |
 //! |---|---|
 //! | [`config`] | cluster/policy/latency configuration (TOML subset + CLI) |
-//! | [`coordinator`] | unified Figure-6 orchestration: GPT → mempool → staging → remote sender → reclaim, with eviction/migration hooks (§3.4–§3.5) |
+//! | [`coordinator`] | unified Figure-6 orchestration, layered into a shard-local fast path and a shared remote-sender slow path (§3.4–§3.5) |
+//! | [`engine`] | sharded request engine: S fast paths behind one sender, stripe-interleaved page space (§4.1 parallel reads) |
 //! | [`arbiter`] | multi-tenant host memory arbitration: weighted leases over the shared host pool, demand-driven grow, pressure-driven give-back (§3, Fig. 5) |
 //! | [`sim`] | virtual clock, FIFO resource servers, event queue |
 //! | [`simnet`] | RDMA fabric model: connections, MRs, verbs, WQE cache |
@@ -57,6 +58,7 @@ pub mod cluster;
 pub mod config;
 pub mod container;
 pub mod coordinator;
+pub mod engine;
 pub mod eviction;
 pub mod gpt;
 pub mod mempool;

@@ -6,7 +6,7 @@
 //!             [--config file.toml] [--set section.key=value ...]
 //! valet ml    [--kind logreg|kmeans|textrank|gboost|rf] [--fit 0.5]
 //!             [--steps N] [--artifacts DIR]
-//! valet serve [--backend valet] [--writes N] [--reads N]
+//! valet serve [--backend valet] [--shards N] [--writes N] [--reads N]
 //! valet info  — print config defaults, artifact status, cluster shape
 //! ```
 
@@ -220,7 +220,34 @@ fn cmd_ml(a: &Args) -> Result<(), String> {
 }
 
 fn cmd_serve(a: &Args) -> Result<(), String> {
-    use valet::serve::{spawn, Request};
+    use valet::serve::{spawn, spawn_sharded, Reply, Request};
+
+    // Drive the demo load through any front-end: `writes` sequential
+    // 64 KB blocks, then `reads` over the written range. Returns
+    // accumulated (wall, virtual) nanoseconds.
+    fn drive_demo(
+        call: &mut dyn FnMut(Request) -> Option<Reply>,
+        writes: u64,
+        reads: u64,
+    ) -> Result<(u64, u64), String> {
+        let mut wall = 0u64;
+        let mut virt = 0u64;
+        for i in 0..writes {
+            let r = call(Request::Write { page: i * 16, bytes: 65536 })
+                .ok_or("serve channel closed")?;
+            wall += r.wall_ns;
+            virt += r.virtual_ns;
+        }
+        let span = (writes * 16).max(1); // avoid % 0 when --writes 0
+        for i in 0..reads {
+            let r = call(Request::Read { page: (i * 37) % span })
+                .ok_or("serve channel closed")?;
+            wall += r.wall_ns;
+            virt += r.virtual_ns;
+        }
+        Ok((wall, virt))
+    }
+
     let cfg = build_config(a)?;
     let kind = a
         .flags
@@ -238,24 +265,43 @@ fn cmd_serve(a: &Args) -> Result<(), String> {
         .get("reads")
         .and_then(|s| s.parse().ok())
         .unwrap_or(1000);
+    let shards: usize = a
+        .flags
+        .get("shards")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1);
+    if shards > 1 {
+        if kind != BackendKind::Valet {
+            return Err("--shards requires the valet backend".into());
+        }
+        eprintln!(
+            "serving Valet across {shards} shard workers \
+             (demo load: {writes} writes, {reads} reads)"
+        );
+        let h = spawn_sharded(&cfg, shards);
+        let (wall, virt) = drive_demo(&mut |req| h.call(req), writes, reads)?;
+        let n = writes + reads;
+        println!("requests          : {n} (page-striped over {shards} shards)");
+        println!("mean wall service : {}", fmt::ns(wall / n.max(1)));
+        println!("mean virtual lat  : {}", fmt::ns(virt / n.max(1)));
+        let out = h.shutdown().ok_or("join failed")?;
+        let m = out.engine.combined_metrics();
+        println!(
+            "reads             : local {} remote {} disk {}",
+            m.local_hits, m.remote_hits, m.disk_reads
+        );
+        for (i, s) in out.engine.shards().iter().enumerate() {
+            println!(
+                "shard {i}           : {} local hits, {} write sets",
+                s.metrics.local_hits,
+                s.metrics.write_latency.count()
+            );
+        }
+        return Ok(());
+    }
     eprintln!("serving {} (demo load: {writes} writes, {reads} reads)", kind.name());
     let h = spawn(&cfg, kind);
-    let mut wall = 0u64;
-    let mut virt = 0u64;
-    for i in 0..writes {
-        let r = h
-            .call(Request::Write { page: i * 16, bytes: 65536 })
-            .ok_or("serve channel closed")?;
-        wall += r.wall_ns;
-        virt += r.virtual_ns;
-    }
-    for i in 0..reads {
-        let r = h
-            .call(Request::Read { page: (i * 37) % (writes * 16) })
-            .ok_or("serve channel closed")?;
-        wall += r.wall_ns;
-        virt += r.virtual_ns;
-    }
+    let (wall, virt) = drive_demo(&mut |req| h.call(req), writes, reads)?;
     let n = writes + reads;
     println!("requests          : {n}");
     println!("mean wall service : {}", fmt::ns(wall / n.max(1)));

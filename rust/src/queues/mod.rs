@@ -112,6 +112,23 @@ impl StagingQueue {
     }
 }
 
+/// Pick the staging queue whose front write set entered staging first —
+/// the shard the shared remote sender should drain next. Ties break to
+/// the lowest shard index so the drain order is deterministic across
+/// runs (the multi-shard metrics-merge determinism guarantee). Returns
+/// `None` when every queue is empty.
+pub fn earliest_front<'a, I>(queues: I) -> Option<usize>
+where
+    I: IntoIterator<Item = &'a StagingQueue>,
+{
+    queues
+        .into_iter()
+        .enumerate()
+        .filter_map(|(i, q)| q.front_enqueued_at().map(|t| (t, i)))
+        .min()
+        .map(|(_, i)| i)
+}
+
 /// FIFO queue of write sets whose remote copies are durable; their slots
 /// feed the mempool's reclaim LRU.
 #[derive(Clone, Debug, Default)]
@@ -221,6 +238,19 @@ mod tests {
         let batch = s.pop_batch(10_000);
         let pages: Vec<_> = batch.iter().map(|w| w.page).collect();
         assert_eq!(pages, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn earliest_front_picks_oldest_then_lowest_index() {
+        let mut a = StagingQueue::new();
+        let mut b = StagingQueue::new();
+        let mut c = StagingQueue::new();
+        assert_eq!(earliest_front([&a, &b, &c]), None);
+        b.push(ws(1, 10, 5));
+        c.push(ws(2, 10, 3));
+        assert_eq!(earliest_front([&a, &b, &c]), Some(2));
+        a.push(ws(3, 10, 3)); // same time as c: lowest index wins
+        assert_eq!(earliest_front([&a, &b, &c]), Some(0));
     }
 
     #[test]

@@ -1,34 +1,53 @@
-//! Live serving mode: the Valet coordinator as a running multi-threaded
-//! process (std::thread + mpsc — no tokio in this offline build). One
-//! leader thread owns the block-device front-end; a dedicated
-//! remote-sender driver thread keeps the coordinator's background
-//! pipeline (staging drain, mempool resize) moving exactly like §4.1's
-//! "Remote Sender Thread", even when no requests arrive; client threads
-//! submit read/write requests through a channel.
+//! Live serving mode: the Valet engine as a running multi-threaded
+//! process (std::thread + mpsc — no tokio in this offline build).
 //!
-//! Both this mode and the simulated experiments drive the SAME
-//! implementation of the Figure-6 flow: the leader's requests land in
-//! [`crate::coordinator::Coordinator`] via the Valet backend, so there is
-//! no separate "live" code path to drift out of sync. The multi-tenant
-//! entry ([`spawn_tenants`]) serves N containers the same way: requests
-//! carry a tenant id, and the [`crate::arbiter::HostArbiter`] runs
-//! behind the same driver thread, rebalancing leases on every Pump tick.
+//! Three front-ends share the same Figure-6 implementation:
+//!
+//! * [`spawn`] — the single-driver baseline: one leader thread owns the
+//!   block-device front-end; a dedicated remote-sender driver thread
+//!   keeps the background pipeline (staging drain, mempool resize)
+//!   moving exactly like §4.1's "Remote Sender Thread".
+//! * [`spawn_sharded`] — the **parallel sharded front-end**: one worker
+//!   thread per shard of a [`crate::engine::ShardedEngine`]. Each worker
+//!   exclusively owns its shard's fast path
+//!   ([`crate::coordinator::fast::ShardFastPath`]), so a local-cache
+//!   read hit completes without taking any lock and hit throughput
+//!   scales with the shard count — §4.1's "parallel reads" with real
+//!   threads. Writes, read misses and pump ticks enter the one mutex
+//!   around the shared slow path (cluster substrate +
+//!   [`crate::coordinator::sender::RemoteSender`]) and therefore
+//!   serialize across shards in wall-clock terms; write *ordering*
+//!   remains a per-shard property (each shard's staging queue is FIFO
+//!   on its own timeline). A single pump driver broadcasts ticks so all
+//!   shards' staging queues drain through the same coalescing batcher.
+//! * [`spawn_tenants`] — N containers behind the
+//!   [`crate::arbiter::HostArbiter`], rebalancing leases on every tick.
+//!
+//! Hot-path note: request/response channels are pooled. `call` reuses a
+//! per-handle (or per-[`ServeClient`]) reply channel instead of
+//! allocating a fresh `mpsc` pair per request — see
+//! `benches/hotpath.rs` (`serve/roundtrip`) for the measured win over
+//! the allocate-per-call path that [`ServeHandle::submit`] still takes.
 //!
 //! This mode demonstrates the *software organization* (Figure 6) with
 //! real concurrency; the latency numbers still come from the calibrated
 //! virtual-time model (a request's virtual completion is computed by the
-//! same coordinator code), so `serve` reports both wall-clock and
+//! same engine code), so `serve` reports both wall-clock and
 //! virtual-time stats.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
-use crate::arbiter::{TenantId, TenantSpec};
+use crate::arbiter::{share_of, TenantId, TenantSpec};
+use crate::backends::ClusterState;
 use crate::cluster::{Cluster, TenantCluster};
-use crate::config::{BackendKind, Config};
+use crate::config::{BackendKind, Config, LatencyConfig};
+use crate::coordinator::fast::ShardFastPath;
+use crate::coordinator::sender::RemoteSender;
+use crate::engine::{self, ShardedEngine};
 use crate::sim::{ms, Ns};
 
 /// A request to the device.
@@ -66,6 +85,8 @@ pub struct Reply {
 /// Handle to a running coordinator.
 pub struct ServeHandle {
     tx: mpsc::Sender<(Request, mpsc::Sender<Reply>)>,
+    /// Pooled reply lane for `call` — no allocation per request.
+    reply: Mutex<ReplyLane>,
     join: Option<thread::JoinHandle<Cluster>>,
     pump_stop: Arc<AtomicBool>,
     pump_join: Option<thread::JoinHandle<()>>,
@@ -147,22 +168,125 @@ pub fn spawn(cfg: &Config, kind: BackendKind) -> ServeHandle {
     });
     ServeHandle {
         tx,
+        reply: Mutex::new(ReplyLane::new()),
         join: Some(join),
         pump_stop,
         pump_join: Some(pump_join),
     }
 }
 
-impl ServeHandle {
-    /// Submit a request and wait for its completion.
-    pub fn call(&self, req: Request) -> Option<Reply> {
+/// Upper bound on waiting for a pooled reply. A pooled channel cannot
+/// observe server death through disconnection (the caller holds its own
+/// reply sender), so a request racing shutdown — enqueued but never
+/// processed — would otherwise block its caller forever. Normal replies
+/// arrive in microseconds; hitting this bound poisons the lane and the
+/// call reports `None`, like the fresh-channel path always has.
+const POOLED_RECV_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// One pooled reply lane: a reply channel reused across calls (the
+/// hot-path win over allocating an mpsc pair per request). After a
+/// receive times out the lane is **poisoned** — the receiver is
+/// discarded, so the late reply (and any later piece replies) go to a
+/// dead channel instead of sitting in the queue and being misattributed
+/// to the next request (which would leave the lane off-by-one forever).
+/// A poisoned lane answers every subsequent call with `None`, matching
+/// a dead server.
+struct ReplyLane {
+    tx: mpsc::Sender<Reply>,
+    rx: Option<mpsc::Receiver<Reply>>,
+}
+
+impl ReplyLane {
+    fn new() -> Self {
+        let (tx, rx) = mpsc::channel();
+        ReplyLane { tx, rx: Some(rx) }
+    }
+
+    /// A clonable reply address, or `None` once poisoned.
+    fn addr(&self) -> Option<mpsc::Sender<Reply>> {
+        self.rx.is_some().then(|| self.tx.clone())
+    }
+
+    /// Discard the receiver: in-flight and future replies on this lane
+    /// are dropped and every later call returns `None`.
+    fn poison(&mut self) {
+        self.rx = None;
+    }
+
+    /// Await one reply (bounded by [`POOLED_RECV_TIMEOUT`]; a timeout
+    /// poisons the lane).
+    fn recv(&mut self) -> Option<Reply> {
+        // bind first: a match on the expression would hold the shared
+        // `rx` borrow across the arm that needs `&mut self` to poison
+        let got = self.rx.as_ref()?.recv_timeout(POOLED_RECV_TIMEOUT);
+        match got {
+            Ok(r) => Some(r),
+            Err(_) => {
+                self.poison();
+                None
+            }
+        }
+    }
+
+    /// Await `sent` piece replies and fold them into the request's
+    /// completion: slowest virtual time, slowest wall time.
+    fn collect(&mut self, sent: usize) -> Option<Reply> {
+        let mut agg: Option<Reply> = None;
+        for _ in 0..sent {
+            let r = self.recv()?;
+            agg = Some(match agg {
+                None => r,
+                Some(p) => Reply {
+                    virtual_ns: p.virtual_ns.max(r.virtual_ns),
+                    wall_ns: p.wall_ns.max(r.wall_ns),
+                },
+            });
+        }
+        agg
+    }
+}
+
+/// Send `req` with the pooled reply address and await the reply.
+/// `Shutdown` uses a throwaway channel instead: the target exits without
+/// replying, and the disconnect turns into a prompt `None`.
+fn call_pooled(
+    tx: &mpsc::Sender<(Request, mpsc::Sender<Reply>)>,
+    lane: &mut ReplyLane,
+    req: Request,
+) -> Option<Reply> {
+    if matches!(req, Request::Shutdown) {
         let (rtx, rrx) = mpsc::channel();
-        self.tx.send((req, rtx)).ok()?;
-        rrx.recv().ok()
+        tx.send((req, rtx)).ok()?;
+        return rrx.recv().ok();
+    }
+    let addr = lane.addr()?;
+    tx.send((req, addr)).ok()?;
+    lane.recv()
+}
+
+impl ServeHandle {
+    /// Submit a request and wait for its completion. Reuses the handle's
+    /// pooled reply channel (callers are serialized on it); for
+    /// concurrent callers take a [`ServeClient`] per thread.
+    pub fn call(&self, req: Request) -> Option<Reply> {
+        let mut lane = self.reply.lock().ok()?;
+        call_pooled(&self.tx, &mut lane, req)
+    }
+
+    /// A cheap per-thread submitter with its own pooled reply channel
+    /// (no lock, no per-call allocation). Clients outlive shutdown
+    /// harmlessly: their calls just return `None`.
+    pub fn client(&self) -> ServeClient {
+        ServeClient {
+            tx: self.tx.clone(),
+            reply: std::cell::RefCell::new(ReplyLane::new()),
+        }
     }
 
     /// Fire-and-forget submit returning the reply channel (for
-    /// concurrent submitters).
+    /// concurrent submitters). This allocates a fresh channel per call —
+    /// the pre-pooling behavior, kept for one-shot pipelining and as the
+    /// hot-path comparison point in `benches/hotpath.rs`.
     pub fn submit(&self, req: Request) -> Option<mpsc::Receiver<Reply>> {
         let (rtx, rrx) = mpsc::channel();
         self.tx.send((req, rtx)).ok()?;
@@ -189,6 +313,354 @@ impl ServeHandle {
 impl Drop for ServeHandle {
     fn drop(&mut self) {
         let _ = self.stop_threads();
+    }
+}
+
+/// A per-thread submitter for a [`ServeHandle`]: owns its request sender
+/// and a private pooled reply channel, so concurrent client threads pay
+/// neither a lock nor a channel allocation per call.
+pub struct ServeClient {
+    tx: mpsc::Sender<(Request, mpsc::Sender<Reply>)>,
+    reply: std::cell::RefCell<ReplyLane>,
+}
+
+impl ServeClient {
+    /// Submit a request and wait for its completion.
+    pub fn call(&self, req: Request) -> Option<Reply> {
+        call_pooled(&self.tx, &mut self.reply.borrow_mut(), req)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Sharded serving — the parallel front-end over the sharded engine
+// ---------------------------------------------------------------------
+
+/// The slow-path state the shard workers share behind one mutex: the
+/// simulated substrate plus the remote sender. Everything else a request
+/// touches is shard-local and lock-free.
+struct SharedSlow {
+    cl: ClusterState,
+    sender: RemoteSender,
+    host_free_pages: u64,
+}
+
+/// Outcome of a sharded serve session: the reassembled engine (merged
+/// metrics, per-shard fast paths) plus the final substrate.
+pub struct ShardedServeOutcome {
+    /// The engine, reassembled from the workers' fast paths and the
+    /// shared sender.
+    pub engine: ShardedEngine,
+    /// Final cluster substrate.
+    pub state: ClusterState,
+}
+
+/// Handle to a running sharded serve front-end (see [`spawn_sharded`]).
+pub struct ShardedServeHandle {
+    txs: Vec<mpsc::Sender<(Request, mpsc::Sender<Reply>)>>,
+    reply: Mutex<ReplyLane>,
+    joins: Vec<Option<thread::JoinHandle<ShardFastPath>>>,
+    /// `None` once `stop_threads` has consumed it (shutdown, then Drop).
+    shared: Option<Arc<Mutex<SharedSlow>>>,
+    pump_stop: Arc<AtomicBool>,
+    pump_join: Option<thread::JoinHandle<()>>,
+    stripe_pages: u64,
+    cfg: Config,
+}
+
+/// One shard worker: exclusively owns its fast path. Local read hits
+/// run lock-free; writes, read misses and pump ticks take the shared
+/// slow-path lock.
+fn shard_worker(
+    shard: usize,
+    shards: usize,
+    sync_mode: bool,
+    lat: LatencyConfig,
+    mut fast: ShardFastPath,
+    shared: Arc<Mutex<SharedSlow>>,
+    rx: mpsc::Receiver<(Request, mpsc::Sender<Reply>)>,
+) -> ShardFastPath {
+    let mut vnow: Ns = 0;
+    for (req, reply_tx) in rx.iter() {
+        let wall0 = Instant::now();
+        match req {
+            Request::Write { page, bytes } => {
+                let mut sh = shared.lock().expect("serve lock poisoned");
+                let host = share_of(sh.host_free_pages, shards, shard);
+                let SharedSlow { cl, sender, .. } = &mut *sh;
+                // Valet-RemoteOnly ablation (no mempool): synchronous
+                // remote write, exactly like the single-driver path.
+                let a = if sync_mode {
+                    sender.write_sync(cl, vnow, page, bytes, &mut fast)
+                } else {
+                    engine::shard_write(
+                        sender, &mut fast, cl, shard, vnow, page, bytes,
+                        host,
+                    )
+                };
+                drop(sh);
+                let lat_v = a.end - vnow;
+                vnow = a.end;
+                let _ = reply_tx.send(Reply {
+                    virtual_ns: lat_v,
+                    wall_ns: wall0.elapsed().as_nanos() as u64,
+                });
+            }
+            Request::Read { page } => {
+                // The payoff: a local-cache hit never takes the lock, so
+                // S workers serve hits fully in parallel.
+                let a = match fast.try_read_local(&lat, vnow, page) {
+                    Some(a) => a,
+                    None => {
+                        let mut sh =
+                            shared.lock().expect("serve lock poisoned");
+                        let SharedSlow { cl, sender, .. } = &mut *sh;
+                        engine::shard_read_miss(
+                            sender, &mut fast, cl, vnow, page,
+                        )
+                    }
+                };
+                let lat_v = a.end - vnow;
+                vnow = a.end;
+                let _ = reply_tx.send(Reply {
+                    virtual_ns: lat_v,
+                    wall_ns: wall0.elapsed().as_nanos() as u64,
+                });
+            }
+            Request::Pump => {
+                vnow += PUMP_TICK;
+                let mut sh = shared.lock().expect("serve lock poisoned");
+                let host = share_of(sh.host_free_pages, shards, shard);
+                let SharedSlow { cl, sender, .. } = &mut *sh;
+                engine::drive_shard(sender, &mut fast, cl, vnow, shard);
+                drop(sh);
+                fast.resize_for_host(host);
+                let _ = reply_tx.send(Reply {
+                    virtual_ns: 0,
+                    wall_ns: wall0.elapsed().as_nanos() as u64,
+                });
+            }
+            Request::Shutdown => break,
+        }
+    }
+    fast
+}
+
+/// Spawn the sharded serve front-end: one worker thread per shard of an
+/// `S`-shard engine (page-routed: `shard_of(page) = (page / stripe) % S`)
+/// plus the single pump/sender driver that broadcasts ticks so every
+/// shard's staging queue drains through the shared coalescing batcher.
+/// `spawn_sharded(cfg, 1)` is behaviorally the single-driver [`spawn`]
+/// with the Valet backend.
+pub fn spawn_sharded(cfg: &Config, shards: usize) -> ShardedServeHandle {
+    let shards = shards.max(1);
+    let engine = ShardedEngine::new(cfg, shards);
+    let stripe_pages = engine.stripe_pages();
+    let host_free_pages = engine.host_free_pages();
+    let sync_mode = engine.is_sync_mode();
+    let (fasts, sender) = engine.into_parts();
+    let shared = Arc::new(Mutex::new(SharedSlow {
+        cl: ClusterState::new(cfg),
+        sender,
+        host_free_pages,
+    }));
+    let mut txs = Vec::with_capacity(shards);
+    let mut joins = Vec::with_capacity(shards);
+    for (i, fast) in fasts.into_iter().enumerate() {
+        let (tx, rx) = mpsc::channel::<(Request, mpsc::Sender<Reply>)>();
+        let sh = shared.clone();
+        let lat = cfg.latency.clone();
+        joins.push(Some(thread::spawn(move || {
+            shard_worker(i, shards, sync_mode, lat, fast, sh, rx)
+        })));
+        txs.push(tx);
+    }
+    // The single pump/sender driver: broadcast a tick to every shard so
+    // all staging queues keep draining even when no requests arrive.
+    let pump_stop = Arc::new(AtomicBool::new(false));
+    let pump_txs = txs.clone();
+    let stop = pump_stop.clone();
+    let pump_join = thread::spawn(move || {
+        while !stop.load(Ordering::Relaxed) {
+            for tx in &pump_txs {
+                let (rtx, _rrx) = mpsc::channel();
+                if tx.send((Request::Pump, rtx)).is_err() {
+                    return; // a worker is gone: shutting down
+                }
+            }
+            thread::sleep(PUMP_INTERVAL);
+        }
+    });
+    ShardedServeHandle {
+        txs,
+        reply: Mutex::new(ReplyLane::new()),
+        joins,
+        shared: Some(shared),
+        pump_stop,
+        pump_join: Some(pump_join),
+        stripe_pages,
+        cfg: cfg.clone(),
+    }
+}
+
+impl ShardedServeHandle {
+    /// Number of shard workers.
+    pub fn shards(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// The shard worker owning `page` (see
+    /// [`crate::engine::shard_of_page`]).
+    pub fn shard_of(&self, page: u64) -> usize {
+        engine::shard_of_page(page, self.stripe_pages, self.txs.len())
+    }
+
+    /// Submit a request and wait for its completion. Reads route to the
+    /// owning shard; writes larger than one stripe are split at stripe
+    /// boundaries and fan out to their shards in parallel (the reply
+    /// aggregates the slowest piece); `Pump` broadcasts to every shard.
+    pub fn call(&self, req: Request) -> Option<Reply> {
+        let mut lane = self.reply.lock().ok()?;
+        sharded_call(&self.txs, self.stripe_pages, &mut lane, req)
+    }
+
+    /// A per-thread submitter with its own pooled reply lane.
+    pub fn client(&self) -> ShardedServeClient {
+        ShardedServeClient {
+            txs: self.txs.clone(),
+            reply: std::cell::RefCell::new(ReplyLane::new()),
+            stripe_pages: self.stripe_pages,
+        }
+    }
+
+    fn stop_threads(&mut self) -> Option<ShardedServeOutcome> {
+        self.pump_stop.store(true, Ordering::Relaxed);
+        for tx in &self.txs {
+            let (rtx, _rrx) = mpsc::channel();
+            let _ = tx.send((Request::Shutdown, rtx));
+        }
+        let shared = self.shared.take()?; // None after the first run
+        let mut fasts = Vec::with_capacity(self.joins.len());
+        for j in &mut self.joins {
+            let fast = j.take().and_then(|j| j.join().ok())?;
+            fasts.push(fast);
+        }
+        if let Some(p) = self.pump_join.take() {
+            let _ = p.join();
+        }
+        // workers + pump are joined: this handle holds the last clone
+        let slow = Arc::try_unwrap(shared).ok()?.into_inner().ok()?;
+        Some(ShardedServeOutcome {
+            engine: ShardedEngine::from_parts(
+                &self.cfg,
+                fasts,
+                slow.sender,
+                slow.host_free_pages,
+            ),
+            state: slow.cl,
+        })
+    }
+
+    /// Stop every worker and return the reassembled engine + substrate.
+    pub fn shutdown(mut self) -> Option<ShardedServeOutcome> {
+        self.stop_threads()
+    }
+}
+
+impl Drop for ShardedServeHandle {
+    fn drop(&mut self) {
+        let _ = self.stop_threads();
+    }
+}
+
+/// A per-thread submitter for a [`ShardedServeHandle`]: owns clones of
+/// every shard's request sender plus a private pooled reply channel.
+pub struct ShardedServeClient {
+    txs: Vec<mpsc::Sender<(Request, mpsc::Sender<Reply>)>>,
+    reply: std::cell::RefCell<ReplyLane>,
+    stripe_pages: u64,
+}
+
+impl ShardedServeClient {
+    /// Submit a request and wait for its completion (same routing rules
+    /// as [`ShardedServeHandle::call`]).
+    pub fn call(&self, req: Request) -> Option<Reply> {
+        let mut lane = self.reply.borrow_mut();
+        sharded_call(&self.txs, self.stripe_pages, &mut lane, req)
+    }
+}
+
+/// Shared sharded-call body for handle + client: dispatch to the
+/// shard(s), then fold the piece replies. A dispatch failure (dead
+/// workers) poisons the lane so already-sent pieces' late replies can
+/// never be misattributed to a later request.
+fn sharded_call(
+    txs: &[mpsc::Sender<(Request, mpsc::Sender<Reply>)>],
+    stripe_pages: u64,
+    lane: &mut ReplyLane,
+    req: Request,
+) -> Option<Reply> {
+    let addr = lane.addr()?;
+    let Some(sent) = dispatch_sharded(txs, stripe_pages, req, &addr)
+    else {
+        // Shutdown legitimately expects no replies; any other failed
+        // dispatch means workers died mid-fan-out.
+        if !matches!(req, Request::Shutdown) {
+            lane.poison();
+        }
+        return None;
+    };
+    lane.collect(sent)
+}
+
+/// Shared routing for handle + client: send `req` to its shard(s) and
+/// return the number of replies to expect (`None` if a send failed or
+/// the request was a no-reply `Shutdown`).
+fn dispatch_sharded(
+    txs: &[mpsc::Sender<(Request, mpsc::Sender<Reply>)>],
+    stripe_pages: u64,
+    req: Request,
+    reply_tx: &mpsc::Sender<Reply>,
+) -> Option<usize> {
+    let shard_of =
+        |page: u64| engine::shard_of_page(page, stripe_pages, txs.len());
+    match req {
+        Request::Read { page } => {
+            txs[shard_of(page)]
+                .send((req, reply_tx.clone()))
+                .ok()?;
+            Some(1)
+        }
+        Request::Write { page, bytes } => {
+            if txs.len() == 1 {
+                // single shard: no split — identical to the baseline
+                txs[0].send((req, reply_tx.clone())).ok()?;
+                return Some(1);
+            }
+            let pieces =
+                engine::split_stripes(page, bytes, stripe_pages);
+            for &(p0, b) in &pieces {
+                txs[shard_of(p0)]
+                    .send((
+                        Request::Write { page: p0, bytes: b },
+                        reply_tx.clone(),
+                    ))
+                    .ok()?;
+            }
+            Some(pieces.len())
+        }
+        Request::Pump => {
+            for tx in txs {
+                tx.send((Request::Pump, reply_tx.clone())).ok()?;
+            }
+            Some(txs.len())
+        }
+        Request::Shutdown => {
+            for tx in txs {
+                let (rtx, _rrx) = mpsc::channel();
+                tx.send((Request::Shutdown, rtx)).ok()?;
+            }
+            None
+        }
     }
 }
 
@@ -227,6 +699,11 @@ pub enum TenantRequest {
 /// Handle to a running multi-tenant coordinator group.
 pub struct TenantServeHandle {
     tx: mpsc::Sender<(TenantRequest, mpsc::Sender<Reply>)>,
+    reply: Mutex<ReplyLane>,
+    /// Registered tenant count — lets `call` reject unknown tenant ids
+    /// client-side so the pooled reply lane never blocks on the
+    /// leader's drop-the-reply error path.
+    tenants: usize,
     join: Option<thread::JoinHandle<TenantCluster>>,
     pump_stop: Arc<AtomicBool>,
     pump_join: Option<thread::JoinHandle<()>>,
@@ -241,6 +718,7 @@ pub struct TenantServeHandle {
 pub fn spawn_tenants(cfg: &Config, specs: &[TenantSpec]) -> TenantServeHandle {
     let cfg = cfg.clone();
     let specs = specs.to_vec();
+    let specs_len = specs.len();
     let (tx, rx) = mpsc::channel::<(TenantRequest, mpsc::Sender<Reply>)>();
     let join = thread::spawn(move || {
         let mut cluster = TenantCluster::new(&cfg, &specs);
@@ -305,6 +783,8 @@ pub fn spawn_tenants(cfg: &Config, specs: &[TenantSpec]) -> TenantServeHandle {
     });
     TenantServeHandle {
         tx,
+        reply: Mutex::new(ReplyLane::new()),
+        tenants: specs_len,
         join: Some(join),
         pump_stop,
         pump_join: Some(pump_join),
@@ -312,11 +792,31 @@ pub fn spawn_tenants(cfg: &Config, specs: &[TenantSpec]) -> TenantServeHandle {
 }
 
 impl TenantServeHandle {
-    /// Submit a request and wait for its completion.
+    /// Submit a request and wait for its completion (pooled reply
+    /// channel — no allocation per call). An unknown tenant id fails
+    /// fast with `None` without reaching the leader; the leader keeps
+    /// its own guard for `submit` callers.
     pub fn call(&self, req: TenantRequest) -> Option<Reply> {
-        let (rtx, rrx) = mpsc::channel();
-        self.tx.send((req, rtx)).ok()?;
-        rrx.recv().ok()
+        match req {
+            TenantRequest::Shutdown => {
+                // the leader exits without replying; a throwaway channel
+                // disconnects so this returns None instead of blocking
+                let (rtx, rrx) = mpsc::channel();
+                self.tx.send((req, rtx)).ok()?;
+                return rrx.recv().ok();
+            }
+            TenantRequest::Write { tenant, .. }
+            | TenantRequest::Read { tenant, .. }
+                if tenant >= self.tenants =>
+            {
+                return None;
+            }
+            _ => {}
+        }
+        let mut lane = self.reply.lock().ok()?;
+        let addr = lane.addr()?;
+        self.tx.send((req, addr)).ok()?;
+        lane.recv()
     }
 
     /// Fire-and-forget submit returning the reply channel.
@@ -392,6 +892,32 @@ mod tests {
     }
 
     #[test]
+    fn per_thread_clients_share_one_leader() {
+        let h = spawn(&cfg(), BackendKind::Valet);
+        let _ = h.call(Request::Write { page: 0, bytes: 65536 }).unwrap();
+        let clients: Vec<_> = (0..4).map(|_| h.client()).collect();
+        let joins: Vec<_> = clients
+            .into_iter()
+            .map(|c| {
+                std::thread::spawn(move || {
+                    let mut hits = 0;
+                    for _ in 0..50 {
+                        let r = c.call(Request::Read { page: 0 }).unwrap();
+                        if r.virtual_ns < 100_000 {
+                            hits += 1;
+                        }
+                    }
+                    hits
+                })
+            })
+            .collect();
+        let total: u64 = joins.into_iter().map(|j| j.join().unwrap()).sum();
+        assert_eq!(total, 200, "all reads must be local hits");
+        let cluster = h.shutdown().unwrap();
+        assert_eq!(cluster.backend.metrics().local_hits, 200);
+    }
+
+    #[test]
     fn pump_ticks_advance_background_work() {
         let h = spawn(&cfg(), BackendKind::Valet);
         let _ = h.call(Request::Write { page: 0, bytes: 65536 }).unwrap();
@@ -415,6 +941,114 @@ mod tests {
     #[test]
     fn drop_shuts_down_cleanly() {
         let h = spawn(&cfg(), BackendKind::LinuxSwap);
+        let _ = h.call(Request::Write { page: 0, bytes: 4096 });
+        drop(h); // must not hang
+    }
+
+    #[test]
+    fn sharded_roundtrip_routes_by_page() {
+        let h = spawn_sharded(&cfg(), 2);
+        assert_eq!(h.shards(), 2);
+        // blocks 0 and 1 land on different shards
+        assert_ne!(h.shard_of(0), h.shard_of(16));
+        let w0 = h.call(Request::Write { page: 0, bytes: 65536 }).unwrap();
+        assert!(w0.virtual_ns > 0);
+        let w1 = h.call(Request::Write { page: 16, bytes: 65536 }).unwrap();
+        assert!(w1.virtual_ns > 0);
+        let r0 = h.call(Request::Read { page: 0 }).unwrap();
+        assert!(r0.virtual_ns < 100_000, "{}", r0.virtual_ns);
+        let r1 = h.call(Request::Read { page: 16 }).unwrap();
+        assert!(r1.virtual_ns < 100_000, "{}", r1.virtual_ns);
+        let out = h.shutdown().unwrap();
+        let m = out.engine.combined_metrics();
+        assert_eq!(m.local_hits, 2);
+        // each shard served exactly one hit
+        for s in out.engine.shards() {
+            assert_eq!(s.metrics.local_hits, 1);
+        }
+    }
+
+    #[test]
+    fn sharded_write_spanning_stripes_fans_out() {
+        let h = spawn_sharded(&cfg(), 2);
+        // 2 stripes in one request → one piece per shard
+        let w = h
+            .call(Request::Write { page: 0, bytes: 2 * 16 * 4096 })
+            .unwrap();
+        assert!(w.virtual_ns > 0);
+        // both halves read back as local hits from their shards
+        let a = h.call(Request::Read { page: 3 }).unwrap();
+        let b = h.call(Request::Read { page: 19 }).unwrap();
+        assert!(a.virtual_ns < 100_000);
+        assert!(b.virtual_ns < 100_000);
+        let out = h.shutdown().unwrap();
+        for s in out.engine.shards() {
+            assert_eq!(s.metrics.write_latency.count(), 1);
+        }
+    }
+
+    #[test]
+    fn sharded_background_drains_via_pump_broadcast() {
+        let h = spawn_sharded(&cfg(), 2);
+        let _ = h
+            .call(Request::Write { page: 0, bytes: 2 * 16 * 4096 })
+            .unwrap();
+        // deterministically drive both workers past the mapping window
+        for _ in 0..300 {
+            let _ = h.call(Request::Pump).unwrap();
+        }
+        let out = h.shutdown().unwrap();
+        assert_eq!(out.engine.pending_write_sets(), 0);
+        assert_eq!(out.engine.staged_bytes(), 0);
+        assert!(out.engine.mapped_units() >= 1);
+    }
+
+    #[test]
+    fn sharded_parallel_clients_hit_their_shards() {
+        let h = spawn_sharded(&cfg(), 2);
+        for blk in 0..4u64 {
+            let _ = h
+                .call(Request::Write { page: blk * 16, bytes: 65536 })
+                .unwrap();
+        }
+        let joins: Vec<_> = (0..4u64)
+            .map(|blk| {
+                let c = h.client();
+                std::thread::spawn(move || {
+                    for _ in 0..25 {
+                        let r = c
+                            .call(Request::Read { page: blk * 16 })
+                            .unwrap();
+                        assert!(r.virtual_ns < 100_000);
+                    }
+                })
+            })
+            .collect();
+        for j in joins {
+            j.join().unwrap();
+        }
+        let out = h.shutdown().unwrap();
+        assert_eq!(out.engine.combined_metrics().local_hits, 100);
+    }
+
+    #[test]
+    fn sharded_sync_mode_writes_go_remote() {
+        // Valet-RemoteOnly ablation (no mempool): the shard workers must
+        // take the synchronous write path like the single-driver spawn,
+        // not spin on an unusable 1-slot pool.
+        let mut cfg = cfg();
+        cfg.valet.min_pool_pages = 0;
+        cfg.valet.max_pool_pages = 0;
+        let h = spawn_sharded(&cfg, 2);
+        let w = h.call(Request::Write { page: 0, bytes: 65536 }).unwrap();
+        // the first sync write pays connection + mapping (~263 ms)
+        assert!(w.virtual_ns > 200_000_000, "{}", w.virtual_ns);
+        drop(h);
+    }
+
+    #[test]
+    fn sharded_drop_shuts_down_cleanly() {
+        let h = spawn_sharded(&cfg(), 4);
         let _ = h.call(Request::Write { page: 0, bytes: 4096 });
         drop(h); // must not hang
     }

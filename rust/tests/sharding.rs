@@ -1,0 +1,331 @@
+//! Shard-equivalence regression tests for the sharded request engine:
+//!
+//! * `S = 1` — the one-shard [`ShardedEngine`] must match the (PR-1)
+//!   single `Coordinator` **bit for bit** on metrics, hit splits,
+//!   latencies and background state for an identical operation sequence.
+//!   (The Coordinator is a thin wrapper over the one-shard engine, and
+//!   the Table-7 latency pins in `tests/coordinator.rs` anchor that
+//!   shared implementation to the PR-1 behavior.)
+//! * `S ≥ 2` — the merged metrics must be deterministic across runs,
+//!   read-your-writes must hold across the shard partition, and aligned
+//!   single-stripe requests must see sharding-invariant latencies.
+
+use valet::backends::{ClusterState, Source};
+use valet::cluster::ShardedCluster;
+use valet::config::Config;
+use valet::coordinator::Coordinator;
+use valet::engine::ShardedEngine;
+use valet::metrics::RunMetrics;
+use valet::sim::{ms, Ns};
+use valet::util::Rng;
+use valet::PAGE_SIZE;
+
+fn small_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.cluster.nodes = 5;
+    cfg.valet.mr_block_bytes = 1 << 20;
+    cfg.valet.min_pool_pages = 64;
+    cfg.valet.max_pool_pages = 64;
+    cfg
+}
+
+/// One deterministic mixed op sequence (writes / reads / pumps).
+#[derive(Clone, Copy, Debug)]
+enum Op {
+    Write(u64, u64),
+    Read(u64),
+    Pump(Ns),
+}
+
+fn workload(n: usize, seed: u64) -> Vec<Op> {
+    let mut rng = Rng::new(seed);
+    let mut ops = Vec::with_capacity(n);
+    for _ in 0..n {
+        match rng.below(5) {
+            0 | 1 => {
+                // block-aligned 64 KB writes (one stripe)
+                ops.push(Op::Write(rng.below(128) * 16, 16 * PAGE_SIZE));
+            }
+            2 => {
+                // single-page rewrites exercise the §5.2 UPDATE flag
+                ops.push(Op::Write(rng.below(2048), PAGE_SIZE));
+            }
+            3 => ops.push(Op::Read(rng.below(2048))),
+            _ => ops.push(Op::Pump(ms(rng.below(40)))),
+        }
+    }
+    ops
+}
+
+/// Everything we compare between two runs.
+#[derive(Debug, PartialEq)]
+struct Summary {
+    finished_at: Ns,
+    local_hits: u64,
+    remote_hits: u64,
+    disk_reads: u64,
+    read_count: u64,
+    read_mean_bits: u64,
+    read_p50: u64,
+    read_p99: u64,
+    write_count: u64,
+    write_mean_bits: u64,
+    write_p50: u64,
+    write_p99: u64,
+    stall_ns: u128,
+    pending: usize,
+    staged_bytes: u64,
+    disk_writes: u64,
+    mapped_units: usize,
+}
+
+fn summarize(
+    m: &RunMetrics,
+    t: Ns,
+    pending: usize,
+    staged: u64,
+    units: usize,
+) -> Summary {
+    Summary {
+        finished_at: t,
+        local_hits: m.local_hits,
+        remote_hits: m.remote_hits,
+        disk_reads: m.disk_reads,
+        read_count: m.read_latency.count(),
+        read_mean_bits: m.read_latency.mean().to_bits(),
+        read_p50: m.read_latency.p50(),
+        read_p99: m.read_latency.p99(),
+        write_count: m.write_latency.count(),
+        write_mean_bits: m.write_latency.mean().to_bits(),
+        write_p50: m.write_latency.p50(),
+        write_p99: m.write_latency.p99(),
+        stall_ns: m.write_parts.sum("stall"),
+        pending,
+        staged_bytes: staged,
+        disk_writes: m.disk_writes,
+        mapped_units: units,
+    }
+}
+
+fn run_coordinator(cfg: &Config, ops: &[Op]) -> Summary {
+    let mut cl = ClusterState::new(cfg);
+    let mut co = Coordinator::new(cfg);
+    let mut t: Ns = 0;
+    for &op in ops {
+        match op {
+            Op::Write(page, bytes) => t = co.write(&mut cl, t, page, bytes).end,
+            Op::Read(page) => t = co.read(&mut cl, t, page).end,
+            Op::Pump(dt) => {
+                t += dt;
+                co.pump(&mut cl, t);
+            }
+        }
+    }
+    summarize(
+        co.metrics(),
+        t,
+        co.pending_write_sets(),
+        co.staged_bytes(),
+        co.mapped_units(),
+    )
+}
+
+fn run_engine(cfg: &Config, shards: usize, ops: &[Op]) -> (Summary, Vec<u64>) {
+    let mut cl = ClusterState::new(cfg);
+    let mut e = ShardedEngine::new(cfg, shards);
+    let mut t: Ns = 0;
+    for &op in ops {
+        match op {
+            Op::Write(page, bytes) => t = e.write(&mut cl, t, page, bytes).end,
+            Op::Read(page) => t = e.read(&mut cl, t, page).end,
+            Op::Pump(dt) => {
+                t += dt;
+                e.pump(&mut cl, t);
+            }
+        }
+    }
+    let m = e.combined_metrics();
+    let per_shard_hits =
+        e.shards().iter().map(|s| s.metrics.local_hits).collect();
+    (
+        summarize(
+            &m,
+            t,
+            e.pending_write_sets(),
+            e.staged_bytes(),
+            e.mapped_units(),
+        ),
+        per_shard_hits,
+    )
+}
+
+#[test]
+fn s1_engine_matches_single_coordinator_bit_for_bit() {
+    let cfg = small_cfg();
+    let ops = workload(2_500, 17);
+    let coord = run_coordinator(&cfg, &ops);
+    let (engine, per_shard) = run_engine(&cfg, 1, &ops);
+    assert_eq!(coord, engine);
+    assert_eq!(per_shard.len(), 1);
+    assert_eq!(per_shard[0], engine.local_hits);
+    // the workload must actually exercise every tier for the
+    // equivalence to mean anything
+    assert!(engine.local_hits > 0, "{engine:?}");
+    assert!(engine.remote_hits > 0, "{engine:?}");
+    assert!(engine.write_count > 0);
+}
+
+#[test]
+fn s1_equivalence_holds_under_backpressure() {
+    // A tiny pool forces alloc stalls (the wait-for-reclaimable path):
+    // the sharded engine must reproduce the stall accounting exactly.
+    let mut cfg = small_cfg();
+    cfg.valet.min_pool_pages = 16;
+    cfg.valet.max_pool_pages = 16;
+    let ops = workload(1_200, 23);
+    let coord = run_coordinator(&cfg, &ops);
+    let (engine, _) = run_engine(&cfg, 1, &ops);
+    assert_eq!(coord, engine);
+    assert!(engine.stall_ns > 0, "workload must stall: {engine:?}");
+}
+
+#[test]
+fn multi_shard_metrics_merge_is_deterministic() {
+    let mut cfg = small_cfg();
+    cfg.valet.min_pool_pages = 256;
+    cfg.valet.max_pool_pages = 256;
+    let ops = workload(2_500, 41);
+    let (a, a_shards) = run_engine(&cfg, 4, &ops);
+    let (b, b_shards) = run_engine(&cfg, 4, &ops);
+    assert_eq!(a, b);
+    assert_eq!(a_shards, b_shards);
+    assert_eq!(a_shards.len(), 4);
+    // the partition really spreads work
+    assert!(a_shards.iter().filter(|&&h| h > 0).count() >= 2, "{a_shards:?}");
+}
+
+#[test]
+fn sharded_read_your_writes_never_hits_disk() {
+    // Random writes/reads/pumps across the 4-way partition: a read of
+    // any written page must be served from memory (local or remote).
+    let mut cfg = small_cfg();
+    cfg.valet.min_pool_pages = 128;
+    cfg.valet.max_pool_pages = 128;
+    let mut cl = ClusterState::new(&cfg);
+    let mut e = ShardedEngine::new(&cfg, 4);
+    let mut rng = Rng::new(77);
+    let mut written = Vec::new();
+    let mut t = 0;
+    for _ in 0..3_000 {
+        match rng.below(4) {
+            0 | 1 => {
+                let page = rng.below(4096);
+                t = e.write(&mut cl, t, page, PAGE_SIZE).end;
+                written.push(page);
+            }
+            2 if !written.is_empty() => {
+                let page = written[rng.below_usize(written.len())];
+                let a = e.read(&mut cl, t, page);
+                assert_ne!(
+                    a.source,
+                    Source::Disk,
+                    "page {page} fell to disk at t={t}"
+                );
+                t = a.end;
+            }
+            _ => {
+                t += ms(rng.below(50));
+                e.pump(&mut cl, t);
+            }
+        }
+    }
+    assert_eq!(e.combined_metrics().disk_reads, 0);
+}
+
+#[test]
+fn aligned_block_latency_is_sharding_invariant() {
+    // A single-stripe (64 KB) write and its read-back hit cost exactly
+    // the same virtual time at S=1 and S=4 — the refactor's safety
+    // argument in one assert.
+    let cfg = small_cfg();
+    let mut lats = Vec::new();
+    for shards in [1usize, 4] {
+        let mut cl = ClusterState::new(&cfg);
+        let mut e = ShardedEngine::new(&cfg, shards);
+        let w = e.write(&mut cl, 0, 16, 16 * PAGE_SIZE);
+        let r = e.read(&mut cl, w.end, 16);
+        assert_eq!(r.source, Source::LocalPool);
+        lats.push((w.end, r.end - w.end));
+    }
+    assert_eq!(lats[0], lats[1]);
+    // and they are the Table-7a numbers (write ≈ 35.31 µs, hit ≈ 3.5 µs)
+    assert!((lats[0].0 as f64 - 35_310.0).abs() < 500.0, "{lats:?}");
+    assert!((lats[0].1 as f64 - 3_500.0).abs() < 200.0, "{lats:?}");
+}
+
+#[test]
+fn stalled_shard_recovers_from_mailbox_filled_by_another_shard() {
+    // Serve-style flow (per-shard drives, no global pump): shard 1's
+    // drive completes shard 0's in-flight batch into shard 0's mailbox.
+    // Shard 0's next write then finds a full pool with nothing
+    // reclaimable IN the mempool — the backpressure path must apply the
+    // parked mailbox instead of spinning forever.
+    use valet::engine::{drive_shard, shard_write};
+    use valet::sim::{secs, us};
+
+    let mut cfg = small_cfg();
+    cfg.valet.min_pool_pages = 32; // 16 slots per shard at S=2
+    cfg.valet.max_pool_pages = 32;
+    let mut cl = ClusterState::new(&cfg);
+    let (mut fasts, mut sender) =
+        ShardedEngine::new(&cfg, 2).into_parts();
+    let mut f1 = fasts.pop().unwrap();
+    let mut f0 = fasts.pop().unwrap();
+    // shard 0 (stripes 0, 2, ...): one stripe fills its 16-slot pool;
+    // the opportunistic drive moves the write set into flight
+    let a = shard_write(
+        &mut sender, &mut f0, &mut cl, 0, 0, 0, 16 * PAGE_SIZE, 1 << 20,
+    );
+    // much later, shard 1's drive completes shard 0's batch — it lands
+    // parked in shard 0's mailbox, unapplied
+    let now = a.end + secs(2);
+    drive_shard(&mut sender, &mut f1, &mut cl, now, 1);
+    assert_eq!(f0.mempool.reclaimable_count(), 0, "parked, not applied");
+    // shard 0 writes its next stripe (pages 32..48): must recycle via
+    // the parked mailbox and complete on the normal ~35 µs path
+    let b = shard_write(
+        &mut sender, &mut f0, &mut cl, 0, now, 32, 16 * PAGE_SIZE, 1 << 20,
+    );
+    assert!(b.end - now < us(100), "stalled: {} ns", b.end - now);
+    assert_eq!(f0.reclaim_q.completed, 1);
+}
+
+#[test]
+fn sharded_cluster_host_collapse_respects_every_shard_floor() {
+    let mut cfg = small_cfg();
+    cfg.valet.min_pool_pages = 64;
+    cfg.valet.max_pool_pages = 4096;
+    let mut cl = ShardedCluster::new(&cfg, 4);
+    let mut t = 0;
+    for blk in 0..64u64 {
+        t = cl.write(t, blk * 16, 16 * PAGE_SIZE).end;
+    }
+    let grown: u64 = cl
+        .engine
+        .shards()
+        .iter()
+        .map(|s| s.mempool.capacity())
+        .sum();
+    assert!(grown > 64, "pool should have grown: {grown}");
+    cl.engine.set_host_free_pages(0);
+    for _ in 0..64 {
+        t += valet::sim::secs(1);
+        cl.advance(t);
+        for (i, s) in cl.engine.shards().iter().enumerate() {
+            assert!(
+                s.mempool.capacity() >= s.mempool.min_pages(),
+                "shard {i} under its floor"
+            );
+        }
+    }
+}
