@@ -35,6 +35,33 @@ if [ "$FAST" -eq 0 ]; then
         --json target/bench-smoke.json >/dev/null
     # at least one {id, metric, value} record must have been emitted
     grep -q '"metric"' target/bench-smoke.json
+    # the read-pipeline experiment must emit its prefetch-coverage
+    # records and the self-baselining (non-)regression records: the
+    # sequential read-latency speedup vs the demand-only path, and the
+    # random-mix delta (the no-harm guarantee)
+    grep -q '"metric":"prefetch_coverage"' target/bench-smoke.json
+    grep -q '"metric":"prefetch_accuracy"' target/bench-smoke.json
+    grep -q '"metric":"seq_speedup"' target/bench-smoke.json
+    grep -q '"metric":"seq_read_mean_us_on"' target/bench-smoke.json
+    grep -q '"metric":"batch_speedup"' target/bench-smoke.json
+    grep -q '"metric":"rand_regression_pct"' target/bench-smoke.json
+    # numeric gate (python3 is present on the CI image): sequential
+    # reads must get FASTER with the pipeline on, and the random mix
+    # must stay within noise of the demand-only baseline
+    if command -v python3 >/dev/null 2>&1; then
+        python3 - <<'EOF'
+import json
+recs = json.load(open("target/bench-smoke.json"))
+kv = {r["metric"]: r["value"] for r in recs if r["id"] == "prefetch"}
+assert kv["seq_speedup"] > 1.0, f"seq_speedup {kv['seq_speedup']}"
+assert kv["batch_speedup"] > 1.0, f"batch_speedup {kv['batch_speedup']}"
+assert abs(kv["rand_regression_pct"]) < 5.0, \
+    f"random mix regressed: {kv['rand_regression_pct']}%"
+print(f"read pipeline: seq x{kv['seq_speedup']:.2f}, "
+      f"batch x{kv['batch_speedup']:.2f}, "
+      f"rand {kv['rand_regression_pct']:+.2f}%")
+EOF
+    fi
     echo "wrote target/bench-smoke.json"
 else
     echo "skipped (--fast: needs the release build)"

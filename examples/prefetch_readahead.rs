@@ -1,0 +1,115 @@
+//! Read-pipeline demo: a sequential scan over a remote-resident file
+//! with the adaptive stride prefetcher off vs on, a batched block read,
+//! and the auto-disable guarantee on a random mix.
+//!
+//! ```text
+//! cargo run --release --example prefetch_readahead
+//! ```
+
+use valet::backends::ClusterState;
+use valet::bench::experiments::{run, Scale};
+use valet::config::Config;
+use valet::engine::ShardedEngine;
+use valet::sim::secs;
+use valet::PAGE_SIZE;
+
+const BLOCKS: u64 = 256; // 256 × 64 KB file
+const FILE_PAGES: u64 = BLOCKS * 16;
+
+fn cfg(prefetch: bool) -> Config {
+    let mut cfg = Config::default();
+    cfg.cluster.nodes = 4;
+    cfg.valet.mr_block_bytes = 16 << 20;
+    // the pool holds ~1/8 of the file: most reads must go remote
+    cfg.valet.min_pool_pages = FILE_PAGES / 8;
+    cfg.valet.max_pool_pages = FILE_PAGES / 8;
+    cfg.valet.prefetch = prefetch;
+    cfg
+}
+
+/// Write the file through the pipeline and drain it remote.
+fn layout(cfg: &Config) -> (ClusterState, ShardedEngine, u64) {
+    let mut cl = ClusterState::new(cfg);
+    let mut e = ShardedEngine::new(cfg, 1);
+    let mut t = 0;
+    for blk in 0..BLOCKS {
+        t = e.write(&mut cl, t, blk * 16, 16 * PAGE_SIZE).end;
+    }
+    t += secs(5);
+    e.pump(&mut cl, t);
+    (cl, e, t)
+}
+
+fn main() {
+    // 1. Sequential scan, prefetcher off vs on.
+    for on in [false, true] {
+        let cfg = cfg(on);
+        let (mut cl, mut e, mut t) = layout(&cfg);
+        for p in 0..FILE_PAGES {
+            t = e.read(&mut cl, t, p).end;
+        }
+        let m = e.combined_metrics();
+        println!(
+            "sequential scan, prefetch {:>3}: mean {:6.2} µs  p99 {:6.2} µs  \
+             (local {} / remote {} / prefetch hits {}, wasted {})",
+            if on { "ON" } else { "off" },
+            m.read_latency.mean() / 1e3,
+            m.read_latency.p99() as f64 / 1e3,
+            m.local_hits,
+            m.remote_hits,
+            m.prefetch_hits,
+            m.prefetch_wasted,
+        );
+        if on {
+            println!(
+                "  coverage {:.0}% of would-be misses, accuracy {:.0}%",
+                m.prefetch_coverage() * 100.0,
+                m.prefetch_accuracy() * 100.0
+            );
+        }
+    }
+
+    // 2. One 64 KB block miss: 16 round trips vs one batched READ.
+    {
+        let c = cfg(false);
+        let (mut cl, mut e, t) = layout(&c);
+        let a = e.read_block(&mut cl, t, 0, 16 * PAGE_SIZE);
+        println!(
+            "\nbatched 64 KB block miss : {:6.2} µs (one per-unit READ)",
+            (a.end - t) as f64 / 1e3
+        );
+        let (mut cl2, mut e2, t2) = layout(&c);
+        let mut tt = t2;
+        for p in 0..16u64 {
+            tt = e2.read(&mut cl2, tt, p).end;
+        }
+        println!(
+            "same block, 16 single reads: {:6.2} µs",
+            (tt - t2) as f64 / 1e3
+        );
+    }
+
+    // 3. Random mix: no majority stride → nothing issued, no harm.
+    {
+        let c = cfg(true);
+        let (mut cl, mut e, mut t) = layout(&c);
+        let mut x = 42u64;
+        for _ in 0..FILE_PAGES {
+            x = x
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            t = e.read(&mut cl, t, (x >> 33) % FILE_PAGES).end;
+        }
+        let m = e.combined_metrics();
+        println!(
+            "\nrandom mix, prefetch ON  : mean {:6.2} µs, {} pages issued \
+             (prefetcher held its fire)",
+            m.read_latency.mean() / 1e3,
+            m.prefetch_issued
+        );
+    }
+
+    // 4. The full experiment (the BENCH_PR4.json trajectory feed).
+    let report = run("prefetch", &Scale::small()).expect("prefetch id");
+    println!("\n{}", report.render());
+}

@@ -1,0 +1,36 @@
+#!/usr/bin/env bash
+# Append one tagged capture of the machine-readable bench records to
+# the perf trajectory file (see README § "Recording the perf
+# trajectory"). Usage:
+#
+#   ./record_bench.sh <tag> [trajectory-file]
+#   ./record_bench.sh pr4            # -> BENCH_PR4.json
+#
+# Re-running with the same tag replaces that tag's capture.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+TAG="${1:?usage: record_bench.sh <tag> [trajectory-file]}"
+FILE="${2:-BENCH_PR4.json}"
+
+mkdir -p target
+cargo run --release --bin valet-bench -- all --small \
+    --json target/bench-capture.json >/dev/null
+
+python3 - "$TAG" "$FILE" <<'EOF'
+import json, sys
+
+tag, path = sys.argv[1], sys.argv[2]
+records = json.load(open("target/bench-capture.json"))
+try:
+    doc = json.load(open(path))
+except FileNotFoundError:
+    doc = {"captures": []}
+doc.setdefault("captures", [])
+doc["captures"] = [c for c in doc["captures"] if c.get("pr") != tag]
+doc["captures"].append({"pr": tag, "records": records})
+with open(path, "w") as f:
+    json.dump(doc, f, indent=1)
+    f.write("\n")
+print(f"recorded {len(records)} records under tag '{tag}' in {path}")
+EOF

@@ -53,6 +53,31 @@ fn main() {
             lb += 1;
             black_box(t.lookup((lb % 64) * 7));
         }));
+        // dense-range `get` — the shard-worker &self pattern (16
+        // consecutive pages per block). The Cell leaf cache lets `get`
+        // warm itself, so only the first page of each 64-page group
+        // descends; the cache-busted variant forces every access to
+        // descend (the pre-Cell cost of `get` on this pattern).
+        let mut dense = RadixGpt::new();
+        for p in 0..4096u64 {
+            dense.insert(p, p as u32);
+            dense.insert(1_000_000 + p, p as u32);
+        }
+        let mut dp = 0u64;
+        results.push(bench("gpt/get dense range (warming)", 1_000_000, || {
+            dp = (dp + 1) % 4096;
+            black_box(dense.get(dp));
+        }));
+        let mut cp = 0u64;
+        results.push(bench("gpt/get dense range (cache-busted)", 1_000_000, || {
+            // one get per iter, ping-ponging between two far-apart
+            // dense regions so the one-entry leaf cache never hits —
+            // the pre-Cell descent cost, directly comparable to
+            // "warming" above
+            cp += 1;
+            let p = (cp / 2) % 4096 + (cp & 1) * 1_000_000;
+            black_box(dense.get(p));
+        }));
     }
 
     // Mempool

@@ -134,6 +134,29 @@ pub trait PagingBackend: Send {
     /// Swap IN: fetch one page (4 KB) at `page`.
     fn read(&mut self, cl: &mut ClusterState, now: Ns, page: u64) -> Access;
 
+    /// Swap IN a whole block-I/O request (`pages_for(bytes)` pages from
+    /// `page`). The default serves it page by page — one round trip per
+    /// missing page, which is exactly how the baseline systems behave;
+    /// Valet overrides this with its batched miss pipeline (collect all
+    /// misses, one per-unit coalesced fetch).
+    fn read_block(
+        &mut self,
+        cl: &mut ClusterState,
+        now: Ns,
+        page: u64,
+        bytes: u64,
+    ) -> Access {
+        let npages = crate::pages_for(bytes).max(1);
+        let mut t = now;
+        let mut source = Source::LocalPool;
+        for p in page..page + npages {
+            let a = self.read(cl, t, p);
+            t = a.end;
+            source = crate::engine::worse_source(source, a.source);
+        }
+        Access { end: t, source }
+    }
+
     /// Drive background machinery (remote sender thread, pool resize) up
     /// to virtual time `now`.
     fn pump(&mut self, cl: &mut ClusterState, now: Ns);

@@ -71,6 +71,16 @@ impl PagingBackend for ValetBackend {
         self.coord.read(cl, now, page)
     }
 
+    fn read_block(
+        &mut self,
+        cl: &mut ClusterState,
+        now: Ns,
+        page: u64,
+        bytes: u64,
+    ) -> Access {
+        self.coord.read_block(cl, now, page, bytes)
+    }
+
     fn pump(&mut self, cl: &mut ClusterState, now: Ns) {
         self.coord.pump(cl, now);
     }

@@ -1,4 +1,4 @@
-//! One function per paper table/figure (ARCHITECTURE.md §6 experiment index).
+//! One function per paper table/figure (ARCHITECTURE.md §7 experiment index).
 //!
 //! Scaling: the paper runs 10 M records / 10 M ops on 32 real machines;
 //! we run the identical pipeline with records/ops scaled by `Scale` so
@@ -1227,12 +1227,244 @@ pub fn scaling(scale: &Scale) -> Report {
     }
 }
 
+// ---------------------------------------------------------------------
+// Read pipeline — batched block reads, miss coalescing, stride prefetch
+// ---------------------------------------------------------------------
+
+/// The miss-path read pipeline experiment (beyond the paper): a
+/// remote-resident file — the mempool holds ~1/8 of it, the rest lives
+/// on the peers — read back (a) page by page sequentially, (b) as whole
+/// 64 KB blocks, and (c) at random, with the stride prefetcher OFF (the
+/// pre-pipeline demand miss path, pinned bit-for-bit by
+/// `tests/sharding.rs`) and ON. Headline records:
+///
+/// * `seq_speedup` — sequential mean read latency, prefetcher off/on
+///   (the win condition: predicted pages land before demand);
+/// * `batch_speedup` — per-block latency, 16 single-page round trips vs
+///   one per-unit batched READ;
+/// * `rand_regression_pct` — random-mix mean delta with the prefetcher
+///   on (the no-harm condition: no majority stride → nothing issued);
+/// * `prefetch_coverage` / `prefetch_accuracy` — the prefetcher's own
+///   scorecard on the sequential run.
+pub fn prefetch(scale: &Scale) -> Report {
+    use crate::backends::ClusterState;
+    use crate::engine::ShardedEngine;
+    use crate::metrics::Histogram;
+    use crate::PAGE_SIZE;
+
+    let blocks: u64 = (scale.records / 60).clamp(128, 2_048);
+    let file_pages = blocks * 16;
+    let pool_pages = (file_pages / 8).max(64);
+
+    let mk_cfg = |prefetch_on: bool| {
+        let mut cfg = base_config();
+        cfg.valet.mr_block_bytes = 16 << 20;
+        cfg.valet.min_pool_pages = pool_pages;
+        cfg.valet.max_pool_pages = pool_pages;
+        cfg.valet.prefetch = prefetch_on;
+        cfg
+    };
+    // Lay the file out through the write pipeline and drain it remote;
+    // the pool retains only the tail.
+    let layout = |cfg: &Config| -> (ClusterState, ShardedEngine, Ns) {
+        let mut cl = ClusterState::new(cfg);
+        let mut e = ShardedEngine::new(cfg, 1);
+        let mut t: Ns = 0;
+        for blk in 0..blocks {
+            t = e.write(&mut cl, t, blk * 16, 16 * PAGE_SIZE).end;
+        }
+        t += secs(5);
+        e.pump(&mut cl, t);
+        (cl, e, t)
+    };
+    // virtual-time ops/sec over a read phase
+    let tput = |ops: u64, t0: Ns, t1: Ns| -> f64 {
+        ops as f64 / ((t1 - t0).max(1) as f64 / 1e9)
+    };
+
+    let mut rows = Vec::new();
+    let mut kv = Vec::new();
+
+    // (a) sequential page reads, prefetcher off/on ---------------------
+    let mut seq_mean = [0.0f64; 2];
+    for (i, on) in [false, true].into_iter().enumerate() {
+        let cfg = mk_cfg(on);
+        let (mut cl, mut e, t0) = layout(&cfg);
+        let mut t = t0;
+        for p in 0..file_pages {
+            t = e.read(&mut cl, t, p).end;
+        }
+        let m = e.combined_metrics();
+        let tag = if on { "on" } else { "off" };
+        seq_mean[i] = m.read_latency.mean();
+        kv.push((
+            format!("seq_read_mean_us_{tag}"),
+            m.read_latency.mean() / 1e3,
+        ));
+        kv.push((
+            format!("seq_read_p99_us_{tag}"),
+            m.read_latency.p99() as f64 / 1e3,
+        ));
+        kv.push((format!("seq_tp_ops_{tag}"), tput(file_pages, t0, t)));
+        rows.push(vec![
+            format!("sequential, prefetch {tag}"),
+            fmt_us(m.read_latency.mean()),
+            fmt_us(m.read_latency.p99() as f64),
+            format!("{:.0}", tput(file_pages, t0, t)),
+            format!(
+                "local {} / remote {} / pf hits {} (waste {})",
+                m.local_hits, m.remote_hits, m.prefetch_hits,
+                m.prefetch_wasted
+            ),
+        ]);
+        if on {
+            kv.push((
+                "prefetch_coverage".into(),
+                m.prefetch_coverage(),
+            ));
+            kv.push((
+                "prefetch_accuracy".into(),
+                m.prefetch_accuracy(),
+            ));
+            kv.push(("prefetch_issued".into(), m.prefetch_issued as f64));
+        }
+    }
+    kv.push(("seq_speedup".into(), seq_mean[0] / seq_mean[1].max(1e-9)));
+
+    // (b) block reads: 16 single-page round trips vs one batched READ --
+    let mut block_mean = [0.0f64; 2];
+    {
+        // per-page baseline: the same blocks read page by page
+        let cfg = mk_cfg(false);
+        let (mut cl, mut e, t0) = layout(&cfg);
+        let mut t = t0;
+        let mut per_block = Histogram::new();
+        for blk in 0..blocks {
+            let b0 = t;
+            for p in blk * 16..blk * 16 + 16 {
+                t = e.read(&mut cl, t, p).end;
+            }
+            per_block.record(t - b0);
+        }
+        block_mean[0] = per_block.mean();
+        kv.push((
+            "block_perpage_mean_us".into(),
+            per_block.mean() / 1e3,
+        ));
+        rows.push(vec![
+            "64 KB block, 16 single reads".into(),
+            fmt_us(per_block.mean()),
+            fmt_us(per_block.p99() as f64),
+            format!("{:.0}", tput(blocks, t0, t)),
+            format!("rdma verbs {}", cl.fabric.verbs_posted(cl.sender)),
+        ]);
+    }
+    for (i, on) in [false, true].into_iter().enumerate() {
+        let cfg = mk_cfg(on);
+        let (mut cl, mut e, t0) = layout(&cfg);
+        let mut t = t0;
+        for blk in 0..blocks {
+            t = e.read_block(&mut cl, t, blk * 16, 16 * PAGE_SIZE).end;
+        }
+        let m = e.combined_metrics();
+        let tag = if on { "on" } else { "off" };
+        if i == 0 {
+            block_mean[1] = m.read_latency.mean();
+        }
+        kv.push((
+            format!("block_batched_mean_us_{tag}"),
+            m.read_latency.mean() / 1e3,
+        ));
+        rows.push(vec![
+            format!("64 KB block, batched, prefetch {tag}"),
+            fmt_us(m.read_latency.mean()),
+            fmt_us(m.read_latency.p99() as f64),
+            format!("{:.0}", tput(blocks, t0, t)),
+            format!(
+                "batched {} / coalesced {} / rdma verbs {}",
+                m.batched_reads,
+                m.coalesced_reads,
+                cl.fabric.verbs_posted(cl.sender)
+            ),
+        ]);
+    }
+    kv.push((
+        "batch_speedup".into(),
+        block_mean[0] / block_mean[1].max(1e-9),
+    ));
+
+    // (c) random page reads: the no-harm condition ---------------------
+    let mut rand_mean = [0.0f64; 2];
+    let mut rand_issued = 0u64;
+    for (i, on) in [false, true].into_iter().enumerate() {
+        let cfg = mk_cfg(on);
+        let (mut cl, mut e, t0) = layout(&cfg);
+        let mut t = t0;
+        let mut x = 0x5DEECE66Du64;
+        for _ in 0..file_pages {
+            x = x
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            t = e.read(&mut cl, t, (x >> 33) % file_pages).end;
+        }
+        let m = e.combined_metrics();
+        rand_mean[i] = m.read_latency.mean();
+        if on {
+            rand_issued = m.prefetch_issued;
+        }
+        let tag = if on { "on" } else { "off" };
+        kv.push((
+            format!("rand_read_mean_us_{tag}"),
+            m.read_latency.mean() / 1e3,
+        ));
+        rows.push(vec![
+            format!("random, prefetch {tag}"),
+            fmt_us(m.read_latency.mean()),
+            fmt_us(m.read_latency.p99() as f64),
+            format!("{:.0}", tput(file_pages, t0, t)),
+            format!("prefetch issued {}", m.prefetch_issued),
+        ]);
+    }
+    kv.push((
+        "rand_regression_pct".into(),
+        100.0 * (rand_mean[1] - rand_mean[0]) / rand_mean[0].max(1e-9),
+    ));
+    kv.push(("rand_prefetch_issued".into(), rand_issued as f64));
+
+    Report {
+        kv,
+        id: "prefetch",
+        title: "Miss-path read pipeline: batched reads + adaptive stride prefetch",
+        header: vec![
+            "read pattern",
+            "mean µs",
+            "p99 µs",
+            "ops/sec (virtual)",
+            "detail",
+        ],
+        rows,
+        notes: vec![
+            format!(
+                "{blocks} × 64 KB blocks laid out remotely; pool holds \
+                 {pool_pages} pages (~1/8 of the file)"
+            ),
+            "prefetch off = the pre-pipeline demand miss path \
+             (tests/sharding.rs pins it bit-for-bit), so every run \
+             carries its own PR-3 baseline"
+                .into(),
+            "the random rows are the auto-disable guarantee: no \
+             majority stride → no readahead issued → no regression"
+                .into(),
+        ],
+    }
+}
+
 /// All experiments, in presentation order.
 pub fn all_ids() -> Vec<&'static str> {
     vec![
         "table1", "fig2", "fig3", "fig5", "fig8", "fig9", "fig10",
         "bigdata", "ml", "fig21", "table7", "fig22", "fig23",
-        "ablations", "scaling",
+        "ablations", "scaling", "prefetch",
     ]
 }
 
@@ -1254,6 +1486,7 @@ pub fn run(id: &str, scale: &Scale) -> Option<Report> {
         "fig23" => fig23(scale),
         "ablations" => ablations(scale),
         "scaling" => scaling(scale),
+        "prefetch" => prefetch(scale),
         _ => return None,
     })
 }

@@ -194,6 +194,19 @@ pub struct ValetConfig {
     pub coalescing: bool,
     /// Mempool replacement policy (LRU default; MRU per §6.2).
     pub replacement: Replacement,
+    /// Adaptive stride prefetcher on the read miss path (see
+    /// [`crate::prefetch`]). OFF by default: the demand miss path is
+    /// then bit-for-bit the pre-prefetch pipeline.
+    pub prefetch: bool,
+    /// Miss-delta window for the prefetcher's majority vote.
+    pub prefetch_window: usize,
+    /// Pages fetched per readahead batch.
+    pub prefetch_degree: u64,
+    /// The prefetcher auto-disables below this accuracy over completed
+    /// (hit-or-evicted) prefetches.
+    pub prefetch_min_accuracy: f64,
+    /// Completed prefetches before accuracy is judged.
+    pub prefetch_min_samples: u64,
 }
 
 impl Default for ValetConfig {
@@ -210,6 +223,11 @@ impl Default for ValetConfig {
             disk_backup: false,
             coalescing: true,
             replacement: Replacement::Lru,
+            prefetch: false,
+            prefetch_window: 8,
+            prefetch_degree: 8,
+            prefetch_min_accuracy: 0.5,
+            prefetch_min_samples: 32,
         }
     }
 }
@@ -280,6 +298,25 @@ impl Config {
                             "mru" => Replacement::Mru,
                             _ => return Err(err()),
                         }
+                }
+                "prefetch" => {
+                    self.valet.prefetch = v.as_bool().ok_or_else(err)?
+                }
+                "prefetch_window" => {
+                    self.valet.prefetch_window =
+                        v.as_u64().ok_or_else(err)? as usize
+                }
+                "prefetch_degree" => {
+                    self.valet.prefetch_degree =
+                        v.as_u64().ok_or_else(err)?
+                }
+                "prefetch_min_accuracy" => {
+                    self.valet.prefetch_min_accuracy =
+                        v.as_f64().ok_or_else(err)?
+                }
+                "prefetch_min_samples" => {
+                    self.valet.prefetch_min_samples =
+                        v.as_u64().ok_or_else(err)?
                 }
                 _ => return Err(err()),
             },

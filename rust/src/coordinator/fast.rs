@@ -10,11 +10,14 @@
 //! them, page-space interleaved by stripe (see
 //! [`crate::engine::ShardedEngine::shard_of`]).
 
+use std::collections::HashMap;
+
 use crate::backends::{Access, Source};
 use crate::config::LatencyConfig;
 use crate::gpt::RadixGpt;
 use crate::mempool::Mempool;
 use crate::metrics::RunMetrics;
+use crate::prefetch::{PrefetchConfig, StridePrefetcher};
 use crate::queues::{ReclaimableQueue, StagingQueue, WriteSet};
 use crate::sim::Ns;
 use crate::util::PageBitmap;
@@ -36,6 +39,35 @@ pub struct ShardFastPath {
     pub disk_valid: PageBitmap,
     /// This shard's run metrics (merged across shards for reporting).
     pub metrics: RunMetrics,
+    /// This shard's stride prefetcher (watches this shard's miss
+    /// stream; see [`crate::prefetch`]).
+    pub prefetcher: StridePrefetcher,
+    /// RDMA arrival times of prefetched pages not yet demanded: a
+    /// demand read that beats the wire waits only for the remainder
+    /// (shard-local, so the serve fast path stays lock-free). Entries
+    /// are removed on first hit, overwrite, or eviction.
+    pub pending_arrivals: HashMap<u64, Ns>,
+    /// Prefetch-waste counter value already fed back to the prefetcher
+    /// (cursor into `mempool.prefetch_evicted`).
+    waste_seen: u64,
+    /// A prefetch hit asked for the readahead window to be extended
+    /// from this page (trend continuation). Set on the lock-free hit
+    /// path; consumed by the engine's
+    /// [`crate::engine::drive_readahead`] at the next opportunity that
+    /// may touch the slow path.
+    pub(crate) readahead_due: Option<u64>,
+    /// Reusable buffer for idle-page donation (the arbiter tick path
+    /// must not allocate).
+    donate_buf: Vec<u64>,
+    /// Miss-path scratch: block-miss collection
+    /// ([`crate::engine::shard_read_block`] pass 1).
+    pub(crate) scratch_misses: Vec<u64>,
+    /// Miss-path scratch: pages to batch-fetch (block pass 2 and
+    /// readahead landing).
+    pub(crate) scratch_fetch: Vec<u64>,
+    /// Miss-path scratch: per-page completion times from
+    /// [`crate::coordinator::sender::RemoteSender::read_batch`].
+    pub(crate) scratch_arrivals: Vec<(u64, Ns)>,
 }
 
 impl ShardFastPath {
@@ -46,6 +78,7 @@ impl ShardFastPath {
         grow_threshold: f64,
         host_free_fraction: f64,
         replacement: crate::config::Replacement,
+        prefetch: PrefetchConfig,
     ) -> Self {
         ShardFastPath {
             gpt: RadixGpt::new(),
@@ -61,7 +94,50 @@ impl ShardFastPath {
             remote_ready: PageBitmap::new(),
             disk_valid: PageBitmap::new(),
             metrics: RunMetrics::default(),
+            prefetcher: StridePrefetcher::new(prefetch),
+            pending_arrivals: HashMap::new(),
+            waste_seen: 0,
+            readahead_due: None,
+            donate_buf: Vec::new(),
+            scratch_misses: Vec::new(),
+            scratch_fetch: Vec::new(),
+            scratch_arrivals: Vec::new(),
         }
+    }
+
+    /// Serve one locally-cached page: promote/score a prefetched slot
+    /// (waiting out the remainder of its RDMA arrival if the demand
+    /// read beat the wire) and return the time the page's data is
+    /// available, given `t` = completion of the preceding stage.
+    pub(crate) fn serve_cached_page(
+        &mut self,
+        t: Ns,
+        page: u64,
+        slot: u32,
+    ) -> Ns {
+        let mut t = t;
+        if self.mempool.flags(slot).prefetched {
+            match self.pending_arrivals.remove(&page) {
+                Some(arrival) if arrival > t => {
+                    self.metrics
+                        .read_parts
+                        .add("prefetch_wait", arrival - t);
+                    t = arrival;
+                }
+                _ => {}
+            }
+            self.mempool.promote_prefetched(slot);
+            self.metrics.prefetch_hits += 1;
+            self.prefetcher.record_hit();
+            // the hit confirms the trend: ask the engine to keep the
+            // readahead window `degree` pages ahead
+            if self.prefetcher.wants_continuation() {
+                self.readahead_due = Some(page);
+            }
+        }
+        self.mempool.touch(slot);
+        self.metrics.local_hits += 1;
+        t
     }
 
     /// The lock-free read fast path: GPT hit → serve from the mempool.
@@ -79,15 +155,69 @@ impl ShardFastPath {
         let t = now + lat.radix_lookup;
         let slot = self.gpt.lookup(page)?;
         self.metrics.read_parts.add("radix", lat.radix_lookup);
+        let t = self.serve_cached_page(t, page, slot);
         let end = t + lat.copy_read_page;
         self.metrics.read_parts.add("copy", lat.copy_read_page);
-        self.mempool.touch(slot);
-        self.metrics.local_hits += 1;
         self.metrics.read_latency.record(end - now);
         Some(Access {
             end,
             source: Source::LocalPool,
         })
+    }
+
+    /// The lock-free *block* read fast path: succeeds only when every
+    /// page of the block is locally cached (side-effect-free probe
+    /// first, so a partial block leaves no stray metrics behind) —
+    /// otherwise the caller crosses into the slow path **once** with
+    /// the whole block (see [`crate::engine::shard_read_block`]). One
+    /// radix descent is charged for the block: the leaf cache makes the
+    /// per-page lookups O(1) (see [`RadixGpt::get`]).
+    pub fn try_read_block_local(
+        &mut self,
+        lat: &LatencyConfig,
+        now: Ns,
+        page: u64,
+        npages: u64,
+    ) -> Option<Access> {
+        for p in page..page + npages {
+            self.gpt.get(p)?;
+        }
+        let mut t = now + lat.radix_lookup;
+        self.metrics.read_parts.add("radix", lat.radix_lookup);
+        for p in page..page + npages {
+            let slot = self.gpt.get(p).expect("probed above");
+            t = self.serve_cached_page(t, p, slot);
+        }
+        let copy = npages * lat.copy_read_page;
+        let end = t + copy;
+        self.metrics.read_parts.add("copy", copy);
+        self.metrics.read_latency.record(end - now);
+        self.metrics.batched_reads += 1;
+        Some(Access {
+            end,
+            source: Source::LocalPool,
+        })
+    }
+
+    /// Prefetch waste observed by the mempool but not yet folded into
+    /// this shard's metrics/governor (it syncs on the next miss or
+    /// readahead event; aggregate readers add this on top — see
+    /// [`crate::engine::ShardedEngine::combined_metrics`]).
+    pub fn unsynced_prefetch_waste(&self) -> u64 {
+        self.mempool.prefetch_evicted - self.waste_seen
+    }
+
+    /// Feed newly-observed prefetch waste (pages evicted or overwritten
+    /// unused since the last call) back into the prefetcher's accuracy
+    /// governor and this shard's metrics.
+    pub fn sync_prefetch_waste(&mut self) {
+        let total = self.mempool.prefetch_evicted;
+        let new = total - self.waste_seen;
+        if new > 0 {
+            self.waste_seen = total;
+            self.metrics.prefetch_wasted += new;
+            self.prefetcher.record_waste(new);
+        }
     }
 
     /// Apply one remotely-durable write set to this shard: slots become
@@ -108,15 +238,26 @@ impl ShardFastPath {
         self.reclaim_q.push(ws);
     }
 
-    /// Give back up to `want` idle (remote-durable, least-recently-used)
-    /// pages to the host pool, dropping their GPT entries — subsequent
-    /// reads of those pages are served remotely. Returns pages donated.
+    /// Give back up to `want` idle (prefetched-unused first, then
+    /// remote-durable least-recently-used) pages to the host pool,
+    /// dropping their GPT entries — subsequent reads of those pages are
+    /// served remotely. Returns pages donated. Allocation-free in
+    /// steady state: the eviction list lives in a reusable buffer (the
+    /// arbiter calls this every tick).
     pub fn donate_idle_pages(&mut self, want: u64) -> u64 {
-        let evicted = self.mempool.donate_idle(want);
-        for p in &evicted {
-            self.gpt.remove(*p);
+        let ShardFastPath {
+            mempool,
+            gpt,
+            pending_arrivals,
+            donate_buf,
+            ..
+        } = self;
+        let donated = mempool.donate_idle(want, donate_buf);
+        for &p in donate_buf.iter() {
+            gpt.remove(p);
+            pending_arrivals.remove(&p);
         }
-        evicted.len() as u64
+        donated
     }
 
     /// Mempool shrink check + idle donation against this shard's slice of
@@ -137,9 +278,17 @@ impl ShardFastPath {
 mod tests {
     use super::*;
     use crate::config::{LatencyConfig, Replacement};
+    use crate::prefetch::PrefetchConfig;
 
     fn shard() -> ShardFastPath {
-        ShardFastPath::new(8, 64, 0.8, 1.0, Replacement::Lru)
+        ShardFastPath::new(
+            8,
+            64,
+            0.8,
+            1.0,
+            Replacement::Lru,
+            PrefetchConfig::default(),
+        )
     }
 
     #[test]
@@ -169,6 +318,52 @@ mod tests {
         assert!(s.mempool.flags(a.slot).reclaimable);
         assert!(s.remote_ready.get(3));
         assert_eq!(s.reclaim_q.completed, 1);
+    }
+
+    #[test]
+    fn block_fast_path_needs_every_page_cached() {
+        let lat = LatencyConfig::default();
+        let mut s = shard();
+        for p in 0..4u64 {
+            let a = s.mempool.alloc(p, 1 << 20).unwrap();
+            s.gpt.insert(p, a.slot);
+        }
+        // page 4 missing: the probe must fail without touching metrics
+        assert!(s.try_read_block_local(&lat, 0, 0, 5).is_none());
+        assert_eq!(s.metrics.local_hits, 0);
+        assert_eq!(s.metrics.read_latency.count(), 0);
+        // all four cached: one radix charge + four copies
+        let hit = s.try_read_block_local(&lat, 0, 0, 4).unwrap();
+        assert_eq!(hit.source, Source::LocalPool);
+        assert_eq!(
+            hit.end,
+            lat.radix_lookup + 4 * lat.copy_read_page
+        );
+        assert_eq!(s.metrics.local_hits, 4);
+        assert_eq!(s.metrics.batched_reads, 1);
+        assert_eq!(s.metrics.read_latency.count(), 1);
+    }
+
+    #[test]
+    fn prefetched_hit_waits_out_arrival_and_promotes() {
+        let lat = LatencyConfig::default();
+        let mut s = shard();
+        let a = s.mempool.alloc_prefetched(9).unwrap();
+        s.gpt.insert(9, a.slot);
+        s.pending_arrivals.insert(9, 50_000);
+        // demand read at t=0 beats the wire: waits until 50 µs
+        let hit = s.try_read_local(&lat, 0, 9).unwrap();
+        assert_eq!(hit.end, 50_000 + lat.copy_read_page);
+        assert_eq!(s.metrics.prefetch_hits, 1);
+        assert!(s.pending_arrivals.is_empty());
+        assert!(!s.mempool.flags(a.slot).prefetched, "promoted");
+        // second read: plain local hit, no wait
+        let again = s.try_read_local(&lat, hit.end, 9).unwrap();
+        assert_eq!(
+            again.end - hit.end,
+            lat.radix_lookup + lat.copy_read_page
+        );
+        assert_eq!(s.metrics.prefetch_hits, 1);
     }
 
     #[test]

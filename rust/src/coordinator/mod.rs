@@ -262,10 +262,27 @@ impl Coordinator {
         self.engine.write(cl, now, page, bytes)
     }
 
-    /// Front-end read (swap-in): GPT lookup → mempool hit, else one-sided
-    /// RDMA READ from the unit's primary, else disk (Table 3 fallback).
+    /// Front-end read (swap-in): GPT lookup → mempool hit, else the
+    /// miss pipeline — coalesce with an in-flight fetch of the same
+    /// page, else one-sided RDMA READ from the unit's primary, else
+    /// disk (Table 3 fallback) — with the stride prefetcher watching
+    /// the miss stream when enabled (`valet.prefetch`).
     pub fn read(&mut self, cl: &mut ClusterState, now: Ns, page: u64) -> Access {
         self.engine.read(cl, now, page)
+    }
+
+    /// Front-end block read: every page of the request served in one
+    /// slow-path crossing, missing pages fetched with one per-unit
+    /// batched RDMA READ instead of one round trip per page (see
+    /// [`crate::engine::ShardedEngine::read_block`]).
+    pub fn read_block(
+        &mut self,
+        cl: &mut ClusterState,
+        now: Ns,
+        page: u64,
+        bytes: u64,
+    ) -> Access {
+        self.engine.read_block(cl, now, page, bytes)
     }
 
     /// Drive background machinery up to `now`: remote-sender drain plus

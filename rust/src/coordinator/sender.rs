@@ -10,6 +10,8 @@
 //! serialized only within a shard; the sender serializes nothing but its
 //! own CPU time.
 
+use std::collections::HashMap;
+
 use crate::backends::{ClusterState, PressureOutcome, Unit, UnitMap};
 use crate::config::{Config, LatencyConfig, ValetConfig};
 use crate::coordinator::fast::ShardFastPath;
@@ -20,7 +22,7 @@ use crate::placement::{Placement, PowerOfTwo};
 use crate::queues::WriteSet;
 use crate::replication::choose_replicas;
 use crate::sim::{Ns, Server};
-use crate::NodeId;
+use crate::{NodeId, PAGE_SIZE};
 
 /// One coalesced RDMA message in flight: completion time, the shard its
 /// write sets belong to, and the sets themselves.
@@ -50,7 +52,24 @@ pub struct RemoteSender {
     /// Owner id stamped on MR registrations (multi-tenant arbitration);
     /// `None` registers as the sender node.
     owner_tag: Option<NodeId>,
+    /// In-flight remote reads, page → completion time: a miss that
+    /// overlaps an outstanding fetch of the same page *in virtual time*
+    /// (queue-depth > 1 block I/O, simulated multi-client runs)
+    /// piggybacks on it (miss coalescing) instead of posting a
+    /// duplicate RDMA READ, and a readahead proposal covering the page
+    /// free-rides on it without posting any wire work. Note the sharded
+    /// serve front-end routes a page to one worker whose virtual clock
+    /// advances past each completion before the next request, so
+    /// cross-request coalescing there is rare by construction — the
+    /// table's main consumers are overlapping in-flight windows and the
+    /// prefetcher. Entries whose completion has passed are pruned
+    /// lazily.
+    inflight_reads: HashMap<u64, Ns>,
 }
+
+/// Prune the in-flight read table once it reaches this size (stale
+/// entries — completions in the past — are dropped; live ones kept).
+const INFLIGHT_READS_PRUNE: usize = 4096;
 
 impl RemoteSender {
     /// Build the slow path for `shards` fast paths.
@@ -65,6 +84,7 @@ impl RemoteSender {
             done: vec![Vec::new(); shards.max(1)],
             victim_policy: Box::new(ActivityBased),
             owner_tag: None,
+            inflight_reads: HashMap::new(),
         }
     }
 
@@ -208,6 +228,95 @@ impl RemoteSender {
     /// Drain `shard`'s completion mailbox (FIFO).
     pub fn take_done(&mut self, shard: usize) -> Vec<WriteSet> {
         std::mem::take(&mut self.done[shard])
+    }
+
+    // -- the read-side pipeline ---------------------------------------
+
+    /// If `page` has an outstanding remote fetch completing *after*
+    /// `now`, return its completion time — the caller piggybacks on it
+    /// (miss coalescing) instead of posting a duplicate READ. An entry
+    /// whose completion has passed is pruned and `None` returned: the
+    /// fetched data was never installed locally (remote reads are
+    /// read-through), so a later miss must fetch again.
+    pub fn inflight_read_done(&mut self, page: u64, now: Ns) -> Option<Ns> {
+        match self.inflight_reads.get(&page) {
+            Some(&done) if done > now => Some(done),
+            Some(_) => {
+                self.inflight_reads.remove(&page);
+                None
+            }
+            None => None,
+        }
+    }
+
+    /// Record an outstanding remote read of `page` completing at
+    /// `done`, so overlapping misses on the same page can coalesce.
+    pub fn note_inflight_read(&mut self, now: Ns, page: u64, done: Ns) {
+        if self.inflight_reads.len() >= INFLIGHT_READS_PRUNE {
+            self.inflight_reads.retain(|_, d| *d > now);
+        }
+        self.inflight_reads.insert(page, done);
+    }
+
+    /// Outstanding remote reads tracked for coalescing (diagnostics;
+    /// includes entries not yet lazily pruned).
+    pub fn inflight_read_count(&self) -> usize {
+        self.inflight_reads.len()
+    }
+
+    /// Batched remote read: fetch `pages` (grouped into runs that share
+    /// an address-space unit) with **one** RDMA READ per unit — one
+    /// base round trip plus per-page wire time, mirroring the write
+    /// side's coalescing batcher — and register every page in the
+    /// in-flight read table. `out` is filled (cleared first) with each
+    /// page's completion time, in input order; a page whose unit is
+    /// unmapped or dead completes "immediately" at `t0` (the caller
+    /// filters those up front — this keeps the batch robust). Returns
+    /// the completion time of the slowest run, `t0` when `pages` is
+    /// empty.
+    ///
+    /// Callers decide what the batch means: the demand block-read path
+    /// waits on the result; the prefetcher treats it as asynchronous
+    /// readahead and only records the arrival times.
+    pub fn read_batch(
+        &mut self,
+        cl: &mut ClusterState,
+        t0: Ns,
+        pages: &[u64],
+        out: &mut Vec<(u64, Ns)>,
+    ) -> Ns {
+        out.clear();
+        let mut slowest = t0;
+        let mut i = 0;
+        while i < pages.len() {
+            // one run = consecutive input pages sharing a unit
+            let unit = self.units.unit_of(pages[i]);
+            let mut j = i + 1;
+            while j < pages.len() && self.units.unit_of(pages[j]) == unit {
+                j += 1;
+            }
+            let run = &pages[i..j];
+            let (primary, ready) = match self.units.get(unit) {
+                Some(u) if u.alive => (u.nodes[0], u.ready_at),
+                _ => {
+                    for &p in run {
+                        out.push((p, t0));
+                    }
+                    i = j;
+                    continue;
+                }
+            };
+            let t = t0.max(ready) + self.lat.mrpool_get;
+            let bytes = run.len() as u64 * PAGE_SIZE;
+            let verb = cl.fabric.rdma_read(t, cl.sender, primary, bytes);
+            for &p in run {
+                self.note_inflight_read(t0, p, verb.end);
+                out.push((p, verb.end));
+            }
+            slowest = slowest.max(verb.end);
+            i = j;
+        }
+        slowest
     }
 
     /// Send one coalesced batch from `fast`'s staging queue at (no

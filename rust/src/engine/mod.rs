@@ -59,9 +59,43 @@ use crate::coordinator::fast::ShardFastPath;
 use crate::coordinator::sender::RemoteSender;
 use crate::mempool::AllocFail;
 use crate::metrics::RunMetrics;
+use crate::prefetch::PrefetchConfig;
 use crate::queues::{self, WriteSet};
 use crate::sim::Ns;
 use crate::{pages_for, NodeId, PAGE_SIZE};
+
+/// How the read pipeline sees the page-space partition: which shard is
+/// running, how many exist, and the stripe size. The miss path needs it
+/// to keep readahead shard-local (a prefetcher may only land pages its
+/// own shard owns — see [`shard_of_page`]).
+#[derive(Clone, Copy, Debug)]
+pub struct ShardRoute {
+    /// The shard executing the request.
+    pub shard: usize,
+    /// Total shards in the engine.
+    pub shards: usize,
+    /// Pages per stripe (the interleave granularity).
+    pub stripe_pages: u64,
+}
+
+/// The worse of two read sources (LocalPool < Remote < Disk) — a block
+/// read spanning tiers reports the slowest tier it touched. Shared with
+/// the default [`crate::backends::PagingBackend::read_block`] so the
+/// severity ordering lives in one place.
+pub(crate) fn worse_source(a: Source, b: Source) -> Source {
+    fn rank(s: Source) -> u8 {
+        match s {
+            Source::LocalPool => 0,
+            Source::Remote => 1,
+            Source::Disk => 2,
+        }
+    }
+    if rank(b) > rank(a) {
+        b
+    } else {
+        a
+    }
+}
 
 // ---------------------------------------------------------------------
 // Per-shard request orchestration (shared by the simulated engine and
@@ -171,6 +205,13 @@ pub fn shard_write(
         if let Some(slot) = fast.gpt.lookup(p) {
             // Overwrite in place (§5.2): newer write set supersedes.
             let flags = fast.mempool.flags(slot);
+            if flags.prefetched {
+                // Read-your-writes vs an in-flight prefetch: the write
+                // wins — the stale remote data must neither be waited
+                // for nor count as a future hit (unmark below clears
+                // the tag and books the waste).
+                fast.pending_arrivals.remove(&p);
+            }
             if flags.reclaimable {
                 fast.mempool.unmark_reclaimable(slot);
             } else {
@@ -186,6 +227,9 @@ pub fn shard_write(
                 Ok(a) => {
                     if let Some(evicted) = a.evicted_page {
                         fast.gpt.remove(evicted);
+                        // an evicted prefetched page may still have an
+                        // arrival tracked — drop it with the page
+                        fast.pending_arrivals.remove(&evicted);
                     }
                     fast.gpt.insert(p, a.slot);
                     slots.push(a.slot);
@@ -223,20 +267,44 @@ pub fn shard_write(
     }
 }
 
-/// One shard's read miss path: one-sided RDMA READ from the unit's
-/// primary, else disk (Table 3 fallback). The local-hit fast path is
+/// One shard's read miss path: coalesce with an outstanding fetch of
+/// the same page if one is in flight, else one-sided RDMA READ from the
+/// unit's primary, else disk (Table 3 fallback). Every miss also feeds
+/// the shard's stride prefetcher, which may post an asynchronous
+/// readahead batch — posted *after* the demand fetch so speculation
+/// never queues ahead of demand on the NIC, and never charged to this
+/// request's latency. The local-hit fast path is
 /// [`ShardFastPath::try_read_local`] — call that first; this function
 /// assumes it returned `None`.
 pub fn shard_read_miss(
-    sender: &RemoteSender,
+    sender: &mut RemoteSender,
     fast: &mut ShardFastPath,
     cl: &mut ClusterState,
     now: Ns,
     page: u64,
+    route: ShardRoute,
 ) -> Access {
     let lat = sender.lat();
-    let mut t = now + lat.radix_lookup;
-    fast.metrics.read_parts.add("radix", lat.radix_lookup);
+    let radix_lookup = lat.radix_lookup;
+    let copy_read_page = lat.copy_read_page;
+    let mrpool_get = lat.mrpool_get;
+    let mut t = now + radix_lookup;
+    fast.metrics.read_parts.add("radix", radix_lookup);
+    // Miss coalescing: piggyback on an in-flight fetch of this page
+    // instead of posting a duplicate READ.
+    if let Some(done) = sender.inflight_read_done(page, t) {
+        fast.metrics.read_parts.add("coalesce", done.saturating_sub(t));
+        let end = done.max(t) + copy_read_page;
+        fast.metrics.read_parts.add("copy", copy_read_page);
+        fast.metrics.coalesced_reads += 1;
+        fast.metrics.remote_hits += 1;
+        fast.metrics.read_latency.record(end - now);
+        maybe_prefetch(sender, fast, cl, now, page, route);
+        return Access {
+            end,
+            source: Source::Remote,
+        };
+    }
     let unit_id = sender.units().unit_of(page);
     let remote_ok = sender
         .units()
@@ -248,14 +316,16 @@ pub fn shard_read_miss(
         let primary = u.nodes[0];
         let ready_at = u.ready_at;
         t = t.max(ready_at);
-        t += lat.mrpool_get;
-        fast.metrics.read_parts.add("mrpool", lat.mrpool_get);
+        t += mrpool_get;
+        fast.metrics.read_parts.add("mrpool", mrpool_get);
         let verb = cl.fabric.rdma_read(t, cl.sender, primary, PAGE_SIZE);
+        sender.note_inflight_read(now, page, verb.end);
         fast.metrics.read_parts.add("rdma", verb.end - t);
-        t = verb.end + lat.copy_read_page;
-        fast.metrics.read_parts.add("copy", lat.copy_read_page);
+        t = verb.end + copy_read_page;
+        fast.metrics.read_parts.add("copy", copy_read_page);
         fast.metrics.remote_hits += 1;
         fast.metrics.read_latency.record(t - now);
+        maybe_prefetch(sender, fast, cl, now, page, route);
         return Access {
             end: t,
             source: Source::Remote,
@@ -266,10 +336,257 @@ pub fn shard_read_miss(
     fast.metrics.read_parts.add("disk", end - t);
     fast.metrics.disk_reads += 1;
     fast.metrics.read_latency.record(end - now);
+    maybe_prefetch(sender, fast, cl, now, page, route);
     Access {
         end,
         source: Source::Disk,
     }
+}
+
+/// Feed one demand miss into the shard's prefetcher and, when it
+/// proposes readahead, land the predicted pages: allocate
+/// prefetch-tagged slots (never displacing demand-cached data — see
+/// [`crate::mempool::Mempool::alloc_prefetched`]), insert them into the
+/// GPT so later demand reads hit locally, and post one per-unit
+/// coalesced fetch batch for the pages not already in flight. Arrival
+/// times land in the shard's `pending_arrivals` so a demand read that
+/// beats the wire waits only for the remainder. Entirely asynchronous:
+/// nothing here extends the triggering request.
+fn maybe_prefetch(
+    sender: &mut RemoteSender,
+    fast: &mut ShardFastPath,
+    cl: &mut ClusterState,
+    now: Ns,
+    page: u64,
+    route: ShardRoute,
+) {
+    // Waste feedback first, so a misfiring prefetcher trips its
+    // accuracy governor before proposing more work.
+    fast.sync_prefetch_waste();
+    let Some(ra) = fast.prefetcher.observe_miss(page) else {
+        return;
+    };
+    land_readahead(sender, fast, cl, now, page, ra, route);
+}
+
+/// Extend the readahead window after a prefetch hit (trend
+/// continuation): the lock-free hit path parked the hit page in the
+/// shard's `readahead_due`; this consumes it and lands the next
+/// `degree` pages along the standing stride. Call whenever the slow
+/// path is (or may cheaply be) available — the engine does it right
+/// after a hit, the sharded serve worker on the next lock acquisition.
+/// A no-op when nothing is due.
+pub fn drive_readahead(
+    sender: &mut RemoteSender,
+    fast: &mut ShardFastPath,
+    cl: &mut ClusterState,
+    now: Ns,
+    route: ShardRoute,
+) {
+    let Some(page) = fast.readahead_due.take() else {
+        return;
+    };
+    fast.sync_prefetch_waste();
+    let Some(ra) = fast.prefetcher.continuation() else {
+        return;
+    };
+    land_readahead(sender, fast, cl, now, page, ra, route);
+}
+
+/// Land one readahead proposal (see [`maybe_prefetch`] for the policy
+/// preamble): filter candidates, allocate prefetch-tagged slots, post
+/// one per-unit coalesced fetch for pages not already in flight.
+fn land_readahead(
+    sender: &mut RemoteSender,
+    fast: &mut ShardFastPath,
+    cl: &mut ClusterState,
+    now: Ns,
+    page: u64,
+    ra: crate::prefetch::Readahead,
+    route: ShardRoute,
+) {
+    // Collect candidates along the stride: pages this shard owns, not
+    // cached, with a valid remote copy on a live unit. The fetch list
+    // lives in a reusable shard buffer — readahead fires on every
+    // prefetch hit in steady state and must not allocate there.
+    let mut landed = 0u64;
+    let mut fetch = std::mem::take(&mut fast.scratch_fetch);
+    fetch.clear();
+    for k in 1..=ra.degree.min(i64::MAX as u64) as i64 {
+        let Some(step) = ra.stride.checked_mul(k) else {
+            break;
+        };
+        let Some(p) = page.checked_add_signed(step) else {
+            break;
+        };
+        if shard_of_page(p, route.stripe_pages, route.shards)
+            != route.shard
+        {
+            continue;
+        }
+        if fast.gpt.get(p).is_some() || !fast.remote_ready.get(p) {
+            continue;
+        }
+        let unit = sender.units().unit_of(p);
+        if !sender.units().get(unit).map(|u| u.alive).unwrap_or(false) {
+            continue;
+        }
+        // A slot for the speculation, or stop: the pool has no room.
+        let Some(a) = fast.mempool.alloc_prefetched(p) else {
+            break;
+        };
+        if let Some(evicted) = a.evicted_page {
+            fast.gpt.remove(evicted);
+            fast.pending_arrivals.remove(&evicted);
+        }
+        fast.gpt.insert(p, a.slot);
+        landed += 1;
+        // Free ride: a fetch of this page is already in flight — land
+        // at its completion without posting any wire work.
+        if let Some(done) = sender.inflight_read_done(p, now) {
+            fast.pending_arrivals.insert(p, done);
+        } else {
+            fetch.push(p);
+        }
+    }
+    if landed > 0 {
+        if !fetch.is_empty() {
+            let mut arrivals = std::mem::take(&mut fast.scratch_arrivals);
+            sender.read_batch(cl, now, &fetch, &mut arrivals);
+            for &(p, done) in &arrivals {
+                fast.pending_arrivals.insert(p, done);
+            }
+            fast.scratch_arrivals = arrivals;
+            fast.metrics.prefetch_batches += 1;
+        }
+        fast.metrics.prefetch_issued += landed;
+        fast.prefetcher.note_issued(landed);
+    }
+    fast.scratch_fetch = fetch;
+}
+
+/// One shard's *block* read miss path: every page of the block is
+/// served in a single slow-path crossing — cached pages from the
+/// mempool, in-flight pages by coalescing, remote pages through **one**
+/// per-unit batched READ (one base round trip + per-page wire time,
+/// the read-side mirror of the write coalescing batcher), disk pages
+/// last. The fast path ([`ShardFastPath::try_read_block_local`])
+/// handles the all-cached case without the lock; this function assumes
+/// at least one page missed.
+pub fn shard_read_block(
+    sender: &mut RemoteSender,
+    fast: &mut ShardFastPath,
+    cl: &mut ClusterState,
+    now: Ns,
+    page: u64,
+    npages: u64,
+    route: ShardRoute,
+) -> Access {
+    let lat = sender.lat();
+    let radix_lookup = lat.radix_lookup;
+    let copy_read_page = lat.copy_read_page;
+    let mrpool_get = lat.mrpool_get;
+    let mut t = now + radix_lookup;
+    fast.metrics.read_parts.add("radix", radix_lookup);
+    // Pass 1 (the fast-path collect): serve cached pages, gather every
+    // miss of the block before crossing further. Scratch buffers are
+    // reused across requests — the miss path allocates nothing in
+    // steady state.
+    let mut misses = std::mem::take(&mut fast.scratch_misses);
+    misses.clear();
+    let mut local = 0u64;
+    for p in page..page + npages {
+        if let Some(slot) = fast.gpt.get(p) {
+            t = fast.serve_cached_page(t, p, slot);
+            local += 1;
+        } else {
+            misses.push(p);
+        }
+    }
+    if local > 0 {
+        let copy = local * copy_read_page;
+        fast.metrics.read_parts.add("copy", copy);
+        t += copy;
+    }
+    if misses.is_empty() {
+        fast.scratch_misses = misses;
+        fast.metrics.read_latency.record(t - now);
+        fast.metrics.batched_reads += 1;
+        return Access {
+            end: t,
+            source: Source::LocalPool,
+        };
+    }
+    let first_miss = misses[0];
+    // Pass 2 (coalesce + batch): piggyback on in-flight fetches, batch
+    // the rest per unit, disk for pages with no remote copy.
+    let mut wait_until = t;
+    let mut fetch = std::mem::take(&mut fast.scratch_fetch);
+    fetch.clear();
+    let mut disk_pages = 0u64;
+    let mut source = if local > 0 {
+        Source::LocalPool
+    } else {
+        Source::Remote
+    };
+    for &p in &misses {
+        if let Some(done) = sender.inflight_read_done(p, t) {
+            fast.metrics.coalesced_reads += 1;
+            fast.metrics.remote_hits += 1;
+            wait_until = wait_until.max(done);
+            source = worse_source(source, Source::Remote);
+            continue;
+        }
+        let unit = sender.units().unit_of(p);
+        let remote_ok = sender
+            .units()
+            .get(unit)
+            .map(|u| u.alive && fast.remote_ready.get(p))
+            .unwrap_or(false);
+        if remote_ok {
+            fetch.push(p);
+        } else {
+            disk_pages += 1;
+        }
+    }
+    let fetched = fetch.len() as u64;
+    if !fetch.is_empty() {
+        let mut arrivals = std::mem::take(&mut fast.scratch_arrivals);
+        let done = sender.read_batch(cl, t, &fetch, &mut arrivals);
+        fast.scratch_arrivals = arrivals;
+        fast.metrics.read_parts.add("mrpool", mrpool_get);
+        fast.metrics.read_parts.add("rdma", done.saturating_sub(t));
+        fast.metrics.remote_hits += fetched;
+        wait_until = wait_until.max(done);
+        source = worse_source(source, Source::Remote);
+    }
+    // Copies of the fetched/coalesced pages happen once data arrives.
+    let copied = (misses.len() as u64) - disk_pages;
+    fast.scratch_fetch = fetch;
+    fast.scratch_misses = misses;
+    let mut end = wait_until;
+    if copied > 0 {
+        let copy = copied * copy_read_page;
+        fast.metrics.read_parts.add("copy", copy);
+        end += copy;
+    }
+    // Disk stragglers (Table 3 fallback), served sequentially.
+    for _ in 0..disk_pages {
+        let t0 = end;
+        end = cl.disks[cl.sender].read(t0, PAGE_SIZE);
+        fast.metrics.read_parts.add("disk", end - t0);
+        fast.metrics.disk_reads += 1;
+        source = worse_source(source, Source::Disk);
+    }
+    fast.metrics.read_latency.record(end - now);
+    fast.metrics.batched_reads += 1;
+    // The prefetcher sees one miss event per block (its first missing
+    // page), posted after the demand batch so readahead never queues
+    // ahead of demand — and any continuation a prefetch hit inside
+    // this block requested is driven now, while the slow path is held.
+    maybe_prefetch(sender, fast, cl, now, first_miss, route);
+    drive_readahead(sender, fast, cl, now, route);
+    Access { end, source }
 }
 
 /// The one routing rule: the shard owning `page` is
@@ -342,6 +659,7 @@ impl ShardedEngine {
         let clamp = if shards > 1 { stripe_pages } else { 1 };
         let mins = split_pages(cfg.valet.min_pool_pages, shards);
         let maxs = split_pages(cfg.valet.max_pool_pages, shards);
+        let prefetch = PrefetchConfig::from_valet(&cfg.valet);
         let fasts = (0..shards)
             .map(|i| {
                 ShardFastPath::new(
@@ -350,6 +668,7 @@ impl ShardedEngine {
                     cfg.valet.grow_threshold,
                     cfg.valet.host_free_fraction,
                     cfg.valet.replacement,
+                    prefetch.clone(),
                 )
             })
             .collect();
@@ -487,11 +806,15 @@ impl ShardedEngine {
             + self.sender.inflight_write_sets()
     }
 
-    /// Run metrics merged across all shards.
+    /// Run metrics merged across all shards. Prefetch waste the
+    /// mempools observed but the per-shard metrics have not folded in
+    /// yet (waste syncs lazily, on the next miss) is added here, so the
+    /// aggregate `prefetch_wasted` / accuracy are exact at any point.
     pub fn combined_metrics(&self) -> RunMetrics {
         let mut m = RunMetrics::default();
         for s in &self.shards {
             m.merge(&s.metrics);
+            m.prefetch_wasted += s.unsynced_prefetch_waste();
         }
         m
     }
@@ -593,9 +916,20 @@ impl ShardedEngine {
         shard_write(sender, fast, cl, shard, now, page, bytes, host)
     }
 
+    /// This engine's routing view for `shard` (the read pipeline needs
+    /// it to keep readahead shard-local).
+    fn route(&self, shard: usize) -> ShardRoute {
+        ShardRoute {
+            shard,
+            shards: self.shards.len(),
+            stripe_pages: self.stripe_pages,
+        }
+    }
+
     /// Front-end read (swap-in): route to the owning shard; GPT hit →
     /// mempool (the lock-free fast path in serve mode), else the shared
-    /// slow path (remote RDMA READ / disk).
+    /// slow path (coalesce with an in-flight fetch / remote RDMA READ /
+    /// disk, plus the stride prefetcher's readahead).
     pub fn read(
         &mut self,
         cl: &mut ClusterState,
@@ -603,12 +937,70 @@ impl ShardedEngine {
         page: u64,
     ) -> Access {
         let shard = self.shard_of(page);
+        let route = self.route(shard);
         let ShardedEngine { shards, sender, .. } = self;
         let fast = &mut shards[shard];
         if let Some(a) = fast.try_read_local(sender.lat(), now, page) {
+            // a prefetch hit may have asked to extend the window
+            drive_readahead(sender, fast, cl, now, route);
             return a;
         }
-        shard_read_miss(sender, fast, cl, now, page)
+        shard_read_miss(sender, fast, cl, now, page, route)
+    }
+
+    /// Front-end **block** read: all `pages_for(bytes)` pages as one
+    /// request. Pieces split at stripe boundaries like [`Self::write`];
+    /// per piece, the all-cached fast path
+    /// ([`ShardFastPath::try_read_block_local`]) is tried first, then
+    /// the whole piece crosses into the slow path **once** — cached
+    /// pages served, in-flight pages coalesced, the rest fetched with
+    /// one per-unit batched READ (one base round trip instead of one
+    /// per page). The single-page [`Self::read`] is unchanged; this is
+    /// the API block-I/O callers use to stop paying 16 serialized round
+    /// trips per block miss.
+    pub fn read_block(
+        &mut self,
+        cl: &mut ClusterState,
+        now: Ns,
+        page: u64,
+        bytes: u64,
+    ) -> Access {
+        let npages = pages_for(bytes).max(1);
+        if self.shards.len() == 1 {
+            return self.read_block_piece(cl, now, 0, page, npages);
+        }
+        let mut end = now;
+        let mut source = Source::LocalPool;
+        for (p0, b) in
+            split_stripes(page, bytes.max(1), self.stripe_pages)
+        {
+            let s = self.shard_of(p0);
+            let a =
+                self.read_block_piece(cl, now, s, p0, pages_for(b).max(1));
+            end = end.max(a.end);
+            source = worse_source(source, a.source);
+        }
+        Access { end, source }
+    }
+
+    fn read_block_piece(
+        &mut self,
+        cl: &mut ClusterState,
+        now: Ns,
+        shard: usize,
+        page: u64,
+        npages: u64,
+    ) -> Access {
+        let route = self.route(shard);
+        let ShardedEngine { shards, sender, .. } = self;
+        let fast = &mut shards[shard];
+        if let Some(a) =
+            fast.try_read_block_local(sender.lat(), now, page, npages)
+        {
+            drive_readahead(sender, fast, cl, now, route);
+            return a;
+        }
+        shard_read_block(sender, fast, cl, now, page, npages, route)
     }
 
     /// Drive background machinery up to `now`: drain every shard's

@@ -13,6 +13,8 @@
 //! nodes, height grows on demand; empty nodes are freed on removal so the
 //! structure shrinks too.
 
+use std::cell::Cell;
+
 const FANOUT: usize = 64;
 const BITS: u32 = 6;
 const EMPTY: u32 = u32::MAX;
@@ -37,7 +39,10 @@ impl Node {
 ///
 /// A one-entry *leaf cache* short-circuits the descent for consecutive
 /// pages sharing a leaf (block-I/O requests touch 16 consecutive pages;
-/// leaves span 64) — see EXPERIMENTS.md §Perf.
+/// leaves span 64) — see EXPERIMENTS.md §Perf. The cache is interior-
+/// mutable (`Cell`) so the shared-reference read path ([`Self::get`])
+/// warms it too: a shard worker holding only `&self` no longer redoes
+/// the full descent for every page of a dense block.
 #[derive(Clone)]
 pub struct RadixGpt {
     nodes: Vec<Node>,
@@ -47,9 +52,9 @@ pub struct RadixGpt {
     height: u32,
     len: usize,
     /// Leaf cache: page-group (page >> 6) of the cached leaf.
-    cache_group: u64,
+    cache_group: Cell<u64>,
     /// Cached leaf node index (EMPTY = invalid).
-    cache_leaf: u32,
+    cache_leaf: Cell<u32>,
 }
 
 impl Default for RadixGpt {
@@ -67,8 +72,8 @@ impl RadixGpt {
             root: EMPTY,
             height: 0,
             len: 0,
-            cache_group: u64::MAX,
-            cache_leaf: EMPTY,
+            cache_group: Cell::new(u64::MAX),
+            cache_leaf: Cell::new(EMPTY),
         }
     }
 
@@ -112,8 +117,10 @@ impl RadixGpt {
     pub fn insert(&mut self, page: u64, slot: u32) -> Option<u32> {
         assert_ne!(slot, EMPTY, "slot value reserved");
         // Leaf-cache fast path: same 64-page group as the last access.
-        if page >> BITS == self.cache_group && self.cache_leaf != EMPTY {
-            let node = self.cache_leaf;
+        if page >> BITS == self.cache_group.get()
+            && self.cache_leaf.get() != EMPTY
+        {
+            let node = self.cache_leaf.get();
             let idx = (page & (FANOUT as u64 - 1)) as usize;
             let prev = self.nodes[node as usize].slots[idx];
             self.nodes[node as usize].slots[idx] = slot;
@@ -157,8 +164,8 @@ impl RadixGpt {
         let idx = (page & (FANOUT as u64 - 1)) as usize;
         let prev = self.nodes[node as usize].slots[idx];
         self.nodes[node as usize].slots[idx] = slot;
-        self.cache_group = page >> BITS;
-        self.cache_leaf = node;
+        self.cache_group.set(page >> BITS);
+        self.cache_leaf.set(node);
         if prev == EMPTY {
             self.nodes[node as usize].used += 1;
             self.len += 1;
@@ -168,14 +175,18 @@ impl RadixGpt {
         }
     }
 
-    /// Look up the slot mapped for `page`.
+    /// Look up the slot mapped for `page`, warming the interior-mutable
+    /// leaf cache on the way down: the next access in the same 64-page
+    /// group — from `&self` or `&mut self` alike — is O(1). This is the
+    /// dense-block pattern (16 consecutive pages per block-I/O request)
+    /// shard workers run with only a shared reference.
     #[inline]
     pub fn get(&self, page: u64) -> Option<u32> {
-        // Leaf-cache fast path (read-only: cannot update the cache here,
-        // but insert/remove keep it fresh for the common sequential
-        // block-I/O pattern).
-        if page >> BITS == self.cache_group && self.cache_leaf != EMPTY {
-            let v = self.nodes[self.cache_leaf as usize].slots
+        // Leaf-cache fast path: same 64-page group as the last access.
+        if page >> BITS == self.cache_group.get()
+            && self.cache_leaf.get() != EMPTY
+        {
+            let v = self.nodes[self.cache_leaf.get() as usize].slots
                 [(page & (FANOUT as u64 - 1)) as usize];
             return if v == EMPTY { None } else { Some(v) };
         }
@@ -191,6 +202,10 @@ impl RadixGpt {
                 return None;
             }
         }
+        // Warm the cache (Cell: allowed from &self): the next access in
+        // this 64-page group skips the descent.
+        self.cache_group.set(page >> BITS);
+        self.cache_leaf.set(node);
         let v = self.nodes[node as usize].slots
             [(page & (FANOUT as u64 - 1)) as usize];
         if v == EMPTY {
@@ -200,49 +215,21 @@ impl RadixGpt {
         }
     }
 
-    /// Look up the slot mapped for `page`, updating the leaf cache on the
-    /// way down. Unlike [`Self::get`] (read-only, cannot refresh the
-    /// cache), this keeps repeated reads inside one 64-page leaf on the
-    /// short path even when the reads were not preceded by inserts — the
-    /// serve fast path's access pattern (hot-set re-reads). Same result
-    /// as `get` for every input; only the cache state differs.
+    /// Look up the slot mapped for `page`. Since the leaf cache became
+    /// interior-mutable, this is identical to [`Self::get`] — kept for
+    /// the call sites that hold `&mut self` and predate the `Cell`
+    /// cache.
     #[inline]
     pub fn lookup(&mut self, page: u64) -> Option<u32> {
-        if page >> BITS == self.cache_group && self.cache_leaf != EMPTY {
-            let v = self.nodes[self.cache_leaf as usize].slots
-                [(page & (FANOUT as u64 - 1)) as usize];
-            return if v == EMPTY { None } else { Some(v) };
-        }
-        if self.root == EMPTY || page > self.capacity() {
-            return None;
-        }
-        let mut node = self.root;
-        for level in (1..self.height).rev() {
-            let idx = ((page >> (level * BITS as u32)) & (FANOUT as u64 - 1))
-                as usize;
-            node = self.nodes[node as usize].slots[idx];
-            if node == EMPTY {
-                return None;
-            }
-        }
-        // Cache the leaf: the next lookup in this 64-page group is O(1).
-        self.cache_group = page >> BITS;
-        self.cache_leaf = node;
-        let v = self.nodes[node as usize].slots
-            [(page & (FANOUT as u64 - 1)) as usize];
-        if v == EMPTY {
-            None
-        } else {
-            Some(v)
-        }
+        self.get(page)
     }
 
     /// Unmap `page`, returning its slot if it was mapped. Frees nodes
     /// that become empty (the "shrink dynamically" half).
     pub fn remove(&mut self, page: u64) -> Option<u32> {
         // removal can free the cached leaf — invalidate up front
-        self.cache_group = u64::MAX;
-        self.cache_leaf = EMPTY;
+        self.cache_group.set(u64::MAX);
+        self.cache_leaf.set(EMPTY);
         if self.root == EMPTY || page > self.capacity() {
             return None;
         }

@@ -37,6 +37,7 @@
 //! | [`gpt`] | radix-tree Global Page Table (§4.1) |
 //! | [`queues`] | staging + reclaimable queues, Update/Reclaimable flags (§5.2) |
 //! | [`mrpool`] | remote MR block pool + activity tags (§4.2, Fig. 11) |
+//! | [`prefetch`] | adaptive per-shard stride prefetcher on the read miss path (majority-vote detection, accuracy-governed) |
 //! | [`placement`] | round-robin / power-of-two-choices placement (§4.3) |
 //! | [`eviction`] | victim selection: activity-based vs batched-query (§3.5) |
 //! | [`migration`] | sender-driven migration protocol (§3.5, Fig. 14) |
@@ -66,6 +67,7 @@ pub mod metrics;
 pub mod migration;
 pub mod mrpool;
 pub mod placement;
+pub mod prefetch;
 pub mod queues;
 pub mod replication;
 pub mod runtime;

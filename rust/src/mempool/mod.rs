@@ -31,6 +31,10 @@ pub struct SlotFlags {
     /// The slot's data is durably replicated (remote and/or disk);
     /// eligible for reuse via the reclaimable queue.
     pub reclaimable: bool,
+    /// The slot was filled by the stride prefetcher and has not served
+    /// a demand read yet: first in line for reclaim, so readahead can
+    /// never worsen eviction of demand-cached pages.
+    pub prefetched: bool,
 }
 
 /// State of one mempool page slot.
@@ -75,6 +79,10 @@ pub struct Mempool {
     retired: Vec<u32>,
     /// LRU over *reclaimable* used slots only.
     reclaim_lru: Lru<u32>,
+    /// LRU over prefetched-but-unused slots (disjoint from
+    /// `reclaim_lru`); always drained before it, so wrong guesses are
+    /// the first pages to go under pressure.
+    prefetch_q: Lru<u32>,
     capacity: u64,
     min_pages: u64,
     max_pages: u64,
@@ -96,6 +104,9 @@ pub struct Mempool {
     pub alloc_stalls: u64,
     /// Pages donated back to the host pool (stats).
     pub donations: u64,
+    /// Prefetched pages recycled, donated or overwritten before any
+    /// demand read touched them (the prefetcher's waste signal).
+    pub prefetch_evicted: u64,
     /// Replacement policy for the reclaim list.
     replacement: Replacement,
 }
@@ -114,6 +125,7 @@ impl Mempool {
             free: (0..cap as u32).rev().collect(),
             retired: Vec::new(),
             reclaim_lru: Lru::new(),
+            prefetch_q: Lru::new(),
             capacity: cap,
             min_pages: cap,
             max_pages: max_pages.max(cap),
@@ -126,6 +138,7 @@ impl Mempool {
             allocs: 0,
             alloc_stalls: 0,
             donations: 0,
+            prefetch_evicted: 0,
             replacement: Replacement::Lru,
         }
     }
@@ -211,9 +224,12 @@ impl Mempool {
     /// Allocate a slot for `page`. Strategy (§4.1):
     /// 1. use a pre-allocated free page;
     /// 2. if usage ≥ grow_threshold and the effective cap allows, grow;
-    /// 3. otherwise recycle the LRU *reclaimable* slot (a few CPU cycles —
+    /// 3. otherwise recycle a prefetched-but-unused slot (readahead is
+    ///    the first thing to go under pressure — it can never worsen
+    ///    eviction of demand-cached pages);
+    /// 4. otherwise recycle the LRU *reclaimable* slot (a few CPU cycles —
     ///    "reclaiming is just moving a page pointer");
-    /// 4. otherwise fail — backpressure until remote sending catches up.
+    /// 5. otherwise fail — backpressure until remote sending catches up.
     pub fn alloc(
         &mut self,
         page: u64,
@@ -240,15 +256,22 @@ impl Mempool {
                 grew,
             });
         }
-        // Recycle a reclaimable slot per the replacement policy.
-        let victim = match self.replacement {
-            Replacement::Lru => self.reclaim_lru.pop_lru(),
-            Replacement::Mru => self.reclaim_lru.pop_mru(),
+        // Recycle: prefetched-but-unused slots first, then the
+        // reclaimable list per the replacement policy.
+        let victim = match self.prefetch_q.pop_lru() {
+            Some(v) => {
+                self.prefetch_evicted += 1;
+                Some(v)
+            }
+            None => match self.replacement {
+                Replacement::Lru => self.reclaim_lru.pop_lru(),
+                Replacement::Mru => self.reclaim_lru.pop_mru(),
+            },
         };
         if let Some(victim) = victim {
             let evicted_page = match &self.slots[victim as usize] {
                 Slot::Used { page, .. } => *page,
-                Slot::Free => unreachable!("reclaim_lru holds used slots"),
+                Slot::Free => unreachable!("recycle lists hold used slots"),
             };
             self.slots[victim as usize] = Slot::Used {
                 page,
@@ -264,6 +287,81 @@ impl Mempool {
         }
         self.alloc_stalls += 1;
         Err(AllocFail::NoReclaimable)
+    }
+
+    /// Allocate a slot for a *prefetched* page. Readahead must never
+    /// displace live (non-reclaimable) demand data or grow the pool on
+    /// speculation, so only a pre-allocated free slot, an idle
+    /// reclaimable (remote-durable) slot, or — last resort — another
+    /// prefetched-but-unused slot may hold it; `None` means the pool
+    /// has no room for speculation right now and the prefetch is simply
+    /// dropped. Idle reclaimable slots are preferred over recycling the
+    /// prefetch queue, which would cannibalize the readahead window's
+    /// own not-yet-read pages. The slot comes back tagged `prefetched`
+    /// + `reclaimable` (its remote copy is valid by construction) and
+    /// queued in the prefetch LRU.
+    pub fn alloc_prefetched(&mut self, page: u64) -> Option<Alloc> {
+        let flags = SlotFlags {
+            update_pending: 0,
+            reclaimable: true,
+            prefetched: true,
+        };
+        if let Some(slot) = self.free.pop() {
+            self.slots[slot as usize] = Slot::Used { page, flags };
+            self.prefetch_q.touch(slot);
+            self.allocs += 1;
+            return Some(Alloc {
+                slot,
+                evicted_page: None,
+                grew: false,
+            });
+        }
+        let reclaim = match self.replacement {
+            Replacement::Lru => self.reclaim_lru.pop_lru(),
+            Replacement::Mru => self.reclaim_lru.pop_mru(),
+        };
+        let victim = match reclaim {
+            Some(v) => v,
+            None => {
+                let v = self.prefetch_q.pop_lru()?;
+                self.prefetch_evicted += 1;
+                v
+            }
+        };
+        let evicted_page = match &self.slots[victim as usize] {
+            Slot::Used { page, .. } => *page,
+            Slot::Free => unreachable!("recycle lists hold used slots"),
+        };
+        self.slots[victim as usize] = Slot::Used { page, flags };
+        self.prefetch_q.touch(victim);
+        self.reclaims += 1;
+        self.allocs += 1;
+        Some(Alloc {
+            slot: victim,
+            evicted_page: Some(evicted_page),
+            grew: false,
+        })
+    }
+
+    /// A demand read touched a prefetched slot: clear the tag and move
+    /// it from the prefetch queue into the normal reclaim LRU (it stays
+    /// reclaimable — its remote copy is still valid). Returns true if
+    /// the slot was prefetched.
+    pub fn promote_prefetched(&mut self, slot: u32) -> bool {
+        match &mut self.slots[slot as usize] {
+            Slot::Used { flags, .. } if flags.prefetched => {
+                flags.prefetched = false;
+                self.prefetch_q.remove(&slot);
+                self.reclaim_lru.touch(slot);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Prefetched pages currently waiting unused in the pool.
+    pub fn prefetched_count(&self) -> usize {
+        self.prefetch_q.len()
     }
 
     /// Page stored in `slot` (panics on a free slot — caller bug).
@@ -319,17 +417,27 @@ impl Mempool {
     }
 
     /// A write re-dirtied this slot: it is no longer safe to reclaim until
-    /// its new write set is remotely durable.
+    /// its new write set is remotely durable. A prefetched slot that gets
+    /// overwritten before any read counts as prefetch waste — the stale
+    /// remote copy it was fetched from is now superseded.
     pub fn unmark_reclaimable(&mut self, slot: u32) {
         if let Slot::Used { flags, .. } = &mut self.slots[slot as usize] {
             flags.reclaimable = false;
+            if flags.prefetched {
+                flags.prefetched = false;
+                self.prefetch_evicted += 1;
+            }
         }
         self.reclaim_lru.remove(&slot);
+        self.prefetch_q.remove(&slot);
     }
 
     /// Free a slot outright (page dropped, e.g. discard/trim).
     pub fn free_slot(&mut self, slot: u32) {
         self.reclaim_lru.remove(&slot);
+        if self.prefetch_q.remove(&slot) {
+            self.prefetch_evicted += 1;
+        }
         if matches!(self.slots[slot as usize], Slot::Used { .. }) {
             self.slots[slot as usize] = Slot::Free;
             self.free.push(slot);
@@ -365,19 +473,31 @@ impl Mempool {
 
     /// Donate up to `want` idle pages back to the host pool — the
     /// arbiter's give-back path when a lowered lease cannot be reached
-    /// by releasing free slots alone. Recycles reclaimable
-    /// (remote-durable) slots in replacement order, dropping both the
-    /// slot and one page of capacity each; never shrinks below
-    /// `min_pages`. Returns the evicted pages — the caller must drop
-    /// their GPT entries (their next read is served remotely).
-    pub fn donate_idle(&mut self, want: u64) -> Vec<u64> {
+    /// by releasing free slots alone. Recycles prefetched-but-unused
+    /// slots first (speculation yields before demand data), then
+    /// reclaimable (remote-durable) slots in replacement order,
+    /// dropping both the slot and one page of capacity each; never
+    /// shrinks below `min_pages`. The evicted pages are appended to the
+    /// caller's `evicted` buffer (cleared first) — the caller must drop
+    /// their GPT entries (their next read is served remotely) — and the
+    /// count is returned. The buffer is caller-owned and reusable, so
+    /// the arbiter's per-tick give-back allocates nothing in steady
+    /// state.
+    pub fn donate_idle(&mut self, want: u64, evicted: &mut Vec<u64>) -> u64 {
+        evicted.clear();
         let room = self.capacity.saturating_sub(self.min_pages);
-        let take = want.min(room).min(self.reclaim_lru.len() as u64);
-        let mut evicted = Vec::with_capacity(take as usize);
+        let idle = self.prefetch_q.len() + self.reclaim_lru.len();
+        let take = want.min(room).min(idle as u64);
         for _ in 0..take {
-            let victim = match self.replacement {
-                Replacement::Lru => self.reclaim_lru.pop_lru(),
-                Replacement::Mru => self.reclaim_lru.pop_mru(),
+            let victim = match self.prefetch_q.pop_lru() {
+                Some(v) => {
+                    self.prefetch_evicted += 1;
+                    Some(v)
+                }
+                None => match self.replacement {
+                    Replacement::Lru => self.reclaim_lru.pop_lru(),
+                    Replacement::Mru => self.reclaim_lru.pop_mru(),
+                },
             };
             let Some(victim) = victim else { break };
             if let Slot::Used { page, .. } = &self.slots[victim as usize] {
@@ -394,7 +514,7 @@ impl Mempool {
         if !evicted.is_empty() {
             self.shrinks += 1;
         }
-        evicted
+        evicted.len() as u64
     }
 
     /// Number of reclaimable slots waiting in the LRU.
@@ -582,13 +702,16 @@ mod tests {
             p.mark_reclaimable(s);
         }
         p.touch(slots[0]);
-        let evicted = p.donate_idle(3);
+        let mut evicted = Vec::new();
+        assert_eq!(p.donate_idle(3, &mut evicted), 3);
         assert_eq!(evicted, vec![1, 2, 3], "LRU durable pages first");
         assert_eq!(p.capacity(), cap - 3);
         assert_eq!(p.used(), 7);
         assert_eq!(p.donations, 3);
-        // nothing else is durable: further donation is a no-op
-        assert!(p.donate_idle(10).len() <= 1);
+        // nothing else is durable: further donation is a no-op (the
+        // reused buffer is cleared either way)
+        assert!(p.donate_idle(10, &mut evicted) <= 1);
+        assert!(evicted.len() <= 1);
     }
 
     #[test]
@@ -604,7 +727,8 @@ mod tests {
         for &(_, s) in &pages[..4] {
             p.mark_reclaimable(s);
         }
-        assert_eq!(p.donate_idle(4).len(), 4);
+        let mut evicted = Vec::new();
+        assert_eq!(p.donate_idle(4, &mut evicted), 4);
         let live: std::collections::HashSet<u32> =
             pages[4..].iter().map(|&(_, s)| s).collect();
         // refill until the pool regrows; every freshly minted slot must
@@ -637,8 +761,92 @@ mod tests {
             let a = p.alloc(i, 1 << 20).unwrap();
             p.mark_reclaimable(a.slot);
         }
-        assert!(p.donate_idle(100).is_empty());
+        let mut evicted = Vec::new();
+        assert_eq!(p.donate_idle(100, &mut evicted), 0);
+        assert!(evicted.is_empty());
         assert_eq!(p.capacity(), 4);
+    }
+
+    #[test]
+    fn prefetched_slots_recycle_before_demand_pages() {
+        let mut p = Mempool::new(4, 4, 0.9, 1.0);
+        // two demand pages (remote-durable) + two prefetched pages
+        let a = p.alloc(0, 1 << 20).unwrap();
+        let b = p.alloc(1, 1 << 20).unwrap();
+        p.mark_reclaimable(a.slot);
+        p.mark_reclaimable(b.slot);
+        let pf1 = p.alloc_prefetched(100).unwrap();
+        let pf2 = p.alloc_prefetched(101).unwrap();
+        assert!(pf1.evicted_page.is_none());
+        assert!(p.flags(pf1.slot).prefetched);
+        assert!(p.flags(pf1.slot).reclaimable);
+        assert_eq!(p.prefetched_count(), 2);
+        // demand pressure: the prefetched pages must go first, oldest
+        // first — both demand pages survive
+        let c = p.alloc(2, 1 << 20).unwrap();
+        assert_eq!(c.evicted_page, Some(100));
+        let d = p.alloc(3, 1 << 20).unwrap();
+        assert_eq!(d.evicted_page, Some(101));
+        assert_eq!(p.prefetch_evicted, 2);
+        assert_eq!(p.prefetched_count(), 0);
+        let _ = pf2;
+    }
+
+    #[test]
+    fn alloc_prefetched_never_grows_and_can_recycle_idle() {
+        // full pool, growth headroom available: prefetch must NOT grow
+        let mut p = Mempool::new(4, 64, 0.9, 1.0);
+        for i in 0..4 {
+            p.alloc(i, 1 << 20).unwrap();
+        }
+        let cap = p.capacity();
+        // nothing reclaimable → speculation is dropped
+        assert!(p.alloc_prefetched(100).is_none());
+        assert_eq!(p.capacity(), cap, "prefetch must not grow the pool");
+        // an idle remote-durable page may be displaced by readahead
+        p.mark_reclaimable(0);
+        let a = p.alloc_prefetched(100).unwrap();
+        assert_eq!(a.evicted_page, Some(0));
+        assert!(p.flags(a.slot).prefetched);
+        assert_eq!(p.capacity(), cap);
+    }
+
+    #[test]
+    fn promote_prefetched_moves_to_reclaim_lru() {
+        let mut p = Mempool::new(8, 8, 0.9, 1.0);
+        let a = p.alloc_prefetched(7).unwrap();
+        assert!(p.promote_prefetched(a.slot));
+        assert!(!p.flags(a.slot).prefetched);
+        assert!(p.flags(a.slot).reclaimable);
+        assert_eq!(p.prefetched_count(), 0);
+        assert_eq!(p.reclaimable_count(), 1);
+        assert!(!p.promote_prefetched(a.slot), "second promote is a no-op");
+        assert_eq!(p.prefetch_evicted, 0, "a promoted page is not waste");
+    }
+
+    #[test]
+    fn overwriting_a_prefetched_slot_counts_waste() {
+        let mut p = Mempool::new(8, 8, 0.9, 1.0);
+        let a = p.alloc_prefetched(7).unwrap();
+        // the write path re-dirties the slot before any read hit it
+        p.unmark_reclaimable(a.slot);
+        assert!(!p.flags(a.slot).prefetched);
+        assert!(!p.flags(a.slot).reclaimable);
+        assert_eq!(p.prefetch_evicted, 1);
+        assert_eq!(p.prefetched_count(), 0);
+    }
+
+    #[test]
+    fn donate_idle_drains_prefetched_first() {
+        let mut p = Mempool::new(2, 64, 0.5, 1.0);
+        let a = p.alloc(0, 1 << 20).unwrap();
+        p.mark_reclaimable(a.slot);
+        p.alloc_prefetched(50).unwrap();
+        p.alloc_prefetched(51).unwrap();
+        let mut evicted = Vec::new();
+        assert_eq!(p.donate_idle(2, &mut evicted), 2);
+        assert_eq!(evicted, vec![50, 51], "speculation yields first");
+        assert_eq!(p.prefetch_evicted, 2);
     }
 
     #[test]

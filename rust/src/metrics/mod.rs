@@ -37,6 +37,23 @@ pub struct RunMetrics {
     pub disk_reads: u64,
     /// Writes redirected to disk (Infiniswap connection/mapping windows).
     pub disk_writes: u64,
+    /// Pages fetched ahead of demand by the stride prefetcher.
+    pub prefetch_issued: u64,
+    /// Readahead batches posted (≥ 1 page each, per-unit coalesced).
+    pub prefetch_batches: u64,
+    /// Demand reads served by a prefetched page (local hit that would
+    /// have been a remote read).
+    pub prefetch_hits: u64,
+    /// Prefetched pages evicted (or overwritten) before any read.
+    pub prefetch_wasted: u64,
+    /// Read misses that piggybacked on an in-flight fetch of the same
+    /// page instead of issuing a duplicate RDMA READ.
+    pub coalesced_reads: u64,
+    /// Block read requests served through the block read pipeline —
+    /// at most one slow-path crossing each: either an all-cached
+    /// lock-free completion or one collect→coalesce→batch crossing
+    /// (`remote_hits`/`coalesced_reads` tell the two apart).
+    pub batched_reads: u64,
 }
 
 impl RunMetrics {
@@ -58,6 +75,30 @@ impl RunMetrics {
         }
     }
 
+    /// Prefetch coverage: the fraction of would-be misses the
+    /// prefetcher converted into local hits
+    /// (`prefetch_hits / (prefetch_hits + remote_hits + disk_reads)`).
+    pub fn prefetch_coverage(&self) -> f64 {
+        let would_miss =
+            self.prefetch_hits + self.remote_hits + self.disk_reads;
+        if would_miss == 0 {
+            0.0
+        } else {
+            self.prefetch_hits as f64 / would_miss as f64
+        }
+    }
+
+    /// Prefetch accuracy over completed (hit-or-evicted) prefetches;
+    /// 1.0 when nothing has completed yet.
+    pub fn prefetch_accuracy(&self) -> f64 {
+        let done = self.prefetch_hits + self.prefetch_wasted;
+        if done == 0 {
+            1.0
+        } else {
+            self.prefetch_hits as f64 / done as f64
+        }
+    }
+
     /// Merge another run's numbers (for multi-client aggregation).
     pub fn merge(&mut self, other: &RunMetrics) {
         self.op_latency.merge(&other.op_latency);
@@ -71,6 +112,12 @@ impl RunMetrics {
         self.remote_hits += other.remote_hits;
         self.disk_reads += other.disk_reads;
         self.disk_writes += other.disk_writes;
+        self.prefetch_issued += other.prefetch_issued;
+        self.prefetch_batches += other.prefetch_batches;
+        self.prefetch_hits += other.prefetch_hits;
+        self.prefetch_wasted += other.prefetch_wasted;
+        self.coalesced_reads += other.coalesced_reads;
+        self.batched_reads += other.batched_reads;
     }
 }
 

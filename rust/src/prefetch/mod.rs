@@ -1,0 +1,431 @@
+//! Adaptive per-shard stride prefetcher for the read miss path.
+//!
+//! Every local-read miss is a datapoint: the prefetcher keeps the last
+//! `window` miss-to-miss deltas and runs a Leap-style majority vote over
+//! them (Boyer–Moore candidate + verification pass). When a strict
+//! majority of recent deltas agree on one non-zero stride, the miss
+//! stream is sequential/strided and the next `degree` pages along that
+//! stride are worth fetching *before* the demand reads arrive; the
+//! engine lands them into the shard's GPT/mempool as prefetch-tagged
+//! slots (first in line for reclaim — see
+//! [`crate::mempool::Mempool::alloc_prefetched`]) with their RDMA
+//! arrival time tracked so a demand read that beats the wire waits only
+//! for the remainder.
+//!
+//! ## Adaptivity
+//!
+//! The prefetcher judges itself on *completed* prefetches: a landed page
+//! either serves a later demand read (a **hit**) or is evicted unused
+//! (**waste**). Once at least `min_samples` prefetches have completed,
+//! an accuracy (`hits / (hits + wasted)`) below `min_accuracy` disables
+//! readahead — no further batches are issued, so a random workload can
+//! never be hurt twice. While disabled the detector keeps running in
+//! **shadow mode**: each miss is scored against the page the previous
+//! vote would have predicted, and when shadow accuracy over a full
+//! sample window climbs back above the threshold (the workload turned
+//! sequential again) the prefetcher re-enables with fresh counters.
+//!
+//! The prefetcher holds no clock and issues no I/O itself — it only
+//! votes. The engine (see [`crate::engine`]) owns the fetch: filtering
+//! candidates to pages this shard owns whose remote copy is valid,
+//! allocating prefetch-tagged slots, and posting the coalesced
+//! [`crate::coordinator::sender::RemoteSender::read_batch`].
+
+use std::collections::VecDeque;
+
+/// Prefetcher policy knobs (mirrors the `valet.prefetch_*` config keys;
+/// see [`crate::config::ValetConfig`]).
+#[derive(Clone, Debug)]
+pub struct PrefetchConfig {
+    /// Master switch: a disabled prefetcher observes nothing and never
+    /// proposes readahead (the PR-3 miss path, bit for bit).
+    pub enabled: bool,
+    /// Miss-delta window the majority vote runs over.
+    pub window: usize,
+    /// Pages proposed per readahead batch.
+    pub degree: u64,
+    /// Auto-disable below this accuracy over completed prefetches.
+    pub min_accuracy: f64,
+    /// Completed prefetches required before accuracy is judged (and
+    /// shadow samples required before a re-enable).
+    pub min_samples: u64,
+}
+
+impl Default for PrefetchConfig {
+    fn default() -> Self {
+        PrefetchConfig {
+            enabled: false,
+            window: 8,
+            degree: 8,
+            min_accuracy: 0.5,
+            min_samples: 32,
+        }
+    }
+}
+
+impl PrefetchConfig {
+    /// Build from the Valet policy knobs.
+    pub fn from_valet(v: &crate::config::ValetConfig) -> Self {
+        PrefetchConfig {
+            enabled: v.prefetch,
+            window: v.prefetch_window.max(2),
+            degree: v.prefetch_degree.max(1),
+            min_accuracy: v.prefetch_min_accuracy,
+            min_samples: v.prefetch_min_samples.max(1),
+        }
+    }
+}
+
+/// A readahead proposal: fetch `degree` pages at `stride` beyond the
+/// missed page.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Readahead {
+    /// Detected page stride (may be negative — descending scans).
+    pub stride: i64,
+    /// Number of pages to fetch along the stride.
+    pub degree: u64,
+}
+
+/// The per-shard stride detector + accuracy governor (module docs).
+#[derive(Clone, Debug)]
+pub struct StridePrefetcher {
+    cfg: PrefetchConfig,
+    /// Page of the previous miss (delta source).
+    last_miss: Option<u64>,
+    /// Last `cfg.window` miss deltas.
+    deltas: VecDeque<i64>,
+    /// Completed prefetches that served a demand read.
+    hits: u64,
+    /// Completed prefetches evicted unused.
+    wasted: u64,
+    /// Pages handed to the fetch engine.
+    issued: u64,
+    /// Readahead suppressed by the accuracy governor.
+    disabled: bool,
+    /// Shadow mode: the page the previous vote predicted next.
+    shadow_next: Option<u64>,
+    /// Shadow predictions that matched the next miss.
+    shadow_hits: u64,
+    /// Shadow predictions scored.
+    shadow_total: u64,
+}
+
+impl StridePrefetcher {
+    /// Build with the given policy.
+    pub fn new(cfg: PrefetchConfig) -> Self {
+        let window = cfg.window;
+        StridePrefetcher {
+            cfg,
+            last_miss: None,
+            deltas: VecDeque::with_capacity(window),
+            hits: 0,
+            wasted: 0,
+            issued: 0,
+            disabled: false,
+            shadow_next: None,
+            shadow_hits: 0,
+            shadow_total: 0,
+        }
+    }
+
+    // -- accuracy feedback (driven by the fetch engine) ---------------
+
+    /// A prefetched page served a demand read.
+    pub fn record_hit(&mut self) {
+        self.hits += 1;
+    }
+
+    /// `n` prefetched pages were evicted (or overwritten) unused.
+    pub fn record_waste(&mut self, n: u64) {
+        self.wasted += n;
+    }
+
+    /// `n` pages were actually fetched from a proposal.
+    pub fn note_issued(&mut self, n: u64) {
+        self.issued += n;
+    }
+
+    // -- introspection ------------------------------------------------
+
+    /// Completed prefetches (hit or wasted).
+    pub fn completed(&self) -> u64 {
+        self.hits + self.wasted
+    }
+
+    /// Fraction of completed prefetches that served a read (1.0 before
+    /// any completion — innocent until proven wasteful).
+    pub fn accuracy(&self) -> f64 {
+        let done = self.completed();
+        if done == 0 {
+            1.0
+        } else {
+            self.hits as f64 / done as f64
+        }
+    }
+
+    /// True while the accuracy governor suppresses readahead.
+    pub fn is_disabled(&self) -> bool {
+        self.disabled
+    }
+
+    /// Pages handed to the fetch engine so far.
+    pub fn issued(&self) -> u64 {
+        self.issued
+    }
+
+    /// Prefetched pages that served demand reads.
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Prefetched pages evicted unused.
+    pub fn wasted(&self) -> u64 {
+        self.wasted
+    }
+
+    // -- the vote -----------------------------------------------------
+
+    /// Majority stride over the delta window, if the window is full and
+    /// a strict majority agrees on one non-zero delta.
+    fn majority_stride(&self) -> Option<i64> {
+        if self.deltas.len() < self.cfg.window {
+            return None;
+        }
+        // Boyer–Moore majority candidate…
+        let (mut cand, mut cnt) = (0i64, 0usize);
+        for &d in &self.deltas {
+            if cnt == 0 {
+                cand = d;
+                cnt = 1;
+            } else if d == cand {
+                cnt += 1;
+            } else {
+                cnt -= 1;
+            }
+        }
+        // …verified (the candidate is only guaranteed to be the
+        // majority if one exists).
+        let votes = self.deltas.iter().filter(|&&d| d == cand).count();
+        (cand != 0 && votes * 2 > self.deltas.len()).then_some(cand)
+    }
+
+    /// Feed one demand miss into the detector. Returns a readahead
+    /// proposal when the stream is confidently strided and the accuracy
+    /// governor allows fetching.
+    pub fn observe_miss(&mut self, page: u64) -> Option<Readahead> {
+        if !self.cfg.enabled {
+            return None;
+        }
+        let prev = match self.last_miss.replace(page) {
+            Some(p) => p,
+            None => return None,
+        };
+        let delta = (page as i64).wrapping_sub(prev as i64);
+        if delta != 0 {
+            if self.deltas.len() == self.cfg.window {
+                self.deltas.pop_front();
+            }
+            self.deltas.push_back(delta);
+        }
+        let stride = self.majority_stride();
+        if self.disabled {
+            self.shadow_score(page, stride);
+            return None;
+        }
+        // Judge accuracy before proposing more work.
+        if self.completed() >= self.cfg.min_samples
+            && self.accuracy() < self.cfg.min_accuracy
+        {
+            self.disabled = true;
+            self.shadow_next = None;
+            self.shadow_hits = 0;
+            self.shadow_total = 0;
+            return None;
+        }
+        stride.map(|s| Readahead {
+            stride: s,
+            degree: self.cfg.degree,
+        })
+    }
+
+    /// Would a demand hit on a prefetched page warrant extending the
+    /// readahead window? True while readahead is allowed and the recent
+    /// miss stream still votes a stride — the hit is evidence the
+    /// stride continues, so the engine keeps the window `degree` pages
+    /// ahead instead of stalling until the next miss (Leap's trend
+    /// continuation; without it every `degree` pages pay one demand
+    /// round trip).
+    pub fn wants_continuation(&self) -> bool {
+        self.cfg.enabled
+            && !self.disabled
+            && self.majority_stride().is_some()
+    }
+
+    /// The readahead to extend from a prefetch hit (stride from the
+    /// standing vote; no state is consumed).
+    pub fn continuation(&self) -> Option<Readahead> {
+        if !self.wants_continuation() {
+            return None;
+        }
+        self.majority_stride().map(|s| Readahead {
+            stride: s,
+            degree: self.cfg.degree,
+        })
+    }
+
+    /// Shadow mode: score the previous prediction against this miss and
+    /// re-enable once a full window of shadow samples clears the
+    /// accuracy bar.
+    fn shadow_score(&mut self, page: u64, stride: Option<i64>) {
+        if let Some(pred) = self.shadow_next.take() {
+            self.shadow_total += 1;
+            if pred == page {
+                self.shadow_hits += 1;
+            }
+        }
+        self.shadow_next =
+            stride.and_then(|s| page.checked_add_signed(s));
+        if self.shadow_total >= self.cfg.min_samples {
+            let acc = self.shadow_hits as f64 / self.shadow_total as f64;
+            if acc >= self.cfg.min_accuracy {
+                // The stream turned predictable again: fresh start.
+                self.disabled = false;
+                self.hits = 0;
+                self.wasted = 0;
+            }
+            self.shadow_hits = 0;
+            self.shadow_total = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> PrefetchConfig {
+        PrefetchConfig {
+            enabled: true,
+            window: 8,
+            degree: 4,
+            min_accuracy: 0.5,
+            min_samples: 8,
+        }
+    }
+
+    fn feed_seq(p: &mut StridePrefetcher, start: u64, n: u64, stride: i64) {
+        let mut page = start;
+        for _ in 0..n {
+            p.observe_miss(page);
+            page = page.checked_add_signed(stride).unwrap();
+        }
+    }
+
+    #[test]
+    fn sequential_stream_triggers_after_window_fills() {
+        let mut p = StridePrefetcher::new(cfg());
+        // 8 misses = 7 deltas: window (8) not yet full
+        for page in 0..8u64 {
+            assert_eq!(p.observe_miss(page), None, "page {page}");
+        }
+        // 9th miss fills the window: unanimous stride 1
+        assert_eq!(
+            p.observe_miss(8),
+            Some(Readahead { stride: 1, degree: 4 })
+        );
+    }
+
+    #[test]
+    fn majority_survives_noise_and_negative_strides() {
+        let mut p = StridePrefetcher::new(cfg());
+        // descending scan with two noise jumps mixed in
+        let pages =
+            [1000u64, 996, 992, 988, 50, 984, 980, 976, 972, 968];
+        let mut last = None;
+        for &pg in &pages {
+            last = p.observe_miss(pg);
+        }
+        assert_eq!(last, Some(Readahead { stride: -4, degree: 4 }));
+    }
+
+    #[test]
+    fn random_stream_never_proposes() {
+        let mut p = StridePrefetcher::new(cfg());
+        let mut x = 12345u64;
+        for _ in 0..200 {
+            x = x
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            assert_eq!(p.observe_miss(x >> 40), None);
+        }
+        assert!(!p.is_disabled(), "no issue → no accuracy penalty");
+    }
+
+    #[test]
+    fn disabled_config_observes_nothing() {
+        let mut p = StridePrefetcher::new(PrefetchConfig {
+            enabled: false,
+            ..cfg()
+        });
+        feed_seq(&mut p, 0, 64, 1);
+        assert_eq!(p.observe_miss(64), None);
+        assert_eq!(p.issued(), 0);
+    }
+
+    #[test]
+    fn bad_accuracy_disables_then_shadow_reenables() {
+        let mut p = StridePrefetcher::new(cfg());
+        feed_seq(&mut p, 0, 9, 1); // window full, proposing
+        p.note_issued(8);
+        p.record_waste(8); // all 8 evicted unused → accuracy 0
+        assert!(p.observe_miss(9).is_none(), "governor must trip");
+        assert!(p.is_disabled());
+        // still strided while disabled: nothing proposed…
+        for page in 10..14u64 {
+            assert_eq!(p.observe_miss(page), None);
+        }
+        assert!(p.is_disabled());
+        // …but shadow scoring sees min_samples perfect predictions and
+        // re-enables (the run above already banked 4 shadow samples)
+        feed_seq(&mut p, 14, 6, 1);
+        assert!(!p.is_disabled(), "shadow accuracy must re-enable");
+        assert_eq!(
+            p.observe_miss(20),
+            Some(Readahead { stride: 1, degree: 4 })
+        );
+    }
+
+    #[test]
+    fn shadow_stays_disabled_on_random_stream() {
+        let mut p = StridePrefetcher::new(cfg());
+        feed_seq(&mut p, 0, 9, 1);
+        p.note_issued(8);
+        p.record_waste(8);
+        assert!(p.observe_miss(9).is_none());
+        assert!(p.is_disabled());
+        let mut x = 777u64;
+        for _ in 0..100 {
+            x = x
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            assert_eq!(p.observe_miss(x >> 40), None);
+        }
+        assert!(p.is_disabled(), "random shadow must not re-enable");
+    }
+
+    #[test]
+    fn accuracy_counts_hits_and_waste() {
+        let mut p = StridePrefetcher::new(cfg());
+        assert_eq!(p.accuracy(), 1.0);
+        p.note_issued(4);
+        p.record_hit();
+        p.record_hit();
+        p.record_hit();
+        p.record_waste(1);
+        assert_eq!(p.completed(), 4);
+        assert!((p.accuracy() - 0.75).abs() < 1e-9);
+        assert_eq!(p.issued(), 4);
+        assert_eq!(p.hits(), 3);
+        assert_eq!(p.wasted(), 1);
+    }
+}

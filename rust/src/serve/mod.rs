@@ -65,6 +65,17 @@ pub enum Request {
         /// Page to read.
         page: u64,
     },
+    /// Read a whole block-I/O request (`pages_for(bytes)` pages from
+    /// `page`) through the batched miss pipeline: all of a piece's
+    /// misses cross into the slow path once and are fetched with one
+    /// per-unit coalesced READ. The single-driver baseline serves it
+    /// page by page (the comparison point).
+    ReadBlock {
+        /// First page.
+        page: u64,
+        /// Length in bytes.
+        bytes: u64,
+    },
     /// Advance the background pipeline by one virtual tick (issued by
     /// the remote-sender driver thread; also available to tests that
     /// want deterministic background progress).
@@ -127,6 +138,20 @@ pub fn spawn(cfg: &Config, kind: BackendKind) -> ServeHandle {
                         &mut cluster.state,
                         vnow,
                         page,
+                    );
+                    let lat = a.end - vnow;
+                    vnow = a.end;
+                    let _ = reply_tx.send(Reply {
+                        virtual_ns: lat,
+                        wall_ns: wall0.elapsed().as_nanos() as u64,
+                    });
+                }
+                Request::ReadBlock { page, bytes } => {
+                    let a = cluster.backend.read_block(
+                        &mut cluster.state,
+                        vnow,
+                        page,
+                        bytes,
                     );
                     let lat = a.end - vnow;
                     vnow = a.end;
@@ -368,17 +393,24 @@ pub struct ShardedServeHandle {
 }
 
 /// One shard worker: exclusively owns its fast path. Local read hits
-/// run lock-free; writes, read misses and pump ticks take the shared
-/// slow-path lock.
+/// (single-page or whole-block) run lock-free; writes, read misses and
+/// pump ticks take the shared slow-path lock.
+#[allow(clippy::too_many_arguments)]
 fn shard_worker(
     shard: usize,
     shards: usize,
+    stripe_pages: u64,
     sync_mode: bool,
     lat: LatencyConfig,
     mut fast: ShardFastPath,
     shared: Arc<Mutex<SharedSlow>>,
     rx: mpsc::Receiver<(Request, mpsc::Sender<Reply>)>,
 ) -> ShardFastPath {
+    let route = engine::ShardRoute {
+        shard,
+        shards,
+        stripe_pages,
+    };
     let mut vnow: Ns = 0;
     for (req, reply_tx) in rx.iter() {
         let wall0 = Instant::now();
@@ -407,15 +439,65 @@ fn shard_worker(
             }
             Request::Read { page } => {
                 // The payoff: a local-cache hit never takes the lock, so
-                // S workers serve hits fully in parallel.
+                // S workers serve hits fully in parallel. (A prefetch
+                // hit that wants the readahead window extended takes it
+                // briefly — asynchronous work, not request latency.)
                 let a = match fast.try_read_local(&lat, vnow, page) {
-                    Some(a) => a,
+                    Some(a) => {
+                        if fast.readahead_due.is_some() {
+                            let mut sh = shared
+                                .lock()
+                                .expect("serve lock poisoned");
+                            let SharedSlow { cl, sender, .. } = &mut *sh;
+                            engine::drive_readahead(
+                                sender, &mut fast, cl, vnow, route,
+                            );
+                        }
+                        a
+                    }
                     None => {
                         let mut sh =
                             shared.lock().expect("serve lock poisoned");
                         let SharedSlow { cl, sender, .. } = &mut *sh;
                         engine::shard_read_miss(
-                            sender, &mut fast, cl, vnow, page,
+                            sender, &mut fast, cl, vnow, page, route,
+                        )
+                    }
+                };
+                let lat_v = a.end - vnow;
+                vnow = a.end;
+                let _ = reply_tx.send(Reply {
+                    virtual_ns: lat_v,
+                    wall_ns: wall0.elapsed().as_nanos() as u64,
+                });
+            }
+            Request::ReadBlock { page, bytes } => {
+                // An all-cached block completes lock-free; any miss
+                // crosses into the slow path exactly once with the
+                // whole piece (collect → coalesce → batch).
+                let npages = crate::pages_for(bytes).max(1);
+                let a = match fast
+                    .try_read_block_local(&lat, vnow, page, npages)
+                {
+                    Some(a) => {
+                        if fast.readahead_due.is_some() {
+                            let mut sh = shared
+                                .lock()
+                                .expect("serve lock poisoned");
+                            let SharedSlow { cl, sender, .. } = &mut *sh;
+                            engine::drive_readahead(
+                                sender, &mut fast, cl, vnow, route,
+                            );
+                        }
+                        a
+                    }
+                    None => {
+                        let mut sh =
+                            shared.lock().expect("serve lock poisoned");
+                        let SharedSlow { cl, sender, .. } = &mut *sh;
+                        engine::shard_read_block(
+                            sender, &mut fast, cl, vnow, page, npages,
+                            route,
                         )
                     }
                 };
@@ -470,7 +552,16 @@ pub fn spawn_sharded(cfg: &Config, shards: usize) -> ShardedServeHandle {
         let sh = shared.clone();
         let lat = cfg.latency.clone();
         joins.push(Some(thread::spawn(move || {
-            shard_worker(i, shards, sync_mode, lat, fast, sh, rx)
+            shard_worker(
+                i,
+                shards,
+                stripe_pages,
+                sync_mode,
+                lat,
+                fast,
+                sh,
+                rx,
+            )
         })));
         txs.push(tx);
     }
@@ -642,6 +733,25 @@ fn dispatch_sharded(
                 txs[shard_of(p0)]
                     .send((
                         Request::Write { page: p0, bytes: b },
+                        reply_tx.clone(),
+                    ))
+                    .ok()?;
+            }
+            Some(pieces.len())
+        }
+        Request::ReadBlock { page, bytes } => {
+            if txs.len() == 1 {
+                txs[0].send((req, reply_tx.clone())).ok()?;
+                return Some(1);
+            }
+            // same stripe split as writes: each piece is one shard's
+            // block, served through that worker's batched read path
+            let pieces =
+                engine::split_stripes(page, bytes, stripe_pages);
+            for &(p0, b) in &pieces {
+                txs[shard_of(p0)]
+                    .send((
+                        Request::ReadBlock { page: p0, bytes: b },
                         reply_tx.clone(),
                     ))
                     .ok()?;

@@ -62,6 +62,39 @@ fn fig23_valet_flat_infiniswap_collapses() {
 }
 
 #[test]
+fn prefetch_experiment_beats_demand_paging_and_spares_random() {
+    let r = run("prefetch", &Scale::small()).unwrap();
+    let kv: std::collections::HashMap<String, f64> =
+        r.kv.iter().cloned().collect();
+    let g = |k: &str| *kv.get(k).unwrap_or_else(|| panic!("record {k}"));
+    // the win condition: sequential reads get faster with the pipeline
+    assert!(g("seq_speedup") > 1.5, "seq_speedup {}", g("seq_speedup"));
+    assert!(
+        g("seq_read_p99_us_on") < g("seq_read_p99_us_off"),
+        "p99 {} vs {}",
+        g("seq_read_p99_us_on"),
+        g("seq_read_p99_us_off")
+    );
+    assert!(
+        g("seq_tp_ops_on") > g("seq_tp_ops_off"),
+        "throughput must rise"
+    );
+    // one batched READ per unit beats 16 single round trips
+    assert!(g("batch_speedup") > 2.0, "batch {}", g("batch_speedup"));
+    // the no-harm condition: a random mix is within noise (in fact
+    // bit-identical — the prefetcher holds its fire)
+    assert!(
+        g("rand_regression_pct").abs() < 1.0,
+        "random regressed {}%",
+        g("rand_regression_pct")
+    );
+    assert_eq!(g("rand_prefetch_issued"), 0.0);
+    // and the prefetcher's own scorecard is healthy
+    assert!(g("prefetch_coverage") > 0.5);
+    assert!(g("prefetch_accuracy") > 0.8);
+}
+
+#[test]
 fn table1_disk_and_connection_dominate() {
     let r = run("table1", &Scale::small()).unwrap();
     // rows: name, µs, share. Disk WR must be the largest share, and

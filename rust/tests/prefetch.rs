@@ -1,0 +1,271 @@
+//! Integration tests for the miss-path read pipeline: batched block
+//! reads, miss coalescing, and the adaptive stride prefetcher — the
+//! correctness edges the pipeline must hold:
+//!
+//! * read-your-writes when a prefetch is in flight for a page being
+//!   written (the write wins; no stale wait, waste is booked);
+//! * miss coalescing under concurrent readers of one page (one fetch,
+//!   one completion, no duplicate RDMA);
+//! * prefetch-tagged pages evicted before demand pages under pressure;
+//! * the sequential win and the random no-harm guarantee end to end.
+
+use valet::backends::{ClusterState, Source};
+use valet::config::Config;
+use valet::engine::ShardedEngine;
+use valet::sim::{secs, us, Ns};
+use valet::PAGE_SIZE;
+
+const BLOCKS: u64 = 256;
+const FILE_PAGES: u64 = BLOCKS * 16;
+
+fn cfg(prefetch: bool) -> Config {
+    let mut cfg = Config::default();
+    cfg.cluster.nodes = 5;
+    cfg.valet.mr_block_bytes = 16 << 20;
+    cfg.valet.min_pool_pages = FILE_PAGES / 8;
+    cfg.valet.max_pool_pages = FILE_PAGES / 8;
+    cfg.valet.prefetch = prefetch;
+    cfg
+}
+
+/// Lay a file out through the write pipeline and drain it remote; the
+/// pool retains only the tail of the file.
+fn layout(cfg: &Config) -> (ClusterState, ShardedEngine, Ns) {
+    let mut cl = ClusterState::new(cfg);
+    let mut e = ShardedEngine::new(cfg, 1);
+    let mut t: Ns = 0;
+    for blk in 0..BLOCKS {
+        t = e.write(&mut cl, t, blk * 16, 16 * PAGE_SIZE).end;
+    }
+    t += secs(5);
+    e.pump(&mut cl, t);
+    (cl, e, t)
+}
+
+#[test]
+fn batched_block_read_pays_one_round_trip() {
+    let cfg = cfg(false);
+    // batched: one per-unit READ for all 16 missing pages
+    let (mut cl, mut e, t) = layout(&cfg);
+    let verbs0 = cl.fabric.verbs_posted(cl.sender);
+    let a = e.read_block(&mut cl, t, 0, 16 * PAGE_SIZE);
+    assert_eq!(a.source, Source::Remote);
+    let batched = a.end - t;
+    assert_eq!(
+        cl.fabric.verbs_posted(cl.sender) - verbs0,
+        1,
+        "16 misses in one unit must post exactly one READ"
+    );
+    let m = e.combined_metrics();
+    assert_eq!(m.batched_reads, 1);
+    assert_eq!(m.remote_hits, 16);
+
+    // per-page: the same block, 16 chained single reads
+    let (mut cl2, mut e2, t2) = layout(&cfg);
+    let verbs2 = cl2.fabric.verbs_posted(cl2.sender);
+    let mut tt = t2;
+    for p in 0..16u64 {
+        tt = e2.read(&mut cl2, tt, p).end;
+    }
+    let per_page = tt - t2;
+    assert_eq!(cl2.fabric.verbs_posted(cl2.sender) - verbs2, 16);
+    assert!(
+        batched * 3 < per_page,
+        "batched {batched} ns must be well under per-page {per_page} ns"
+    );
+    // and the batch is still slower than a pure local block hit
+    assert!(batched > us(36), "a real round trip was paid: {batched}");
+}
+
+#[test]
+fn miss_coalescing_dedupes_overlapping_readers() {
+    let cfg = cfg(false);
+    let (mut cl, mut e, t) = layout(&cfg);
+    let verbs0 = cl.fabric.verbs_posted(cl.sender);
+    // two readers miss on the same remote page at the same instant
+    // (overlapping in virtual time, as concurrent serve clients do)
+    let r1 = e.read(&mut cl, t, 0);
+    let r2 = e.read(&mut cl, t, 0);
+    assert_eq!(r1.source, Source::Remote);
+    assert_eq!(r2.source, Source::Remote);
+    assert_eq!(
+        cl.fabric.verbs_posted(cl.sender) - verbs0,
+        1,
+        "the second reader must piggyback, not fetch again"
+    );
+    assert_eq!(r2.end, r1.end, "both complete with the one fetch");
+    let m = e.combined_metrics();
+    assert_eq!(m.coalesced_reads, 1);
+    assert_eq!(m.remote_hits, 2);
+    // after completion the entry is stale: a later read fetches anew
+    let r3 = e.read(&mut cl, r1.end, 0);
+    assert_eq!(r3.source, Source::Remote);
+    assert_eq!(cl.fabric.verbs_posted(cl.sender) - verbs0, 2);
+}
+
+#[test]
+fn sequential_scan_prefetch_beats_demand_paging() {
+    let off = {
+        let cfg = cfg(false);
+        let (mut cl, mut e, mut t) = layout(&cfg);
+        for p in 0..FILE_PAGES {
+            t = e.read(&mut cl, t, p).end;
+        }
+        e.combined_metrics()
+    };
+    let on = {
+        let cfg = cfg(true);
+        let (mut cl, mut e, mut t) = layout(&cfg);
+        for p in 0..FILE_PAGES {
+            t = e.read(&mut cl, t, p).end;
+        }
+        e.combined_metrics()
+    };
+    assert!(on.prefetch_issued > 0, "{on:?}");
+    assert!(on.prefetch_hits > FILE_PAGES / 2, "{on:?}");
+    assert!(
+        on.read_latency.mean() < off.read_latency.mean() * 0.5,
+        "prefetch mean {} must halve demand-paging mean {}",
+        on.read_latency.mean(),
+        off.read_latency.mean()
+    );
+    assert!(
+        on.read_latency.p99() < off.read_latency.p99(),
+        "prefetch p99 {} vs {}",
+        on.read_latency.p99(),
+        off.read_latency.p99()
+    );
+    assert!(on.prefetch_coverage() > 0.5);
+    assert!(on.prefetch_accuracy() > 0.8, "{on:?}");
+    // the off run is the PR-3 demand path: no prefetch artifacts at all
+    assert_eq!(off.prefetch_issued, 0);
+    assert_eq!(off.prefetch_hits, 0);
+}
+
+#[test]
+fn read_your_writes_with_prefetch_in_flight() {
+    let cfg = cfg(true);
+    let (mut cl, mut e, t0) = layout(&cfg);
+    // drive sequential misses until readahead has landed pending pages
+    let mut t = t0;
+    let mut pending: Option<u64> = None;
+    for p in 0..64u64 {
+        t = e.read(&mut cl, t, p).end;
+        // pick a pending prefetched page whose RDMA is still in flight
+        if let Some((&pg, &arr)) = e
+            .shard(0)
+            .pending_arrivals
+            .iter()
+            .find(|&(_, &arr)| arr > t)
+        {
+            pending = Some(pg);
+            let _ = arr;
+            break;
+        }
+    }
+    let page = pending.expect("a sequential scan must trigger readahead");
+    let wasted0 = e.shard(0).mempool.prefetch_evicted;
+    // write the page while its prefetch is still on the wire
+    let w = e.write(&mut cl, t, page, PAGE_SIZE);
+    assert_eq!(w.source, Source::LocalPool);
+    // the write wins: the read sees the new data as a plain local hit,
+    // with NO wait for the stale prefetch arrival
+    let r = e.read(&mut cl, w.end, page);
+    assert_eq!(r.source, Source::LocalPool);
+    assert!(
+        r.end - w.end < us(5),
+        "no stale-arrival wait: {} ns",
+        r.end - w.end
+    );
+    assert!(
+        !e.shard(0).pending_arrivals.contains_key(&page),
+        "pending arrival must be dropped on overwrite"
+    );
+    assert_eq!(
+        e.shard(0).mempool.prefetch_evicted,
+        wasted0 + 1,
+        "the overwritten prefetch counts as waste"
+    );
+    // and nothing ever falls to disk
+    assert_eq!(e.combined_metrics().disk_reads, 0);
+}
+
+#[test]
+fn prefetched_pages_evicted_before_demand_pages() {
+    let cfg = cfg(true);
+    let (mut cl, mut e, t0) = layout(&cfg);
+    // trigger readahead with a sequential scan
+    let mut t = t0;
+    for p in 0..32u64 {
+        t = e.read(&mut cl, t, p).end;
+    }
+    assert!(
+        e.shard(0).mempool.prefetched_count() > 0,
+        "scan must leave prefetched-unused pages in the pool"
+    );
+    // demand writes of NEW pages fill the pool: every displaced page
+    // must come from the prefetched set first
+    let evicted0 = e.shard(0).mempool.prefetch_evicted;
+    let pf_count = e.shard(0).mempool.prefetched_count() as u64;
+    for i in 0..pf_count {
+        t = e.write(&mut cl, t, FILE_PAGES + 100 + i, PAGE_SIZE).end;
+    }
+    let evicted = e.shard(0).mempool.prefetch_evicted - evicted0;
+    assert_eq!(
+        evicted, pf_count,
+        "all {pf_count} prefetched-unused pages must go before any \
+         demand page"
+    );
+}
+
+#[test]
+fn random_mix_prefetcher_holds_fire() {
+    let run = |prefetch: bool| {
+        let cfg = cfg(prefetch);
+        let (mut cl, mut e, mut t) = layout(&cfg);
+        let mut x = 0xBEEFu64;
+        for _ in 0..2_000 {
+            x = x
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            t = e.read(&mut cl, t, (x >> 33) % FILE_PAGES).end;
+        }
+        e.combined_metrics()
+    };
+    let off = run(false);
+    let on = run(true);
+    // no majority stride → nothing issued → identical behavior
+    assert_eq!(on.prefetch_issued, 0, "{on:?}");
+    assert_eq!(
+        on.read_latency.mean().to_bits(),
+        off.read_latency.mean().to_bits(),
+        "a random mix must be bit-for-bit unaffected"
+    );
+    assert_eq!(on.remote_hits, off.remote_hits);
+}
+
+#[test]
+fn sharded_serve_block_reads_and_prefetch_roundtrip() {
+    use valet::serve::{spawn_sharded, Request};
+    let mut cfg = cfg(true);
+    cfg.valet.min_pool_pages = 1024;
+    cfg.valet.max_pool_pages = 1024;
+    let h = spawn_sharded(&cfg, 2);
+    // lay out 16 blocks, then read them back as whole blocks
+    for blk in 0..16u64 {
+        h.call(Request::Write { page: blk * 16, bytes: 64 * 1024 })
+            .expect("write");
+    }
+    for blk in 0..16u64 {
+        let r = h
+            .call(Request::ReadBlock { page: blk * 16, bytes: 64 * 1024 })
+            .expect("block read");
+        // cached blocks: the lock-free all-hit path, ~35 µs of copies
+        assert!(r.virtual_ns < 100_000, "{}", r.virtual_ns);
+    }
+    let out = h.shutdown().expect("shutdown");
+    let m = out.engine.combined_metrics();
+    assert_eq!(m.batched_reads, 16);
+    assert_eq!(m.local_hits, 256, "16 blocks × 16 pages, all cached");
+    assert_eq!(m.disk_reads, 0);
+}

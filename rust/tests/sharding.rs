@@ -77,6 +77,10 @@ struct Summary {
     staged_bytes: u64,
     disk_writes: u64,
     mapped_units: usize,
+    prefetch_issued: u64,
+    prefetch_hits: u64,
+    prefetch_wasted: u64,
+    coalesced_reads: u64,
 }
 
 fn summarize(
@@ -104,6 +108,10 @@ fn summarize(
         staged_bytes: staged,
         disk_writes: m.disk_writes,
         mapped_units: units,
+        prefetch_issued: m.prefetch_issued,
+        prefetch_hits: m.prefetch_hits,
+        prefetch_wasted: m.prefetch_wasted,
+        coalesced_reads: m.coalesced_reads,
     }
 }
 
@@ -121,8 +129,12 @@ fn run_coordinator(cfg: &Config, ops: &[Op]) -> Summary {
             }
         }
     }
+    // combined_metrics on both sides: it folds in prefetch waste the
+    // lazily-syncing shard metrics have not booked yet, which must not
+    // differ between the wrapper and the bare engine
+    let m = co.engine().combined_metrics();
     summarize(
-        co.metrics(),
+        &m,
         t,
         co.pending_write_sets(),
         co.staged_bytes(),
@@ -173,6 +185,47 @@ fn s1_engine_matches_single_coordinator_bit_for_bit() {
     assert!(engine.local_hits > 0, "{engine:?}");
     assert!(engine.remote_hits > 0, "{engine:?}");
     assert!(engine.write_count > 0);
+}
+
+#[test]
+fn s1_disabled_prefetcher_leaves_no_trace() {
+    // The default config ships with the prefetcher OFF: the pinned
+    // equivalence above therefore pins the PRE-pipeline demand miss
+    // path, and a disabled prefetcher must leave zero artifacts.
+    let cfg = small_cfg();
+    assert!(!cfg.valet.prefetch, "prefetch must default off");
+    let ops = workload(2_500, 17);
+    let (engine, _) = run_engine(&cfg, 1, &ops);
+    assert_eq!(engine.prefetch_issued, 0);
+    assert_eq!(engine.prefetch_hits, 0);
+    assert_eq!(engine.prefetch_wasted, 0);
+}
+
+#[test]
+fn s1_equivalence_holds_with_prefetcher_enabled() {
+    // The wrapper Coordinator and the one-shard engine must stay bit
+    // for bit identical with the full read pipeline live. Sequential
+    // read runs interleaved with writes/pumps exercise detection,
+    // readahead landing, hits, and overwrite invalidation.
+    let mut cfg = small_cfg();
+    cfg.valet.min_pool_pages = 256;
+    cfg.valet.max_pool_pages = 256;
+    cfg.valet.prefetch = true;
+    let mut ops = workload(800, 31);
+    for run in 0..24u64 {
+        let base = run * 64;
+        for p in 0..48 {
+            ops.push(Op::Read(base + p));
+        }
+        ops.push(Op::Pump(ms(5)));
+        ops.push(Op::Write(base, 16 * PAGE_SIZE));
+    }
+    let coord = run_coordinator(&cfg, &ops);
+    let (engine, _) = run_engine(&cfg, 1, &ops);
+    assert_eq!(coord, engine);
+    // the sequence must actually drive the prefetcher
+    assert!(engine.prefetch_issued > 0, "{engine:?}");
+    assert!(engine.prefetch_hits > 0, "{engine:?}");
 }
 
 #[test]
