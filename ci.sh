@@ -45,9 +45,15 @@ if [ "$FAST" -eq 0 ]; then
     grep -q '"metric":"seq_read_mean_us_on"' target/bench-smoke.json
     grep -q '"metric":"batch_speedup"' target/bench-smoke.json
     grep -q '"metric":"rand_regression_pct"' target/bench-smoke.json
+    # the reclaim-pipeline experiment must emit its overlap evidence
+    # and the two (non-)regression records
+    grep -q '"metric":"activity_vs_query_speedup"' target/bench-smoke.json
+    grep -q '"metric":"overlap_ratio"' target/bench-smoke.json
+    grep -q '"metric":"no_pressure_regression_pct"' target/bench-smoke.json
     # numeric gate (python3 is present on the CI image): sequential
-    # reads must get FASTER with the pipeline on, and the random mix
-    # must stay within noise of the demand-only baseline
+    # reads must get FASTER with the pipeline on, the random mix must
+    # stay within noise of the demand-only baseline, and the reclaim
+    # pipeline must overlap migrations without taxing demand traffic
     if command -v python3 >/dev/null 2>&1; then
         python3 - <<'EOF'
 import json
@@ -60,6 +66,16 @@ assert abs(kv["rand_regression_pct"]) < 5.0, \
 print(f"read pipeline: seq x{kv['seq_speedup']:.2f}, "
       f"batch x{kv['batch_speedup']:.2f}, "
       f"rand {kv['rand_regression_pct']:+.2f}%")
+rk = {r["metric"]: r["value"] for r in recs if r["id"] == "reclaim"}
+assert rk["activity_vs_query_speedup"] > 1.0, \
+    f"activity victims must beat query-random: {rk['activity_vs_query_speedup']}"
+assert rk["overlap_ratio"] > 0.0, \
+    f"migrations must overlap: {rk['overlap_ratio']}"
+assert abs(rk["no_pressure_regression_pct"]) < 5.0, \
+    f"pressure waves taxed demand traffic: {rk['no_pressure_regression_pct']}%"
+print(f"reclaim pipeline: activity x{rk['activity_vs_query_speedup']:.2f} "
+      f"vs query-random, overlap {rk['overlap_ratio']:.2f}, "
+      f"pressure tax {rk['no_pressure_regression_pct']:+.2f}%")
 EOF
     fi
     echo "wrote target/bench-smoke.json"

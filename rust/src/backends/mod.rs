@@ -61,13 +61,21 @@ pub struct ClusterState {
     pub monitors: Vec<ActivityMonitor>,
     /// The sender node (our container host).
     pub sender: NodeId,
+    /// Per-node pressure score: an EWMA of memory occupancy
+    /// (native + registered + reserve over total), fed by the activity
+    /// monitors via [`ClusterState::refresh_pressure`] whenever a
+    /// cluster event lands. The placement layer reads it through
+    /// [`ClusterState::candidates`].
+    pressure_score: Vec<f64>,
+    /// EWMA weight (`valet.pressure_ewma`).
+    pressure_alpha: f64,
 }
 
 impl ClusterState {
     /// Build from config: `cfg.cluster.nodes` nodes, node 0 the sender.
     pub fn new(cfg: &Config) -> Self {
         let n = cfg.cluster.nodes.max(2);
-        ClusterState {
+        let mut cl = ClusterState {
             fabric: Fabric::new(n, cfg.latency.clone()),
             disks: (0..n).map(|_| Disk::new(&cfg.latency)).collect(),
             mrpools: (0..n).map(|_| MrBlockPool::new()).collect(),
@@ -80,7 +88,50 @@ impl ClusterState {
                 })
                 .collect(),
             sender: 0,
+            pressure_score: vec![0.0; n],
+            pressure_alpha: cfg.valet.pressure_ewma.clamp(0.0, 1.0),
+        };
+        cl.seed_pressure();
+        cl
+    }
+
+    fn occupancy(&self, node: NodeId) -> f64 {
+        let m = &self.monitors[node];
+        let used = m
+            .native_bytes
+            .saturating_add(m.reserve_bytes)
+            .saturating_add(self.mrpools[node].registered_bytes());
+        if m.total_bytes == 0 {
+            1.0
+        } else {
+            (used as f64 / m.total_bytes as f64).clamp(0.0, 1.0)
         }
+    }
+
+    fn seed_pressure(&mut self) {
+        for n in 0..self.pressure_score.len() {
+            let occ = self.occupancy(n);
+            self.pressure_score[n] = occ;
+        }
+    }
+
+    /// Fold the monitors' current occupancy into the per-node pressure
+    /// EWMA. The cluster assemblies call this on every timeline event
+    /// (native alloc/free, host churn) so the score tracks sustained
+    /// load, not instants.
+    pub fn refresh_pressure(&mut self) {
+        let a = self.pressure_alpha;
+        for n in 0..self.pressure_score.len() {
+            let now = self.occupancy(n);
+            let prev = self.pressure_score[n];
+            self.pressure_score[n] = prev + a * (now - prev);
+        }
+    }
+
+    /// The smoothed pressure score of a node in thousandths (0 = idle,
+    /// 1000 = fully claimed).
+    pub fn pressure_milli(&self, node: NodeId) -> u32 {
+        (self.pressure_score[node].clamp(0.0, 1.0) * 1000.0) as u32
     }
 
     /// Peer nodes (everyone but the sender).
@@ -93,12 +144,14 @@ impl ClusterState {
         self.monitors[node].free_for_mr(self.mrpools[node].registered_bytes())
     }
 
-    /// Placement candidates over all peers.
+    /// Placement candidates over all peers, carrying both the
+    /// instantaneous free bytes and the smoothed pressure score.
     pub fn candidates(&self) -> Vec<crate::placement::Candidate> {
         self.peers()
             .map(|n| crate::placement::Candidate {
                 node: n,
                 free_bytes: self.donatable(n),
+                pressure_milli: self.pressure_milli(n),
             })
             .collect()
     }
@@ -313,6 +366,33 @@ mod tests {
         assert_eq!(cl.disks.len(), cfg.cluster.nodes);
         assert_eq!(cl.peers().count(), cfg.cluster.nodes - 1);
         assert!(cl.donatable(1) > 0);
+    }
+
+    #[test]
+    fn pressure_ewma_tracks_native_load() {
+        let cfg = Config::default();
+        let mut cl = ClusterState::new(&cfg);
+        let idle = cl.pressure_milli(1);
+        assert!(idle < 100, "reserve-only occupancy: {idle}");
+        // a native app claims most of the node: the score climbs toward
+        // occupancy at the EWMA rate, monotonically
+        cl.monitors[1].native_bytes = cl.monitors[1].total_bytes;
+        let mut prev = idle;
+        for _ in 0..20 {
+            cl.refresh_pressure();
+            let s = cl.pressure_milli(1);
+            assert!(s >= prev, "score must rise: {prev} -> {s}");
+            prev = s;
+        }
+        assert!(prev > 800, "sustained load converges: {prev}");
+        // the candidates view carries the score
+        let c = cl.candidates();
+        let node1 = c.iter().find(|c| c.node == 1).unwrap();
+        assert_eq!(node1.pressure_milli, prev);
+        // releasing the memory decays the score back down
+        cl.monitors[1].native_bytes = 0;
+        cl.refresh_pressure();
+        assert!(cl.pressure_milli(1) < prev);
     }
 
     #[test]

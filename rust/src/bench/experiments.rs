@@ -1,4 +1,4 @@
-//! One function per paper table/figure (ARCHITECTURE.md §7 experiment index).
+//! One function per paper table/figure (ARCHITECTURE.md §8 experiment index).
 //!
 //! Scaling: the paper runs 10 M records / 10 M ops on 32 real machines;
 //! we run the identical pipeline with records/ops scaled by `Scale` so
@@ -1016,10 +1016,11 @@ pub fn ablations(scale: &Scale) -> Report {
             let caps = [4u64, 4, 2, 4, 2, 4].map(|g| g << 30);
             for _ in 0..balls {
                 let cands: Vec<Candidate> = (0..n)
-                    .map(|i| Candidate {
-                        node: i,
-                        free_bytes: caps[i]
-                            .saturating_sub(loads[i] * (1 << 20)),
+                    .map(|i| {
+                        Candidate::new(
+                            i,
+                            caps[i].saturating_sub(loads[i] * (1 << 20)),
+                        )
                     })
                     .collect();
                 let pick = policy.pick(&cands).unwrap();
@@ -1459,12 +1460,299 @@ pub fn prefetch(scale: &Scale) -> Report {
     }
 }
 
+// ---------------------------------------------------------------------
+// Reclaim pipeline — pump-driven concurrent migrations under pressure
+// ---------------------------------------------------------------------
+
+/// The asynchronous reclaim pipeline experiment (Fig-23-style pressure
+/// waves, beyond the paper): a file is laid out remotely through the
+/// write pipeline, then a deterministic 3:1 read/write loop hammers the
+/// **hot** half of it while native applications on two peers claim
+/// their memory back mid-run (and release it later). Four runs:
+///
+/// * **no pressure** — the baseline the pipeline must not perturb;
+/// * **waves / activity** — `ActivityBased` victims (read-tagged, so
+///   the hot units are never picked), concurrent migrations;
+/// * **waves / query-random** — `BatchedQueryRandom` victims
+///   (Infiniswap-style random choice, paid query RTTs): hot units
+///   migrate, their writes park, slot recycling stalls;
+/// * **waves / serialized** — `max_concurrent_migrations = 1`, the
+///   ablation showing why the migration table runs machines
+///   concurrently.
+///
+/// Headline records: `activity_vs_query_speedup` (> 1: picking idle
+/// victims keeps demand traffic fast), `overlap_ratio` (> 0:
+/// migrations actually overlap in flight), `no_pressure_regression_pct`
+/// (|·| < 5: reclaim overlapped with demand costs ~nothing — the
+/// paper's Figure-23 claim) and `serialized_vs_overlapped_speedup`
+/// (> 1: the wave drains faster concurrently).
+pub fn reclaim(scale: &Scale) -> Report {
+    use crate::cluster::ShardedCluster;
+    use crate::eviction::BatchedQueryRandom;
+    use crate::migration::ctrl_rtt;
+    use crate::PAGE_SIZE;
+
+    let blocks: u64 = (scale.records / 40).clamp(256, 768);
+    let hot_blocks = blocks / 2;
+    let pool_pages = (blocks * 16 / 8).max(256);
+    let ops: u64 = (scale.ops / 4).clamp(2_000, 10_000);
+
+    // 256 KB units: many migratable blocks per peer, so a wave demands
+    // several victims at once — random victim selection then hits hot
+    // units with near-certainty while ActivityBased never does.
+    let unit_bytes = 1u64 << 18;
+    let mk_cfg = |max_migs: usize| {
+        let mut cfg = base_config();
+        cfg.cluster.nodes = 5; // sender + 4 peers: ≥2 cold units/peer
+        cfg.valet.mr_block_bytes = unit_bytes;
+        cfg.valet.min_pool_pages = pool_pages;
+        cfg.valet.max_pool_pages = pool_pages;
+        cfg.valet.max_concurrent_migrations = max_migs;
+        cfg
+    };
+    // units below this hold hot pages (the traffic loop's target set);
+    // round UP so a unit straddling the hot/cold boundary counts as
+    // hot — it receives hot writes and must never be wave-targeted
+    let hot_unit_limit = (hot_blocks * 16 * PAGE_SIZE).div_ceil(unit_bytes);
+
+    // cold (never-touched-again) units per peer, by primary placement
+    let cold_units_of =
+        |cl: &ShardedCluster| -> Vec<(crate::NodeId, u64)> {
+            let mut per_peer: Vec<(crate::NodeId, u64)> = cl
+                .state
+                .peers()
+                .map(|n| (n, 0u64))
+                .collect();
+            for (id, u) in cl.engine.sender().units().iter() {
+                if u.alive && *id >= hot_unit_limit {
+                    if let Some(e) = per_peer
+                        .iter_mut()
+                        .find(|(n, _)| *n == u.nodes[0])
+                    {
+                        e.1 += 1;
+                    }
+                }
+            }
+            per_peer
+        };
+
+    // One measured run: lay the file out, then `ops` operations over
+    // the hot half (3 reads : 1 write), with optional pressure waves
+    // driven by op index. Returns (virtual ops/s, the cluster).
+    let run = |max_migs: usize,
+               query_random: bool,
+               waves: bool|
+     -> (f64, ShardedCluster) {
+        let cfg = mk_cfg(max_migs);
+        let mut cl = ShardedCluster::new(&cfg, 1);
+        if query_random {
+            let rtt = ctrl_rtt(&cfg.latency);
+            cl.engine.set_victim_policy(Box::new(
+                BatchedQueryRandom::new(7, 1, rtt),
+            ));
+        }
+        let mut t: Ns = 0;
+        for blk in 0..blocks {
+            t = cl.write(t, blk * 16, 16 * PAGE_SIZE).end;
+        }
+        // 64 units × 62 ms mapping windows serialize on the sender
+        // thread: give the layout ample room to drain completely
+        t += secs(10);
+        cl.advance(t); // layout durable, connections warm
+        let t0 = t;
+        let mut x = 0x9E37_79B9u64;
+        let mut claims: Vec<(crate::NodeId, u64)> = Vec::new();
+        for i in 0..ops {
+            if i == ops / 4 {
+                if waves {
+                    // wave: the two peers with the most cold units
+                    // demand (cold-1) units back — ActivityBased can
+                    // always serve this from idle blocks alone
+                    let mut cold = cold_units_of(&cl);
+                    cold.sort_by_key(|&(n, c)| {
+                        (std::cmp::Reverse(c), n)
+                    });
+                    for &(peer, cold_units) in cold.iter().take(2) {
+                        if cold_units < 2 {
+                            continue;
+                        }
+                        let need = (cold_units - 1) * unit_bytes;
+                        let m = &cl.state.monitors[peer];
+                        let registered =
+                            cl.state.mrpools[peer].registered_bytes();
+                        let claim = (m.total_bytes - m.reserve_bytes)
+                            .saturating_sub(registered)
+                            + need;
+                        claims.push((peer, claim));
+                        cl.schedule(t, ClusterEvent::NativeAlloc {
+                            node: peer,
+                            bytes: claim,
+                        });
+                    }
+                }
+                // advance in EVERY run at the same op index: the
+                // no-pressure baseline must see the identical pump
+                // cadence, so the regression record isolates the
+                // migrations themselves
+                cl.advance(t);
+            }
+            if i == (3 * ops) / 4 {
+                for &(peer, claim) in &claims {
+                    cl.schedule(t, ClusterEvent::NativeFree {
+                        node: peer,
+                        bytes: claim,
+                    });
+                }
+                cl.advance(t);
+            }
+            x = x
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            let blk = (x >> 33) % hot_blocks;
+            let a = if i % 4 == 0 {
+                cl.write(t, blk * 16, 16 * PAGE_SIZE)
+            } else {
+                cl.read(t, blk * 16 + ((x >> 21) % 16))
+            };
+            t = a.end;
+            if i % 16 == 0 {
+                cl.advance(t);
+            }
+        }
+        cl.advance(t + secs(5)); // drain every migration + batch
+        let tp = ops as f64 / ((t - t0).max(1) as f64 / 1e9);
+        (tp, cl)
+    };
+
+    let mut rows = Vec::new();
+    let mut kv = Vec::new();
+    let span = |cl: &ShardedCluster| -> f64 {
+        let recs = cl.engine.migration_records();
+        if recs.is_empty() {
+            return 0.0;
+        }
+        let first = recs.iter().map(|r| r.scheduled).min().unwrap();
+        let last = recs.iter().map(|r| r.done).max().unwrap();
+        (last - first) as f64
+    };
+
+    // (a) no pressure: the path the pipeline must leave unchanged
+    let (tp_base, cl_base) = run(4, false, false);
+    assert_eq!(cl_base.engine.migration_stats().started, 0);
+    rows.push(vec![
+        "no pressure".into(),
+        format!("{tp_base:.0}"),
+        "-".into(),
+        "-".into(),
+    ]);
+    kv.push(("no_pressure_tp".into(), tp_base));
+
+    // (b) waves, activity-based victims, concurrent migrations
+    let (tp_act, cl_act) = run(4, false, true);
+    let stats = cl_act.engine.migration_stats();
+    let durations: f64 = cl_act
+        .engine
+        .migration_records()
+        .iter()
+        .map(|r| (r.done - r.activated) as f64)
+        .sum();
+    let overlap_ratio = if durations > 0.0 {
+        stats.overlap_ns as f64 / durations
+    } else {
+        0.0
+    };
+    rows.push(vec![
+        "waves, activity victims (overlapped)".into(),
+        format!("{tp_act:.0}"),
+        format!("{} mig / {} del", stats.completed, stats.deleted),
+        format!(
+            "overlap {:.0}%, parked {} / flushed {}",
+            overlap_ratio * 100.0,
+            stats.parked_sets,
+            stats.flushed_sets
+        ),
+    ]);
+    kv.push(("activity_tp".into(), tp_act));
+    kv.push(("overlap_ratio".into(), overlap_ratio));
+    kv.push(("migrations_completed".into(), stats.completed as f64));
+    kv.push(("parked_sets".into(), stats.parked_sets as f64));
+    kv.push(("flushed_sets".into(), stats.flushed_sets as f64));
+    kv.push((
+        "no_pressure_regression_pct".into(),
+        100.0 * (tp_base - tp_act) / tp_base.max(1e-9),
+    ));
+    let overlapped_span = span(&cl_act);
+
+    // (c) waves, Infiniswap-style random victims (batch=1, paid RTT)
+    let (tp_query, cl_query) = run(4, true, true);
+    let qstats = cl_query.engine.migration_stats();
+    rows.push(vec![
+        "waves, query-random victims".into(),
+        format!("{tp_query:.0}"),
+        format!("{} mig / {} del", qstats.completed, qstats.deleted),
+        format!("parked {}", qstats.parked_sets),
+    ]);
+    kv.push(("query_tp".into(), tp_query));
+    kv.push((
+        "activity_vs_query_speedup".into(),
+        tp_act / tp_query.max(1e-9),
+    ));
+
+    // (d) waves, activity victims, serialized migrations (the ablation)
+    let (tp_serial, cl_serial) = run(1, false, true);
+    let sstats = cl_serial.engine.migration_stats();
+    let serial_span = span(&cl_serial);
+    rows.push(vec![
+        "waves, activity victims (serialized)".into(),
+        format!("{tp_serial:.0}"),
+        format!("{} mig / {} del", sstats.completed, sstats.deleted),
+        format!(
+            "overlap {} ns, reclaim span {:.1} ms",
+            sstats.overlap_ns,
+            serial_span / 1e6
+        ),
+    ]);
+    kv.push(("serialized_tp".into(), tp_serial));
+    kv.push(("serialized_overlap_ns".into(), sstats.overlap_ns as f64));
+    kv.push((
+        "serialized_vs_overlapped_speedup".into(),
+        serial_span / overlapped_span.max(1e-9),
+    ));
+    kv.push(("overlapped_reclaim_span_ms".into(), overlapped_span / 1e6));
+    kv.push(("serialized_reclaim_span_ms".into(), serial_span / 1e6));
+
+    Report {
+        kv,
+        id: "reclaim",
+        title: "Asynchronous reclaim pipeline: pressure waves, victim policies, overlapped vs serialized migration",
+        header: vec!["run", "ops/sec (virtual)", "migrations", "detail"],
+        rows,
+        notes: vec![
+            format!(
+                "{blocks} × 64 KB blocks ({} hot) on 4 peers; pool \
+                 holds 1/8 of the file; waves claim (cold-1) units \
+                 back on the two coldest peers mid-run",
+                hot_blocks
+            ),
+            "activity victims come from the cold half (read+write \
+             tags keep hot units off the list) so demand traffic is \
+             untouched; random victims park hot writes behind the \
+             migration and stall slot recycling"
+                .into(),
+            "overlap_ratio > 0 is the concurrency evidence: pairwise \
+             in-flight time over summed migration durations (exactly \
+             0 when serialized)"
+                .into(),
+        ],
+    }
+}
+
 /// All experiments, in presentation order.
 pub fn all_ids() -> Vec<&'static str> {
     vec![
         "table1", "fig2", "fig3", "fig5", "fig8", "fig9", "fig10",
         "bigdata", "ml", "fig21", "table7", "fig22", "fig23",
-        "ablations", "scaling", "prefetch",
+        "ablations", "scaling", "prefetch", "reclaim",
     ]
 }
 
@@ -1487,6 +1775,7 @@ pub fn run(id: &str, scale: &Scale) -> Option<Report> {
         "ablations" => ablations(scale),
         "scaling" => scaling(scale),
         "prefetch" => prefetch(scale),
+        "reclaim" => reclaim(scale),
         _ => return None,
     })
 }

@@ -9,6 +9,8 @@
 //! remote pressure events fan out through the
 //! [`crate::arbiter::HostArbiter`].
 
+use std::collections::VecDeque;
+
 use crate::arbiter::{TenantGroup, TenantId, TenantSpec};
 use crate::backends::{
     self, Access, ClusterState, PagingBackend, PressureOutcome,
@@ -17,6 +19,78 @@ use crate::config::{BackendKind, Config};
 use crate::engine::ShardedEngine;
 use crate::sim::{EventQueue, Ns};
 use crate::NodeId;
+
+/// One resolved pressure episode: when, which node, what happened.
+pub type PressureEntry = (Ns, NodeId, PressureOutcome);
+
+/// Entries a [`PressureLog`] retains before dropping its oldest.
+const PRESSURE_LOG_CAP: usize = 4096;
+
+/// Bounded log of pressure episodes: a drop-oldest ring so multi-hour
+/// pressure-wave runs (the `reclaim` experiment's bread and butter)
+/// never grow memory without bound. Dropped entries are counted, not
+/// silently forgotten.
+#[derive(Clone, Debug)]
+pub struct PressureLog {
+    entries: VecDeque<PressureEntry>,
+    cap: usize,
+    /// Oldest entries dropped to stay within the cap.
+    pub dropped: u64,
+}
+
+impl Default for PressureLog {
+    fn default() -> Self {
+        Self::new(PRESSURE_LOG_CAP)
+    }
+}
+
+impl PressureLog {
+    /// An empty log retaining at most `cap` entries.
+    pub fn new(cap: usize) -> Self {
+        PressureLog {
+            entries: VecDeque::new(),
+            cap: cap.max(1),
+            dropped: 0,
+        }
+    }
+
+    /// Append an episode, dropping the oldest entry when full.
+    pub fn push(&mut self, entry: PressureEntry) {
+        if self.entries.len() >= self.cap {
+            self.entries.pop_front();
+            self.dropped += 1;
+        }
+        self.entries.push_back(entry);
+    }
+
+    /// Episodes currently retained.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when no episode has been retained.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Iterate retained episodes, oldest first.
+    pub fn iter(&self) -> impl Iterator<Item = &PressureEntry> {
+        self.entries.iter()
+    }
+
+    /// The most recent episode, if any.
+    pub fn last(&self) -> Option<&PressureEntry> {
+        self.entries.back()
+    }
+}
+
+impl std::ops::Index<usize> for PressureLog {
+    type Output = PressureEntry;
+
+    fn index(&self, i: usize) -> &PressureEntry {
+        &self.entries[i]
+    }
+}
 
 /// Timeline events applied to the cluster as virtual time advances.
 #[derive(Clone, Copy, Debug)]
@@ -114,7 +188,7 @@ impl EventTarget for ShardedEngine {
 fn apply_events<T: EventTarget + ?Sized>(
     state: &mut ClusterState,
     events: &mut EventQueue<ClusterEvent>,
-    pressure_log: &mut Vec<(Ns, NodeId, PressureOutcome)>,
+    pressure_log: &mut PressureLog,
     target: &mut T,
     now: Ns,
 ) {
@@ -146,6 +220,9 @@ fn apply_events<T: EventTarget + ?Sized>(
                 target.on_host_free(pages);
             }
         }
+        // every event moves some monitor: fold the new occupancy into
+        // the per-peer pressure EWMA the placement layer reads
+        state.refresh_pressure();
     }
 }
 
@@ -157,8 +234,8 @@ pub struct Cluster {
     pub backend: Box<dyn PagingBackend>,
     /// Scheduled node events.
     pub events: EventQueue<ClusterEvent>,
-    /// Pressure episodes resolved so far.
-    pub pressure_log: Vec<(Ns, NodeId, PressureOutcome)>,
+    /// Pressure episodes resolved so far (bounded drop-oldest ring).
+    pub pressure_log: PressureLog,
 }
 
 impl Cluster {
@@ -168,7 +245,7 @@ impl Cluster {
             state: ClusterState::new(cfg),
             backend: backends::build(kind, cfg),
             events: EventQueue::new(),
-            pressure_log: Vec::new(),
+            pressure_log: PressureLog::default(),
         }
     }
 
@@ -229,8 +306,8 @@ pub struct TenantCluster {
     pub group: TenantGroup,
     /// Scheduled node events.
     pub events: EventQueue<ClusterEvent>,
-    /// Pressure episodes resolved so far.
-    pub pressure_log: Vec<(Ns, NodeId, PressureOutcome)>,
+    /// Pressure episodes resolved so far (bounded drop-oldest ring).
+    pub pressure_log: PressureLog,
 }
 
 impl TenantCluster {
@@ -240,7 +317,7 @@ impl TenantCluster {
             state: ClusterState::new(cfg),
             group: TenantGroup::new(cfg, specs),
             events: EventQueue::new(),
-            pressure_log: Vec::new(),
+            pressure_log: PressureLog::default(),
         }
     }
 
@@ -298,8 +375,8 @@ pub struct ShardedCluster {
     pub engine: ShardedEngine,
     /// Scheduled node events.
     pub events: EventQueue<ClusterEvent>,
-    /// Pressure episodes resolved so far.
-    pub pressure_log: Vec<(Ns, NodeId, PressureOutcome)>,
+    /// Pressure episodes resolved so far (bounded drop-oldest ring).
+    pub pressure_log: PressureLog,
 }
 
 impl ShardedCluster {
@@ -309,7 +386,7 @@ impl ShardedCluster {
             state: ClusterState::new(cfg),
             engine: ShardedEngine::new(cfg, shards),
             events: EventQueue::new(),
-            pressure_log: Vec::new(),
+            pressure_log: PressureLog::default(),
         }
     }
 
@@ -514,6 +591,22 @@ mod tests {
         cl.schedule(t + secs(2), ClusterEvent::SenderHostFree { pages: 99 });
         cl.advance(t + secs(3));
         assert_eq!(cl.engine.host_free_pages(), 99);
+    }
+
+    #[test]
+    fn pressure_log_ring_drops_oldest_and_counts() {
+        let mut log = PressureLog::new(3);
+        assert!(log.is_empty());
+        for i in 0..5u64 {
+            log.push((i, 0, PressureOutcome::default()));
+        }
+        assert_eq!(log.len(), 3);
+        assert_eq!(log.dropped, 2);
+        // oldest two (t=0, t=1) were dropped; index 0 is now t=2
+        assert_eq!(log[0].0, 2);
+        assert_eq!(log[2].0, 4);
+        let times: Vec<u64> = log.iter().map(|e| e.0).collect();
+        assert_eq!(times, vec![2, 3, 4]);
     }
 
     #[test]

@@ -207,6 +207,14 @@ pub struct ValetConfig {
     pub prefetch_min_accuracy: f64,
     /// Completed prefetches before accuracy is judged.
     pub prefetch_min_samples: u64,
+    /// Migrations the reclaim pipeline runs concurrently (§3.5). Blocks
+    /// selected beyond this stay queued (victim-marked, writes still
+    /// flowing) until a slot frees; `1` serializes migrations — the
+    /// ablation baseline of the `reclaim` experiment.
+    pub max_concurrent_migrations: usize,
+    /// EWMA weight for the per-peer pressure score the placement layer
+    /// reads (0 = frozen, 1 = instantaneous).
+    pub pressure_ewma: f64,
 }
 
 impl Default for ValetConfig {
@@ -228,6 +236,8 @@ impl Default for ValetConfig {
             prefetch_degree: 8,
             prefetch_min_accuracy: 0.5,
             prefetch_min_samples: 32,
+            max_concurrent_migrations: 4,
+            pressure_ewma: 0.3,
         }
     }
 }
@@ -317,6 +327,14 @@ impl Config {
                 "prefetch_min_samples" => {
                     self.valet.prefetch_min_samples =
                         v.as_u64().ok_or_else(err)?
+                }
+                "max_concurrent_migrations" => {
+                    self.valet.max_concurrent_migrations =
+                        v.as_u64().ok_or_else(err)? as usize
+                }
+                "pressure_ewma" => {
+                    self.valet.pressure_ewma =
+                        v.as_f64().ok_or_else(err)?
                 }
                 _ => return Err(err()),
             },

@@ -10,7 +10,7 @@
 //! them, page-space interleaved by stripe (see
 //! [`crate::engine::ShardedEngine::shard_of`]).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 
 use crate::backends::{Access, Source};
 use crate::config::LatencyConfig;
@@ -21,6 +21,11 @@ use crate::prefetch::{PrefetchConfig, StridePrefetcher};
 use crate::queues::{ReclaimableQueue, StagingQueue, WriteSet};
 use crate::sim::Ns;
 use crate::util::PageBitmap;
+
+/// Deferred activity stamps a shard buffers between slow-path
+/// crossings (see [`ShardFastPath::activity_due`]); newest wins on
+/// overflow.
+const ACTIVITY_DUE_CAP: usize = 1024;
 
 /// Shard-local request state: the first three Figure-7 stages (GPT →
 /// mempool → staging) plus the reclaim bookkeeping those stages need.
@@ -56,6 +61,15 @@ pub struct ShardFastPath {
     /// [`crate::engine::drive_readahead`] at the next opportunity that
     /// may touch the slow path.
     pub(crate) readahead_due: Option<u64>,
+    /// Deferred MR-block read-activity stamps: a consumed prefetch is
+    /// demand activity (§3.5), but the lock-free hit path cannot reach
+    /// the cluster's MR pools — `(page, time)` pairs park here and
+    /// every slow-path crossing drains them via
+    /// [`crate::engine::flush_activity`]. Bounded: the oldest buffered
+    /// stamp is dropped when full (O(1) on the ring) — newer stamps
+    /// dominate older ones for the max-based tag, so the incoming
+    /// stamp is always kept.
+    pub(crate) activity_due: VecDeque<(u64, Ns)>,
     /// Reusable buffer for idle-page donation (the arbiter tick path
     /// must not allocate).
     donate_buf: Vec<u64>,
@@ -98,6 +112,7 @@ impl ShardFastPath {
             pending_arrivals: HashMap::new(),
             waste_seen: 0,
             readahead_due: None,
+            activity_due: VecDeque::new(),
             donate_buf: Vec::new(),
             scratch_misses: Vec::new(),
             scratch_fetch: Vec::new(),
@@ -129,6 +144,15 @@ impl ShardFastPath {
             self.mempool.promote_prefetched(slot);
             self.metrics.prefetch_hits += 1;
             self.prefetcher.record_hit();
+            // a consumed prefetch is demand activity for the block's
+            // §3.5 tag — stamped on the next slow-path crossing. On
+            // overflow drop an OLD buffered stamp (front), never the
+            // incoming one: the tag is max-based, so newer stamps
+            // strictly dominate older ones for the same block.
+            if self.activity_due.len() >= ACTIVITY_DUE_CAP {
+                self.activity_due.pop_front();
+            }
+            self.activity_due.push_back((page, t));
             // the hit confirms the trend: ask the engine to keep the
             // readahead window `degree` pages ahead
             if self.prefetcher.wants_continuation() {

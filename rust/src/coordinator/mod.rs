@@ -31,7 +31,7 @@
 //! | remote-sender drain | Remote Sender Thread (§4.1) | [`sender::RemoteSender`] on a [`crate::sim::Server`] timeline |
 //! | reclaimable recycle | Update/Reclaimable flags (§5.2) | [`crate::queues::ReclaimableQueue`] + slot flags |
 //! | eviction hook | activity-based victim selection (§3.5) | pluggable [`VictimPolicy`] (`with_victim_policy`) |
-//! | migration hook | sender-driven protocol (§3.5, Fig. 14) | [`crate::migration::MigrationSm`] driven event-by-event in `remote_pressure` |
+//! | migration hook | sender-driven protocol (§3.5, Fig. 14) | live [`crate::migration::MigrationSm`] instances in the sender's migration table, advanced on pump ticks |
 //!
 //! ### Write path (critical path = first three stages only, Figure 7)
 //! 1. radix-tree insert into the GPT,
@@ -48,13 +48,19 @@
 //! from the unit's primary; disk only if every remote copy is gone and
 //! disk backup is on (Table 3).
 //!
-//! ### Remote pressure (§3.5)
+//! ### Remote pressure (§3.5): the reclaim pipeline
 //! The pressured peer picks a victim with the pluggable [`VictimPolicy`]
-//! (activity-based by default: local tags, zero queries), then the
-//! sender drives one migration state machine through the Figure-14
-//! protocol — PressureReport → DestChosen → PrepareAcked → CopyDone →
-//! CommitAcked. Writes to the migrating unit stay parked (write-locked)
-//! until commit; reads keep hitting the source.
+//! (activity-based by default: local tags, zero queries — and the tags
+//! now cover *read* activity too, including consumed prefetches), then
+//! the sender **enqueues** one migration state machine per victim into
+//! its migration table. Pump ticks drive each machine through the
+//! Figure-14 protocol — PressureReport → DestChosen (pressure-aware
+//! placement, [`crate::placement::LeastPressured`]) → PrepareAcked →
+//! CopyDone → CommitAcked — interleaved with write batches, several
+//! machines at a time (`valet.max_concurrent_migrations`). Writes to a
+//! migrating unit park in the table and flush to the destination at
+//! COMMIT; reads keep hitting the source until the remap. See
+//! ARCHITECTURE.md §6 for the timeline diagram.
 
 pub mod fast;
 pub mod sender;
@@ -203,6 +209,23 @@ impl Coordinator {
         self.engine.sender().victim_policy_name()
     }
 
+    /// Migrations currently in the sender's table (queued + in flight).
+    pub fn migrations_inflight(&self) -> usize {
+        self.engine.migrations_inflight()
+    }
+
+    /// Aggregate reclaim-pipeline counters.
+    pub fn migration_stats(&self) -> crate::coordinator::sender::MigStats {
+        self.engine.migration_stats()
+    }
+
+    /// Milestones of completed migrations, in completion order.
+    pub fn migration_records(
+        &self,
+    ) -> &[crate::coordinator::sender::MigrationRecord] {
+        self.engine.migration_records()
+    }
+
     /// Host free pages currently granted to the mempool's cap.
     pub fn host_free_pages(&self) -> u64 {
         self.engine.host_free_pages()
@@ -295,9 +318,10 @@ impl Coordinator {
     }
 
     /// A peer needs `bytes` of its donated memory back (§3.5): select
-    /// victims via the pluggable policy and migrate each one through the
-    /// sender-driven protocol state machine; delete only as a last
-    /// resort (no destination with room).
+    /// victims via the pluggable policy and enqueue a live migration
+    /// state machine per victim; the machines advance on subsequent
+    /// [`Self::pump`] calls, overlapping demand traffic. Delete stays
+    /// the synchronous last resort (no destination with room).
     pub fn remote_pressure(
         &mut self,
         cl: &mut ClusterState,
@@ -415,15 +439,30 @@ mod tests {
         let out = co.remote_pressure(&mut cl, t, holder, 1);
         assert!(out.migrated >= 1);
         assert_eq!(out.deleted, 0);
-        // the migrated unit is write-locked until the protocol committed
+        // the machine is enqueued, not driven: only pump ticks move it
+        assert_eq!(co.migrations_inflight(), out.migrated as usize);
+        assert_eq!(co.migration_stats().completed, 0);
+        t += secs(2);
+        co.pump(&mut cl, t);
+        assert_eq!(co.migrations_inflight(), 0);
+        let stats = co.migration_stats();
+        assert_eq!(stats.completed, out.migrated as u64);
+        // the migrated unit carries the park-window write lock and its
+        // milestones are ordered like the protocol demands
+        let rec = co.migration_records()[0];
+        assert!(rec.park_from >= rec.activated);
+        assert!(rec.copy_start >= rec.park_from);
+        assert!(rec.copy_end > rec.copy_start);
+        assert!(rec.done > rec.copy_end);
+        assert_ne!(rec.dst, rec.src);
         let relocated = co
             .units()
             .iter()
-            .any(|(_, u)| u.wlocked_until >= out.done_at);
+            .any(|(_, u)| u.wlocked_until >= rec.done);
         assert!(relocated, "a unit must carry the park-window lock");
         // reads of migrated data still come from remote (never disk)
         let before = co.metrics().disk_reads;
-        let mut tt = out.done_at;
+        let mut tt = t;
         for p in [0u64, 1, 17, 33, 65, 129] {
             let rr = co.read(&mut cl, tt, p);
             tt = rr.end;

@@ -9,6 +9,23 @@
 //! apply them to its own mempool without sharing it. Writes are thereby
 //! serialized only within a shard; the sender serializes nothing but its
 //! own CPU time.
+//!
+//! ## The reclaim pipeline (§3.5, pump-driven)
+//!
+//! Remote pressure no longer runs a migration start-to-finish inside the
+//! pressure event. [`RemoteSender::remote_pressure`] only *selects*
+//! victims and enqueues live [`MigrationSm`] instances into the
+//! **migration table**; [`RemoteSender::advance_migrations`] — called
+//! from every pump tick, interleaved with write batches — walks each
+//! machine through PREPARE → copy → COMMIT at its own virtual-time
+//! milestones. Up to `valet.max_concurrent_migrations` migrations (on
+//! distinct blocks/peers) proceed concurrently; while one is in flight,
+//! reads keep hitting the source (the unit map still points there until
+//! COMMIT) and write batches targeting the migrating unit are parked in
+//! the table and flushed to the destination when COMMIT lands. Delete
+//! remains the last resort when no destination has room.
+//! [`crate::migration::simulate`] survives as the test oracle for the
+//! single-migration timeline (`tests/reclaim.rs`).
 
 use std::collections::HashMap;
 
@@ -16,9 +33,9 @@ use crate::backends::{ClusterState, PressureOutcome, Unit, UnitMap};
 use crate::config::{Config, LatencyConfig, ValetConfig};
 use crate::coordinator::fast::ShardFastPath;
 use crate::eviction::{ActivityBased, VictimPolicy};
-use crate::migration::{self, MigAction, MigEvent, MigState, MigrationSm};
-use crate::mrpool::MrState;
-use crate::placement::{Placement, PowerOfTwo};
+use crate::migration::{ctrl_rtt, MigAction, MigEvent, MigState, MigrationSm};
+use crate::mrpool::{MrBlockId, MrState};
+use crate::placement::{Candidate, LeastPressured, Placement, PowerOfTwo};
 use crate::queues::WriteSet;
 use crate::replication::choose_replicas;
 use crate::sim::{Ns, Server};
@@ -31,6 +48,105 @@ struct Inflight {
     done: Ns,
     shard: usize,
     sets: Vec<WriteSet>,
+}
+
+/// Candidate peers the sender polls before choosing a migration
+/// destination (the power-of-two query model the old one-shot path also
+/// charged — one control RTT each, before writes park).
+const MIG_QUERIES: u32 = 2;
+
+/// One live migration in the sender's migration table: a [`MigrationSm`]
+/// plus the virtual-time milestones of the phase it is currently in.
+/// Advanced only by [`RemoteSender::advance_migrations`] (pump ticks).
+struct ActiveMigration {
+    /// The Figure-14 protocol machine.
+    sm: MigrationSm,
+    /// Address-space unit whose replica slot is moving.
+    unit: u64,
+    /// Node losing the block.
+    src: NodeId,
+    /// Victim MR block on `src`.
+    src_block: MrBlockId,
+    /// Block size (bytes copied, bytes reclaimed).
+    block_bytes: u64,
+    /// Victim selected / machine enqueued at this time.
+    scheduled: Ns,
+    /// Destination, chosen at activation (pressure-aware placement).
+    dst: Option<NodeId>,
+    /// Fresh MR block on `dst`, registered when the copy starts.
+    dst_block: Option<MrBlockId>,
+    /// Left the queue (got a concurrency slot) at this time.
+    activated: Ns,
+    /// Writes park from here (candidate queries done, PREPARE sent).
+    park_from: Ns,
+    /// Bulk copy src→dst milestones.
+    copy_start: Ns,
+    copy_end: Ns,
+    /// Current phase's work completes at this time.
+    phase_done: Ns,
+    /// Write sets parked while the block migrates, with their owning
+    /// shard; flushed to the destination at COMMIT.
+    parked: Vec<(usize, WriteSet)>,
+    /// Total bytes parked (sizing the flush message).
+    parked_bytes: u64,
+}
+
+impl ActiveMigration {
+    /// Holds a concurrency slot: the machine left `ChoosingDest` (its
+    /// destination is chosen, PREPARE is out). Derived from the state
+    /// machine so it can never drift from the protocol.
+    fn is_active(&self) -> bool {
+        self.sm.state() != MigState::ChoosingDest
+    }
+}
+
+/// Milestones of one completed migration (diagnostics + the
+/// `tests/reclaim.rs` oracle pin against [`crate::migration::simulate`]).
+#[derive(Clone, Copy, Debug)]
+pub struct MigrationRecord {
+    /// Address-space unit that moved.
+    pub unit: u64,
+    /// Source peer.
+    pub src: NodeId,
+    /// Destination peer.
+    pub dst: NodeId,
+    /// Bytes moved.
+    pub block_bytes: u64,
+    /// Victim selected at this time.
+    pub scheduled: Ns,
+    /// Concurrency slot acquired (candidate queries start here).
+    pub activated: Ns,
+    /// Writes parked from here (Figure 12's window opens).
+    pub park_from: Ns,
+    /// Bulk copy milestones.
+    pub copy_start: Ns,
+    /// Copy finished; source memory free from here.
+    pub copy_end: Ns,
+    /// COMMIT acked; unit remapped, parked writes flushed.
+    pub done: Ns,
+    /// Write sets that parked against this migration and flushed at
+    /// COMMIT.
+    pub parked_flushed: u64,
+}
+
+/// Aggregate reclaim-pipeline counters (slow-path global — migrations
+/// belong to the shared sender, not to any one shard's `RunMetrics`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MigStats {
+    /// Migrations enqueued by pressure episodes.
+    pub started: u64,
+    /// Migrations that reached COMMIT.
+    pub completed: u64,
+    /// Victims deleted instead (no destination with room).
+    pub deleted: u64,
+    /// Write sets parked against in-flight migrations.
+    pub parked_sets: u64,
+    /// Parked write sets flushed to their destination at COMMIT.
+    pub flushed_sets: u64,
+    /// Virtual time two migrations spent concurrently in flight, summed
+    /// pairwise — the `reclaim` experiment's overlap evidence (0 under
+    /// `max_concurrent_migrations = 1`).
+    pub overlap_ns: Ns,
 }
 
 /// The shared remote-sender slow path (see module docs).
@@ -65,6 +181,21 @@ pub struct RemoteSender {
     /// prefetcher. Entries whose completion has passed are pruned
     /// lazily.
     inflight_reads: HashMap<u64, Ns>,
+    /// The migration table: live protocol machines advanced on pump
+    /// ticks (see the module docs).
+    migs: Vec<ActiveMigration>,
+    /// Milestones of completed migrations, in completion order.
+    mig_records: Vec<MigrationRecord>,
+    /// Aggregate reclaim counters.
+    mig_stats: MigStats,
+    /// Destination policy for migrations (§3.5 "less-pressured peer");
+    /// defaults to [`LeastPressured`], separate from the unit-mapping
+    /// placement hook so swapping one never perturbs the other.
+    reclaim_placement: Box<dyn Placement + Send>,
+    /// A queued migration may activate no earlier than this (the last
+    /// time a concurrency slot freed) — keeps serialized mode
+    /// (`max_concurrent_migrations = 1`) strictly back-to-back.
+    mig_slot_free: Ns,
 }
 
 /// Prune the in-flight read table once it reaches this size (stale
@@ -85,6 +216,11 @@ impl RemoteSender {
             victim_policy: Box::new(ActivityBased),
             owner_tag: None,
             inflight_reads: HashMap::new(),
+            migs: Vec::new(),
+            mig_records: Vec::new(),
+            mig_stats: MigStats::default(),
+            reclaim_placement: Box::new(LeastPressured::new()),
+            mig_slot_free: 0,
         }
     }
 
@@ -105,6 +241,15 @@ impl RemoteSender {
     /// Swap in a different placement policy (the §4.3 hook).
     pub fn set_placement(&mut self, placement: Box<dyn Placement + Send>) {
         self.placement = placement;
+    }
+
+    /// Swap in a different migration-destination policy (the §3.5
+    /// "less-pressured peer" hook; [`LeastPressured`] by default).
+    pub fn set_reclaim_placement(
+        &mut self,
+        placement: Box<dyn Placement + Send>,
+    ) {
+        self.reclaim_placement = placement;
     }
 
     // -- diagnostics --------------------------------------------------
@@ -149,6 +294,21 @@ impl RemoteSender {
             .filter(|f| f.shard == shard)
             .map(|f| f.done)
             .min()
+    }
+
+    /// Migrations currently in the table (queued + in flight).
+    pub fn migrations_inflight(&self) -> usize {
+        self.migs.len()
+    }
+
+    /// Aggregate reclaim-pipeline counters.
+    pub fn migration_stats(&self) -> MigStats {
+        self.mig_stats
+    }
+
+    /// Milestones of completed migrations, in completion order.
+    pub fn migration_records(&self) -> &[MigrationRecord] {
+        &self.mig_records
     }
 
     // -- the sender-thread pipeline -----------------------------------
@@ -276,13 +436,19 @@ impl RemoteSender {
     /// empty.
     ///
     /// Callers decide what the batch means: the demand block-read path
-    /// waits on the result; the prefetcher treats it as asynchronous
-    /// readahead and only records the arrival times.
+    /// (`demand = true`) waits on the result and stamps the primary
+    /// block's read-activity tag — §3.5's victim ranking then sees read
+    /// phases — while the prefetcher (`demand = false`) treats it as
+    /// asynchronous readahead, records only the arrival times, and
+    /// leaves the tag alone: a speculative fetch becomes activity only
+    /// when a later demand hit consumes it, so prefetched-but-unused
+    /// blocks stay first in line as victims.
     pub fn read_batch(
         &mut self,
         cl: &mut ClusterState,
         t0: Ns,
         pages: &[u64],
+        demand: bool,
         out: &mut Vec<(u64, Ns)>,
     ) -> Ns {
         out.clear();
@@ -296,8 +462,8 @@ impl RemoteSender {
                 j += 1;
             }
             let run = &pages[i..j];
-            let (primary, ready) = match self.units.get(unit) {
-                Some(u) if u.alive => (u.nodes[0], u.ready_at),
+            let (primary, block, ready) = match self.units.get(unit) {
+                Some(u) if u.alive => (u.nodes[0], u.blocks[0], u.ready_at),
                 _ => {
                     for &p in run {
                         out.push((p, t0));
@@ -309,6 +475,9 @@ impl RemoteSender {
             let t = t0.max(ready) + self.lat.mrpool_get;
             let bytes = run.len() as u64 * PAGE_SIZE;
             let verb = cl.fabric.rdma_read(t, cl.sender, primary, bytes);
+            if demand {
+                cl.mrpools[primary].touch_read(block, verb.end);
+            }
             for &p in run {
                 self.note_inflight_read(t0, p, verb.end);
                 out.push((p, verb.end));
@@ -339,6 +508,43 @@ impl RemoteSender {
         let unit = self
             .units
             .unit_of(fast.staging.peek().expect("non-empty").page);
+        // §3.5 write parking: a batch whose unit is mid-migration (STOP
+        // writes sent with PREPARE) moves into the migration table
+        // instead of the wire, and flushes to the destination at COMMIT.
+        // Costs queue movement only — no sender-thread time, no verb.
+        if let Some(mig_idx) = self
+            .migs
+            .iter()
+            .position(|m| m.unit == unit && m.sm.writes_parked())
+        {
+            let mut parked = 0u64;
+            let mut parked_bytes = 0u64;
+            while let Some(front) = fast.staging.peek() {
+                if self.units.unit_of(front.page) != unit {
+                    break;
+                }
+                let ws = fast.staging.pop().expect("peeked");
+                if self.vcfg.disk_backup {
+                    for p in ws.page..ws.page + ws.pages() {
+                        fast.disk_valid.set(p);
+                    }
+                }
+                parked_bytes += ws.bytes;
+                let m = &mut self.migs[mig_idx];
+                m.parked_bytes += ws.bytes;
+                m.parked.push((shard, ws));
+                parked += 1;
+            }
+            // Table 3: the disk backup covers parked batches exactly
+            // like sent ones — the backup write goes out now, off the
+            // critical path, not at the COMMIT flush
+            if parked > 0 && self.vcfg.disk_backup {
+                cl.disks[cl.sender].write_async(t0, parked_bytes);
+                fast.metrics.disk_writes += 1;
+            }
+            self.mig_stats.parked_sets += parked;
+            return t0;
+        }
         let mut batch = Vec::new();
         let mut bytes = 0u64;
         while let Some(front) = fast.staging.peek() {
@@ -429,13 +635,21 @@ impl RemoteSender {
         }
     }
 
-    // -- remote pressure (§3.5) ---------------------------------------
+    // -- remote pressure (§3.5): the reclaim pipeline -----------------
 
     /// A peer needs `bytes` of its donated memory back: select victims
-    /// via the pluggable policy and migrate each one through the
-    /// sender-driven protocol state machine; delete only as a last
-    /// resort (no destination with room). Entirely slow-path state, so
-    /// pressure handling never blocks shard fast paths.
+    /// via the pluggable policy and **enqueue** one live [`MigrationSm`]
+    /// per victim into the migration table — the pump drives the
+    /// protocol from here ([`Self::advance_migrations`]); this call
+    /// never blocks on wire time. Delete stays the synchronous last
+    /// resort when no destination has room. The returned outcome counts
+    /// bytes *committed to reclaim* (blocks are victim-marked
+    /// immediately, so the pressured node's pool stops considering
+    /// them); `done_at` is when victim selection finished. A queued
+    /// migration whose destinations all fill up before it activates
+    /// degrades to delete at activation — `migrated` counts
+    /// initiations; [`Self::migration_stats`] reconciles the final
+    /// split.
     pub fn remote_pressure(
         &mut self,
         cl: &mut ClusterState,
@@ -447,13 +661,34 @@ impl RemoteSender {
             done_at: now,
             ..Default::default()
         };
-        let owner = self.owner_tag.unwrap_or(cl.sender);
+        // Bytes already committed to reclaim on this node by earlier
+        // episodes but not yet released (the source block frees only
+        // when its copy completes, so the caller's `registered_bytes`-
+        // based demand still counts them — without this credit a
+        // second pressure wave arriving mid-copy would select surplus
+        // victims for memory that is already on its way out).
+        let pending: u64 = self
+            .migs
+            .iter()
+            .filter(|m| {
+                m.src == node
+                    && matches!(
+                        m.sm.state(),
+                        MigState::ChoosingDest
+                            | MigState::Preparing
+                            | MigState::Copying
+                    )
+            })
+            .map(|m| m.block_bytes)
+            .sum();
+        let bytes = bytes.saturating_sub(pending);
         let mut t = now;
         while out.reclaimed_bytes < bytes {
             // Victim selection ON the pressured node via the pluggable
             // policy — activity-based by default: purely local metadata,
             // zero sender queries (§3.5). A tenant-tagged sender selects
-            // only among its own blocks.
+            // only among its own blocks. Blocks already migrating are
+            // never re-selected (their MrState filters them out).
             let choice = {
                 let selected = match self.owner_tag {
                     Some(tag) => {
@@ -473,94 +708,50 @@ impl RemoteSender {
                 .map(|b| b.bytes)
                 .unwrap_or(self.units.unit_bytes);
             let unit_id = self.units.unit_of_block(node, choice.block);
-            // Pick a destination: least-pressured other peer.
-            let cands: Vec<_> = cl
-                .candidates()
-                .into_iter()
-                .filter(|c| c.node != node && c.free_bytes >= block_bytes)
-                .collect();
-            let dst = cands
-                .iter()
-                .max_by_key(|c| c.free_bytes)
-                .map(|c| c.node);
-            match (unit_id, dst) {
-                (Some(unit_id), Some(dst)) => {
-                    // Drive the Figure-14 protocol state machine; every
-                    // transition below mirrors an action the sender
-                    // actually performs against the fabric model.
+            let has_dst = unit_id
+                .map(|u| self.has_reclaim_candidate(cl, u, node, block_bytes))
+                .unwrap_or(false);
+            match unit_id {
+                Some(unit_id) if has_dst => {
+                    // Enqueue a live protocol machine; destination
+                    // choice (pressure-aware) happens at activation,
+                    // when the migration takes a concurrency slot.
                     let mut sm = MigrationSm::new();
                     sm.on_event(MigEvent::PressureReport {
                         block: choice.block,
                         src: node,
                     })
                     .expect("fresh machine accepts a pressure report");
-                    // QueryCandidates was performed above (cl.candidates).
-                    let actions = sm
-                        .on_event(MigEvent::DestChosen { dst })
-                        .expect("destination differs from source");
-                    let park_writes =
-                        actions.contains(&MigAction::StopWrites);
-                    debug_assert!(sm.writes_parked());
-                    if let Some(b) = cl.mrpools[node].get_mut(choice.block) {
+                    if let Some(b) = cl.mrpools[node].get_mut(choice.block)
+                    {
                         b.state = MrState::Migrating;
                     }
-                    sm.on_event(MigEvent::PrepareAcked)
-                        .expect("preparing accepts ack");
-                    let mig = migration::simulate(
-                        &mut cl.fabric,
-                        &self.lat,
-                        t,
-                        cl.sender,
-                        node,
-                        dst,
+                    self.migs.push(ActiveMigration {
+                        sm,
+                        unit: unit_id,
+                        src: node,
+                        src_block: choice.block,
                         block_bytes,
-                        2,
-                    );
-                    // destination registers the block when the copy starts
-                    let new_block = cl.mrpools[dst].register(
-                        owner,
-                        block_bytes,
-                        mig.copy_start,
-                    );
-                    cl.mrpools[node].release(choice.block);
-                    sm.on_event(MigEvent::CopyDone)
-                        .expect("copying accepts copy-done");
-                    let final_actions = sm
-                        .on_event(MigEvent::CommitAcked)
-                        .expect("committing accepts ack");
-                    debug_assert!(final_actions
-                        .contains(&MigAction::FlushParkedWrites));
-                    debug_assert_eq!(sm.state(), MigState::Done);
-                    // COMMIT: remap the unit's replica slot to dst; the
-                    // parked-writes flush is modeled by the write lock
-                    // expiring at mig.done.
-                    let u = self.units.get_mut(unit_id).unwrap();
-                    for (n, b) in
-                        u.nodes.iter_mut().zip(u.blocks.iter_mut())
-                    {
-                        if *n == node && *b == choice.block {
-                            *n = dst;
-                            *b = new_block;
-                        }
-                    }
-                    if park_writes {
-                        u.wlocked_until = u.wlocked_until.max(mig.done);
-                    }
+                        scheduled: t,
+                        dst: None,
+                        dst_block: None,
+                        activated: 0,
+                        park_from: 0,
+                        copy_start: 0,
+                        copy_end: 0,
+                        phase_done: 0,
+                        parked: Vec::new(),
+                        parked_bytes: 0,
+                    });
+                    self.mig_stats.started += 1;
                     out.migrated += 1;
                     out.reclaimed_bytes += block_bytes;
-                    // source's memory is free once the copy is out
-                    t = mig.copy_end;
-                    out.done_at = out.done_at.max(mig.done);
+                    out.done_at = out.done_at.max(t);
                 }
                 _ => {
                     // No destination with room (or untracked block):
                     // last resort — delete like the baselines would.
-                    cl.mrpools[node].release(choice.block);
-                    if let Some(unit_id) = unit_id {
-                        if let Some(u) = self.units.get_mut(unit_id) {
-                            u.alive = false;
-                        }
-                    }
+                    self.delete_victim(cl, node, choice.block, unit_id);
                     out.deleted += 1;
                     out.reclaimed_bytes += block_bytes;
                     out.done_at = out.done_at.max(t);
@@ -568,5 +759,379 @@ impl RemoteSender {
             }
         }
         out
+    }
+
+    /// The delete last-resort (§3.5 "delete like the baselines"):
+    /// release the victim block and drop its replica slot from the unit
+    /// map. Surviving replicas keep serving reads (Table 3: replica
+    /// first); only when the last copy is gone does the unit die and
+    /// reads fall through to the disk backup (or are lost).
+    fn delete_victim(
+        &mut self,
+        cl: &mut ClusterState,
+        node: NodeId,
+        block: MrBlockId,
+        unit_id: Option<u64>,
+    ) {
+        cl.mrpools[node].release(block);
+        if let Some(uid) = unit_id {
+            if let Some(u) = self.units.get_mut(uid) {
+                if let Some(pos) = u
+                    .nodes
+                    .iter()
+                    .zip(u.blocks.iter())
+                    .position(|(&n, &b)| n == node && b == block)
+                {
+                    u.nodes.remove(pos);
+                    u.blocks.remove(pos);
+                }
+                if u.nodes.is_empty() {
+                    u.alive = false;
+                }
+            }
+        }
+        self.mig_stats.deleted += 1;
+    }
+
+    /// Bytes other pending migrations have promised to `node` (their MR
+    /// blocks register only when their copy starts, so raw free bytes
+    /// would over-commit a popular peer).
+    fn reserved_on(&self, node: NodeId) -> u64 {
+        self.migs
+            .iter()
+            .filter(|m| m.dst == Some(node) && m.dst_block.is_none())
+            .map(|m| m.block_bytes)
+            .sum()
+    }
+
+    /// THE destination filter, shared by the list builder and the
+    /// cheap existence check so the two can never drift: a candidate
+    /// must not be the source or one of the unit's replica holders,
+    /// must not already be the destination of another in-flight
+    /// migration of the same unit (replica distinctness), and must
+    /// have room for the block after reservations.
+    fn reclaim_candidate_ok(
+        &self,
+        c: &Candidate,
+        unit: u64,
+        src: NodeId,
+        block_bytes: u64,
+        holders: &[NodeId],
+    ) -> bool {
+        c.node != src
+            && !holders.contains(&c.node)
+            && !self
+                .migs
+                .iter()
+                .any(|m| m.unit == unit && m.dst == Some(c.node))
+            && c.free_bytes.saturating_sub(self.reserved_on(c.node))
+                >= block_bytes
+    }
+
+    fn unit_holders(&self, unit: u64) -> &[NodeId] {
+        self.units
+            .get(unit)
+            .map(|u| u.nodes.as_slice())
+            .unwrap_or(&[])
+    }
+
+    /// Admission check `remote_pressure` runs per victim: some peer
+    /// must fit this block, AND the candidates' aggregate spare
+    /// capacity must also cover every *queued* migration that has not
+    /// chosen a destination yet (those reserve nothing per-peer, so
+    /// without the aggregate term N victims could all be admitted
+    /// against one slot of free space and N−1 would silently degrade
+    /// to deletes at activation).
+    fn has_reclaim_candidate(
+        &self,
+        cl: &ClusterState,
+        unit: u64,
+        src: NodeId,
+        block_bytes: u64,
+    ) -> bool {
+        let holders = self.unit_holders(unit);
+        let queued: u64 = self
+            .migs
+            .iter()
+            .filter(|m| m.dst.is_none())
+            .map(|m| m.block_bytes)
+            .sum();
+        let mut fits_somewhere = false;
+        let mut spare = 0u64;
+        for c in cl.candidates() {
+            if !self.reclaim_candidate_ok(&c, unit, src, 0, holders) {
+                continue;
+            }
+            let free = c.free_bytes.saturating_sub(self.reserved_on(c.node));
+            if free >= block_bytes {
+                fits_somewhere = true;
+            }
+            spare += free;
+        }
+        fits_somewhere && spare >= queued.saturating_add(block_bytes)
+    }
+
+    /// Destination candidates for migrating `unit` off `src` (see
+    /// [`Self::reclaim_candidate_ok`] for the filter), with the
+    /// reserved bytes already subtracted so the placement policy ranks
+    /// peers by what they can actually still take.
+    fn reclaim_candidates(
+        &self,
+        cl: &ClusterState,
+        unit: u64,
+        src: NodeId,
+        block_bytes: u64,
+    ) -> Vec<Candidate> {
+        let holders = self.unit_holders(unit);
+        cl.candidates()
+            .into_iter()
+            .filter(|c| {
+                self.reclaim_candidate_ok(c, unit, src, block_bytes, holders)
+            })
+            .map(|mut c| {
+                c.free_bytes =
+                    c.free_bytes.saturating_sub(self.reserved_on(c.node));
+                c
+            })
+            .collect()
+    }
+
+    /// The migration table's earliest actionable event: `(time, index,
+    /// is_activation)` — a queued machine that could take a free
+    /// concurrency slot, or the active machine whose phase completes
+    /// first. THE selection rule, shared by the advance loop and the
+    /// backpressure probe so the two can never drift.
+    fn next_migration_action(&self) -> Option<(Ns, usize, bool)> {
+        let cap = self.vcfg.max_concurrent_migrations.max(1);
+        let active = self.migs.iter().filter(|m| m.is_active()).count();
+        let mut next: Option<(Ns, usize, bool)> = None;
+        if active < cap {
+            if let Some(i) =
+                self.migs.iter().position(|m| !m.is_active())
+            {
+                let t = self.migs[i].scheduled.max(self.mig_slot_free);
+                next = Some((t, i, true));
+            }
+        }
+        for (i, m) in self.migs.iter().enumerate() {
+            if !m.is_active() {
+                continue;
+            }
+            let earlier = match next {
+                Some((t, _, _)) => m.phase_done < t,
+                None => true,
+            };
+            if earlier {
+                next = Some((m.phase_done, i, false));
+            }
+        }
+        next
+    }
+
+    /// Earliest virtual time at which the migration table has work to
+    /// do (a queued machine that could activate, or an active phase
+    /// completing). `None` when the table is empty. Used by the
+    /// backpressure path to force progress instead of spinning.
+    pub fn next_migration_event(&self) -> Option<Ns> {
+        self.next_migration_action().map(|(t, _, _)| t)
+    }
+
+    /// Advance every migration in the table up to `now`: activate
+    /// queued machines while concurrency slots are free, and walk each
+    /// active machine through its due phase transitions (PREPARE ack →
+    /// copy → COPY_DONE → COMMIT). Called from the pump/driver paths,
+    /// interleaved with write batches, so reclaim overlaps demand
+    /// traffic instead of blocking it. No-op when the table is empty.
+    pub fn advance_migrations(&mut self, cl: &mut ClusterState, now: Ns) {
+        while let Some((t, i, activation)) = self.next_migration_action() {
+            if t > now {
+                break;
+            }
+            if activation {
+                self.activate_migration(cl, i, t);
+            } else {
+                self.step_migration(cl, i);
+            }
+        }
+    }
+
+    /// Give migration `i` its concurrency slot at `t_act`: poll
+    /// candidates (one control RTT each), choose the destination
+    /// through the pressure-aware placement hook, park writes
+    /// (StopWrites fires with the DestChosen transition) and send
+    /// PREPARE. Falls back to delete if every candidate filled up while
+    /// the migration was queued.
+    fn activate_migration(
+        &mut self,
+        cl: &mut ClusterState,
+        i: usize,
+        t_act: Ns,
+    ) {
+        let rtt = ctrl_rtt(&self.lat);
+        let (unit, src, block_bytes) = {
+            let m = &self.migs[i];
+            (m.unit, m.src, m.block_bytes)
+        };
+        let cands = self.reclaim_candidates(cl, unit, src, block_bytes);
+        let dst = self.reclaim_placement.pick(&cands);
+        let Some(dst) = dst else {
+            // every candidate filled up while we were queued: delete
+            // (surviving replicas, if any, keep serving reads)
+            let m = self.migs.remove(i);
+            self.delete_victim(cl, m.src, m.src_block, Some(m.unit));
+            self.mig_slot_free = self.mig_slot_free.max(t_act);
+            return;
+        };
+        let m = &mut self.migs[i];
+        let actions = m
+            .sm
+            .on_event(MigEvent::DestChosen { dst })
+            .expect("destination differs from source");
+        debug_assert!(actions.contains(&MigAction::StopWrites));
+        debug_assert!(m.sm.writes_parked());
+        m.dst = Some(dst);
+        m.activated = t_act;
+        // candidate queries (serialized control RTTs), then PREPARE to
+        // src and dst in parallel, bounded by the slower ack — the
+        // identical charge sequence as the `migration::simulate` oracle
+        m.park_from = t_act + rtt * MIG_QUERIES as Ns;
+        let (c1, _) = cl.fabric.ensure_connected(m.park_from, cl.sender, src);
+        let (c2, _) = cl.fabric.ensure_connected(m.park_from, cl.sender, dst);
+        m.phase_done = c1.max(c2) + rtt;
+    }
+
+    /// Fire the phase transition of active migration `i` that completes
+    /// at `migs[i].phase_done`.
+    fn step_migration(&mut self, cl: &mut ClusterState, i: usize) {
+        let rtt = ctrl_rtt(&self.lat);
+        let owner = self.owner_tag.unwrap_or(cl.sender);
+        let state = self.migs[i].sm.state();
+        match state {
+            MigState::Preparing => {
+                let m = &mut self.migs[i];
+                m.sm
+                    .on_event(MigEvent::PrepareAcked)
+                    .expect("preparing accepts ack");
+                let dst = m.dst.expect("active migration has dst");
+                // src↔dst connection for the copy (may be new), then
+                // the bulk copy on the source's NIC; the destination
+                // registers its fresh MR block when the copy starts
+                let (t_conn, _) =
+                    cl.fabric.ensure_connected(m.phase_done, m.src, dst);
+                m.copy_start = t_conn;
+                m.dst_block = Some(cl.mrpools[dst].register(
+                    owner,
+                    m.block_bytes,
+                    m.copy_start,
+                ));
+                let verb = cl.fabric.rdma_write(
+                    m.copy_start,
+                    m.src,
+                    dst,
+                    m.block_bytes,
+                );
+                m.copy_end = verb.end;
+                m.phase_done = m.copy_end;
+            }
+            MigState::Copying => {
+                let m = &mut self.migs[i];
+                m.sm
+                    .on_event(MigEvent::CopyDone)
+                    .expect("copying accepts copy-done");
+                // source's memory is free once the copy is out
+                cl.mrpools[m.src].release(m.src_block);
+                m.phase_done = m.copy_end + 2 * rtt;
+            }
+            MigState::Committing => self.commit_migration(cl, i),
+            s => unreachable!("active migration in phase {s:?}"),
+        }
+    }
+
+    /// COMMIT acked: remap the unit's replica slot to the destination,
+    /// validate the replica set through [`choose_replicas`], flush
+    /// parked write sets to the new location and retire the machine.
+    fn commit_migration(&mut self, cl: &mut ClusterState, i: usize) {
+        let mut m = self.migs.remove(i);
+        let done = m.phase_done;
+        let actions = m
+            .sm
+            .on_event(MigEvent::CommitAcked)
+            .expect("committing accepts ack");
+        debug_assert!(actions.contains(&MigAction::FlushParkedWrites));
+        debug_assert_eq!(m.sm.state(), MigState::Done);
+        let dst = m.dst.expect("active migration has dst");
+        let dst_block = m.dst_block.expect("copy registered the block");
+        let mut flush_nodes = vec![dst];
+        if let Some(u) = self.units.get_mut(m.unit) {
+            for (n, b) in u.nodes.iter_mut().zip(u.blocks.iter_mut()) {
+                if *n == m.src && *b == m.src_block {
+                    *n = dst;
+                    *b = dst_block;
+                }
+            }
+            // Remap validated through the §5.1 chooser: same primary,
+            // distinct followers, sender skipped. The destination
+            // filter in `reclaim_candidates` guarantees the swapped
+            // set already satisfies it; pinning it to choose_replicas
+            // keeps this path and the mapping path on one invariant.
+            debug_assert_eq!(
+                choose_replicas(cl.sender, u.nodes[0], &u.nodes, u.nodes.len()),
+                u.nodes,
+                "replica set must stay distinct across a remap"
+            );
+            u.wlocked_until = u.wlocked_until.max(done);
+            flush_nodes = u.nodes.clone();
+        }
+        // FlushParkedWrites: one coalesced message per replica carrying
+        // everything that parked during the migration; completions land
+        // in the owning shards' mailboxes like any other batch.
+        let parked_flushed = m.parked.len() as u64;
+        if !m.parked.is_empty() {
+            let t = done + self.lat.mrpool_get;
+            let mut flush_done = t;
+            for &n in &flush_nodes {
+                let verb =
+                    cl.fabric.rdma_write(t, cl.sender, n, m.parked_bytes);
+                flush_done = flush_done.max(verb.end);
+            }
+            self.mig_stats.flushed_sets += m.parked.len() as u64;
+            let mut by_shard: Vec<(usize, Vec<WriteSet>)> = Vec::new();
+            for (shard, ws) in m.parked.drain(..) {
+                match by_shard.iter_mut().find(|(s, _)| *s == shard) {
+                    Some((_, sets)) => sets.push(ws),
+                    None => by_shard.push((shard, vec![ws])),
+                }
+            }
+            for (shard, sets) in by_shard {
+                self.inflight.push(Inflight {
+                    done: flush_done,
+                    shard,
+                    sets,
+                });
+            }
+        }
+        // pairwise overlap accounting: credit each concurrent pair once,
+        // at the earlier completion (the other machine is still active)
+        for other in self.migs.iter().filter(|o| o.is_active()) {
+            let both_from = m.activated.max(other.activated);
+            if done > both_from {
+                self.mig_stats.overlap_ns += done - both_from;
+            }
+        }
+        self.mig_stats.completed += 1;
+        self.mig_slot_free = self.mig_slot_free.max(done);
+        self.mig_records.push(MigrationRecord {
+            unit: m.unit,
+            src: m.src,
+            dst,
+            block_bytes: m.block_bytes,
+            scheduled: m.scheduled,
+            activated: m.activated,
+            park_from: m.park_from,
+            copy_start: m.copy_start,
+            copy_end: m.copy_end,
+            done,
+            parked_flushed,
+        });
     }
 }

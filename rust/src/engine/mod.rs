@@ -113,9 +113,31 @@ pub fn apply_mailbox(
     }
 }
 
-/// Drive the shared sender for one shard: apply completions, then send
-/// coalesced batches from this shard's staging queue whose service can
-/// start at or before `now`.
+/// Stamp deferred read activity onto MR blocks: the lock-free prefetch
+/// hit path parked `(page, time)` pairs in the shard's `activity_due`
+/// buffer (it cannot reach the cluster substrate without the slow-path
+/// lock); every slow-path crossing drains them here so a consumed
+/// prefetch counts as demand-read activity for §3.5 victim ranking.
+pub fn flush_activity(
+    sender: &RemoteSender,
+    fast: &mut ShardFastPath,
+    cl: &mut ClusterState,
+) {
+    for (page, t) in fast.activity_due.drain(..) {
+        let unit = sender.units().unit_of(page);
+        if let Some(u) = sender.units().get(unit) {
+            if let (Some(&n), Some(&b)) = (u.nodes.first(), u.blocks.first())
+            {
+                cl.mrpools[n].touch_read(b, t);
+            }
+        }
+    }
+}
+
+/// Drive the shared sender for one shard: apply completions, advance
+/// the migration table (the reclaim pipeline rides the same pump), then
+/// send coalesced batches from this shard's staging queue whose service
+/// can start at or before `now`.
 pub fn drive_shard(
     sender: &mut RemoteSender,
     fast: &mut ShardFastPath,
@@ -124,6 +146,8 @@ pub fn drive_shard(
     shard: usize,
 ) {
     sender.complete_inflight(cl, now);
+    sender.advance_migrations(cl, now);
+    flush_activity(sender, fast, cl);
     apply_mailbox(sender, fast, shard);
     while !fast.staging.is_empty() && sender.busy_until() <= now {
         let start = sender
@@ -133,6 +157,9 @@ pub fn drive_shard(
             break;
         }
         sender.send_one_batch(cl, start, shard, fast);
+        // a batch may have parked against (or completed) a migration;
+        // keep the two pipelines interleaved on the same timeline
+        sender.advance_migrations(cl, now);
     }
 }
 
@@ -173,6 +200,18 @@ fn wait_for_reclaimable(
         sender.complete_inflight(cl, done);
         apply_mailbox(sender, fast, shard);
         return done.max(now);
+    }
+    // Write sets may be parked against an in-flight migration (neither
+    // staged, in flight, nor in the mailbox): jump to the table's next
+    // milestone and advance it — at COMMIT the parked sets flush into
+    // `inflight`, where the arm above picks them up. Without this the
+    // alloc-retry loop would crawl 1 ns at a time toward the commit.
+    if let Some(t) = sender.next_migration_event() {
+        let t = t.max(now);
+        sender.advance_migrations(cl, t);
+        sender.complete_inflight(cl, t);
+        apply_mailbox(sender, fast, shard);
+        return t;
     }
     // Nothing pending: caller's alloc should succeed after growth or
     // is genuinely out of memory; avoid infinite loops by advancing.
@@ -290,6 +329,7 @@ pub fn shard_read_miss(
     let mrpool_get = lat.mrpool_get;
     let mut t = now + radix_lookup;
     fast.metrics.read_parts.add("radix", radix_lookup);
+    flush_activity(sender, fast, cl);
     // Miss coalescing: piggyback on an in-flight fetch of this page
     // instead of posting a duplicate READ.
     if let Some(done) = sender.inflight_read_done(page, t) {
@@ -314,11 +354,14 @@ pub fn shard_read_miss(
     if remote_ok {
         let u = sender.units().get(unit_id).unwrap();
         let primary = u.nodes[0];
+        let primary_block = u.blocks[0];
         let ready_at = u.ready_at;
         t = t.max(ready_at);
         t += mrpool_get;
         fast.metrics.read_parts.add("mrpool", mrpool_get);
         let verb = cl.fabric.rdma_read(t, cl.sender, primary, PAGE_SIZE);
+        // demand-read activity: §3.5 victim ranking sees read phases
+        cl.mrpools[primary].touch_read(primary_block, verb.end);
         sender.note_inflight_read(now, page, verb.end);
         fast.metrics.read_parts.add("rdma", verb.end - t);
         t = verb.end + copy_read_page;
@@ -383,6 +426,7 @@ pub fn drive_readahead(
     now: Ns,
     route: ShardRoute,
 ) {
+    flush_activity(sender, fast, cl);
     let Some(page) = fast.readahead_due.take() else {
         return;
     };
@@ -452,7 +496,8 @@ fn land_readahead(
     if landed > 0 {
         if !fetch.is_empty() {
             let mut arrivals = std::mem::take(&mut fast.scratch_arrivals);
-            sender.read_batch(cl, now, &fetch, &mut arrivals);
+            // speculative: arrival bookkeeping only, no activity stamp
+            sender.read_batch(cl, now, &fetch, false, &mut arrivals);
             for &(p, done) in &arrivals {
                 fast.pending_arrivals.insert(p, done);
             }
@@ -488,6 +533,7 @@ pub fn shard_read_block(
     let mrpool_get = lat.mrpool_get;
     let mut t = now + radix_lookup;
     fast.metrics.read_parts.add("radix", radix_lookup);
+    flush_activity(sender, fast, cl);
     // Pass 1 (the fast-path collect): serve cached pages, gather every
     // miss of the block before crossing further. Scratch buffers are
     // reused across requests — the miss path allocates nothing in
@@ -552,7 +598,7 @@ pub fn shard_read_block(
     let fetched = fetch.len() as u64;
     if !fetch.is_empty() {
         let mut arrivals = std::mem::take(&mut fast.scratch_arrivals);
-        let done = sender.read_batch(cl, t, &fetch, &mut arrivals);
+        let done = sender.read_batch(cl, t, &fetch, true, &mut arrivals);
         fast.scratch_arrivals = arrivals;
         fast.metrics.read_parts.add("mrpool", mrpool_get);
         fast.metrics.read_parts.add("rdma", done.saturating_sub(t));
@@ -727,6 +773,15 @@ impl ShardedEngine {
         placement: Box<dyn crate::placement::Placement + Send>,
     ) {
         self.sender.set_placement(placement);
+    }
+
+    /// Swap in a different migration-destination policy (§3.5 hook;
+    /// [`crate::placement::LeastPressured`] by default).
+    pub fn set_reclaim_placement(
+        &mut self,
+        placement: Box<dyn crate::placement::Placement + Send>,
+    ) {
+        self.sender.set_reclaim_placement(placement);
     }
 
     // -- diagnostics --------------------------------------------------
@@ -1015,13 +1070,17 @@ impl ShardedEngine {
         }
     }
 
-    /// The single pump/sender driver: apply completions, then repeatedly
-    /// pick the shard whose staging front entered first and send one
-    /// coalesced batch from it.
+    /// The single pump/sender driver: apply completions, advance the
+    /// migration table, then repeatedly pick the shard whose staging
+    /// front entered first and send one coalesced batch from it —
+    /// re-advancing migrations between batches so the reclaim pipeline
+    /// and the write pipeline interleave on one timeline.
     fn drive_all(&mut self, cl: &mut ClusterState, now: Ns) {
         let ShardedEngine { shards, sender, .. } = self;
         sender.complete_inflight(cl, now);
+        sender.advance_migrations(cl, now);
         for (i, fast) in shards.iter_mut().enumerate() {
+            flush_activity(sender, fast, cl);
             apply_mailbox(sender, fast, i);
         }
         loop {
@@ -1040,11 +1099,15 @@ impl ShardedEngine {
                 break;
             }
             sender.send_one_batch(cl, start, s, &mut shards[s]);
+            sender.advance_migrations(cl, now);
         }
     }
 
-    /// A peer needs `bytes` of its donated memory back (§3.5): handled
-    /// entirely on the shared slow path (victim selection + migration).
+    /// A peer needs `bytes` of its donated memory back (§3.5): victims
+    /// are selected and enqueued into the sender's migration table
+    /// immediately; the live protocol machines then advance only on
+    /// pump ticks ([`Self::pump`] / the serve drivers), overlapping
+    /// demand traffic instead of blocking this call.
     pub fn remote_pressure(
         &mut self,
         cl: &mut ClusterState,
@@ -1053,6 +1116,23 @@ impl ShardedEngine {
         bytes: u64,
     ) -> PressureOutcome {
         self.sender.remote_pressure(cl, now, node, bytes)
+    }
+
+    /// Migrations currently in the sender's table (queued + in flight).
+    pub fn migrations_inflight(&self) -> usize {
+        self.sender.migrations_inflight()
+    }
+
+    /// Aggregate reclaim-pipeline counters.
+    pub fn migration_stats(&self) -> crate::coordinator::sender::MigStats {
+        self.sender.migration_stats()
+    }
+
+    /// Milestones of completed migrations, in completion order.
+    pub fn migration_records(
+        &self,
+    ) -> &[crate::coordinator::sender::MigrationRecord] {
+        self.sender.migration_records()
     }
 }
 

@@ -4,8 +4,14 @@
 //! * [`ActivityBased`] — Valet's contribution: pick the MR block with the
 //!   largest Non-Activity-Duration using only the local tags of
 //!   Figure 11. Zero communication; the chosen block is very likely in
-//!   its idle (or read-only) phase, so parking its writes in the sender's
-//!   mempool during migration is cheap.
+//!   its idle phase, so parking its writes in the sender's
+//!   mempool during migration is cheap. The tags cover *both*
+//!   directions since the reclaim-pipeline refactor: batched demand
+//!   reads and consumed prefetches stamp
+//!   [`crate::mrpool::MrBlock::last_read`], so a block in a read-only
+//!   phase is shielded exactly like a written one, while
+//!   prefetched-but-never-used blocks (no demand stamp at all) rank
+//!   first as victims.
 //! * [`BatchedQueryRandom`] — the baseline the paper describes ("Typical
 //!   way of handling this is to query write/read activity to multiple
 //!   sender nodes"): sample random blocks, query each block's sender for

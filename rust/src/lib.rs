@@ -38,9 +38,9 @@
 //! | [`queues`] | staging + reclaimable queues, Update/Reclaimable flags (§5.2) |
 //! | [`mrpool`] | remote MR block pool + activity tags (§4.2, Fig. 11) |
 //! | [`prefetch`] | adaptive per-shard stride prefetcher on the read miss path (majority-vote detection, accuracy-governed) |
-//! | [`placement`] | round-robin / power-of-two-choices placement (§4.3) |
-//! | [`eviction`] | victim selection: activity-based vs batched-query (§3.5) |
-//! | [`migration`] | sender-driven migration protocol (§3.5, Fig. 14) |
+//! | [`placement`] | round-robin / power-of-two / least-pressured placement over pressure-scored candidates (§4.3, §3.5) |
+//! | [`eviction`] | victim selection: activity-based vs batched-query (§3.5; tags cover reads + consumed prefetches) |
+//! | [`migration`] | sender-driven migration protocol (§3.5, Fig. 14); `simulate` doubles as the reclaim pipeline's oracle |
 //! | [`replication`] | replication/disk-backup fault-tolerance matrix (Table 3) |
 //! | [`backends`] | `PagingBackend`: valet, infiniswap, nbdx, linux_swap |
 //! | [`cluster`] | node/cluster assembly + remote-pressure events |

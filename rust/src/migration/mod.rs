@@ -210,12 +210,26 @@ pub struct MigrationOutcome {
     pub control_overhead: Ns,
 }
 
+/// One control-message round trip of the migration protocol: a small
+/// two-sided message (verb base + receiver poke). Shared by [`simulate`]
+/// and the pump-driven pipeline in
+/// [`crate::coordinator::sender::RemoteSender`], so the oracle and the
+/// live machine can never drift on the constant.
+pub fn ctrl_rtt(lat: &LatencyConfig) -> Ns {
+    2 * lat.rdma_write_base + lat.two_sided_extra
+}
+
 /// Drive one migration against the fabric: charges candidate queries,
 /// prepare/commit round trips on the sender's NIC, the bulk copy on the
 /// source's NIC, and connection setup if src↔dst were not yet connected
 /// ("if the number of mapped remote memory block is larger than the
 /// number of peer nodes, all connections are likely setup before" — we
 /// model both cases).
+///
+/// Since the pump-driven reclaim pipeline landed this function is the
+/// **test oracle**: `tests/reclaim.rs` pins that a single uncontended
+/// migration through the live pipeline reproduces these virtual-time
+/// milestones bit for bit.
 #[allow(clippy::too_many_arguments)]
 pub fn simulate(
     fabric: &mut Fabric,
@@ -227,8 +241,8 @@ pub fn simulate(
     block_bytes: u64,
     candidates_queried: u32,
 ) -> MigrationOutcome {
-    // Control RTT: small two-sided message (verb base + receiver poke).
-    let ctrl_rtt = 2 * lat.rdma_write_base + lat.two_sided_extra;
+    // Control RTT (see [`ctrl_rtt`]).
+    let ctrl_rtt = ctrl_rtt(lat);
 
     // 1. Candidate queries (serialized, sender → each candidate).
     let mut t = now + ctrl_rtt * candidates_queried as Ns;

@@ -34,6 +34,11 @@ pub struct MrBlock {
     pub bytes: u64,
     /// Tag: virtual time of the last write from the owner.
     pub last_write: Ns,
+    /// Tag: virtual time of the last *demand* read from the owner.
+    /// Speculative prefetch fetches deliberately do not stamp this —
+    /// only a prefetch that is later consumed counts — so a block whose
+    /// pages were fetched ahead but never used ranks first as a victim.
+    pub last_read: Ns,
     /// Tag: when the block was registered.
     pub registered_at: Ns,
     /// Current state.
@@ -41,9 +46,16 @@ pub struct MrBlock {
 }
 
 impl MrBlock {
+    /// Last activity of either kind (write or demand read).
+    pub fn last_activity(&self) -> Ns {
+        self.last_write.max(self.last_read)
+    }
+
     /// §3.5: `Non-Activity-Duration = Time_cur − Time_last_activity`.
+    /// Activity covers writes *and* demand reads, so the victim ranking
+    /// sees read phases, not just write phases.
     pub fn non_activity_duration(&self, now: Ns) -> Ns {
-        now.saturating_sub(self.last_write)
+        now.saturating_sub(self.last_activity())
     }
 }
 
@@ -84,6 +96,7 @@ impl MrBlockPool {
             owner,
             bytes,
             last_write: now,
+            last_read: 0,
             registered_at: now,
             state: MrState::Active,
         });
@@ -96,6 +109,16 @@ impl MrBlockPool {
     pub fn touch_write(&mut self, block: MrBlockId, now: Ns) {
         if let Some(b) = self.get_mut(block) {
             b.last_write = b.last_write.max(now);
+        }
+    }
+
+    /// Stamp a *demand* read into `block`: the read-side half of the
+    /// activity tag, fed by the miss pipeline's RDMA READs and by
+    /// consumed prefetches (never by speculative fetches), so read-heavy
+    /// phases keep a block off the victim list.
+    pub fn touch_read(&mut self, block: MrBlockId, now: Ns) {
+        if let Some(b) = self.get_mut(block) {
+            b.last_read = b.last_read.max(now);
         }
     }
 
@@ -240,6 +263,24 @@ mod tests {
         p.touch_write(b, 100);
         p.touch_write(b, 50); // stale stamp ignored
         assert_eq!(p.get(b).unwrap().last_write, 100);
+    }
+
+    #[test]
+    fn demand_reads_count_as_activity() {
+        // Figure-13 ranking extended with the read tag: a block in a
+        // read-only phase must not be the victim just because it has
+        // not been written lately.
+        let mut p = MrBlockPool::new();
+        let read_hot = p.register(0, 1, 0);
+        let idle = p.register(0, 1, 0);
+        p.touch_write(read_hot, 10);
+        p.touch_write(idle, 50);
+        p.touch_read(read_hot, 900);
+        assert_eq!(p.least_active(1000).unwrap().id, idle);
+        // stale read stamps never move time backwards
+        p.touch_read(read_hot, 100);
+        assert_eq!(p.get(read_hot).unwrap().last_read, 900);
+        assert_eq!(p.get(read_hot).unwrap().last_activity(), 900);
     }
 
     #[test]

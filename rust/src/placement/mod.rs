@@ -2,17 +2,50 @@
 //! address space onto a peer node. "Mapping partitioned address space to
 //! remote peers happens on demand with round-robin or power of two
 //! choices. We use power of two choices in our prototype."
+//!
+//! Beyond the paper: every candidate also carries a **pressure score**
+//! (an EWMA of the peer's memory occupancy, fed by the activity
+//! monitors — see [`crate::backends::ClusterState::refresh_pressure`]).
+//! [`PowerOfTwo`] compares *pressure-adjusted* free bytes, and the
+//! reclaim pipeline's destination choice defaults to [`LeastPressured`]
+//! so migrations drain toward the calmest peer instead of the one that
+//! merely has the most free bytes this instant — the imbalance the
+//! memory-disaggregation literature (Pond, the Yelam survey) identifies
+//! as the pooling bottleneck.
 
 use crate::util::Rng;
 use crate::NodeId;
 
-/// A candidate peer with its currently free (donatable) bytes.
+/// A candidate peer with its currently free (donatable) bytes and its
+/// smoothed pressure score.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Candidate {
     /// Peer node.
     pub node: NodeId,
     /// Free bytes it could donate.
     pub free_bytes: u64,
+    /// Smoothed occupancy pressure in thousandths (0 = idle, 1000 =
+    /// fully claimed); see the module docs.
+    pub pressure_milli: u32,
+}
+
+impl Candidate {
+    /// A candidate with no recorded pressure (tests, synthetic sweeps).
+    pub fn new(node: NodeId, free_bytes: u64) -> Self {
+        Candidate {
+            node,
+            free_bytes,
+            pressure_milli: 0,
+        }
+    }
+
+    /// Free bytes discounted by the pressure score: the comparison key
+    /// the load-feedback policies use.
+    pub fn adjusted_free(&self) -> u64 {
+        let keep = 1000u64.saturating_sub(self.pressure_milli as u64);
+        (self.free_bytes / 1000).saturating_mul(keep)
+            + (self.free_bytes % 1000) * keep / 1000
+    }
 }
 
 /// Placement policy over candidate peers.
@@ -86,8 +119,11 @@ impl Placement for PowerOfTwo {
                 if j >= i {
                     j += 1;
                 }
+                // compare pressure-adjusted free bytes: a peer whose
+                // monitor shows sustained occupancy loses the duel even
+                // with momentarily more free memory
                 let (a, b) = (candidates[i], candidates[j]);
-                Some(if a.free_bytes >= b.free_bytes {
+                Some(if a.adjusted_free() >= b.adjusted_free() {
                     a.node
                 } else {
                     b.node
@@ -101,6 +137,40 @@ impl Placement for PowerOfTwo {
     }
 }
 
+/// Deterministic least-pressured choice: minimum pressure score, ties
+/// broken by most free bytes, then lowest node id. The default
+/// destination policy of the reclaim pipeline (§3.5 "migrate … to a
+/// less-pressured peer"): a migration should land where the native
+/// applications are quietest, or it will just be squeezed out again.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LeastPressured;
+
+impl LeastPressured {
+    /// Stateless.
+    pub fn new() -> Self {
+        LeastPressured
+    }
+}
+
+impl Placement for LeastPressured {
+    fn pick(&mut self, candidates: &[Candidate]) -> Option<NodeId> {
+        candidates
+            .iter()
+            .min_by_key(|c| {
+                (
+                    c.pressure_milli,
+                    u64::MAX - c.free_bytes,
+                    c.node,
+                )
+            })
+            .map(|c| c.node)
+    }
+
+    fn name(&self) -> &'static str {
+        "least_pressured"
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -110,10 +180,7 @@ mod tests {
         frees
             .iter()
             .enumerate()
-            .map(|(i, &f)| Candidate {
-                node: i,
-                free_bytes: f,
-            })
+            .map(|(i, &f)| Candidate::new(i, f))
             .collect()
     }
 
@@ -165,10 +232,7 @@ mod tests {
         prop::check("p2c sanity", |rng| {
             let n = 2 + rng.below_usize(8);
             let c: Vec<Candidate> = (0..n)
-                .map(|i| Candidate {
-                    node: i,
-                    free_bytes: rng.below(1000),
-                })
+                .map(|i| Candidate::new(i, rng.below(1000)))
                 .collect();
             let mut p = PowerOfTwo::new(rng.next_u64());
             let max_free =
@@ -199,10 +263,7 @@ mod tests {
         let mut p = PowerOfTwo::new(3);
         for _ in 0..balls {
             let c: Vec<Candidate> = (0..n)
-                .map(|i| Candidate {
-                    node: i,
-                    free_bytes: 1_000_000 - loads_p2c[i],
-                })
+                .map(|i| Candidate::new(i, 1_000_000 - loads_p2c[i]))
                 .collect();
             let pick = p.pick(&c).unwrap();
             loads_p2c[pick] += 1;
@@ -218,5 +279,81 @@ mod tests {
             max_p2c <= max_rand,
             "p2c max {max_p2c} vs random max {max_rand}"
         );
+    }
+
+    #[test]
+    fn p2c_pressure_overrides_raw_free_bytes() {
+        // Two candidates: one slightly freer but heavily pressured, one
+        // slightly fuller but idle. Every duel that samples both must
+        // pick the idle one.
+        let pressured = Candidate {
+            node: 0,
+            free_bytes: 1_100,
+            pressure_milli: 900,
+        };
+        let idle = Candidate {
+            node: 1,
+            free_bytes: 1_000,
+            pressure_milli: 0,
+        };
+        assert!(idle.adjusted_free() > pressured.adjusted_free());
+        let mut p = PowerOfTwo::new(11);
+        for _ in 0..64 {
+            assert_eq!(p.pick(&[pressured, idle]), Some(1));
+        }
+    }
+
+    #[test]
+    fn least_pressured_orders_by_pressure_then_free_then_node() {
+        let mut lp = LeastPressured::new();
+        assert_eq!(lp.pick(&[]), None);
+        let c = vec![
+            Candidate {
+                node: 0,
+                free_bytes: 500,
+                pressure_milli: 700,
+            },
+            Candidate {
+                node: 1,
+                free_bytes: 100,
+                pressure_milli: 100,
+            },
+            Candidate {
+                node: 2,
+                free_bytes: 900,
+                pressure_milli: 100,
+            },
+        ];
+        // lowest pressure wins; among the 100-milli pair the freer node
+        assert_eq!(lp.pick(&c), Some(2));
+        // exact tie falls back to the lowest node id
+        let tie = vec![
+            Candidate::new(4, 64),
+            Candidate::new(3, 64),
+        ];
+        assert_eq!(lp.pick(&tie), Some(3));
+        assert_eq!(lp.name(), "least_pressured");
+    }
+
+    #[test]
+    fn adjusted_free_scales_without_overflow() {
+        let c = Candidate {
+            node: 0,
+            free_bytes: u64::MAX,
+            pressure_milli: 0,
+        };
+        assert_eq!(c.adjusted_free(), u64::MAX);
+        let half = Candidate {
+            node: 0,
+            free_bytes: 10_000,
+            pressure_milli: 500,
+        };
+        assert_eq!(half.adjusted_free(), 5_000);
+        let full = Candidate {
+            node: 0,
+            free_bytes: 10_000,
+            pressure_milli: 1000,
+        };
+        assert_eq!(full.adjusted_free(), 0);
     }
 }

@@ -78,7 +78,10 @@ pub enum Request {
     },
     /// Advance the background pipeline by one virtual tick (issued by
     /// the remote-sender driver thread; also available to tests that
-    /// want deterministic background progress).
+    /// want deterministic background progress). This is also what
+    /// drives the reclaim pipeline: live migrations in the sender's
+    /// table advance only on these ticks, interleaved with the write
+    /// batches they overlap.
     Pump,
     /// Stop serving.
     Shutdown,

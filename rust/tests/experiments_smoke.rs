@@ -95,6 +95,37 @@ fn prefetch_experiment_beats_demand_paging_and_spares_random() {
 }
 
 #[test]
+fn reclaim_experiment_overlaps_and_spares_demand_traffic() {
+    let r = run("reclaim", &Scale::small()).unwrap();
+    let kv: std::collections::HashMap<String, f64> =
+        r.kv.iter().cloned().collect();
+    let g = |k: &str| *kv.get(k).unwrap_or_else(|| panic!("record {k}"));
+    // the wave must actually reclaim through migrations…
+    assert!(g("migrations_completed") >= 2.0, "too few migrations");
+    // …which genuinely overlap in flight (and never when serialized)
+    assert!(g("overlap_ratio") > 0.0, "no overlap accounted");
+    assert_eq!(g("serialized_overlap_ns"), 0.0);
+    // serializing the same wave takes strictly longer to drain
+    assert!(
+        g("serialized_vs_overlapped_speedup") > 1.0,
+        "serialized {} vs overlapped {} ms",
+        g("serialized_reclaim_span_ms"),
+        g("overlapped_reclaim_span_ms")
+    );
+    // every headline record is present and finite
+    for k in [
+        "no_pressure_tp",
+        "activity_tp",
+        "query_tp",
+        "activity_vs_query_speedup",
+        "no_pressure_regression_pct",
+    ] {
+        assert!(g(k).is_finite(), "{k} must be finite");
+    }
+    assert!(g("no_pressure_tp") > 0.0);
+}
+
+#[test]
 fn table1_disk_and_connection_dominate() {
     let r = run("table1", &Scale::small()).unwrap();
     // rows: name, µs, share. Disk WR must be the largest share, and

@@ -1,0 +1,403 @@
+//! Reclaim-pipeline integration tests: the pump-driven migration table
+//! against the `migration::simulate` oracle, concurrent migrations,
+//! write parking + COMMIT flush (read-your-writes across the remap),
+//! reads-from-source during the copy, the no-destination delete
+//! fallback, and the serialized-mode ablation.
+
+use valet::backends::{ClusterState, Source};
+use valet::cluster::{ClusterEvent, ShardedCluster};
+use valet::config::Config;
+use valet::engine::ShardedEngine;
+use valet::migration;
+use valet::mrpool::MrState;
+use valet::sim::{secs, Ns};
+use valet::PAGE_SIZE;
+
+fn cfg(nodes: usize) -> Config {
+    let mut cfg = Config::default();
+    cfg.cluster.nodes = nodes;
+    cfg.valet.mr_block_bytes = 1 << 20;
+    cfg.valet.min_pool_pages = 64;
+    cfg.valet.max_pool_pages = 64;
+    cfg
+}
+
+/// Write `blocks` 64-KB blocks through the engine and drain them
+/// remote; returns the quiesced virtual time.
+fn layout(
+    cl: &mut ClusterState,
+    e: &mut ShardedEngine,
+    blocks: u64,
+) -> Ns {
+    let mut t = 0;
+    for blk in 0..blocks {
+        t = e.write(cl, t, blk * 16, 16 * PAGE_SIZE).end;
+    }
+    t += secs(2);
+    e.pump(cl, t);
+    t
+}
+
+/// The unit currently mid-migration off `node` (its source block is
+/// marked Migrating), found through the unit map.
+fn migrating_unit(cl: &ClusterState, e: &ShardedEngine) -> Option<u64> {
+    for (&id, u) in e.sender().units().iter() {
+        for (&n, &b) in u.nodes.iter().zip(u.blocks.iter()) {
+            if cl.mrpools[n]
+                .get(b)
+                .is_some_and(|blk| blk.state == MrState::Migrating)
+            {
+                return Some(id);
+            }
+        }
+    }
+    None
+}
+
+#[test]
+fn single_uncontended_migration_matches_simulate_oracle() {
+    // The equivalence pin: one migration through the live pump-driven
+    // pipeline reproduces the `migration::simulate` oracle's
+    // virtual-time milestones bit for bit (like the S=1 sharding pin).
+    let cfg = cfg(4);
+    let mut cl = ClusterState::new(&cfg);
+    let mut e = ShardedEngine::new(&cfg, 1);
+    let t = layout(&mut cl, &mut e, 40);
+    let holder = e.sender().units().get(0).map(|u| u.nodes[0]).unwrap();
+    // snapshot the substrate BEFORE the migration touches the fabric
+    let mut oracle_cl = cl.clone();
+    let out = e.remote_pressure(&mut cl, t, holder, 1);
+    assert_eq!(out.migrated, 1);
+    assert_eq!(e.migrations_inflight(), 1, "enqueued, not driven");
+    e.pump(&mut cl, t + secs(5));
+    assert_eq!(e.migrations_inflight(), 0);
+    let rec = e.migration_records()[0];
+    assert_eq!(rec.src, holder);
+    // ActivityBased selection is free: the pipeline starts at t exactly
+    assert_eq!(rec.scheduled, t);
+    assert_eq!(rec.activated, t);
+    let oracle = migration::simulate(
+        &mut oracle_cl.fabric,
+        &cfg.latency,
+        t,
+        oracle_cl.sender,
+        rec.src,
+        rec.dst,
+        rec.block_bytes,
+        2,
+    );
+    assert_eq!(rec.park_from, oracle.park_from, "park_from");
+    assert_eq!(rec.copy_start, oracle.copy_start, "copy_start");
+    assert_eq!(rec.copy_end, oracle.copy_end, "copy_end");
+    assert_eq!(rec.done, oracle.done, "done");
+    assert_eq!(rec.dst, oracle.dst);
+}
+
+#[test]
+fn concurrent_migrations_on_distinct_peers_overlap() {
+    let cfg = cfg(6);
+    let mut cl = ClusterState::new(&cfg);
+    let mut e = ShardedEngine::new(&cfg, 1);
+    let t = layout(&mut cl, &mut e, 96);
+    // two different peers report pressure at the same instant
+    let mut holders: Vec<usize> = e
+        .sender()
+        .units()
+        .iter()
+        .map(|(_, u)| u.nodes[0])
+        .collect();
+    holders.sort_unstable();
+    holders.dedup();
+    assert!(holders.len() >= 2, "layout must spread over peers");
+    let (a, b) = (holders[0], holders[1]);
+    let oa = e.remote_pressure(&mut cl, t, a, 1);
+    let ob = e.remote_pressure(&mut cl, t, b, 1);
+    assert_eq!(oa.migrated, 1);
+    assert_eq!(ob.migrated, 1);
+    assert_eq!(e.migrations_inflight(), 2);
+    e.pump(&mut cl, t + secs(5));
+    assert_eq!(e.migrations_inflight(), 0);
+    let stats = e.migration_stats();
+    assert_eq!(stats.completed, 2);
+    assert_eq!(stats.deleted, 0);
+    let recs = e.migration_records();
+    assert_eq!(recs.len(), 2);
+    assert_ne!(recs[0].src, recs[1].src, "distinct source peers");
+    // both activated immediately and their in-flight windows overlap
+    assert_eq!(recs[0].activated, t);
+    assert_eq!(recs[1].activated, t);
+    let first_done = recs.iter().map(|r| r.done).min().unwrap();
+    let last_start = recs.iter().map(|r| r.activated).max().unwrap();
+    assert!(last_start < first_done, "windows must overlap");
+    assert!(stats.overlap_ns > 0, "overlap must be accounted");
+}
+
+#[test]
+fn serialized_mode_runs_migrations_back_to_back() {
+    let mut cfg = cfg(6);
+    cfg.valet.max_concurrent_migrations = 1;
+    let mut cl = ClusterState::new(&cfg);
+    let mut e = ShardedEngine::new(&cfg, 1);
+    let t = layout(&mut cl, &mut e, 96);
+    let mut holders: Vec<usize> = e
+        .sender()
+        .units()
+        .iter()
+        .map(|(_, u)| u.nodes[0])
+        .collect();
+    holders.sort_unstable();
+    holders.dedup();
+    let (a, b) = (holders[0], holders[1]);
+    e.remote_pressure(&mut cl, t, a, 1);
+    e.remote_pressure(&mut cl, t, b, 1);
+    e.pump(&mut cl, t + secs(10));
+    let stats = e.migration_stats();
+    assert_eq!(stats.completed, 2);
+    assert_eq!(stats.overlap_ns, 0, "serialized mode must not overlap");
+    let recs = e.migration_records();
+    // the second machine only activates once the first commits
+    assert!(recs[1].activated >= recs[0].done);
+}
+
+#[test]
+fn write_during_migration_parks_then_flushes_to_dst() {
+    let cfg = cfg(4);
+    let mut cl = ClusterState::new(&cfg);
+    let mut e = ShardedEngine::new(&cfg, 1);
+    let t = layout(&mut cl, &mut e, 40);
+    let holder = e.sender().units().get(0).map(|u| u.nodes[0]).unwrap();
+    let out = e.remote_pressure(&mut cl, t, holder, 1);
+    assert_eq!(out.migrated, 1);
+    // one pump tick at `t`: the machine activates (PREPARE out, writes
+    // parked) but is far from committed
+    e.pump(&mut cl, t);
+    let unit = migrating_unit(&cl, &e).expect("a block is migrating");
+    let page = unit * ((1 << 20) / PAGE_SIZE); // first page of the unit
+    let w = e.write(&mut cl, t, page, PAGE_SIZE);
+    assert_eq!(w.source, Source::LocalPool, "write path unaffected");
+    // drive the batcher: the write set must park, not hit the wire
+    e.pump(&mut cl, w.end);
+    let stats = e.migration_stats();
+    assert!(stats.parked_sets >= 1, "write must park: {stats:?}");
+    assert_eq!(stats.flushed_sets, 0);
+    // read-your-writes while parked: served from the local pool
+    let r = e.read(&mut cl, w.end, page);
+    assert_eq!(r.source, Source::LocalPool);
+    // commit: parked sets flush to the destination, unit remaps
+    e.pump(&mut cl, t + secs(5));
+    e.pump(&mut cl, t + secs(6)); // apply the flush completions
+    let stats = e.migration_stats();
+    assert_eq!(stats.completed, 1);
+    assert_eq!(stats.flushed_sets, stats.parked_sets);
+    let rec = e.migration_records()[0];
+    assert_eq!(rec.parked_flushed, stats.flushed_sets);
+    let u = e.sender().units().get(unit).unwrap();
+    assert_eq!(u.nodes[0], rec.dst, "unit remapped to destination");
+    assert_ne!(rec.dst, holder);
+    // read-your-writes across the remap: still never disk, and other
+    // (evicted) pages of the migrated unit read from the new home
+    let r = e.read(&mut cl, t + secs(7), page);
+    assert_ne!(r.source, Source::Disk);
+    let evicted = e.read(&mut cl, t + secs(7), page + 1);
+    assert_ne!(evicted.source, Source::Disk);
+}
+
+#[test]
+fn read_during_copy_is_served_from_source() {
+    let cfg = cfg(4);
+    let mut cl = ClusterState::new(&cfg);
+    let mut e = ShardedEngine::new(&cfg, 1);
+    let t = layout(&mut cl, &mut e, 40);
+    let holder = e.sender().units().get(0).map(|u| u.nodes[0]).unwrap();
+    e.remote_pressure(&mut cl, t, holder, 1);
+    e.pump(&mut cl, t); // activate: copy not yet committed
+    let unit = migrating_unit(&cl, &e).expect("a block is migrating");
+    let u = e.sender().units().get(unit).unwrap();
+    assert!(u.alive);
+    let src_before = u.nodes[0];
+    // a page of the migrating unit that is no longer locally cached
+    // reads from the source peer mid-migration (never disk)
+    let page = unit * ((1 << 20) / PAGE_SIZE);
+    let r = e.read(&mut cl, t, page);
+    assert_eq!(r.source, Source::Remote, "reads stay on src");
+    assert_eq!(
+        e.sender().units().get(unit).unwrap().nodes[0],
+        src_before,
+        "mapping unchanged before COMMIT"
+    );
+    // after COMMIT the same unit points at the destination
+    e.pump(&mut cl, t + secs(5));
+    let rec = e.migration_records()[0];
+    assert_eq!(e.sender().units().get(unit).unwrap().nodes[0], rec.dst);
+    let r2 = e.read(&mut cl, t + secs(5), page + 2);
+    assert_ne!(r2.source, Source::Disk);
+}
+
+#[test]
+fn no_destination_fallback_deletes_with_disk_backup_honored() {
+    // 2-node cluster: the single peer is also the source, so there is
+    // never a destination — Valet must fall back to delete, and with
+    // disk backup on (FtPolicy: w/o replication, w/ disk) the data
+    // stays readable from the local disk copy (Table 3).
+    let mut cfg = cfg(2);
+    cfg.valet.min_pool_pages = 16;
+    cfg.valet.max_pool_pages = 16;
+    cfg.valet.disk_backup = true;
+    let mut cl = ClusterState::new(&cfg);
+    let mut e = ShardedEngine::new(&cfg, 1);
+    let t = layout(&mut cl, &mut e, 32);
+    let out = e.remote_pressure(&mut cl, t, 1, 1);
+    assert_eq!(out.migrated, 0, "no destination exists");
+    assert!(out.deleted >= 1);
+    assert_eq!(e.migrations_inflight(), 0, "deletes are synchronous");
+    let stats = e.migration_stats();
+    assert_eq!(stats.deleted, out.deleted as u64);
+    assert_eq!(stats.started, 0);
+    // an evicted page of the deleted unit falls back to the disk copy
+    let dead = e
+        .sender()
+        .units()
+        .iter()
+        .find(|(_, u)| !u.alive)
+        .map(|(&id, _)| id)
+        .expect("a unit died");
+    let page = dead * ((1 << 20) / PAGE_SIZE);
+    if e.slot_of(page).is_none() {
+        let r = e.read(&mut cl, t + secs(1), page);
+        assert_eq!(r.source, Source::Disk);
+    }
+}
+
+#[test]
+fn delete_with_surviving_replica_keeps_reads_remote() {
+    // Table 3, w/ replication: deleting one copy must drop only that
+    // replica slot — the surviving copy keeps serving reads, and the
+    // unit stays alive. 3-node cluster with replicas=2: every unit
+    // lives on BOTH peers, so a pressured peer never has a migration
+    // destination (the other peer already holds a replica) and the
+    // fallback is always delete.
+    let mut cfg = cfg(3);
+    cfg.valet.replicas = 2;
+    let mut cl = ClusterState::new(&cfg);
+    let mut e = ShardedEngine::new(&cfg, 1);
+    let t = layout(&mut cl, &mut e, 32);
+    let unit0 = e.sender().units().get(0).unwrap();
+    assert_eq!(unit0.nodes.len(), 2, "replicated unit");
+    let out = e.remote_pressure(&mut cl, t, 1, 1);
+    assert_eq!(out.migrated, 0, "other peer already holds a replica");
+    assert!(out.deleted >= 1);
+    // the deleted slot is gone, the survivor serves, the unit lives
+    let survivor_units: Vec<u64> = e
+        .sender()
+        .units()
+        .iter()
+        .filter(|(_, u)| u.alive && u.nodes.len() == 1)
+        .map(|(&id, _)| id)
+        .collect();
+    assert!(!survivor_units.is_empty(), "a slot must have been dropped");
+    for id in survivor_units {
+        let u = e.sender().units().get(id).unwrap();
+        assert_ne!(u.nodes[0], 1, "survivor lives on the other peer");
+        let page = id * ((1 << 20) / PAGE_SIZE);
+        if e.slot_of(page).is_none() {
+            let r = e.read(&mut cl, t + secs(1), page);
+            assert_eq!(r.source, Source::Remote, "unit {id}");
+        }
+    }
+}
+
+#[test]
+fn pressure_waves_through_cluster_events_drive_the_pump_path() {
+    // End-to-end through the event timeline: NativeAlloc raises
+    // pressure (machines enqueue), advance() pumps them to completion,
+    // NativeFree relaxes the peer — and the bounded pressure log keeps
+    // the episode.
+    let mut cfg = cfg(5);
+    cfg.valet.min_pool_pages = 128;
+    cfg.valet.max_pool_pages = 128;
+    let mut cl = ShardedCluster::new(&cfg, 1);
+    let mut t = 0;
+    for blk in 0..48u64 {
+        t = cl.write(t, blk * 16, 16 * PAGE_SIZE).end;
+    }
+    cl.advance(t + secs(2));
+    t += secs(2);
+    let peer = cl
+        .state
+        .peers()
+        .max_by_key(|&n| cl.state.mrpools[n].registered_bytes())
+        .unwrap();
+    let claim = cl.state.monitors[peer].total_bytes;
+    cl.schedule(t, ClusterEvent::NativeAlloc { node: peer, bytes: claim });
+    cl.advance(t + secs(5));
+    assert_eq!(cl.pressure_log.len(), 1);
+    let (_, node, out) = cl.pressure_log[0];
+    assert_eq!(node, peer);
+    assert!(out.reclaimed_bytes > 0);
+    // the pump (inside advance) completed every enqueued migration
+    assert_eq!(cl.engine.migrations_inflight(), 0);
+    let stats = cl.engine.migration_stats();
+    assert_eq!(stats.completed + stats.deleted, (out.migrated + out.deleted) as u64);
+    // pressure score spiked on the squeezed peer (one EWMA step of
+    // α=0.3 toward full occupancy) and decays again after the free
+    let hot_score = cl.state.pressure_milli(peer);
+    assert!(hot_score > 200, "squeezed peer must look pressured");
+    cl.schedule(t + secs(6), ClusterEvent::NativeFree {
+        node: peer,
+        bytes: claim,
+    });
+    cl.advance(t + secs(7));
+    assert!(cl.state.pressure_milli(peer) < hot_score);
+    // everything the sender wrote is still readable without disk
+    let mut tt = t + secs(8);
+    for blk in (0..48u64).step_by(4) {
+        let r = cl.read(tt, blk * 16);
+        assert_ne!(r.source, Source::Disk, "block {blk}");
+        tt = r.end;
+    }
+}
+
+#[test]
+fn demand_reads_shield_blocks_from_eviction() {
+    // Activity feedback from the read path: a unit whose pages are
+    // read (demand) right before the pressure event must NOT be the
+    // victim, even though it was written long ago.
+    let cfg = cfg(3); // sender + 2 peers → every unit lands on 1 or 2
+    let mut cl = ClusterState::new(&cfg);
+    let mut e = ShardedEngine::new(&cfg, 1);
+    let t = layout(&mut cl, &mut e, 40);
+    // find a peer holding at least two live units
+    let (holder, units_there): (usize, Vec<u64>) = {
+        let mut per: Vec<(usize, Vec<u64>)> = vec![(1, vec![]), (2, vec![])];
+        for (&id, u) in e.sender().units().iter() {
+            if let Some(entry) =
+                per.iter_mut().find(|(n, _)| *n == u.nodes[0])
+            {
+                entry.1.push(id);
+            }
+        }
+        per.sort_by_key(|(_, us)| std::cmp::Reverse(us.len()));
+        per[0].clone()
+    };
+    assert!(units_there.len() >= 2, "need two units on one peer");
+    let mut sorted = units_there.clone();
+    sorted.sort_unstable();
+    let read_unit = sorted[0];
+    // demand-read a (non-cached) page of read_unit just before the wave
+    let page = read_unit * ((1 << 20) / PAGE_SIZE);
+    assert!(e.slot_of(page).is_none(), "page must miss locally");
+    let r = e.read(&mut cl, t + secs(1), page);
+    assert_eq!(r.source, Source::Remote);
+    // pressure the holder for one block: the victim must be a unit
+    // that was NOT recently read
+    let out = e.remote_pressure(&mut cl, t + secs(2), holder, 1);
+    assert_eq!(out.migrated + out.deleted, 1);
+    e.pump(&mut cl, t + secs(10));
+    if out.migrated == 1 {
+        let rec = e.migration_records()[0];
+        assert_ne!(
+            rec.unit, read_unit,
+            "recently-read unit must not be the victim"
+        );
+    }
+}
