@@ -31,6 +31,7 @@
 
 use std::cmp::Reverse;
 
+use crate::audit::{self, Law, Violation};
 use crate::backends::{Access, ClusterState, PressureOutcome};
 use crate::config::Config;
 use crate::coordinator::Coordinator;
@@ -363,6 +364,70 @@ impl HostArbiter {
             self.reclaims += 1;
         }
     }
+
+    // -- the invariant auditor ----------------------------------------
+
+    /// Audit the ledger ([`Law::ArbiterLedger`]): no lease below its
+    /// tenant's `min_pages` floor, and `Σ leases ≤ budget` — except in
+    /// the documented overcommit regime, where the budget cannot cover
+    /// the floors and every lease must then sit exactly AT its floor
+    /// (floors win; anything above one while overcommitted is a leak).
+    pub fn audit_check(&self) -> Vec<Violation> {
+        let mut out = Vec::new();
+        let snap = || {
+            format!(
+                "budget={} leases={:?} floors={:?}",
+                self.budget,
+                self.leases(),
+                self.shares
+                    .iter()
+                    .map(|s| s.min_pages)
+                    .collect::<Vec<_>>()
+            )
+        };
+        for (t, s) in self.shares.iter().enumerate() {
+            audit::check(
+                &mut out,
+                s.lease >= s.min_pages,
+                Law::ArbiterLedger,
+                None,
+                || {
+                    format!(
+                        "tenant {t} leased {} pages, below its floor {}",
+                        s.lease, s.min_pages
+                    )
+                },
+                snap,
+            );
+        }
+        let total = self.leased_total();
+        let at_floors =
+            self.shares.iter().all(|s| s.lease == s.min_pages);
+        audit::check(
+            &mut out,
+            total <= self.budget || at_floors,
+            Law::ArbiterLedger,
+            None,
+            || {
+                format!(
+                    "Σ leases = {total} exceeds budget {} with some \
+                     tenant above its floor",
+                    self.budget
+                )
+            },
+            snap,
+        );
+        out
+    }
+
+    /// Test-only corruption hook for [`Law::ArbiterLedger`]: overwrite
+    /// one tenant's lease directly, bypassing the rebalance/budget
+    /// machinery.
+    #[cfg(any(feature = "audit", debug_assertions))]
+    #[doc(hidden)]
+    pub fn audit_set_lease(&mut self, t: TenantId, pages: u64) {
+        self.shares[t].lease = pages;
+    }
 }
 
 /// N per-container coordinators behind one arbiter, sharing one
@@ -505,6 +570,9 @@ impl TenantGroup {
         for (co, &l) in self.coords.iter_mut().zip(leases.iter()) {
             co.set_lease_pages(l);
         }
+        if audit::enabled() {
+            audit::enforce(&self.arbiter.audit_check());
+        }
     }
 
     /// Host free memory on the sender changed (container churn): shrink
@@ -521,6 +589,9 @@ impl TenantGroup {
         for (co, &l) in self.coords.iter_mut().zip(leases.iter()) {
             co.set_lease_pages(l);
             co.set_host_free_pages(free_pages);
+        }
+        if audit::enabled() {
+            audit::enforce(&self.arbiter.audit_check());
         }
     }
 

@@ -1,0 +1,256 @@
+//! Whole-system invariant auditor: the conservation laws the paper's
+//! guarantees rest on, checked as data instead of prose.
+//!
+//! The headline properties — read-your-writes across a migration COMMIT
+//! remap, Table-3 replica semantics (a unit dies only when its last copy
+//! is gone), lease-bounded host memory per container — are distributed
+//! across five interacting subsystems (mempool, arbiter, sharded engine,
+//! sender/migration table, prefetcher). Each subsystem owns the checker
+//! for the laws over its private state (`Mempool::audit_check`,
+//! `RemoteSender::audit_check`, `HostArbiter::audit_check`,
+//! `PressureLog::audit_check`, and the cross-structure sweep in
+//! [`crate::engine::ShardedEngine::audit_check`]); this module owns the
+//! shared vocabulary: the law catalog ([`Law`]), the structured report
+//! ([`Violation`]), and the panicking enforcement used at the slow-path
+//! crossings.
+//!
+//! Cost model: checks run when [`enabled`] — `--features audit` or any
+//! `debug_assertions` build (so plain `cargo test` is audited). In a
+//! release build without the feature every enforcement site is
+//! `if false`, compiled away entirely; the auditor only ever *reads*
+//! state, so enabling it cannot change virtual-time results either —
+//! ci.sh asserts the experiment metrics are bit-identical with the
+//! feature on and off.
+//!
+//! The catalog (the table in ARCHITECTURE.md §"The audit layer" mirrors
+//! this, and every law has a firing negative test in `tests/audit.rs`):
+//!
+//! | law | conserved quantity |
+//! |---|---|
+//! | [`Law::MempoolAccounting`] | slot/free/retired partition exactness |
+//! | [`Law::MempoolCapGrowth`] | growth never lands above the effective cap |
+//! | [`Law::MempoolQueueCoherence`] | reclaim/prefetch queues ⟷ slot flags |
+//! | [`Law::LeaseSplit`] | Σ shard leases == engine lease |
+//! | [`Law::ArbiterLedger`] | Σ leases ≤ budget; floors never violated |
+//! | [`Law::ReplicaDistinct`] | unit replicas re-derive via `choose_replicas` |
+//! | [`Law::MigrationLegality`] | migration table states/milestones legal |
+//! | [`Law::MigratingNotReselected`] | `Migrating` blocks owned by one entry |
+//! | [`Law::ParkedFlushOnce`] | parked write sets flushed exactly once |
+//! | [`Law::PrefetchIsolation`] | speculative slots never shadow demand data |
+//! | [`Law::TimeMonotonic`] | virtual time never runs backwards |
+//! | [`Law::PressureLogBounds`] | pressure ring bounded, time-ordered |
+//! | [`Law::GptCoherence`] | GPT entries ⟷ resident mempool slots |
+
+use std::fmt;
+
+/// True when audit checks should run: the `audit` feature or any build
+/// with debug assertions (tests, dev profile). Call sites guard with
+/// `if audit::enabled()` so the checks — and the state walks feeding
+/// them — vanish from optimized release builds.
+#[inline(always)]
+pub const fn enabled() -> bool {
+    cfg!(any(feature = "audit", debug_assertions))
+}
+
+/// One conservation law in the catalog. Display gives the short name
+/// used in reports and negative tests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Law {
+    /// Mempool slot accounting: `capacity == slots - retired`, the
+    /// free/retired lists hold distinct `Free` slots, and
+    /// `used + free == capacity` with `min_pages ≤ capacity ≤ max_pages`.
+    MempoolAccounting,
+    /// A mempool grow operation never lands above the effective cap
+    /// (`min(max_pages, host_free·fraction, lease)`) in force at grow
+    /// time. (A *lowered* cap may lag behind capacity until the next
+    /// shrink — that is legal; growing past the cap never is.)
+    MempoolCapGrowth,
+    /// Queue/flag coherence: a used slot is in the reclaim LRU iff
+    /// flagged `reclaimable` and not `prefetched`; in the prefetch queue
+    /// iff flagged `prefetched`.
+    MempoolQueueCoherence,
+    /// The engine's per-shard mempool leases re-split exactly to the
+    /// engine-level lease (`u64::MAX` sentinel splits to all-`MAX`).
+    LeaseSplit,
+    /// The host arbiter ledger: every lease at or above its tenant's
+    /// floor, and `Σ leases ≤ budget` whenever the budget covers the
+    /// floors.
+    ArbiterLedger,
+    /// Unit-map replica lists re-validate against
+    /// [`crate::replication::choose_replicas`]: distinct nodes, sender
+    /// excluded, primary first, one registered block per replica.
+    ReplicaDistinct,
+    /// Migration-table legality: at most one live entry per unit, state
+    /// implies its fields (an activated entry has a destination; a
+    /// copying entry has a registered destination block), and the
+    /// milestone clocks are ordered
+    /// (`scheduled ≤ park_from ≤ copy_start ≤ copy_end`).
+    MigrationLegality,
+    /// An MR block in [`crate::mrpool::MrState::Migrating`] is owned by
+    /// exactly one live migration entry as its source — victim selection
+    /// can never re-select it, and no block migrates twice at once.
+    MigratingNotReselected,
+    /// Parked write sets are flushed exactly once at COMMIT:
+    /// `parked_sets == flushed_sets + Σ currently-parked`.
+    ParkedFlushOnce,
+    /// Prefetch isolation: every prefetch-tagged slot is reclaimable
+    /// (its remote copy is valid by construction), so speculation can
+    /// always be displaced and never pins out live demand data.
+    PrefetchIsolation,
+    /// Simulated time is monotone at every audited crossing: a shard is
+    /// never driven at a `now` earlier than its last crossing.
+    TimeMonotonic,
+    /// The pressure-episode ring stays within its bound, entries are
+    /// time-ordered, and drops are only counted once the ring is full.
+    PressureLogBounds,
+    /// GPT ⟷ mempool bijection per shard: `gpt.len()` equals the used
+    /// slot count and every used slot's page maps back to that slot.
+    GptCoherence,
+}
+
+impl Law {
+    /// Short stable identifier (used by reports and negative tests).
+    pub fn name(self) -> &'static str {
+        match self {
+            Law::MempoolAccounting => "mempool-accounting",
+            Law::MempoolCapGrowth => "mempool-cap-growth",
+            Law::MempoolQueueCoherence => "mempool-queue-coherence",
+            Law::LeaseSplit => "lease-split",
+            Law::ArbiterLedger => "arbiter-ledger",
+            Law::ReplicaDistinct => "replica-distinct",
+            Law::MigrationLegality => "migration-legality",
+            Law::MigratingNotReselected => "migrating-not-reselected",
+            Law::ParkedFlushOnce => "parked-flush-once",
+            Law::PrefetchIsolation => "prefetch-isolation",
+            Law::TimeMonotonic => "time-monotonic",
+            Law::PressureLogBounds => "pressure-log-bounds",
+            Law::GptCoherence => "gpt-coherence",
+        }
+    }
+}
+
+impl fmt::Display for Law {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A violated conservation law: which law, where, and the state that
+/// contradicts it. `Display` renders the full report line the fuzzer
+/// and the enforcement panic print.
+#[derive(Clone, Debug)]
+pub struct Violation {
+    /// The broken law.
+    pub law: Law,
+    /// Shard the violation was observed on (`None` for engine-global,
+    /// arbiter or cluster state).
+    pub shard: Option<usize>,
+    /// What exactly is inconsistent.
+    pub detail: String,
+    /// Snapshot of the relevant counters/fields at detection time.
+    pub snapshot: String,
+}
+
+impl Violation {
+    /// Build a violation report.
+    pub fn new(
+        law: Law,
+        shard: Option<usize>,
+        detail: impl Into<String>,
+        snapshot: impl Into<String>,
+    ) -> Self {
+        Violation {
+            law,
+            shard,
+            detail: detail.into(),
+            snapshot: snapshot.into(),
+        }
+    }
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.shard {
+            Some(s) => write!(
+                f,
+                "audit violation [{}] shard {}: {} (state: {})",
+                self.law, s, self.detail, self.snapshot
+            ),
+            None => write!(
+                f,
+                "audit violation [{}]: {} (state: {})",
+                self.law, self.detail, self.snapshot
+            ),
+        }
+    }
+}
+
+/// Panic with a full report if any violation was collected — the
+/// enforcement half used at slow-path crossings, cluster-event
+/// application and migration milestones. (Tests that want to *observe*
+/// violations call the non-panicking `audit_check` methods directly.)
+pub fn enforce(violations: &[Violation]) {
+    if violations.is_empty() {
+        return;
+    }
+    let mut msg = String::from("invariant audit failed:\n");
+    for v in violations {
+        msg.push_str(&format!("  {v}\n"));
+    }
+    panic!("{msg}");
+}
+
+/// Convenience for checkers: push a violation when `ok` is false.
+pub(crate) fn check(
+    out: &mut Vec<Violation>,
+    ok: bool,
+    law: Law,
+    shard: Option<usize>,
+    detail: impl FnOnce() -> String,
+    snapshot: impl FnOnce() -> String,
+) {
+    if !ok {
+        out.push(Violation::new(law, shard, detail(), snapshot()));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_names_are_stable() {
+        assert_eq!(Law::MempoolAccounting.to_string(), "mempool-accounting");
+        assert_eq!(Law::GptCoherence.name(), "gpt-coherence");
+    }
+
+    #[test]
+    fn violation_report_names_law_shard_and_state() {
+        let v = Violation::new(
+            Law::LeaseSplit,
+            Some(3),
+            "shard lease sum 100 != engine lease 128",
+            "leases=[25,25,25,25]",
+        );
+        let s = v.to_string();
+        assert!(s.contains("lease-split"));
+        assert!(s.contains("shard 3"));
+        assert!(s.contains("leases="));
+    }
+
+    #[test]
+    #[should_panic(expected = "invariant audit failed")]
+    fn enforce_panics_with_report() {
+        enforce(&[Violation::new(
+            Law::TimeMonotonic,
+            None,
+            "now 5 < last 9",
+            "",
+        )]);
+    }
+
+    #[test]
+    fn enforce_is_silent_when_clean() {
+        enforce(&[]);
+    }
+}

@@ -144,8 +144,12 @@ impl PagingBackend for InfiniswapBackend {
         self.metrics
             .write_parts
             .add("mrpool", self.lat.mrpool_get_slow);
-        let primary = self.units.get(unit).unwrap().nodes[0];
-        let pblock = self.units.get(unit).unwrap().blocks[0];
+        let u = self
+            .units
+            .get(unit)
+            .expect("mapped: ensure_unit registered this unit above");
+        let primary = u.nodes[0];
+        let pblock = u.blocks[0];
         let verb = cl.fabric.rdma_write(t, cl.sender, primary, bytes);
         self.metrics.write_parts.add("rdma", verb.end - t);
         cl.mrpools[primary].touch_write(pblock, verb.end);
@@ -173,7 +177,10 @@ impl PagingBackend for InfiniswapBackend {
             .unwrap_or(false)
             && self.remote_ready.contains(&page);
         if remote_ok {
-            let u = self.units.get(unit).unwrap();
+            let u = self
+                .units
+                .get(unit)
+                .expect("remote_ok came from this same unit lookup");
             let primary = u.nodes[0];
             let t0 = now + self.lat.mrpool_get;
             self.metrics

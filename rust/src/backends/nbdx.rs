@@ -119,7 +119,10 @@ impl PagingBackend for NbdxBackend {
     ) -> Access {
         let unit = self.units.unit_of(page);
         self.ensure_unit(cl, now, unit);
-        let u = self.units.get(unit).unwrap();
+        let u = self
+            .units
+            .get(unit)
+            .expect("ensure_unit just mapped this unit");
         let primary = u.nodes[0];
         let pblock = u.blocks[0];
         let stall = self.pool_stall(cl, primary, now);
@@ -158,7 +161,11 @@ impl PagingBackend for NbdxBackend {
             .unwrap_or(false)
             && self.remote_ready.contains(&page);
         if remote_ok {
-            let primary = self.units.get(unit).unwrap().nodes[0];
+            let primary = self
+                .units
+                .get(unit)
+                .expect("remote_ok came from this same unit lookup")
+                .nodes[0];
             let stall = self.pool_stall(cl, primary, now);
             if stall > 0 {
                 self.metrics.read_parts.add("pool_stall", stall);

@@ -1,4 +1,4 @@
-//! One function per paper table/figure (ARCHITECTURE.md §8 experiment index).
+//! One function per paper table/figure (ARCHITECTURE.md §9 experiment index).
 //!
 //! Scaling: the paper runs 10 M records / 10 M ops on 32 real machines;
 //! we run the identical pipeline with records/ops scaled by `Scale` so
@@ -837,7 +837,7 @@ pub fn fig23(scale: &Scale) -> Report {
                 .state
                 .peers()
                 .max_by_key(|&n| cl.state.mrpools[n].registered_bytes())
-                .unwrap();
+                .expect("configs here always build multi-node clusters");
             let donated = cl.state.mrpools[peer].registered_bytes();
             let need = ((donated as f64) * evict_frac) as u64;
             if need > 0 {
@@ -939,8 +939,13 @@ pub fn ablations(scale: &Scale) -> Report {
             pool.touch_write(id, rng.below(1_000_000_000));
         }
         let now = 2_000_000_000;
-        let optimal = pool.least_active(now).unwrap().id;
-        let a = ActivityBased.select(&pool, now).unwrap();
+        let optimal = pool
+            .least_active(now)
+            .expect("64 blocks were registered above")
+            .id;
+        let a = ActivityBased
+            .select(&pool, now)
+            .expect("64 blocks were registered above");
         rows.push(vec![
             "victim: activity-based".into(),
             format!(
@@ -958,7 +963,9 @@ pub fn ablations(scale: &Scale) -> Report {
                 2 * base_config().latency.rdma_write_base
                     + base_config().latency.two_sided_extra,
             );
-            let c = p.select(&pool, now).unwrap();
+            let c = p
+                .select(&pool, now)
+                .expect("64 blocks were registered above");
             cost += c.selection_cost;
             if c.block == optimal {
                 hits += 1;
@@ -1023,10 +1030,15 @@ pub fn ablations(scale: &Scale) -> Report {
                         )
                     })
                     .collect();
-                let pick = policy.pick(&cands).unwrap();
+                let pick = policy
+                    .pick(&cands)
+                    .expect("candidate list is non-empty (n nodes)");
                 loads[pick] += 1;
             }
-            let imbalance = *loads.iter().max().unwrap() as f64
+            let imbalance = *loads
+                .iter()
+                .max()
+                .expect("n >= 1 load buckets") as f64
                 / (balls as f64 / n as f64);
             rows.push(vec![
                 name.into(),
@@ -1157,7 +1169,7 @@ pub fn scaling(scale: &Scale) -> Report {
     let h = spawn(&cfg, BackendKind::Valet);
     for blk in 0..hot_blocks {
         h.call(Request::Write { page: blk * 16, bytes: 64 * 1024 })
-            .expect("prefill");
+            .expect("prefill writes cannot fail: the serve worker is alive");
     }
     let cs: Vec<_> = (0..clients)
         .map(|_| {
@@ -1179,7 +1191,7 @@ pub fn scaling(scale: &Scale) -> Report {
         let h = spawn_sharded(&cfg, shards);
         for blk in 0..hot_blocks {
             h.call(Request::Write { page: blk * 16, bytes: 64 * 1024 })
-                .expect("prefill");
+                .expect("prefill writes cannot fail: the serve worker is alive");
         }
         let cs: Vec<_> = (0..clients)
             .map(|_| {
@@ -1631,8 +1643,16 @@ pub fn reclaim(scale: &Scale) -> Report {
         if recs.is_empty() {
             return 0.0;
         }
-        let first = recs.iter().map(|r| r.scheduled).min().unwrap();
-        let last = recs.iter().map(|r| r.done).max().unwrap();
+        let first = recs
+            .iter()
+            .map(|r| r.scheduled)
+            .min()
+            .expect("recs checked non-empty above");
+        let last = recs
+            .iter()
+            .map(|r| r.done)
+            .max()
+            .expect("recs checked non-empty above");
         (last - first) as f64
     };
 

@@ -41,7 +41,10 @@ pub fn bench(name: &str, iters: u64, mut f: impl FnMut()) -> BenchResult {
         }
         samples.push(t0.elapsed().as_nanos() as f64 / iters as f64);
     }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples.sort_by(|a, b| {
+        a.partial_cmp(b)
+            .expect("elapsed-time samples are never NaN")
+    });
     BenchResult {
         name: name.to_string(),
         iters,

@@ -1,0 +1,676 @@
+//! `valet-lint` — the repo's dependency-free source lint gate.
+//!
+//! A hand-rolled token scanner (no `syn`, no `dylint`: the offline image
+//! carries no registry) enforcing the repository rules documented in
+//! `rust/lint-allow.txt`:
+//!
+//! | rule | statement |
+//! |---|---|
+//! | `no-unwrap` | no `.unwrap()` in non-test code — name the invariant with `.expect` instead |
+//! | `expect-message` | a non-test `.expect("...")` literal must state an invariant (≥ 10 chars) |
+//! | `no-wall-clock` | no `Instant::now` / `SystemTime` in the simulation substrate (virtual time only; `serve/`, `bench/`, `main.rs` and `bin/` measure real wall time and are exempt) |
+//! | `serve-lock` | no bare `.lock(` in `serve/` outside the marked lock-ordering helpers (`valet-lint: allow-lock-begin` / `allow-lock-end`) |
+//!
+//! The scanner masks comments, string/char literals and raw strings, and
+//! skips items under `#[cfg(test)]`, so test code and prose never trip a
+//! rule. Escapes go in `rust/lint-allow.txt`, one per line as
+//! `rule|path-suffix|line-substring`, each with a written justification.
+//!
+//! Modes: the default walks everything and reports every violation plus
+//! stale allowlist entries; `--fast` exits at the first violation (the
+//! pre-push loop). Exit code 0 = clean, 1 = violations, 2 = usage/IO.
+
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// Minimum length for a `.expect` message literal to count as naming an
+/// invariant rather than restating the call ("oops", "peeked", ...).
+const MIN_EXPECT_MSG: usize = 10;
+
+/// Marker comments bracketing the one region in `serve/` where bare
+/// `Mutex::lock` calls are legal (the lock-ordering helpers).
+const LOCK_BEGIN: &str = "valet-lint: allow-lock-begin";
+const LOCK_END: &str = "valet-lint: allow-lock-end";
+
+/// Path fragments exempt from the wall-clock rule: these layers measure
+/// real elapsed time by design. Everything else runs on virtual time.
+const WALL_CLOCK_EXEMPT: &[&str] =
+    &["/serve/", "/bench/", "/bin/", "main.rs"];
+
+/// One lint finding, ready to print as `path:line: [rule] message`.
+struct Finding {
+    path: PathBuf,
+    line: usize,
+    rule: &'static str,
+    message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}",
+            self.path.display(),
+            self.line,
+            self.rule,
+            self.message
+        )
+    }
+}
+
+/// One `rule|path-suffix|line-substring` allowlist entry.
+struct Allow {
+    rule: String,
+    path_suffix: String,
+    needle: String,
+    used: std::cell::Cell<bool>,
+}
+
+fn main() -> ExitCode {
+    let mut fast = false;
+    let mut root: Option<PathBuf> = None;
+    for arg in std::env::args().skip(1) {
+        match arg.as_str() {
+            "--fast" => fast = true,
+            "--help" | "-h" => {
+                eprintln!("usage: valet-lint [--fast] [src-dir]");
+                return ExitCode::SUCCESS;
+            }
+            other => root = Some(PathBuf::from(other)),
+        }
+    }
+    // Default root: `src` next to the manifest we were launched from
+    // (cargo runs binaries with CWD = workspace root), else `rust/src`
+    // when launched from the repository root.
+    let root = root.unwrap_or_else(|| {
+        if Path::new("src/lib.rs").exists() {
+            PathBuf::from("src")
+        } else {
+            PathBuf::from("rust/src")
+        }
+    });
+    if !root.is_dir() {
+        eprintln!("valet-lint: source root {} not found", root.display());
+        return ExitCode::from(2);
+    }
+    let allow_path = root
+        .parent()
+        .unwrap_or(Path::new("."))
+        .join("lint-allow.txt");
+    let allows = match load_allowlist(&allow_path) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!(
+                "valet-lint: cannot read {}: {e}",
+                allow_path.display()
+            );
+            return ExitCode::from(2);
+        }
+    };
+
+    let mut files = Vec::new();
+    collect_rs(&root, &mut files);
+    files.sort();
+
+    let mut findings = Vec::new();
+    let mut scanned = 0usize;
+    for path in &files {
+        let src = match fs::read_to_string(path) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("valet-lint: cannot read {}: {e}", path.display());
+                return ExitCode::from(2);
+            }
+        };
+        scanned += 1;
+        let file_findings = lint_file(path, &src);
+        for f in file_findings {
+            if allowed(&allows, &f, &src) {
+                continue;
+            }
+            if fast {
+                eprintln!("{f}");
+                eprintln!("valet-lint: FAIL (fast mode, first violation)");
+                return ExitCode::FAILURE;
+            }
+            findings.push(f);
+        }
+    }
+
+    for f in &findings {
+        eprintln!("{f}");
+    }
+    let mut stale = 0;
+    if !fast {
+        for a in &allows {
+            if !a.used.get() {
+                stale += 1;
+                eprintln!(
+                    "valet-lint: warning: stale allowlist entry \
+                     `{}|{}|{}` matched nothing",
+                    a.rule, a.path_suffix, a.needle
+                );
+            }
+        }
+    }
+    if findings.is_empty() {
+        eprintln!(
+            "valet-lint: OK ({scanned} files, {} allowlist entries, \
+             {stale} stale)",
+            allows.len()
+        );
+        ExitCode::SUCCESS
+    } else {
+        eprintln!(
+            "valet-lint: FAIL ({} violations in {scanned} files)",
+            findings.len()
+        );
+        ExitCode::FAILURE
+    }
+}
+
+/// Recursively collect `.rs` files under `dir`.
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = fs::read_dir(dir) else {
+        return;
+    };
+    for entry in entries.flatten() {
+        let p = entry.path();
+        if p.is_dir() {
+            collect_rs(&p, out);
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+}
+
+/// Parse `lint-allow.txt`: `#` comments and blank lines skipped, every
+/// other line `rule|path-suffix|line-substring`. A missing file is an
+/// empty allowlist (the committed file documents the rule catalog, so
+/// it should exist — but its absence must not brick the gate).
+fn load_allowlist(path: &Path) -> Result<Vec<Allow>, std::io::Error> {
+    let text = match fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return Ok(Vec::new());
+        }
+        Err(e) => return Err(e),
+    };
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.splitn(3, '|');
+        let (Some(rule), Some(suffix), Some(needle)) =
+            (parts.next(), parts.next(), parts.next())
+        else {
+            eprintln!(
+                "valet-lint: {}:{}: malformed allowlist line (want \
+                 rule|path-suffix|substring)",
+                path.display(),
+                i + 1
+            );
+            continue;
+        };
+        out.push(Allow {
+            rule: rule.trim().to_string(),
+            path_suffix: suffix.trim().to_string(),
+            needle: needle.trim().to_string(),
+            used: std::cell::Cell::new(false),
+        });
+    }
+    Ok(out)
+}
+
+/// Does some allowlist entry cover this finding? Marks the entry used.
+fn allowed(allows: &[Allow], f: &Finding, src: &str) -> bool {
+    let line_text = src.lines().nth(f.line.saturating_sub(1)).unwrap_or("");
+    let path_str = f.path.to_string_lossy();
+    for a in allows {
+        if a.rule == f.rule
+            && path_str.ends_with(&a.path_suffix)
+            && line_text.contains(&a.needle)
+        {
+            a.used.set(true);
+            return true;
+        }
+    }
+    false
+}
+
+/// Lint one file: mask prose, compute `#[cfg(test)]` exempt ranges and
+/// serve-lock marker ranges, then run every applicable rule.
+fn lint_file(path: &Path, src: &str) -> Vec<Finding> {
+    let masked = mask_code(src);
+    let test_ranges = cfg_test_ranges(&masked);
+    let path_str = path.to_string_lossy().replace('\\', "/");
+    let mut out = Vec::new();
+
+    let in_tests = |off: usize| {
+        test_ranges.iter().any(|&(a, b)| off >= a && off < b)
+    };
+    let line_of = |off: usize| src[..off].matches('\n').count() + 1;
+
+    // -- no-unwrap ----------------------------------------------------
+    for off in find_all(&masked, ".unwrap(") {
+        if in_tests(off) {
+            continue;
+        }
+        out.push(Finding {
+            path: path.to_path_buf(),
+            line: line_of(off),
+            rule: "no-unwrap",
+            message: "`.unwrap()` outside tests — use `.expect(\"<the \
+                      invariant that holds here>\")`"
+                .to_string(),
+        });
+    }
+
+    // -- expect-message -----------------------------------------------
+    for off in find_all(&masked, ".expect(") {
+        if in_tests(off) {
+            continue;
+        }
+        let arg_start = off + ".expect(".len();
+        if let Some(msg) = leading_string_literal(src, arg_start) {
+            if msg.chars().count() < MIN_EXPECT_MSG {
+                out.push(Finding {
+                    path: path.to_path_buf(),
+                    line: line_of(off),
+                    rule: "expect-message",
+                    message: format!(
+                        "`.expect(\"{msg}\")` does not state an \
+                         invariant (< {MIN_EXPECT_MSG} chars)"
+                    ),
+                });
+            }
+        }
+    }
+
+    // -- no-wall-clock ------------------------------------------------
+    let wall_exempt = WALL_CLOCK_EXEMPT
+        .iter()
+        .any(|frag| path_str.contains(frag) || path_str.ends_with(frag));
+    if !wall_exempt {
+        for needle in ["Instant::now", "SystemTime"] {
+            for off in find_all(&masked, needle) {
+                if in_tests(off) {
+                    continue;
+                }
+                out.push(Finding {
+                    path: path.to_path_buf(),
+                    line: line_of(off),
+                    rule: "no-wall-clock",
+                    message: format!(
+                        "`{needle}` in the simulation substrate — the \
+                         deterministic layers run on virtual time only"
+                    ),
+                });
+            }
+        }
+    }
+
+    // -- serve-lock ---------------------------------------------------
+    if path_str.contains("/serve/") {
+        let helper_ranges = marker_ranges(src);
+        let in_helpers = |off: usize| {
+            helper_ranges.iter().any(|&(a, b)| off >= a && off < b)
+        };
+        for off in find_all(&masked, ".lock(") {
+            if in_tests(off) || in_helpers(off) {
+                continue;
+            }
+            out.push(Finding {
+                path: path.to_path_buf(),
+                line: line_of(off),
+                rule: "serve-lock",
+                message: "bare `.lock(` outside the marked lock-ordering \
+                          helpers — go through `lock_slow` / `lock_lane`"
+                    .to_string(),
+            });
+        }
+    }
+
+    out
+}
+
+/// Byte offsets of every occurrence of `needle` in `hay`.
+fn find_all(hay: &str, needle: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(i) = hay[from..].find(needle) {
+        out.push(from + i);
+        from += i + needle.len();
+    }
+    out
+}
+
+/// Byte ranges between the serve-lock allow markers (raw text — the
+/// markers live in comments, which masking erases).
+fn marker_ranges(src: &str) -> Vec<(usize, usize)> {
+    let begins = find_all(src, LOCK_BEGIN);
+    let ends = find_all(src, LOCK_END);
+    begins
+        .iter()
+        .zip(ends.iter())
+        .map(|(&b, &e)| (b, e))
+        .collect()
+}
+
+/// Byte ranges of items annotated `#[cfg(test)]`: from the attribute to
+/// the end of the following brace-balanced block (or the next `;` for
+/// block-less items). Brace matching runs on masked text, so braces in
+/// strings or comments cannot derail it.
+fn cfg_test_ranges(masked: &str) -> Vec<(usize, usize)> {
+    let bytes = masked.as_bytes();
+    let mut out = Vec::new();
+    for start in find_all(masked, "#[cfg(test)]") {
+        let mut i = start + "#[cfg(test)]".len();
+        // Walk to the item's opening brace, skipping further attributes
+        // (their internal brackets are balanced independently).
+        let mut end = masked.len();
+        while i < bytes.len() {
+            match bytes[i] {
+                b'{' => {
+                    let mut depth = 0usize;
+                    while i < bytes.len() {
+                        match bytes[i] {
+                            b'{' => depth += 1,
+                            b'}' => {
+                                depth -= 1;
+                                if depth == 0 {
+                                    break;
+                                }
+                            }
+                            _ => {}
+                        }
+                        i += 1;
+                    }
+                    end = (i + 1).min(masked.len());
+                    break;
+                }
+                b';' => {
+                    end = i + 1;
+                    break;
+                }
+                _ => i += 1,
+            }
+        }
+        out.push((start, end));
+    }
+    out
+}
+
+/// Replace the contents of comments, string literals, char literals and
+/// raw strings with spaces (newlines kept, so offsets and line numbers
+/// survive). Handles nested block comments, escape sequences, raw
+/// strings with `#` fences, and tells lifetimes from char literals.
+fn mask_code(src: &str) -> String {
+    let b = src.as_bytes();
+    let mut out: Vec<u8> = Vec::with_capacity(b.len());
+    let mut i = 0;
+    let keep = |c: u8| if c == b'\n' { b'\n' } else { b' ' };
+    while i < b.len() {
+        match b[i] {
+            b'/' if i + 1 < b.len() && b[i + 1] == b'/' => {
+                while i < b.len() && b[i] != b'\n' {
+                    out.push(b' ');
+                    i += 1;
+                }
+            }
+            b'/' if i + 1 < b.len() && b[i + 1] == b'*' => {
+                let mut depth = 0usize;
+                while i < b.len() {
+                    if b[i] == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+                        depth += 1;
+                        out.push(b' ');
+                        out.push(b' ');
+                        i += 2;
+                    } else if b[i] == b'*'
+                        && i + 1 < b.len()
+                        && b[i + 1] == b'/'
+                    {
+                        depth -= 1;
+                        out.push(b' ');
+                        out.push(b' ');
+                        i += 2;
+                        if depth == 0 {
+                            break;
+                        }
+                    } else {
+                        out.push(keep(b[i]));
+                        i += 1;
+                    }
+                }
+            }
+            b'r' if i + 1 < b.len()
+                && (b[i + 1] == b'"' || b[i + 1] == b'#')
+                && !prev_is_ident(b, i) =>
+            {
+                // raw string r"..." / r#"..."# / r##"..."##
+                let mut j = i + 1;
+                let mut hashes = 0usize;
+                while j < b.len() && b[j] == b'#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if j < b.len() && b[j] == b'"' {
+                    out.push(b' '); // the r
+                    for _ in 0..hashes {
+                        out.push(b' ');
+                    }
+                    out.push(b'"');
+                    j += 1;
+                    'raw: while j < b.len() {
+                        if b[j] == b'"' {
+                            let mut k = j + 1;
+                            let mut seen = 0usize;
+                            while k < b.len()
+                                && seen < hashes
+                                && b[k] == b'#'
+                            {
+                                seen += 1;
+                                k += 1;
+                            }
+                            if seen == hashes {
+                                out.push(b'"');
+                                for _ in 0..hashes {
+                                    out.push(b' ');
+                                }
+                                j = k;
+                                break 'raw;
+                            }
+                        }
+                        out.push(keep(b[j]));
+                        j += 1;
+                    }
+                    i = j;
+                } else {
+                    out.push(b[i]);
+                    i += 1;
+                }
+            }
+            b'"' => {
+                out.push(b'"');
+                i += 1;
+                while i < b.len() {
+                    if b[i] == b'\\' && i + 1 < b.len() {
+                        out.push(b' ');
+                        out.push(b' ');
+                        i += 2;
+                    } else if b[i] == b'"' {
+                        out.push(b'"');
+                        i += 1;
+                        break;
+                    } else {
+                        out.push(keep(b[i]));
+                        i += 1;
+                    }
+                }
+            }
+            b'\'' => {
+                // char literal vs lifetime: a literal is '\...' or 'x'
+                // with a closing quote right after; a lifetime has no
+                // nearby closing quote.
+                if i + 1 < b.len() && b[i + 1] == b'\\' {
+                    out.push(b'\'');
+                    i += 1;
+                    while i < b.len() && b[i] != b'\'' {
+                        out.push(b' ');
+                        i += if b[i] == b'\\' { 2 } else { 1 };
+                        if out.len() < i {
+                            out.push(b' ');
+                        }
+                    }
+                    if i < b.len() {
+                        out.push(b'\'');
+                        i += 1;
+                    }
+                } else if i + 2 < b.len() && b[i + 2] == b'\'' {
+                    out.push(b'\'');
+                    out.push(b' ');
+                    out.push(b'\'');
+                    i += 3;
+                } else {
+                    out.push(b'\'');
+                    i += 1;
+                }
+            }
+            c => {
+                out.push(c);
+                i += 1;
+            }
+        }
+    }
+    // The byte-wise masking above only ever replaces bytes with ASCII
+    // spaces or copies them verbatim, so the result is valid UTF-8.
+    String::from_utf8(out)
+        .expect("masking copies or spaces bytes, preserving UTF-8")
+}
+
+/// Is the byte before `i` part of an identifier? (Distinguishes the
+/// raw-string prefix `r"` from an identifier ending in r, like `var"`
+/// — which cannot occur, but also `for r#keyword` paths.)
+fn prev_is_ident(b: &[u8], i: usize) -> bool {
+    i > 0 && (b[i - 1].is_ascii_alphanumeric() || b[i - 1] == b'_')
+}
+
+/// If the raw source at `from` (skipping whitespace) starts with a
+/// plain string literal, return its contents. Non-literal arguments
+/// (variables, `format!`) return `None` — the message rule only judges
+/// literals it can read.
+fn leading_string_literal(src: &str, from: usize) -> Option<String> {
+    let b = src.as_bytes();
+    let mut i = from;
+    while i < b.len() && (b[i] as char).is_whitespace() {
+        i += 1;
+    }
+    if i >= b.len() || b[i] != b'"' {
+        return None;
+    }
+    i += 1;
+    let mut out = String::new();
+    while i < b.len() {
+        match b[i] {
+            b'\\' if i + 1 < b.len() => {
+                out.push(b[i + 1] as char);
+                i += 2;
+            }
+            b'"' => return Some(out),
+            c => {
+                out.push(c as char);
+                i += 1;
+            }
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masking_erases_comments_and_strings() {
+        let src = "let a = \".unwrap()\"; // .unwrap()\nb.unwrap();";
+        let m = mask_code(src);
+        assert_eq!(find_all(&m, ".unwrap(").len(), 1);
+        assert_eq!(m.matches('\n').count(), 1);
+        assert_eq!(m.len(), src.len());
+    }
+
+    #[test]
+    fn masking_handles_raw_strings_and_chars() {
+        let src = "let s = r#\"x.unwrap()\"#; let c = '\\n'; let l: \
+                   &'static str = \"ok\"; y.unwrap();";
+        let m = mask_code(src);
+        assert_eq!(find_all(&m, ".unwrap(").len(), 1);
+    }
+
+    #[test]
+    fn cfg_test_items_are_exempt() {
+        let src = "fn a() { b.unwrap(); }\n#[cfg(test)]\nmod tests {\n\
+                   fn t() { c.unwrap(); }\n}\n";
+        let m = mask_code(src);
+        let ranges = cfg_test_ranges(&m);
+        assert_eq!(ranges.len(), 1);
+        let offs = find_all(&m, ".unwrap(");
+        assert_eq!(offs.len(), 2);
+        let in_tests = |o: usize| {
+            ranges.iter().any(|&(x, y)| o >= x && o < y)
+        };
+        assert!(!in_tests(offs[0]));
+        assert!(in_tests(offs[1]));
+    }
+
+    #[test]
+    fn expect_literal_extraction() {
+        let src = ".expect(\n    \"a meaningful invariant\",\n)";
+        let m = mask_code(src);
+        let off = find_all(&m, ".expect(")[0];
+        let lit = leading_string_literal(src, off + ".expect(".len());
+        assert_eq!(lit.as_deref(), Some("a meaningful invariant"));
+        assert!(leading_string_literal("  format!(\"x\")", 0).is_none());
+    }
+
+    #[test]
+    fn short_expect_and_unwrap_flagged() {
+        let f = lint_file(
+            Path::new("x/src/mempool/mod.rs"),
+            "fn f() { a.unwrap(); b.expect(\"oops\"); \
+             c.expect(\"a long enough invariant\"); }",
+        );
+        let rules: Vec<_> = f.iter().map(|v| v.rule).collect();
+        assert_eq!(rules, vec!["no-unwrap", "expect-message"]);
+    }
+
+    #[test]
+    fn wall_clock_rule_respects_exemptions() {
+        let hit = lint_file(
+            Path::new("x/src/sim/engine.rs"),
+            "fn f() { let t = Instant::now(); }",
+        );
+        assert_eq!(hit.len(), 1);
+        assert_eq!(hit[0].rule, "no-wall-clock");
+        let ok = lint_file(
+            Path::new("x/src/bench/timing.rs"),
+            "fn f() { let t = Instant::now(); }",
+        );
+        assert!(ok.is_empty());
+    }
+
+    #[test]
+    fn serve_lock_rule_honors_markers() {
+        let src = "// valet-lint: allow-lock-begin\nfn lock_slow() { \
+                   m.lock(); }\n// valet-lint: allow-lock-end\nfn bad() \
+                   { m.lock(); }\n";
+        let f = lint_file(Path::new("x/src/serve/mod.rs"), src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "serve-lock");
+        assert_eq!(f[0].line, 4);
+    }
+}

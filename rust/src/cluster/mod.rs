@@ -12,6 +12,7 @@
 use std::collections::VecDeque;
 
 use crate::arbiter::{TenantGroup, TenantId, TenantSpec};
+use crate::audit::{self, Law, Violation};
 use crate::backends::{
     self, Access, ClusterState, PagingBackend, PressureOutcome,
 };
@@ -81,6 +82,64 @@ impl PressureLog {
     /// The most recent episode, if any.
     pub fn last(&self) -> Option<&PressureEntry> {
         self.entries.back()
+    }
+
+    /// Audit the ring's conservation laws
+    /// ([`crate::audit::Law::PressureLogBounds`]): never over capacity,
+    /// episode times non-decreasing (events apply in time order), and
+    /// entries are only dropped once the ring is full — `dropped > 0`
+    /// with a slack ring means episodes were lost for no reason.
+    pub fn audit_check(&self) -> Vec<Violation> {
+        let mut out = Vec::new();
+        let snap = || {
+            format!(
+                "len={} cap={} dropped={}",
+                self.entries.len(),
+                self.cap,
+                self.dropped
+            )
+        };
+        audit::check(
+            &mut out,
+            self.entries.len() <= self.cap,
+            Law::PressureLogBounds,
+            None,
+            || {
+                format!(
+                    "ring holds {} entries over its cap {}",
+                    self.entries.len(),
+                    self.cap
+                )
+            },
+            snap,
+        );
+        audit::check(
+            &mut out,
+            self.dropped == 0 || self.entries.len() >= self.cap,
+            Law::PressureLogBounds,
+            None,
+            || {
+                format!(
+                    "{} episodes dropped while the ring has slack",
+                    self.dropped
+                )
+            },
+            snap,
+        );
+        let ordered = self
+            .entries
+            .iter()
+            .zip(self.entries.iter().skip(1))
+            .all(|(a, b)| a.0 <= b.0);
+        audit::check(
+            &mut out,
+            ordered,
+            Law::PressureLogBounds,
+            None,
+            || "episode times are not non-decreasing".to_string(),
+            snap,
+        );
+        out
     }
 }
 
@@ -223,6 +282,9 @@ fn apply_events<T: EventTarget + ?Sized>(
         // every event moves some monitor: fold the new occupancy into
         // the per-peer pressure EWMA the placement layer reads
         state.refresh_pressure();
+    }
+    if audit::enabled() {
+        audit::enforce(&pressure_log.audit_check());
     }
 }
 

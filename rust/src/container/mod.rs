@@ -104,7 +104,10 @@ impl Container {
         self.limit_pages = (limit_bytes / PAGE_SIZE).max(1);
         let mut evicted = Vec::new();
         while self.resident.len() as u64 > self.limit_pages {
-            let p = self.resident.pop_lru().unwrap();
+            let p = self
+                .resident
+                .pop_lru()
+                .expect("resident set is non-empty: len() > limit >= 1");
             let dirty = self.dirty.remove(&p);
             evicted.push((p, dirty));
         }

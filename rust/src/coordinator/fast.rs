@@ -82,6 +82,15 @@ pub struct ShardFastPath {
     /// Miss-path scratch: per-page completion times from
     /// [`crate::coordinator::sender::RemoteSender::read_batch`].
     pub(crate) scratch_arrivals: Vec<(u64, Ns)>,
+    /// Virtual time of this shard's last audited slow-path crossing —
+    /// the watermark behind [`crate::audit::Law::TimeMonotonic`]. Only
+    /// advanced when [`crate::audit::enabled`].
+    pub(crate) audit_last_now: Ns,
+    /// Crossing counter driving the sampled deep sweep: cheap checks
+    /// run on every crossing, the full O(slots) fast-path catalog every
+    /// 32nd (tests and the fuzzer call [`Self::audit_check`] directly,
+    /// so sampling never hides a violation from them).
+    pub(crate) audit_tick: u64,
 }
 
 impl ShardFastPath {
@@ -117,7 +126,60 @@ impl ShardFastPath {
             scratch_misses: Vec::new(),
             scratch_fetch: Vec::new(),
             scratch_arrivals: Vec::new(),
+            audit_last_now: 0,
+            audit_tick: 0,
         }
+    }
+
+    /// Audit this shard's fast-path laws: the mempool's own catalog
+    /// plus [`crate::audit::Law::GptCoherence`] — the GPT and the
+    /// resident slot set must be the same bijection (`gpt.len()` equals
+    /// the used-slot count and every used slot's page maps back to that
+    /// slot, which by pigeonhole pins the exact mapping).
+    pub fn audit_check(
+        &self,
+        shard: Option<usize>,
+    ) -> Vec<crate::audit::Violation> {
+        use crate::audit::{Law, Violation};
+        let mut out = self.mempool.audit_check(shard);
+        let used = self.mempool.used();
+        if self.gpt.len() as u64 != used {
+            out.push(Violation::new(
+                Law::GptCoherence,
+                shard,
+                format!(
+                    "GPT holds {} entries but {} mempool slots are resident",
+                    self.gpt.len(),
+                    used
+                ),
+                format!("capacity={}", self.mempool.capacity()),
+            ));
+        }
+        self.mempool.for_each_used(|slot, page, _| {
+            let mapped = self.gpt.get(page);
+            if mapped != Some(slot) {
+                out.push(Violation::new(
+                    Law::GptCoherence,
+                    shard,
+                    format!(
+                        "resident page {page} in slot {slot} maps to \
+                         {mapped:?} in the GPT"
+                    ),
+                    format!("gpt_len={}", self.gpt.len()),
+                ));
+            }
+        });
+        out
+    }
+
+    /// Test-only corruption hook for
+    /// [`crate::audit::Law::TimeMonotonic`]: jump the crossing
+    /// watermark past any plausible virtual time, so the next audited
+    /// crossing appears to travel backwards.
+    #[cfg(any(feature = "audit", debug_assertions))]
+    #[doc(hidden)]
+    pub fn audit_warp_clock(&mut self) {
+        self.audit_last_now = Ns::MAX;
     }
 
     /// Serve one locally-cached page: promote/score a prefetched slot

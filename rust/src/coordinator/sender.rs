@@ -29,6 +29,7 @@
 
 use std::collections::HashMap;
 
+use crate::audit::{self, Law, Violation};
 use crate::backends::{ClusterState, PressureOutcome, Unit, UnitMap};
 use crate::config::{Config, LatencyConfig, ValetConfig};
 use crate::coordinator::fast::ShardFastPath;
@@ -196,6 +197,9 @@ pub struct RemoteSender {
     /// time a concurrency slot freed) — keeps serialized mode
     /// (`max_concurrent_migrations = 1`) strictly back-to-back.
     mig_slot_free: Ns,
+    /// Audit crossings seen (drives the every-Nth thorough sweep; only
+    /// advanced when [`audit::enabled`]).
+    audit_tick: u64,
 }
 
 /// Prune the in-flight read table once it reaches this size (stale
@@ -221,6 +225,7 @@ impl RemoteSender {
             mig_stats: MigStats::default(),
             reclaim_placement: Box::new(LeastPressured::new()),
             mig_slot_free: 0,
+            audit_tick: 0,
         }
     }
 
@@ -507,7 +512,12 @@ impl RemoteSender {
         };
         let unit = self
             .units
-            .unit_of(fast.staging.peek().expect("non-empty").page);
+            .unit_of(
+                fast.staging
+                    .peek()
+                    .expect("caller checked staging is non-empty")
+                    .page,
+            );
         // §3.5 write parking: a batch whose unit is mid-migration (STOP
         // writes sent with PREPARE) moves into the migration table
         // instead of the wire, and flushes to the destination at COMMIT.
@@ -523,7 +533,10 @@ impl RemoteSender {
                 if self.units.unit_of(front.page) != unit {
                     break;
                 }
-                let ws = fast.staging.pop().expect("peeked");
+                let ws = fast
+                    .staging
+                    .pop()
+                    .expect("peek just returned this front");
                 if self.vcfg.disk_backup {
                     for p in ws.page..ws.page + ws.pages() {
                         fast.disk_valid.set(p);
@@ -553,13 +566,16 @@ impl RemoteSender {
             {
                 break;
             }
-            let ws = fast.staging.pop().unwrap();
+            let ws = fast.staging.pop().expect("peeked front exists");
             bytes += ws.bytes;
             batch.push(ws);
         }
         // mapping (behind the mempool — charged here, on sender thread)
         let ready = self.ensure_unit(cl, t0, unit);
-        let u = self.units.get(unit).unwrap();
+        let u = self
+            .units
+            .get(unit)
+            .expect("ensure_unit mapped this unit");
         let mut t = t0.max(ready).max(u.wlocked_until);
         // mrpool get + one-sided write per replica (queue on our NIC)
         t += self.lat.mrpool_get;
@@ -617,7 +633,10 @@ impl RemoteSender {
         let copy = self.lat.copy(bytes);
         t += copy;
         fast.metrics.write_parts.add("copy", copy);
-        let u = self.units.get(unit).unwrap();
+        let u = self
+            .units
+            .get(unit)
+            .expect("ensure_unit mapped this unit");
         let nodes = u.nodes.clone();
         let mut done = t + self.lat.mrpool_get;
         for &n in &nodes {
@@ -943,6 +962,7 @@ impl RemoteSender {
     /// interleaved with write batches, so reclaim overlaps demand
     /// traffic instead of blocking it. No-op when the table is empty.
     pub fn advance_migrations(&mut self, cl: &mut ClusterState, now: Ns) {
+        let mut stepped = false;
         while let Some((t, i, activation)) = self.next_migration_action() {
             if t > now {
                 break;
@@ -952,6 +972,17 @@ impl RemoteSender {
             } else {
                 self.step_migration(cl, i);
             }
+            stepped = true;
+        }
+        // Migration-milestone audit: every activation/phase/commit that
+        // just fired re-proves the table's conservation laws. The
+        // replica sweep over the whole unit map piggybacks on every
+        // 64th crossing (see `audit_check`). Compiled away in release
+        // builds without the `audit` feature.
+        if audit::enabled() && (stepped || !self.migs.is_empty()) {
+            self.audit_tick = self.audit_tick.wrapping_add(1);
+            let thorough = self.audit_tick % 64 == 0;
+            audit::enforce(&self.audit_check(cl, thorough));
         }
     }
 
@@ -1133,5 +1164,297 @@ impl RemoteSender {
             done,
             parked_flushed,
         });
+    }
+
+    // -- the invariant auditor ----------------------------------------
+
+    /// Audit the slow path's conservation laws; returns every violation
+    /// found (empty = clean). Always checks the migration table
+    /// ([`Law::MigrationLegality`], [`Law::MigratingNotReselected`],
+    /// [`Law::ParkedFlushOnce`]); with `thorough` it also re-validates
+    /// every live unit's replica set against
+    /// [`choose_replicas`] ([`Law::ReplicaDistinct`]) — the sweep the
+    /// crossing hooks sample and the fuzzer/tests run in full.
+    pub fn audit_check(
+        &self,
+        cl: &ClusterState,
+        thorough: bool,
+    ) -> Vec<Violation> {
+        let mut out = Vec::new();
+
+        // -- migration-legality: table states imply their fields and
+        // the milestone clocks are ordered.
+        for (i, m) in self.migs.iter().enumerate() {
+            let snap = || {
+                format!(
+                    "unit={} src={} state={:?} scheduled={} activated={} \
+                     park_from={} copy_start={} copy_end={} phase_done={}",
+                    m.unit,
+                    m.src,
+                    m.sm.state(),
+                    m.scheduled,
+                    m.activated,
+                    m.park_from,
+                    m.copy_start,
+                    m.copy_end,
+                    m.phase_done,
+                )
+            };
+            let dup = self.migs[i + 1..].iter().any(|o| o.unit == m.unit);
+            audit::check(
+                &mut out,
+                !dup,
+                Law::MigrationLegality,
+                None,
+                || format!("unit {} has two live migration entries", m.unit),
+                snap,
+            );
+            audit::check(
+                &mut out,
+                !matches!(m.sm.state(), MigState::Idle | MigState::Done),
+                Law::MigrationLegality,
+                None,
+                || {
+                    format!(
+                        "table entry for unit {} is in terminal/idle state",
+                        m.unit
+                    )
+                },
+                snap,
+            );
+            if m.is_active() {
+                audit::check(
+                    &mut out,
+                    m.dst.is_some(),
+                    Law::MigrationLegality,
+                    None,
+                    || {
+                        format!(
+                            "active migration of unit {} has no destination",
+                            m.unit
+                        )
+                    },
+                    snap,
+                );
+                audit::check(
+                    &mut out,
+                    m.scheduled <= m.activated && m.activated <= m.park_from,
+                    Law::MigrationLegality,
+                    None,
+                    || {
+                        format!(
+                            "milestones out of order for unit {} \
+                             (scheduled ≤ activated ≤ park_from)",
+                            m.unit
+                        )
+                    },
+                    snap,
+                );
+            }
+            if matches!(
+                m.sm.state(),
+                MigState::Copying | MigState::Committing
+            ) {
+                audit::check(
+                    &mut out,
+                    m.dst_block.is_some(),
+                    Law::MigrationLegality,
+                    None,
+                    || {
+                        format!(
+                            "copying/committing unit {} never registered \
+                             its destination block",
+                            m.unit
+                        )
+                    },
+                    snap,
+                );
+                audit::check(
+                    &mut out,
+                    m.park_from <= m.copy_start
+                        && m.copy_start <= m.copy_end,
+                    Law::MigrationLegality,
+                    None,
+                    || {
+                        format!(
+                            "copy milestones out of order for unit {} \
+                             (park_from ≤ copy_start ≤ copy_end)",
+                            m.unit
+                        )
+                    },
+                    snap,
+                );
+            }
+        }
+
+        // -- migrating-not-reselected: every `Migrating` block on every
+        // peer is the source of exactly one live table entry (and a
+        // table entry whose source block is still registered must have
+        // marked it).
+        for (node, pool) in cl.mrpools.iter().enumerate() {
+            for b in pool.blocks() {
+                if b.state != MrState::Migrating {
+                    continue;
+                }
+                let refs = self
+                    .migs
+                    .iter()
+                    .filter(|m| m.src == node && m.src_block == b.id)
+                    .count();
+                // A tenant-tagged sender audits only its own blocks:
+                // another tenant's migrations live in another sender.
+                if self.owner_tag.is_some_and(|tag| tag != b.owner) {
+                    continue;
+                }
+                audit::check(
+                    &mut out,
+                    refs == 1,
+                    Law::MigratingNotReselected,
+                    None,
+                    || {
+                        format!(
+                            "block {} on node {node} is Migrating but has \
+                             {refs} owning migration entries",
+                            b.id
+                        )
+                    },
+                    || format!("table_len={}", self.migs.len()),
+                );
+            }
+        }
+
+        // -- parked-flush-once: every set that ever parked is either
+        // still parked or was flushed — never both, never neither.
+        let parked_now: u64 =
+            self.migs.iter().map(|m| m.parked.len() as u64).sum();
+        audit::check(
+            &mut out,
+            self.mig_stats.parked_sets
+                == self.mig_stats.flushed_sets + parked_now,
+            Law::ParkedFlushOnce,
+            None,
+            || {
+                format!(
+                    "parked {} != flushed {} + in-table {}",
+                    self.mig_stats.parked_sets,
+                    self.mig_stats.flushed_sets,
+                    parked_now
+                )
+            },
+            || format!("{:?}", self.mig_stats),
+        );
+
+        // -- replica-distinct (thorough sweep): the §5.1 chooser is the
+        // oracle — re-deriving the replica list from itself must be a
+        // fixed point (distinct nodes, sender excluded, primary first).
+        if thorough {
+            for (id, u) in self.units.iter() {
+                if !u.alive || u.nodes.is_empty() {
+                    continue;
+                }
+                let snap = || {
+                    format!(
+                        "unit={id} nodes={:?} blocks={:?} alive={}",
+                        u.nodes, u.blocks, u.alive
+                    )
+                };
+                audit::check(
+                    &mut out,
+                    u.nodes.len() == u.blocks.len(),
+                    Law::ReplicaDistinct,
+                    None,
+                    || {
+                        format!(
+                            "unit {id} has {} replica nodes but {} blocks",
+                            u.nodes.len(),
+                            u.blocks.len()
+                        )
+                    },
+                    snap,
+                );
+                let rederived = choose_replicas(
+                    cl.sender,
+                    u.nodes[0],
+                    &u.nodes,
+                    u.nodes.len(),
+                );
+                audit::check(
+                    &mut out,
+                    rederived == u.nodes,
+                    Law::ReplicaDistinct,
+                    None,
+                    || {
+                        format!(
+                            "unit {id} replica set {:?} is not a \
+                             choose_replicas fixed point ({rederived:?})",
+                            u.nodes
+                        )
+                    },
+                    snap,
+                );
+            }
+        }
+        out
+    }
+
+    /// Test-only corruption hook for [`Law::ReplicaDistinct`]:
+    /// duplicate a replica slot on the first live unit. Returns false
+    /// when no unit exists to corrupt.
+    #[cfg(any(feature = "audit", debug_assertions))]
+    #[doc(hidden)]
+    pub fn audit_corrupt_replicas(&mut self) -> bool {
+        for (_, u) in self.units.iter_mut() {
+            if !u.alive || u.nodes.is_empty() {
+                continue;
+            }
+            let n = u.nodes[0];
+            let b = u.blocks[0];
+            if u.nodes.len() >= 2 {
+                u.nodes[1] = n;
+                u.blocks[1] = b;
+            } else {
+                u.nodes.push(n);
+                u.blocks.push(b);
+            }
+            return true;
+        }
+        false
+    }
+
+    /// Test-only corruption hook for [`Law::MigrationLegality`]: inject
+    /// a fabricated table entry in an active state with no destination.
+    #[cfg(any(feature = "audit", debug_assertions))]
+    #[doc(hidden)]
+    pub fn audit_inject_bogus_migration(&mut self, unit: u64) {
+        let mut sm = MigrationSm::new();
+        sm.on_event(MigEvent::PressureReport { block: 0, src: 1 })
+            .expect("fresh machine accepts a pressure report");
+        sm.on_event(MigEvent::DestChosen { dst: 2 })
+            .expect("choosing-dest accepts a destination");
+        self.migs.push(ActiveMigration {
+            sm,
+            unit,
+            src: 1,
+            src_block: 0,
+            block_bytes: 0,
+            scheduled: 10,
+            dst: None, // the corruption: active yet destination-less
+            dst_block: None,
+            activated: 5, // and activated before it was scheduled
+            park_from: 1,
+            copy_start: 0,
+            copy_end: 0,
+            phase_done: 0,
+            parked: Vec::new(),
+            parked_bytes: 0,
+        });
+    }
+
+    /// Test-only corruption hook for [`Law::ParkedFlushOnce`]: claim a
+    /// parked set that never existed.
+    #[cfg(any(feature = "audit", debug_assertions))]
+    #[doc(hidden)]
+    pub fn audit_corrupt_parked_stats(&mut self) {
+        self.mig_stats.parked_sets += 1;
     }
 }

@@ -53,6 +53,7 @@
 //! budget.
 
 use crate::arbiter::{share_of, split_pages};
+use crate::audit::{self, Law, Violation};
 use crate::backends::{Access, ClusterState, PressureOutcome, Source};
 use crate::config::Config;
 use crate::coordinator::fast::ShardFastPath;
@@ -132,6 +133,42 @@ pub fn flush_activity(
             }
         }
     }
+    if audit::enabled() {
+        fast.audit_tick = fast.audit_tick.wrapping_add(1);
+        if fast.audit_tick % 32 == 0 {
+            audit::enforce(&fast.audit_check(None));
+        }
+    }
+}
+
+/// One slow-path crossing's audit: crossing-clock monotonicity on every
+/// call ([`Law::TimeMonotonic`] — a shard's slow-path crossings may
+/// never travel backwards in virtual time, or activity stamps and
+/// staging starts would reorder) plus a sampled deep sweep of the
+/// shard's fast-path catalog (every 32nd crossing; O(slots) each, so
+/// per-crossing it would make debug tests quadratic). Advances the
+/// shard's watermark. A no-op unless auditing is enabled.
+pub fn audit_crossing(fast: &mut ShardFastPath, shard: usize, now: Ns) {
+    if !audit::enabled() {
+        return;
+    }
+    fast.audit_tick = fast.audit_tick.wrapping_add(1);
+    let mut v = if fast.audit_tick % 32 == 0 {
+        fast.audit_check(Some(shard))
+    } else {
+        Vec::new()
+    };
+    let watermark = fast.audit_last_now;
+    audit::check(
+        &mut v,
+        now >= watermark,
+        Law::TimeMonotonic,
+        Some(shard),
+        || format!("crossing at t={now} behind watermark {watermark}"),
+        || format!("now={now} watermark={watermark}"),
+    );
+    fast.audit_last_now = watermark.max(now);
+    audit::enforce(&v);
 }
 
 /// Drive the shared sender for one shard: apply completions, advance
@@ -161,6 +198,7 @@ pub fn drive_shard(
         // keep the two pipelines interleaved on the same timeline
         sender.advance_migrations(cl, now);
     }
+    audit_crossing(fast, shard, now);
 }
 
 /// Block until at least one of this shard's mempool slots can be
@@ -352,7 +390,10 @@ pub fn shard_read_miss(
         .map(|u| u.alive && fast.remote_ready.get(page))
         .unwrap_or(false);
     if remote_ok {
-        let u = sender.units().get(unit_id).unwrap();
+        let u = sender
+            .units()
+            .get(unit_id)
+            .expect("remote_ok was derived from this same unit lookup");
         let primary = u.nodes[0];
         let primary_block = u.blocks[0];
         let ready_at = u.ready_at;
@@ -1133,6 +1174,67 @@ impl ShardedEngine {
         &self,
     ) -> &[crate::coordinator::sender::MigrationRecord] {
         self.sender.migration_records()
+    }
+
+    // -- the invariant auditor ----------------------------------------
+
+    /// Whole-engine audit sweep: every shard's fast-path laws, the
+    /// shared sender's migration/replica laws (thorough mode), clock
+    /// monotonicity against `now`, and the engine-level
+    /// [`Law::LeaseSplit`] — with a finite arbiter lease, the per-shard
+    /// mempool leases must sum exactly to the engine's lease total
+    /// ([`split_pages`] conservation). The `u64::MAX` sentinel
+    /// (unleased) is unconstrained: [`Self::from_parts`] legitimately
+    /// resets the total while shards keep their last split.
+    pub fn audit_check(
+        &self,
+        cl: &ClusterState,
+        now: Ns,
+    ) -> Vec<Violation> {
+        let mut out = Vec::new();
+        for (i, fast) in self.shards.iter().enumerate() {
+            out.extend(fast.audit_check(Some(i)));
+            let watermark = fast.audit_last_now;
+            audit::check(
+                &mut out,
+                now >= watermark,
+                Law::TimeMonotonic,
+                Some(i),
+                || format!("sweep at t={now} behind watermark {watermark}"),
+                || format!("now={now} watermark={watermark}"),
+            );
+        }
+        out.extend(self.sender.audit_check(cl, true));
+        if self.lease_total != u64::MAX {
+            let sum = self
+                .shards
+                .iter()
+                .map(|s| s.mempool.lease())
+                .try_fold(0u64, u64::checked_add);
+            audit::check(
+                &mut out,
+                sum == Some(self.lease_total),
+                Law::LeaseSplit,
+                None,
+                || {
+                    format!(
+                        "shard leases sum to {sum:?}, engine lease total \
+                         is {}",
+                        self.lease_total
+                    )
+                },
+                || {
+                    format!(
+                        "per-shard leases: {:?}",
+                        self.shards
+                            .iter()
+                            .map(|s| s.mempool.lease())
+                            .collect::<Vec<_>>()
+                    )
+                },
+            );
+        }
+        out
     }
 }
 

@@ -114,7 +114,7 @@ impl VictimPolicy for BatchedQueryRandom {
             .iter()
             .map(|&i| active[i])
             .max_by_key(|b| (b.non_activity_duration(now), b.id))
-            .unwrap();
+            .expect("k >= 1: the active list was checked non-empty");
         Some(VictimChoice {
             block: best.id,
             selection_cost: self.query_rtt * k as Ns,

@@ -29,6 +29,7 @@
 //! | [`coordinator`] | unified Figure-6 orchestration, layered into a shard-local fast path and a shared remote-sender slow path (§3.4–§3.5) |
 //! | [`engine`] | sharded request engine: S fast paths behind one sender, stripe-interleaved page space (§4.1 parallel reads) |
 //! | [`arbiter`] | multi-tenant host memory arbitration: weighted leases over the shared host pool, demand-driven grow, pressure-driven give-back (§3, Fig. 5) |
+//! | [`audit`] | whole-system invariant auditor: conservation-law catalog, structured [`audit::Violation`] reports, crossing-time enforcement (active under `--features audit` / debug builds, compiled away otherwise) |
 //! | [`sim`] | virtual clock, FIFO resource servers, event queue |
 //! | [`simnet`] | RDMA fabric model: connections, MRs, verbs, WQE cache |
 //! | [`simdisk`] | disk latency model |
@@ -53,6 +54,7 @@
 #![warn(missing_docs)]
 
 pub mod arbiter;
+pub mod audit;
 pub mod backends;
 pub mod bench;
 pub mod cluster;

@@ -15,6 +15,7 @@
 //! Reclaim order is LRU ("For replacement policy, we use LRU in our
 //! prototype").
 
+use crate::audit::{self, Law, Violation};
 use crate::config::Replacement;
 use crate::util::Lru;
 
@@ -109,6 +110,12 @@ pub struct Mempool {
     pub prefetch_evicted: u64,
     /// Replacement policy for the reclaim list.
     replacement: Replacement,
+    /// First cap breach observed at a grow site, if any:
+    /// `(effective_cap at grow time, capacity grown to)`. Sticky — set
+    /// once, reported by [`Self::audit_check`]
+    /// ([`Law::MempoolCapGrowth`]). Only written when
+    /// [`audit::enabled`].
+    cap_breach: Option<(u64, u64)>,
 }
 
 impl Mempool {
@@ -140,6 +147,7 @@ impl Mempool {
             donations: 0,
             prefetch_evicted: 0,
             replacement: Replacement::Lru,
+            cap_breach: None,
         }
     }
 
@@ -242,6 +250,7 @@ impl Mempool {
             // grow by 25% of current size, clamped to the cap
             let step = (self.capacity / 4).max(64);
             self.grow_to((self.capacity + step).min(cap));
+            self.note_grow_within(cap);
             grew = true;
         }
         if let Some(slot) = self.free.pop() {
@@ -461,7 +470,10 @@ impl Mempool {
             return 0;
         }
         for _ in 0..can {
-            let s = self.free.pop().unwrap();
+            let s = self
+                .free
+                .pop()
+                .expect("shrink: `can` is bounded by the free-list length");
             // tombstone: the id leaves the pool with its page of
             // capacity, and is reusable on a later grow
             self.retired.push(s);
@@ -520,6 +532,272 @@ impl Mempool {
     /// Number of reclaimable slots waiting in the LRU.
     pub fn reclaimable_count(&self) -> usize {
         self.reclaim_lru.len()
+    }
+
+    /// Visit every used slot as `f(slot, page, flags)`, in slot-id
+    /// order. Diagnostic/audit helper — the GPT-coherence law walks
+    /// this to prove the resident set and the page table agree.
+    pub fn for_each_used(&self, mut f: impl FnMut(u32, u64, SlotFlags)) {
+        for (i, s) in self.slots.iter().enumerate() {
+            if let Slot::Used { page, flags } = s {
+                f(i as u32, *page, *flags);
+            }
+        }
+    }
+
+    /// Record a cap breach if the grow that just ran landed above the
+    /// effective cap in force at grow time. The real grow path clamps
+    /// to the cap, so this fires only if that clamp ever regresses (or
+    /// through the test-only [`Self::audit_force_grow`] hook).
+    fn note_grow_within(&mut self, cap: u64) {
+        if audit::enabled()
+            && self.capacity > cap
+            && self.cap_breach.is_none()
+        {
+            self.cap_breach = Some((cap, self.capacity));
+        }
+    }
+
+    /// Audit this pool's conservation laws; returns every violation
+    /// found (empty = clean). Covers [`Law::MempoolAccounting`],
+    /// [`Law::MempoolCapGrowth`], [`Law::MempoolQueueCoherence`] and
+    /// [`Law::PrefetchIsolation`]. Pure reader — shared by the
+    /// crossing-time enforcement in the engine and by the negative
+    /// tests, which observe instead of panicking.
+    pub fn audit_check(&self, shard: Option<usize>) -> Vec<Violation> {
+        let mut out = Vec::new();
+        let snapshot = || {
+            format!(
+                "capacity={} slots={} free={} retired={} reclaim_lru={} \
+                 prefetch_q={} min={} max={} lease={}",
+                self.capacity,
+                self.slots.len(),
+                self.free.len(),
+                self.retired.len(),
+                self.reclaim_lru.len(),
+                self.prefetch_q.len(),
+                self.min_pages,
+                self.max_pages,
+                self.lease,
+            )
+        };
+
+        // -- mempool-accounting: the slot id space partitions exactly
+        // into used ∪ free ∪ retired, and capacity tracks it.
+        let used_count = self
+            .slots
+            .iter()
+            .filter(|s| matches!(s, Slot::Used { .. }))
+            .count() as u64;
+        let acct = |out: &mut Vec<Violation>, ok: bool, detail: String| {
+            audit::check(
+                out,
+                ok,
+                Law::MempoolAccounting,
+                shard,
+                move || detail,
+                snapshot,
+            );
+        };
+        acct(
+            &mut out,
+            self.capacity as usize + self.retired.len() == self.slots.len(),
+            format!(
+                "capacity {} + retired {} != slot array {}",
+                self.capacity,
+                self.retired.len(),
+                self.slots.len()
+            ),
+        );
+        acct(
+            &mut out,
+            used_count + self.free.len() as u64 == self.capacity,
+            format!(
+                "used {} + free {} != capacity {}",
+                used_count,
+                self.free.len(),
+                self.capacity
+            ),
+        );
+        acct(
+            &mut out,
+            self.min_pages <= self.capacity && self.capacity <= self.max_pages,
+            format!(
+                "capacity {} outside [{}, {}]",
+                self.capacity, self.min_pages, self.max_pages
+            ),
+        );
+        let mut seen = vec![false; self.slots.len()];
+        for (kind, list) in [("free", &self.free), ("retired", &self.retired)]
+        {
+            for &id in list {
+                let i = id as usize;
+                if i >= self.slots.len() {
+                    acct(
+                        &mut out,
+                        false,
+                        format!("{kind} list holds out-of-range slot {id}"),
+                    );
+                    continue;
+                }
+                acct(
+                    &mut out,
+                    !seen[i],
+                    format!("slot {id} appears twice across free/retired"),
+                );
+                seen[i] = true;
+                acct(
+                    &mut out,
+                    matches!(self.slots[i], Slot::Free),
+                    format!("{kind} list holds used slot {id}"),
+                );
+            }
+        }
+
+        // -- mempool-cap-growth: a grow site exceeded the effective cap.
+        if let Some((cap, grew_to)) = self.cap_breach {
+            out.push(Violation::new(
+                Law::MempoolCapGrowth,
+                shard,
+                format!("pool grew to {grew_to} pages past effective cap {cap}"),
+                snapshot(),
+            ));
+        }
+
+        // -- mempool-queue-coherence + prefetch-isolation: the recycle
+        // queues and the per-slot flags describe the same sets, and a
+        // speculative slot is always displaceable.
+        let mut reclaim_flagged = 0usize;
+        let mut prefetch_flagged = 0usize;
+        for (i, s) in self.slots.iter().enumerate() {
+            let Slot::Used { flags, page } = s else { continue };
+            let slot = i as u32;
+            if flags.prefetched {
+                prefetch_flagged += 1;
+                audit::check(
+                    &mut out,
+                    self.prefetch_q.contains(&slot),
+                    Law::MempoolQueueCoherence,
+                    shard,
+                    || {
+                        format!(
+                            "prefetched slot {slot} (page {page}) missing \
+                             from the prefetch queue"
+                        )
+                    },
+                    snapshot,
+                );
+                audit::check(
+                    &mut out,
+                    flags.reclaimable,
+                    Law::PrefetchIsolation,
+                    shard,
+                    || {
+                        format!(
+                            "prefetched slot {slot} (page {page}) is not \
+                             reclaimable: speculation would pin out demand \
+                             data"
+                        )
+                    },
+                    snapshot,
+                );
+            } else if flags.reclaimable {
+                reclaim_flagged += 1;
+                audit::check(
+                    &mut out,
+                    self.reclaim_lru.contains(&slot),
+                    Law::MempoolQueueCoherence,
+                    shard,
+                    || {
+                        format!(
+                            "reclaimable slot {slot} (page {page}) missing \
+                             from the reclaim LRU"
+                        )
+                    },
+                    snapshot,
+                );
+            }
+        }
+        audit::check(
+            &mut out,
+            reclaim_flagged == self.reclaim_lru.len(),
+            Law::MempoolQueueCoherence,
+            shard,
+            || {
+                format!(
+                    "reclaim LRU holds {} entries but {} slots are flagged \
+                     reclaimable",
+                    self.reclaim_lru.len(),
+                    reclaim_flagged
+                )
+            },
+            snapshot,
+        );
+        audit::check(
+            &mut out,
+            prefetch_flagged == self.prefetch_q.len(),
+            Law::MempoolQueueCoherence,
+            shard,
+            || {
+                format!(
+                    "prefetch queue holds {} entries but {} slots are \
+                     flagged prefetched",
+                    self.prefetch_q.len(),
+                    prefetch_flagged
+                )
+            },
+            snapshot,
+        );
+        out
+    }
+
+    /// Test-only corruption hook for [`Law::MempoolCapGrowth`]: grow
+    /// unconditionally past the effective-cap clamp, recording the
+    /// breach exactly the way the real grow path would.
+    #[cfg(any(feature = "audit", debug_assertions))]
+    #[doc(hidden)]
+    pub fn audit_force_grow(&mut self, extra: u64, host_free_pages: u64) {
+        let cap = self.effective_cap(host_free_pages);
+        self.grow_to(self.capacity + extra.max(1));
+        self.note_grow_within(cap);
+    }
+
+    /// Test-only corruption hook for [`Law::MempoolAccounting`]:
+    /// duplicate a free-list entry, breaking the used∪free∪retired
+    /// partition.
+    #[cfg(any(feature = "audit", debug_assertions))]
+    #[doc(hidden)]
+    pub fn audit_corrupt_free_list(&mut self) {
+        if let Some(&s) = self.free.last() {
+            self.free.push(s);
+        }
+    }
+
+    /// Test-only corruption hook for [`Law::MempoolQueueCoherence`]:
+    /// drop a prefetched slot from the prefetch queue while leaving its
+    /// `prefetched` flag set. Returns false if there was nothing to
+    /// corrupt.
+    #[cfg(any(feature = "audit", debug_assertions))]
+    #[doc(hidden)]
+    pub fn audit_desync_prefetch_queue(&mut self) -> bool {
+        self.prefetch_q.pop_lru().is_some()
+    }
+
+    /// Test-only corruption hook for [`Law::PrefetchIsolation`]: strip
+    /// the `reclaimable` flag off a prefetched slot, leaving pinned
+    /// speculation. Returns false if no prefetched slot exists.
+    #[cfg(any(feature = "audit", debug_assertions))]
+    #[doc(hidden)]
+    pub fn audit_pin_prefetched(&mut self) -> bool {
+        for s in &mut self.slots {
+            if let Slot::Used { flags, .. } = s {
+                if flags.prefetched {
+                    flags.reclaimable = false;
+                    return true;
+                }
+            }
+        }
+        false
     }
 }
 

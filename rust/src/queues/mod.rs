@@ -90,7 +90,7 @@ impl StagingQueue {
                 break;
             }
             total += front.bytes;
-            out.push(self.pop().unwrap());
+            out.push(self.pop().expect("front() just returned Some"));
         }
         out
     }

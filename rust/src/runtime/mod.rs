@@ -246,7 +246,9 @@ impl Runtime {
                 continue;
             }
             let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().unwrap(),
+                path.to_str().expect(
+                    "artifact paths are ASCII spec names under `dir`",
+                ),
             )
             .map_err(RuntimeError::msg)
             .map_err(|e| e.context(format!("parsing {}", path.display())))?;

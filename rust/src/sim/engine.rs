@@ -66,7 +66,10 @@ impl<E> EventQueue<E> {
     pub fn pop_due(&mut self, now: Ns) -> Option<(Ns, E)> {
         match self.peek_time() {
             Some(t) if t <= now => {
-                let Reverse((t, _, EventBox(e))) = self.heap.pop().unwrap();
+                let Reverse((t, _, EventBox(e))) = self
+                    .heap
+                    .pop()
+                    .expect("peek_time just saw a queued event");
                 Some((t, e))
             }
             _ => None,

@@ -152,7 +152,9 @@ impl KvSession {
         let mut issued = 0u64;
         let mut finished_at = t0;
         while issued < ops {
-            let Reverse((t_cl, client)) = heap.pop().expect("clients");
+            let Reverse((t_cl, client)) = heap
+                .pop()
+                .expect("one heap entry per client, clients >= 1");
             cluster.advance(t_cl);
             let op = gen.next_op();
             let mut rng_scratch = crate::util::Rng::new(rc.seed ^ issued);

@@ -1,0 +1,339 @@
+//! Negative tests for the whole-system invariant auditor: every law in
+//! the [`valet::audit::Law`] catalog must FIRE when its subsystem's
+//! state is corrupted through the test-only hooks — a law without a
+//! firing test is a law that may silently never run.
+//!
+//! Each test builds a healthy populated system, asserts the auditor is
+//! clean, applies one targeted corruption, and asserts the *right* law
+//! (and only by name — details are free text) reports it. Two
+//! `should_panic` tests additionally pin that the enforcement wiring
+//! (slow-path crossings, cluster-event application) actually panics —
+//! the observing `audit_check` calls used everywhere else never do.
+
+#![cfg(any(feature = "audit", debug_assertions))]
+
+use valet::arbiter::{HostArbiter, TenantSpec};
+use valet::audit::{Law, Violation};
+use valet::backends::PressureOutcome;
+use valet::cluster::{PressureLog, ShardedCluster};
+use valet::config::Config;
+use valet::sim::{secs, Ns};
+use valet::PAGE_SIZE;
+
+/// 64 block-IO-sized writes (1024 pages) over a 128-page pool: most of
+/// the working set drains remote, units map, the reclaim queues fill.
+const BLOCKS: u64 = 64;
+
+fn small_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.cluster.nodes = 5;
+    cfg.valet.mr_block_bytes = 1 << 20;
+    cfg.valet.min_pool_pages = 128;
+    cfg.valet.max_pool_pages = 128;
+    cfg
+}
+
+/// A populated sharded cluster: write the working set through the
+/// engine, then advance past the drain.
+fn populated(cfg: &Config, shards: usize) -> (ShardedCluster, Ns) {
+    let mut sc = ShardedCluster::new(cfg, shards);
+    let mut t: Ns = 0;
+    for blk in 0..BLOCKS {
+        t = sc.write(t, blk * 16, 16 * PAGE_SIZE).end;
+    }
+    t += secs(5);
+    sc.advance(t);
+    (sc, t)
+}
+
+fn names(v: &[Violation]) -> Vec<String> {
+    v.iter().map(|x| x.to_string()).collect()
+}
+
+#[track_caller]
+fn assert_fires(v: &[Violation], law: Law) {
+    assert!(
+        v.iter().any(|x| x.law == law),
+        "expected law `{law}` to fire, got: {:?}",
+        names(v)
+    );
+}
+
+#[track_caller]
+fn assert_clean(v: &[Violation]) {
+    assert!(v.is_empty(), "expected a clean audit, got: {:?}", names(v));
+}
+
+// ---------------------------------------------------------------- clean
+
+#[test]
+fn healthy_system_audits_clean() {
+    let cfg = small_cfg();
+    let (mut sc, mut t) = populated(&cfg, 2);
+    // exercise the read path and a second pump too
+    for p in 0..64u64 {
+        t = sc.read(t, p).end;
+    }
+    t += secs(1);
+    sc.advance(t);
+    assert_clean(&sc.engine.audit_check(&sc.state, t));
+    assert_clean(&sc.pressure_log.audit_check());
+}
+
+// ------------------------------------------------------------- mempool
+
+#[test]
+fn mempool_accounting_fires_on_free_list_corruption() {
+    let cfg = small_cfg();
+    let (mut sc, t) = populated(&cfg, 1);
+    assert_clean(&sc.engine.audit_check(&sc.state, t));
+    sc.engine.shard_mut(0).mempool.audit_corrupt_free_list();
+    assert_fires(
+        &sc.engine.shard(0).mempool.audit_check(Some(0)),
+        Law::MempoolAccounting,
+    );
+}
+
+#[test]
+fn mempool_cap_growth_fires_on_grow_past_cap() {
+    let cfg = small_cfg();
+    let (mut sc, _t) = populated(&cfg, 1);
+    // zero host-free pages pins the effective cap at the floor; any
+    // growth from a full pool lands above it
+    sc.engine.shard_mut(0).mempool.audit_force_grow(64, 0);
+    assert_fires(
+        &sc.engine.shard(0).mempool.audit_check(Some(0)),
+        Law::MempoolCapGrowth,
+    );
+}
+
+/// Sequential reads with the stride prefetcher on, stopped while
+/// speculative pages are still waiting to be demanded.
+fn with_prefetched_slots() -> ShardedCluster {
+    let mut cfg = small_cfg();
+    cfg.valet.prefetch = true;
+    let (mut sc, mut t) = populated(&cfg, 1);
+    for p in 0..48u64 {
+        t = sc.read(t, p).end;
+    }
+    sc.advance(t);
+    sc
+}
+
+#[test]
+fn mempool_queue_coherence_fires_on_prefetch_queue_desync() {
+    let mut sc = with_prefetched_slots();
+    assert!(
+        sc.engine.shard_mut(0).mempool.audit_desync_prefetch_queue(),
+        "setup must leave at least one prefetched slot"
+    );
+    assert_fires(
+        &sc.engine.shard(0).mempool.audit_check(Some(0)),
+        Law::MempoolQueueCoherence,
+    );
+}
+
+#[test]
+fn prefetch_isolation_fires_on_pinned_speculation() {
+    let mut sc = with_prefetched_slots();
+    assert!(
+        sc.engine.shard_mut(0).mempool.audit_pin_prefetched(),
+        "setup must leave at least one prefetched slot"
+    );
+    assert_fires(
+        &sc.engine.shard(0).mempool.audit_check(Some(0)),
+        Law::PrefetchIsolation,
+    );
+}
+
+// ------------------------------------------------------ fast path / GPT
+
+#[test]
+fn gpt_coherence_fires_on_dropped_mapping() {
+    let cfg = small_cfg();
+    let (mut sc, t) = populated(&cfg, 1);
+    assert_clean(&sc.engine.audit_check(&sc.state, t));
+    // the tail of the working set is resident; unmap one resident page
+    // behind the mempool's back
+    let page = (0..BLOCKS * 16)
+        .find(|&p| sc.engine.slot_of(p).is_some())
+        .expect("a 1024-page working set over a 128-page pool keeps \
+                 some page resident");
+    sc.engine.shard_mut(0).gpt.remove(page);
+    assert_fires(
+        &sc.engine.shard(0).audit_check(Some(0)),
+        Law::GptCoherence,
+    );
+}
+
+#[test]
+fn time_monotonic_fires_on_backwards_crossing() {
+    let cfg = small_cfg();
+    let (mut sc, t) = populated(&cfg, 1);
+    sc.engine.shard_mut(0).audit_warp_clock();
+    assert_fires(
+        &sc.engine.audit_check(&sc.state, t),
+        Law::TimeMonotonic,
+    );
+}
+
+// ------------------------------------------------------- engine / lease
+
+#[test]
+fn lease_split_fires_on_shard_desync() {
+    let cfg = small_cfg();
+    let (mut sc, t) = populated(&cfg, 2);
+    sc.engine.set_lease_pages(103);
+    assert_clean(&sc.engine.audit_check(&sc.state, t));
+    let split = sc.engine.shard(0).mempool.lease();
+    sc.engine.shard_mut(0).mempool.set_lease(split + 7);
+    assert_fires(
+        &sc.engine.audit_check(&sc.state, t),
+        Law::LeaseSplit,
+    );
+}
+
+// ------------------------------------------------------------- arbiter
+
+#[test]
+fn arbiter_ledger_fires_on_lease_below_floor() {
+    let mut arb = HostArbiter::new(1000);
+    let a = arb.register(TenantSpec {
+        weight: 1,
+        min_pages: 100,
+    });
+    arb.register(TenantSpec {
+        weight: 1,
+        min_pages: 100,
+    });
+    assert_clean(&arb.audit_check());
+    arb.audit_set_lease(a, 99);
+    assert_fires(&arb.audit_check(), Law::ArbiterLedger);
+}
+
+#[test]
+fn arbiter_ledger_fires_on_overcommitted_budget() {
+    let mut arb = HostArbiter::new(1000);
+    let a = arb.register(TenantSpec {
+        weight: 1,
+        min_pages: 100,
+    });
+    arb.register(TenantSpec {
+        weight: 1,
+        min_pages: 100,
+    });
+    assert_clean(&arb.audit_check());
+    // above the floor AND pushing the sum past the budget: not the
+    // legal all-at-floors overcommit regime
+    arb.audit_set_lease(a, 950);
+    assert_fires(&arb.audit_check(), Law::ArbiterLedger);
+}
+
+// ------------------------------------------------- sender / migrations
+
+#[test]
+fn replica_distinct_fires_on_duplicated_replica() {
+    let cfg = small_cfg();
+    let (mut sc, t) = populated(&cfg, 1);
+    assert_clean(&sc.engine.audit_check(&sc.state, t));
+    assert!(
+        sc.engine.sender_mut().audit_corrupt_replicas(),
+        "populated engine must have a live unit"
+    );
+    assert_fires(
+        &sc.engine.sender().audit_check(&sc.state, true),
+        Law::ReplicaDistinct,
+    );
+}
+
+#[test]
+fn migration_legality_fires_on_bogus_table_entry() {
+    let cfg = small_cfg();
+    let (mut sc, t) = populated(&cfg, 1);
+    assert_clean(&sc.engine.audit_check(&sc.state, t));
+    sc.engine.sender_mut().audit_inject_bogus_migration(0);
+    assert_fires(
+        &sc.engine.sender().audit_check(&sc.state, false),
+        Law::MigrationLegality,
+    );
+}
+
+#[test]
+fn migrating_not_reselected_fires_on_orphaned_migrating_block() {
+    let cfg = small_cfg();
+    let (mut sc, t) = populated(&cfg, 1);
+    assert_clean(&sc.engine.audit_check(&sc.state, t));
+    // flip a peer block to Migrating with no live table entry owning it
+    let sender = sc.state.sender;
+    let (node, block) = (0..sc.state.mrpools.len())
+        .filter(|&n| n != sender)
+        .find_map(|n| {
+            sc.state.mrpools[n].blocks().first().map(|b| (n, b.id))
+        })
+        .expect("populated engine registered MR blocks on peers");
+    sc.state.mrpools[node]
+        .get_mut(block)
+        .expect("block id was just read from this pool")
+        .state = valet::mrpool::MrState::Migrating;
+    assert_fires(
+        &sc.engine.sender().audit_check(&sc.state, false),
+        Law::MigratingNotReselected,
+    );
+}
+
+#[test]
+fn parked_flush_once_fires_on_phantom_parked_set() {
+    let cfg = small_cfg();
+    let (mut sc, t) = populated(&cfg, 1);
+    assert_clean(&sc.engine.audit_check(&sc.state, t));
+    sc.engine.sender_mut().audit_corrupt_parked_stats();
+    assert_fires(
+        &sc.engine.sender().audit_check(&sc.state, false),
+        Law::ParkedFlushOnce,
+    );
+}
+
+// -------------------------------------------------------- pressure log
+
+#[test]
+fn pressure_log_bounds_fires_on_time_disorder() {
+    let mut log = PressureLog::new(16);
+    log.push((100, 1, PressureOutcome::default()));
+    log.push((50, 2, PressureOutcome::default()));
+    assert_fires(&log.audit_check(), Law::PressureLogBounds);
+}
+
+#[test]
+fn pressure_log_bounds_fires_on_drops_with_slack() {
+    let mut log = PressureLog::new(16);
+    log.push((100, 1, PressureOutcome::default()));
+    log.dropped = 3;
+    assert_fires(&log.audit_check(), Law::PressureLogBounds);
+}
+
+// -------------------------------------------------- enforcement wiring
+
+/// The slow-path crossings must actually ENFORCE (panic), not just
+/// observe: corrupt a mempool and keep pumping until the sampled deep
+/// sweep (every 32nd crossing) reaches it.
+#[test]
+#[should_panic(expected = "invariant audit failed")]
+fn crossings_enforce_the_catalog() {
+    let cfg = small_cfg();
+    let (mut sc, mut t) = populated(&cfg, 1);
+    sc.engine.shard_mut(0).mempool.audit_corrupt_free_list();
+    for _ in 0..40 {
+        t += 1_000_000;
+        sc.engine.pump(&mut sc.state, t);
+    }
+}
+
+/// Cluster-event application must enforce the pressure-log laws.
+#[test]
+#[should_panic(expected = "invariant audit failed")]
+fn event_application_enforces_pressure_log() {
+    let cfg = small_cfg();
+    let (mut sc, t) = populated(&cfg, 1);
+    sc.pressure_log.dropped = 5;
+    sc.advance(t + secs(1));
+}
