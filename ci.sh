@@ -34,6 +34,11 @@ echo "== invariant audit + schedule fuzzer =="
 # seeded schedule interleavings with the whole-law catalog as oracle.
 # `--features audit` also proves the feature-gated cfg paths compile.
 VALET_FUZZ_ITERS=1000 cargo test -q --features audit
+# lane-pinned fuzz pass: force 4 sender lanes into every schedule so
+# cross-lane interleavings (and the lane-sequencer law) get dense
+# coverage regardless of the per-seed lane draw
+VALET_FUZZ_ITERS=200 VALET_FUZZ_LANES=4 \
+    cargo test -q --features audit --test schedule_fuzz
 
 echo "== benches compile =="
 # compile-gate the harness=false bench binaries so experiment/bench code
@@ -64,6 +69,8 @@ if [ "$FAST" -eq 0 ]; then
     grep -q '"metric":"activity_vs_query_speedup"' target/bench-smoke.json
     grep -q '"metric":"overlap_ratio"' target/bench-smoke.json
     grep -q '"metric":"no_pressure_regression_pct"' target/bench-smoke.json
+    # the scaling experiment's sender-lane axis (virtual-time rows)
+    grep -q '"metric":"lane_speedup"' target/bench-smoke.json
     # numeric gate (python3 is present on the CI image): sequential
     # reads must get FASTER with the pipeline on, the random mix must
     # stay within noise of the demand-only baseline, and the reclaim
@@ -90,6 +97,11 @@ assert abs(rk["no_pressure_regression_pct"]) < 5.0, \
 print(f"reclaim pipeline: activity x{rk['activity_vs_query_speedup']:.2f} "
       f"vs query-random, overlap {rk['overlap_ratio']:.2f}, "
       f"pressure tax {rk['no_pressure_regression_pct']:+.2f}%")
+sk = {r["metric"]: r["value"] for r in recs if r["id"] == "scaling"}
+assert sk["lane_speedup"] >= 1.5, \
+    f"per-peer lanes must beat the single sender timeline: {sk['lane_speedup']}"
+print(f"sender lanes: submission drain x{sk['lane_speedup']:.2f} "
+      f"({sk['lane1_ops_per_sec']:.0f} -> {sk['lane4_ops_per_sec']:.0f} ops/s)")
 EOF
     fi
     echo "wrote target/bench-smoke.json"

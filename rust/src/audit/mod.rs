@@ -40,6 +40,7 @@
 //! | [`Law::TimeMonotonic`] | virtual time never runs backwards |
 //! | [`Law::PressureLogBounds`] | pressure ring bounded, time-ordered |
 //! | [`Law::GptCoherence`] | GPT entries ⟷ resident mempool slots |
+//! | [`Law::LaneSequencer`] | cross-lane COMMIT ledger conserved |
 
 use std::fmt;
 
@@ -106,6 +107,12 @@ pub enum Law {
     /// GPT ⟷ mempool bijection per shard: `gpt.len()` equals the used
     /// slot count and every used slot's page maps back to that slot.
     GptCoherence,
+    /// The cross-lane sequencer's COMMIT ledger is conserved: tickets
+    /// issued == migrations completed == records pushed. Lanes retire
+    /// their machines independently; this three-way equality proves no
+    /// COMMIT bypassed the sequencer or was double-counted by two
+    /// lanes.
+    LaneSequencer,
 }
 
 impl Law {
@@ -125,6 +132,7 @@ impl Law {
             Law::TimeMonotonic => "time-monotonic",
             Law::PressureLogBounds => "pressure-log-bounds",
             Law::GptCoherence => "gpt-coherence",
+            Law::LaneSequencer => "lane-sequencer",
         }
     }
 }

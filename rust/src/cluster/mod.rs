@@ -244,6 +244,15 @@ impl EventTarget for ShardedEngine {
 /// by every assembly: native allocations raise remote pressure when they
 /// squeeze a peer's MR pool, native frees relax it, and sender host-free
 /// changes update the sender's monitor before reaching the target.
+///
+/// Ordering contract with the sender-lane split: cluster events are
+/// applied in one global timestamp order, *never* per-lane — a pressure
+/// episode on peer A may enqueue migrations whose destination choice
+/// depends on state a prior event changed on peer B, so event
+/// application is sequencer work (one of the three cross-peer
+/// operations, with migration COMMIT and replica remap; see
+/// `coordinator/sender/seq.rs`). Lanes only ever observe the cluster
+/// through the sequencer-ordered state this loop leaves behind.
 fn apply_events<T: EventTarget + ?Sized>(
     state: &mut ClusterState,
     events: &mut EventQueue<ClusterEvent>,

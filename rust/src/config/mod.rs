@@ -215,6 +215,12 @@ pub struct ValetConfig {
     /// EWMA weight for the per-peer pressure score the placement layer
     /// reads (0 = frozen, 1 = instantaneous).
     pub pressure_ewma: f64,
+    /// Sender lanes the slow path is partitioned into (each lane owns
+    /// one peer set's timeline, batcher, read table and migration
+    /// machines). `0` = one lane per remote peer; `1` (the default) =
+    /// the single pre-split sender timeline — the differential-test
+    /// oracle configuration; capped at 64.
+    pub sender_lanes: usize,
 }
 
 impl Default for ValetConfig {
@@ -238,6 +244,7 @@ impl Default for ValetConfig {
             prefetch_min_samples: 32,
             max_concurrent_migrations: 4,
             pressure_ewma: 0.3,
+            sender_lanes: 1,
         }
     }
 }
@@ -335,6 +342,10 @@ impl Config {
                 "pressure_ewma" => {
                     self.valet.pressure_ewma =
                         v.as_f64().ok_or_else(err)?
+                }
+                "sender_lanes" => {
+                    self.valet.sender_lanes =
+                        v.as_u64().ok_or_else(err)? as usize
                 }
                 _ => return Err(err()),
             },

@@ -1,0 +1,200 @@
+//! One **sender lane**: the per-remote-peer slice of the slow path.
+//!
+//! Each lane owns exactly the state whose ordering is per-peer in the
+//! real system — the peer's sender-thread timeline (its QP's submission
+//! clock), the in-flight RDMA batches posted on it, the in-flight read
+//! table for pages resident on the peer, and the migration machines
+//! whose *source* block lives there. Everything whose ordering is
+//! genuinely cross-peer (unit map, placement, commit ledger, per-shard
+//! completion mailboxes) lives in the [`super::seq::Sequencer`]
+//! instead; the [`super::RemoteSender`] facade routes between them.
+//!
+//! A lane never looks at another lane: all cross-lane iteration (global
+//! migration scheduling, diagnostics sums) happens in the facade, which
+//! is what keeps "one peer ↔ one timeline" an enforceable ownership
+//! boundary rather than a convention.
+
+use std::collections::HashMap;
+
+use crate::backends::{ClusterState, UnitMap};
+use crate::migration::{MigState, MigrationSm};
+use crate::mrpool::MrBlockId;
+use crate::queues::WriteSet;
+use crate::sim::{Ns, Server};
+use crate::NodeId;
+
+/// One coalesced RDMA message in flight on a lane: completion time, the
+/// shard its write sets belong to, and the sets themselves.
+#[derive(Clone, Debug)]
+pub(crate) struct Inflight {
+    pub(crate) done: Ns,
+    pub(crate) shard: usize,
+    pub(crate) sets: Vec<WriteSet>,
+}
+
+/// One live migration in a lane's migration table: a [`MigrationSm`]
+/// plus the virtual-time milestones of the phase it is currently in.
+/// The machine lives in the lane of its *source* peer (write batches
+/// route by primary, so parking finds it without a cross-lane search),
+/// but activation order, the concurrency cap and the commit ledger stay
+/// global in the sequencer — `seq` is the global submission stamp that
+/// keeps cross-lane scheduling identical to the pre-split single table.
+pub(crate) struct ActiveMigration {
+    /// The Figure-14 protocol machine.
+    pub(crate) sm: MigrationSm,
+    /// Address-space unit whose replica slot is moving.
+    pub(crate) unit: u64,
+    /// Node losing the block.
+    pub(crate) src: NodeId,
+    /// Victim MR block on `src`.
+    pub(crate) src_block: MrBlockId,
+    /// Block size (bytes copied, bytes reclaimed).
+    pub(crate) block_bytes: u64,
+    /// Victim selected / machine enqueued at this time.
+    pub(crate) scheduled: Ns,
+    /// Destination, chosen at activation (pressure-aware placement).
+    pub(crate) dst: Option<NodeId>,
+    /// Fresh MR block on `dst`, registered when the copy starts.
+    pub(crate) dst_block: Option<MrBlockId>,
+    /// Left the queue (got a concurrency slot) at this time.
+    pub(crate) activated: Ns,
+    /// Writes park from here (candidate queries done, PREPARE sent).
+    pub(crate) park_from: Ns,
+    /// Bulk copy src→dst milestones.
+    pub(crate) copy_start: Ns,
+    pub(crate) copy_end: Ns,
+    /// Current phase's work completes at this time.
+    pub(crate) phase_done: Ns,
+    /// Write sets parked while the block migrates, with their owning
+    /// shard; flushed to the destination at COMMIT.
+    pub(crate) parked: Vec<(usize, WriteSet)>,
+    /// Total bytes parked (sizing the flush message).
+    pub(crate) parked_bytes: u64,
+    /// Global submission stamp (sequencer-issued, monotone): the
+    /// cross-lane activation and stepping order.
+    pub(crate) seq: u64,
+}
+
+impl ActiveMigration {
+    /// Holds a concurrency slot: the machine left `ChoosingDest` (its
+    /// destination is chosen, PREPARE is out). Derived from the state
+    /// machine so it can never drift from the protocol.
+    pub(crate) fn is_active(&self) -> bool {
+        self.sm.state() != MigState::ChoosingDest
+    }
+}
+
+/// Prune a lane's in-flight read table once it reaches this size (stale
+/// entries — completions in the past — are dropped; live ones kept).
+const INFLIGHT_READS_PRUNE: usize = 4096;
+
+/// Per-peer lane state (see the module docs for the ownership split).
+pub(crate) struct SenderLane {
+    /// This peer's sender-timeline clock (one batch in service at a
+    /// time; batches pipeline on the NIC beneath it). Lanes advance
+    /// independently — the single-channel serialization the pre-split
+    /// sender imposed across peers is gone by construction.
+    pub(crate) thread: Server,
+    /// In-flight coalesced RDMA batches posted on this lane.
+    pub(crate) inflight: Vec<Inflight>,
+    /// In-flight remote reads on this peer, page → completion time: a
+    /// miss that overlaps an outstanding fetch of the same page *in
+    /// virtual time* piggybacks on it (miss coalescing) instead of
+    /// posting a duplicate RDMA READ, and a readahead proposal covering
+    /// the page free-rides on it without posting any wire work.
+    /// Entries whose completion has passed are pruned lazily.
+    pub(crate) inflight_reads: HashMap<u64, Ns>,
+    /// Migration machines whose source block lives on this lane's peer.
+    pub(crate) migs: Vec<ActiveMigration>,
+}
+
+impl SenderLane {
+    /// Fresh idle lane.
+    pub(crate) fn new() -> Self {
+        SenderLane {
+            thread: Server::new(),
+            inflight: Vec::new(),
+            inflight_reads: HashMap::new(),
+            migs: Vec::new(),
+        }
+    }
+
+    /// When this lane's sender timeline is next idle.
+    pub(crate) fn busy_until(&self) -> Ns {
+        self.thread.busy_until()
+    }
+
+    /// Earliest completion among this lane's in-flight batches carrying
+    /// `shard`'s write sets.
+    pub(crate) fn inflight_min_done(&self, shard: usize) -> Option<Ns> {
+        self.inflight
+            .iter()
+            .filter(|f| f.shard == shard)
+            .map(|f| f.done)
+            .min()
+    }
+
+    /// Apply completions of this lane's in-flight batches up to `now`:
+    /// stamp activity tags on the primary blocks and move each
+    /// completed write set into its shard's sequencer mailbox (the
+    /// owning shard applies it via
+    /// [`crate::coordinator::fast::ShardFastPath::apply_durable`] when
+    /// it next drains the mailbox).
+    pub(crate) fn complete_inflight(
+        &mut self,
+        units: &UnitMap,
+        done: &mut [Vec<WriteSet>],
+        cl: &mut ClusterState,
+        now: Ns,
+    ) {
+        let mut i = 0;
+        while i < self.inflight.len() {
+            if self.inflight[i].done <= now {
+                let inflight = self.inflight.swap_remove(i);
+                for ws in inflight.sets {
+                    // stamp activity tags on the primary block
+                    let unit = units.unit_of(ws.page);
+                    if let Some(u) = units.get(unit) {
+                        if let (Some(&n), Some(&b)) =
+                            (u.nodes.first(), u.blocks.first())
+                        {
+                            cl.mrpools[n].touch_write(b, inflight.done);
+                        }
+                    }
+                    done[inflight.shard].push(ws);
+                }
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// If `page` has an outstanding remote fetch on this lane
+    /// completing *after* `now`, return its completion time. An entry
+    /// whose completion has passed is pruned and `None` returned: the
+    /// fetched data was never installed locally (remote reads are
+    /// read-through), so a later miss must fetch again.
+    pub(crate) fn inflight_read_done(
+        &mut self,
+        page: u64,
+        now: Ns,
+    ) -> Option<Ns> {
+        match self.inflight_reads.get(&page) {
+            Some(&done) if done > now => Some(done),
+            Some(_) => {
+                self.inflight_reads.remove(&page);
+                None
+            }
+            None => None,
+        }
+    }
+
+    /// Record an outstanding remote read of `page` completing at
+    /// `done`, so overlapping misses on the same page can coalesce.
+    pub(crate) fn note_inflight_read(&mut self, now: Ns, page: u64, done: Ns) {
+        if self.inflight_reads.len() >= INFLIGHT_READS_PRUNE {
+            self.inflight_reads.retain(|_, d| *d > now);
+        }
+        self.inflight_reads.insert(page, done);
+    }
+}

@@ -1,230 +1,110 @@
-//! The shared **slow path**: the Remote Sender Thread (§4.1) plus every
-//! piece of state the shards share — the unit map, placement, in-flight
-//! RDMA batches, and the §3.5 eviction/migration machinery.
+//! The shared **slow path**: the Remote Sender (§4.1) partitioned into
+//! **per-remote-peer sender lanes** behind one facade, plus the thin
+//! global [`seq::Sequencer`] for the state whose ordering is genuinely
+//! cross-peer.
 //!
-//! One [`RemoteSender`] serves all shards: it drains their staging
-//! queues through the coalescing batcher one batch at a time (the single
-//! sender-thread timeline the paper describes), and hands completed
-//! write sets back through per-shard mailboxes so each shard worker can
-//! apply them to its own mempool without sharing it. Writes are thereby
-//! serialized only within a shard; the sender serializes nothing but its
-//! own CPU time.
+//! One [`RemoteSender`] serves all shards. Submissions route by the
+//! target unit's *primary peer* to that peer's [`lane::SenderLane`]:
+//! each lane owns its peer's sender-timeline clock, its in-flight
+//! coalesced batches, its in-flight read table and the migration
+//! machines sourced on its peer, so batches to different peers overlap
+//! — the mapping stall of a unit landing on peer A no longer serializes
+//! behind it every send to peers B and C, which was the pre-split
+//! single-channel bottleneck. The unit map, placement, per-shard
+//! completion mailboxes and the migration commit ledger stay in the
+//! sequencer (migration COMMIT / replica remap and cluster-event
+//! application are cross-peer by definition).
+//!
+//! With `valet.sender_lanes = 1` every peer routes to one lane and the
+//! engine reproduces the pre-split single-timeline sender **bit for
+//! bit** — that configuration is the retained test oracle the
+//! `tests/lanes.rs` differential harness pins the lane engine against
+//! (the same role [`crate::migration::simulate`] plays for the
+//! migration timeline).
 //!
 //! ## The reclaim pipeline (§3.5, pump-driven)
 //!
 //! Remote pressure no longer runs a migration start-to-finish inside the
 //! pressure event. [`RemoteSender::remote_pressure`] only *selects*
-//! victims and enqueues live [`MigrationSm`] instances into the
-//! **migration table**; [`RemoteSender::advance_migrations`] — called
+//! victims and enqueues live [`MigrationSm`] instances into the source
+//! peer's lane table; [`RemoteSender::advance_migrations`] — called
 //! from every pump tick, interleaved with write batches — walks each
 //! machine through PREPARE → copy → COMMIT at its own virtual-time
-//! milestones. Up to `valet.max_concurrent_migrations` migrations (on
-//! distinct blocks/peers) proceed concurrently; while one is in flight,
-//! reads keep hitting the source (the unit map still points there until
-//! COMMIT) and write batches targeting the migrating unit are parked in
-//! the table and flushed to the destination when COMMIT lands. Delete
-//! remains the last resort when no destination has room.
+//! milestones. Scheduling stays **global**: sequencer-issued submission
+//! stamps order activation across lanes exactly like the pre-split
+//! single table, and the concurrency cap / `mig_slot_free` clock are
+//! sequencer state. Up to `valet.max_concurrent_migrations` migrations
+//! (on distinct blocks/peers) proceed concurrently; while one is in
+//! flight, reads keep hitting the source (the unit map still points
+//! there until COMMIT) and write batches targeting the migrating unit
+//! are parked in the machine and flushed to the destination when COMMIT
+//! lands. Delete remains the last resort when no destination has room.
 //! [`crate::migration::simulate`] survives as the test oracle for the
 //! single-migration timeline (`tests/reclaim.rs`).
 
-use std::collections::HashMap;
+mod lane;
+mod seq;
+
+pub use seq::{MigStats, MigrationRecord};
 
 use crate::audit::{self, Law, Violation};
-use crate::backends::{ClusterState, PressureOutcome, Unit, UnitMap};
+use crate::backends::{ClusterState, PressureOutcome};
 use crate::config::{Config, LatencyConfig, ValetConfig};
 use crate::coordinator::fast::ShardFastPath;
-use crate::eviction::{ActivityBased, VictimPolicy};
+use crate::eviction::VictimPolicy;
 use crate::migration::{ctrl_rtt, MigAction, MigEvent, MigState, MigrationSm};
-use crate::mrpool::{MrBlockId, MrState};
-use crate::placement::{Candidate, LeastPressured, Placement, PowerOfTwo};
+use crate::placement::{Candidate, Placement};
 use crate::queues::WriteSet;
 use crate::replication::choose_replicas;
-use crate::sim::{Ns, Server};
+use crate::sim::Ns;
 use crate::{NodeId, PAGE_SIZE};
 
-/// One coalesced RDMA message in flight: completion time, the shard its
-/// write sets belong to, and the sets themselves.
-#[derive(Clone, Debug)]
-struct Inflight {
-    done: Ns,
-    shard: usize,
-    sets: Vec<WriteSet>,
-}
+use lane::{ActiveMigration, Inflight, SenderLane};
+use seq::Sequencer;
 
 /// Candidate peers the sender polls before choosing a migration
 /// destination (the power-of-two query model the old one-shot path also
 /// charged — one control RTT each, before writes park).
 const MIG_QUERIES: u32 = 2;
 
-/// One live migration in the sender's migration table: a [`MigrationSm`]
-/// plus the virtual-time milestones of the phase it is currently in.
-/// Advanced only by [`RemoteSender::advance_migrations`] (pump ticks).
-struct ActiveMigration {
-    /// The Figure-14 protocol machine.
-    sm: MigrationSm,
-    /// Address-space unit whose replica slot is moving.
-    unit: u64,
-    /// Node losing the block.
-    src: NodeId,
-    /// Victim MR block on `src`.
-    src_block: MrBlockId,
-    /// Block size (bytes copied, bytes reclaimed).
-    block_bytes: u64,
-    /// Victim selected / machine enqueued at this time.
-    scheduled: Ns,
-    /// Destination, chosen at activation (pressure-aware placement).
-    dst: Option<NodeId>,
-    /// Fresh MR block on `dst`, registered when the copy starts.
-    dst_block: Option<MrBlockId>,
-    /// Left the queue (got a concurrency slot) at this time.
-    activated: Ns,
-    /// Writes park from here (candidate queries done, PREPARE sent).
-    park_from: Ns,
-    /// Bulk copy src→dst milestones.
-    copy_start: Ns,
-    copy_end: Ns,
-    /// Current phase's work completes at this time.
-    phase_done: Ns,
-    /// Write sets parked while the block migrates, with their owning
-    /// shard; flushed to the destination at COMMIT.
-    parked: Vec<(usize, WriteSet)>,
-    /// Total bytes parked (sizing the flush message).
-    parked_bytes: u64,
-}
+/// Lane-count ceiling (the drive loops track seen-lanes in a u64 mask).
+const MAX_LANES: usize = 64;
 
-impl ActiveMigration {
-    /// Holds a concurrency slot: the machine left `ChoosingDest` (its
-    /// destination is chosen, PREPARE is out). Derived from the state
-    /// machine so it can never drift from the protocol.
-    fn is_active(&self) -> bool {
-        self.sm.state() != MigState::ChoosingDest
-    }
-}
+/// A migration machine's address: (lane index, index in that lane's
+/// table).
+type MigRef = (usize, usize);
 
-/// Milestones of one completed migration (diagnostics + the
-/// `tests/reclaim.rs` oracle pin against [`crate::migration::simulate`]).
-#[derive(Clone, Copy, Debug)]
-pub struct MigrationRecord {
-    /// Address-space unit that moved.
-    pub unit: u64,
-    /// Source peer.
-    pub src: NodeId,
-    /// Destination peer.
-    pub dst: NodeId,
-    /// Bytes moved.
-    pub block_bytes: u64,
-    /// Victim selected at this time.
-    pub scheduled: Ns,
-    /// Concurrency slot acquired (candidate queries start here).
-    pub activated: Ns,
-    /// Writes parked from here (Figure 12's window opens).
-    pub park_from: Ns,
-    /// Bulk copy milestones.
-    pub copy_start: Ns,
-    /// Copy finished; source memory free from here.
-    pub copy_end: Ns,
-    /// COMMIT acked; unit remapped, parked writes flushed.
-    pub done: Ns,
-    /// Write sets that parked against this migration and flushed at
-    /// COMMIT.
-    pub parked_flushed: u64,
-}
-
-/// Aggregate reclaim-pipeline counters (slow-path global — migrations
-/// belong to the shared sender, not to any one shard's `RunMetrics`).
-#[derive(Clone, Copy, Debug, Default)]
-pub struct MigStats {
-    /// Migrations enqueued by pressure episodes.
-    pub started: u64,
-    /// Migrations that reached COMMIT.
-    pub completed: u64,
-    /// Victims deleted instead (no destination with room).
-    pub deleted: u64,
-    /// Write sets parked against in-flight migrations.
-    pub parked_sets: u64,
-    /// Parked write sets flushed to their destination at COMMIT.
-    pub flushed_sets: u64,
-    /// Virtual time two migrations spent concurrently in flight, summed
-    /// pairwise — the `reclaim` experiment's overlap evidence (0 under
-    /// `max_concurrent_migrations = 1`).
-    pub overlap_ns: Ns,
-}
-
-/// The shared remote-sender slow path (see module docs).
+/// The shared remote-sender slow path (see module docs): per-peer lanes
+/// plus the global sequencer, behind the pre-split public surface.
 pub struct RemoteSender {
     lat: LatencyConfig,
     vcfg: ValetConfig,
-    /// Remote sender thread's timeline (one batch in service at a time;
-    /// batches pipeline on the NIC beneath it).
-    thread: Server,
-    units: UnitMap,
-    /// Pluggable placement hook (§4.3; power-of-two choices by default).
-    placement: Box<dyn Placement + Send>,
-    inflight: Vec<Inflight>,
-    /// Per-shard completion mailboxes: durable write sets waiting for
-    /// their owning shard to apply them (FIFO per shard).
-    done: Vec<Vec<WriteSet>>,
-    /// Pluggable eviction hook (§3.5; activity-based by default).
-    victim_policy: Box<dyn VictimPolicy + Send>,
-    /// Owner id stamped on MR registrations (multi-tenant arbitration);
-    /// `None` registers as the sender node.
-    owner_tag: Option<NodeId>,
-    /// In-flight remote reads, page → completion time: a miss that
-    /// overlaps an outstanding fetch of the same page *in virtual time*
-    /// (queue-depth > 1 block I/O, simulated multi-client runs)
-    /// piggybacks on it (miss coalescing) instead of posting a
-    /// duplicate RDMA READ, and a readahead proposal covering the page
-    /// free-rides on it without posting any wire work. Note the sharded
-    /// serve front-end routes a page to one worker whose virtual clock
-    /// advances past each completion before the next request, so
-    /// cross-request coalescing there is rare by construction — the
-    /// table's main consumers are overlapping in-flight windows and the
-    /// prefetcher. Entries whose completion has passed are pruned
-    /// lazily.
-    inflight_reads: HashMap<u64, Ns>,
-    /// The migration table: live protocol machines advanced on pump
-    /// ticks (see the module docs).
-    migs: Vec<ActiveMigration>,
-    /// Milestones of completed migrations, in completion order.
-    mig_records: Vec<MigrationRecord>,
-    /// Aggregate reclaim counters.
-    mig_stats: MigStats,
-    /// Destination policy for migrations (§3.5 "less-pressured peer");
-    /// defaults to [`LeastPressured`], separate from the unit-mapping
-    /// placement hook so swapping one never perturbs the other.
-    reclaim_placement: Box<dyn Placement + Send>,
-    /// A queued migration may activate no earlier than this (the last
-    /// time a concurrency slot freed) — keeps serialized mode
-    /// (`max_concurrent_migrations = 1`) strictly back-to-back.
-    mig_slot_free: Ns,
+    /// Per-peer sender lanes; a peer `n` routes to lane `n % lanes.len()`.
+    lanes: Vec<SenderLane>,
+    /// Cross-peer state: unit map, placement, mailboxes, commit ledger.
+    seq: Sequencer,
     /// Audit crossings seen (drives the every-Nth thorough sweep; only
     /// advanced when [`audit::enabled`]).
     audit_tick: u64,
 }
 
-/// Prune the in-flight read table once it reaches this size (stale
-/// entries — completions in the past — are dropped; live ones kept).
-const INFLIGHT_READS_PRUNE: usize = 4096;
-
 impl RemoteSender {
-    /// Build the slow path for `shards` fast paths.
+    /// Build the slow path for `shards` fast paths. Lane count comes
+    /// from `valet.sender_lanes`: `0` means one lane per peer
+    /// (`cluster.nodes - 1`); `1` is the pre-split single-timeline
+    /// oracle; any other value is used as-is (capped at 64).
     pub fn new(cfg: &Config, shards: usize) -> Self {
+        let peers = cfg.cluster.nodes.saturating_sub(1).max(1);
+        let nlanes = match cfg.valet.sender_lanes {
+            0 => peers,
+            n => n,
+        }
+        .clamp(1, MAX_LANES);
         RemoteSender {
             lat: cfg.latency.clone(),
             vcfg: cfg.valet.clone(),
-            thread: Server::new(),
-            units: UnitMap::new(cfg.valet.mr_block_bytes),
-            placement: Box::new(PowerOfTwo::new(cfg.cluster.seed)),
-            inflight: Vec::new(),
-            done: vec![Vec::new(); shards.max(1)],
-            victim_policy: Box::new(ActivityBased),
-            owner_tag: None,
-            inflight_reads: HashMap::new(),
-            migs: Vec::new(),
-            mig_records: Vec::new(),
-            mig_stats: MigStats::default(),
-            reclaim_placement: Box::new(LeastPressured::new()),
-            mig_slot_free: 0,
+            lanes: (0..nlanes).map(|_| SenderLane::new()).collect(),
+            seq: Sequencer::new(cfg, shards),
             audit_tick: 0,
         }
     }
@@ -235,26 +115,74 @@ impl RemoteSender {
     /// arbitration: victim selection under remote pressure then only
     /// ever sees this tenant's blocks).
     pub fn set_owner_tag(&mut self, owner: NodeId) {
-        self.owner_tag = Some(owner);
+        self.seq.owner_tag = Some(owner);
     }
 
     /// Swap in a different eviction policy (the §3.5 hook).
     pub fn set_victim_policy(&mut self, policy: Box<dyn VictimPolicy + Send>) {
-        self.victim_policy = policy;
+        self.seq.victim_policy = policy;
     }
 
     /// Swap in a different placement policy (the §4.3 hook).
     pub fn set_placement(&mut self, placement: Box<dyn Placement + Send>) {
-        self.placement = placement;
+        self.seq.placement = placement;
     }
 
     /// Swap in a different migration-destination policy (the §3.5
-    /// "less-pressured peer" hook; [`LeastPressured`] by default).
+    /// "less-pressured peer" hook; least-pressured by default).
     pub fn set_reclaim_placement(
         &mut self,
         placement: Box<dyn Placement + Send>,
     ) {
-        self.reclaim_placement = placement;
+        self.seq.reclaim_placement = placement;
+    }
+
+    // -- lane routing -------------------------------------------------
+
+    /// Number of sender lanes.
+    pub fn lane_count(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// When `lane`'s sender timeline is next idle — the per-lane gate
+    /// the drive loops (and the backpressure tests) read.
+    pub fn lane_busy_until(&self, lane: usize) -> Ns {
+        self.lanes[lane].busy_until()
+    }
+
+    /// The lane serving peer `node`.
+    fn lane_of(&self, node: NodeId) -> usize {
+        node % self.lanes.len()
+    }
+
+    /// The lane that will carry `page`'s unit: its primary peer's lane.
+    /// For an unmapped unit this pre-picks the primary through the
+    /// sequencer (consumed later by the mapping — see
+    /// [`seq::Sequencer::primary_for`]).
+    pub(crate) fn route_page(
+        &mut self,
+        cl: &ClusterState,
+        page: u64,
+    ) -> usize {
+        let unit = self.seq.units.unit_of(page);
+        let primary = self.seq.primary_for(cl, unit);
+        self.lane_of(primary)
+    }
+
+    /// The lane holding `page`'s unit if it is mapped and alive.
+    fn lane_for_mapped(&self, page: u64) -> Option<usize> {
+        let unit = self.seq.units.unit_of(page);
+        self.seq
+            .units
+            .get(unit)
+            .and_then(|u| {
+                if u.alive {
+                    u.nodes.first().copied()
+                } else {
+                    None
+                }
+            })
+            .map(|n| self.lane_of(n))
     }
 
     // -- diagnostics --------------------------------------------------
@@ -270,175 +198,130 @@ impl RemoteSender {
     }
 
     /// The remote address-space unit map.
-    pub fn units(&self) -> &UnitMap {
-        &self.units
+    pub fn units(&self) -> &crate::backends::UnitMap {
+        &self.seq.units
     }
 
     /// Name of the active eviction policy.
     pub fn victim_policy_name(&self) -> &'static str {
-        self.victim_policy.name()
+        self.seq.victim_policy.name()
     }
 
-    /// When the sender thread is next idle.
+    /// When the *last* lane timeline goes idle (single-lane configs:
+    /// exactly the pre-split sender-thread clock). Per-lane gating uses
+    /// [`Self::lane_busy_until`] instead.
     pub fn busy_until(&self) -> Ns {
-        self.thread.busy_until()
+        self.lanes.iter().map(SenderLane::busy_until).max().unwrap_or(0)
     }
 
-    /// Write sets carried by in-flight RDMA batches plus durable sets
-    /// not yet applied by their shard.
+    /// Write sets carried by in-flight RDMA batches (all lanes) plus
+    /// durable sets not yet applied by their shard.
     pub fn inflight_write_sets(&self) -> usize {
-        self.inflight.iter().map(|f| f.sets.len()).sum::<usize>()
-            + self.done.iter().map(|d| d.len()).sum::<usize>()
+        self.lanes
+            .iter()
+            .flat_map(|l| l.inflight.iter())
+            .map(|f| f.sets.len())
+            .sum::<usize>()
+            + self.seq.done.iter().map(|d| d.len()).sum::<usize>()
     }
 
-    /// Earliest completion among in-flight batches carrying `shard`'s
-    /// write sets.
+    /// Earliest completion among in-flight batches (any lane) carrying
+    /// `shard`'s write sets.
     pub fn inflight_min_done(&self, shard: usize) -> Option<Ns> {
-        self.inflight
+        self.lanes
             .iter()
-            .filter(|f| f.shard == shard)
-            .map(|f| f.done)
+            .filter_map(|l| l.inflight_min_done(shard))
             .min()
     }
 
-    /// Migrations currently in the table (queued + in flight).
+    /// Migrations currently in the lane tables (queued + in flight).
     pub fn migrations_inflight(&self) -> usize {
-        self.migs.len()
+        self.lanes.iter().map(|l| l.migs.len()).sum()
     }
 
     /// Aggregate reclaim-pipeline counters.
     pub fn migration_stats(&self) -> MigStats {
-        self.mig_stats
+        self.seq.mig_stats
     }
 
     /// Milestones of completed migrations, in completion order.
     pub fn migration_records(&self) -> &[MigrationRecord] {
-        &self.mig_records
+        &self.seq.mig_records
     }
 
-    // -- the sender-thread pipeline -----------------------------------
+    // -- the sender-lane pipeline -------------------------------------
 
-    /// Ensure `unit` has a remote mapping; returns when it is usable.
-    /// Charged on the *sender thread* timeline — never the request path.
-    fn ensure_unit(&mut self, cl: &mut ClusterState, now: Ns, unit: u64) -> Ns {
-        if let Some(u) = self.units.get(unit) {
-            if u.alive {
-                return u.ready_at;
-            }
-        }
-        // (Re)map: pick primary via the placement hook, then replicas.
-        let cands = cl.candidates();
-        let primary = self
-            .placement
-            .pick(&cands)
-            .expect("cluster has at least one peer");
-        let cand_nodes: Vec<NodeId> = cands.iter().map(|c| c.node).collect();
-        let nodes = choose_replicas(
-            cl.sender,
-            primary,
-            &cand_nodes,
-            self.vcfg.replicas.max(1),
-        );
-        // Connection (if new) + mapping, charged sequentially per node.
-        let mut t = now;
-        for &n in &nodes {
-            let (tc, _newc) = cl.fabric.ensure_connected(t, cl.sender, n);
-            t = cl.fabric.map_mr(tc, cl.sender);
-        }
-        let owner = self.owner_tag.unwrap_or(cl.sender);
-        let blocks = nodes
-            .iter()
-            .map(|&n| cl.mrpools[n].register(owner, self.units.unit_bytes, t))
-            .collect();
-        self.units.insert(
-            unit,
-            Unit {
-                nodes,
-                blocks,
-                ready_at: t,
-                wlocked_until: 0,
-                alive: true,
-            },
-        );
-        t
-    }
-
-    /// Apply completions of in-flight RDMA batches up to `now`: stamp
-    /// activity tags on the primary blocks and move each completed write
-    /// set into its shard's mailbox (the owning shard applies it via
-    /// [`ShardFastPath::apply_durable`] when it next drains the mailbox).
+    /// Apply completions of in-flight RDMA batches up to `now` on every
+    /// lane (lane order; write sets land in the sequencer's per-shard
+    /// mailboxes and are applied by [`ShardFastPath::apply_durable`]).
     pub fn complete_inflight(&mut self, cl: &mut ClusterState, now: Ns) {
-        let mut i = 0;
-        while i < self.inflight.len() {
-            if self.inflight[i].done <= now {
-                let inflight = self.inflight.swap_remove(i);
-                for ws in inflight.sets {
-                    // stamp activity tags on the primary block
-                    let unit = self.units.unit_of(ws.page);
-                    if let Some(u) = self.units.get(unit) {
-                        if let (Some(&n), Some(&b)) =
-                            (u.nodes.first(), u.blocks.first())
-                        {
-                            cl.mrpools[n].touch_write(b, inflight.done);
-                        }
-                    }
-                    self.done[inflight.shard].push(ws);
-                }
-            } else {
-                i += 1;
-            }
+        let seq = &mut self.seq;
+        for lane in &mut self.lanes {
+            lane.complete_inflight(&seq.units, &mut seq.done, cl, now);
         }
+    }
+
+    /// Apply one lane's in-flight completions up to `now` — the
+    /// serve-driver entry point that ticks lanes independently under
+    /// short sequencer-lock holds.
+    pub(crate) fn tick_lane(
+        &mut self,
+        cl: &mut ClusterState,
+        now: Ns,
+        lane: usize,
+    ) {
+        let seq = &mut self.seq;
+        self.lanes[lane].complete_inflight(&seq.units, &mut seq.done, cl, now);
     }
 
     /// Drain `shard`'s completion mailbox (FIFO).
     pub fn take_done(&mut self, shard: usize) -> Vec<WriteSet> {
-        std::mem::take(&mut self.done[shard])
+        std::mem::take(&mut self.seq.done[shard])
     }
 
     // -- the read-side pipeline ---------------------------------------
 
     /// If `page` has an outstanding remote fetch completing *after*
-    /// `now`, return its completion time — the caller piggybacks on it
-    /// (miss coalescing) instead of posting a duplicate READ. An entry
-    /// whose completion has passed is pruned and `None` returned: the
-    /// fetched data was never installed locally (remote reads are
-    /// read-through), so a later miss must fetch again.
+    /// `now` on any lane, return its completion time — the caller
+    /// piggybacks on it (miss coalescing) instead of posting a
+    /// duplicate READ. A stale entry (completion passed) is pruned and
+    /// `None` returned: the fetched data was never installed locally
+    /// (remote reads are read-through), so a later miss must fetch
+    /// again.
     pub fn inflight_read_done(&mut self, page: u64, now: Ns) -> Option<Ns> {
-        match self.inflight_reads.get(&page) {
-            Some(&done) if done > now => Some(done),
-            Some(_) => {
-                self.inflight_reads.remove(&page);
-                None
+        for lane in &mut self.lanes {
+            if let Some(done) = lane.inflight_read_done(page, now) {
+                return Some(done);
             }
-            None => None,
         }
+        None
     }
 
     /// Record an outstanding remote read of `page` completing at
-    /// `done`, so overlapping misses on the same page can coalesce.
+    /// `done`, so overlapping misses on the same page can coalesce. The
+    /// entry lands in the lane of the page's current primary (lane 0
+    /// for pages whose unit died between fetch and note).
     pub fn note_inflight_read(&mut self, now: Ns, page: u64, done: Ns) {
-        if self.inflight_reads.len() >= INFLIGHT_READS_PRUNE {
-            self.inflight_reads.retain(|_, d| *d > now);
-        }
-        self.inflight_reads.insert(page, done);
+        let lane = self.lane_for_mapped(page).unwrap_or(0);
+        self.lanes[lane].note_inflight_read(now, page, done);
     }
 
-    /// Outstanding remote reads tracked for coalescing (diagnostics;
-    /// includes entries not yet lazily pruned).
+    /// Outstanding remote reads tracked for coalescing across all lanes
+    /// (diagnostics; includes entries not yet lazily pruned).
     pub fn inflight_read_count(&self) -> usize {
-        self.inflight_reads.len()
+        self.lanes.iter().map(|l| l.inflight_reads.len()).sum()
     }
 
     /// Batched remote read: fetch `pages` (grouped into runs that share
     /// an address-space unit) with **one** RDMA READ per unit — one
     /// base round trip plus per-page wire time, mirroring the write
-    /// side's coalescing batcher — and register every page in the
-    /// in-flight read table. `out` is filled (cleared first) with each
-    /// page's completion time, in input order; a page whose unit is
-    /// unmapped or dead completes "immediately" at `t0` (the caller
-    /// filters those up front — this keeps the batch robust). Returns
-    /// the completion time of the slowest run, `t0` when `pages` is
-    /// empty.
+    /// side's coalescing batcher — and register every page in its
+    /// lane's in-flight read table. `out` is filled (cleared first)
+    /// with each page's completion time, in input order; a page whose
+    /// unit is unmapped or dead completes "immediately" at `t0` (the
+    /// caller filters those up front — this keeps the batch robust).
+    /// Returns the completion time of the slowest run, `t0` when
+    /// `pages` is empty.
     ///
     /// Callers decide what the batch means: the demand block-read path
     /// (`demand = true`) waits on the result and stamps the primary
@@ -461,13 +344,14 @@ impl RemoteSender {
         let mut i = 0;
         while i < pages.len() {
             // one run = consecutive input pages sharing a unit
-            let unit = self.units.unit_of(pages[i]);
+            let unit = self.seq.units.unit_of(pages[i]);
             let mut j = i + 1;
-            while j < pages.len() && self.units.unit_of(pages[j]) == unit {
+            while j < pages.len() && self.seq.units.unit_of(pages[j]) == unit
+            {
                 j += 1;
             }
             let run = &pages[i..j];
-            let (primary, block, ready) = match self.units.get(unit) {
+            let (primary, block, ready) = match self.seq.units.get(unit) {
                 Some(u) if u.alive => (u.nodes[0], u.blocks[0], u.ready_at),
                 _ => {
                     for &p in run {
@@ -483,8 +367,9 @@ impl RemoteSender {
             if demand {
                 cl.mrpools[primary].touch_read(block, verb.end);
             }
+            let lane = self.lane_of(primary);
             for &p in run {
-                self.note_inflight_read(t0, p, verb.end);
+                self.lanes[lane].note_inflight_read(t0, p, verb.end);
                 out.push((p, verb.end));
             }
             slowest = slowest.max(verb.end);
@@ -493,10 +378,25 @@ impl RemoteSender {
         slowest
     }
 
-    /// Send one coalesced batch from `fast`'s staging queue at (no
-    /// earlier than) `t0`; returns its completion time. Coalescing only
-    /// merges write sets that target the same address-space unit (one
-    /// RDMA message lands in one MR block).
+    /// The migration machine `unit`'s writes park against, if any (at
+    /// most one live machine per unit — an audited law).
+    fn find_parking_target(&self, unit: u64) -> Option<MigRef> {
+        for (li, lane) in self.lanes.iter().enumerate() {
+            if let Some(mi) = lane
+                .migs
+                .iter()
+                .position(|m| m.unit == unit && m.sm.writes_parked())
+            {
+                return Some((li, mi));
+            }
+        }
+        None
+    }
+
+    /// Send one coalesced batch from the front of `fast`'s staging
+    /// queue at (no earlier than) `t0`; returns its completion time.
+    /// Kept as the front-only wrapper over [`Self::send_batch_at`] —
+    /// with one lane it IS the pre-split send path.
     pub fn send_one_batch(
         &mut self,
         cl: &mut ClusterState,
@@ -504,46 +404,58 @@ impl RemoteSender {
         shard: usize,
         fast: &mut ShardFastPath,
     ) -> Ns {
-        debug_assert!(!fast.staging.is_empty());
+        self.send_batch_at(cl, t0, shard, fast, 0)
+    }
+
+    /// Send one coalesced batch starting from staging index `idx` at
+    /// (no earlier than) `t0`; returns its completion time. Coalescing
+    /// only merges consecutive write sets (from `idx` on) that target
+    /// the same address-space unit (one RDMA message lands in one MR
+    /// block), so per-lane FIFO is preserved: the drive loops always
+    /// pass each lane's *earliest* queued set. The timeline charge and
+    /// the in-flight entry land on the unit's primary-peer lane.
+    pub(crate) fn send_batch_at(
+        &mut self,
+        cl: &mut ClusterState,
+        t0: Ns,
+        shard: usize,
+        fast: &mut ShardFastPath,
+        idx: usize,
+    ) -> Ns {
+        debug_assert!(idx < fast.staging.len());
         let max = if self.vcfg.coalescing {
             self.vcfg.rdma_msg_bytes
         } else {
             1 // force single write set per message
         };
-        let unit = self
-            .units
-            .unit_of(
-                fast.staging
-                    .peek()
-                    .expect("caller checked staging is non-empty")
-                    .page,
-            );
+        let unit = self.seq.units.unit_of(
+            fast.staging
+                .get(idx)
+                .expect("caller bounds-checked the staging index")
+                .page,
+        );
         // §3.5 write parking: a batch whose unit is mid-migration (STOP
-        // writes sent with PREPARE) moves into the migration table
+        // writes sent with PREPARE) moves into the migration machine
         // instead of the wire, and flushes to the destination at COMMIT.
-        // Costs queue movement only — no sender-thread time, no verb.
-        if let Some(mig_idx) = self
-            .migs
-            .iter()
-            .position(|m| m.unit == unit && m.sm.writes_parked())
-        {
+        // Costs queue movement only — no lane-timeline time, no verb.
+        if let Some((pl, pm)) = self.find_parking_target(unit) {
             let mut parked = 0u64;
             let mut parked_bytes = 0u64;
-            while let Some(front) = fast.staging.peek() {
-                if self.units.unit_of(front.page) != unit {
+            while let Some(next) = fast.staging.get(idx) {
+                if self.seq.units.unit_of(next.page) != unit {
                     break;
                 }
                 let ws = fast
                     .staging
-                    .pop()
-                    .expect("peek just returned this front");
+                    .remove(idx)
+                    .expect("get just returned this entry");
                 if self.vcfg.disk_backup {
                     for p in ws.page..ws.page + ws.pages() {
                         fast.disk_valid.set(p);
                     }
                 }
                 parked_bytes += ws.bytes;
-                let m = &mut self.migs[mig_idx];
+                let m = &mut self.lanes[pl].migs[pm];
                 m.parked_bytes += ws.bytes;
                 m.parked.push((shard, ws));
                 parked += 1;
@@ -555,24 +467,30 @@ impl RemoteSender {
                 cl.disks[cl.sender].write_async(t0, parked_bytes);
                 fast.metrics.disk_writes += 1;
             }
-            self.mig_stats.parked_sets += parked;
+            self.seq.mig_stats.parked_sets += parked;
             return t0;
         }
         let mut batch = Vec::new();
         let mut bytes = 0u64;
-        while let Some(front) = fast.staging.peek() {
-            let same_unit = self.units.unit_of(front.page) == unit;
-            if !batch.is_empty() && (bytes + front.bytes > max || !same_unit)
+        while let Some(next) = fast.staging.get(idx) {
+            let same_unit = self.seq.units.unit_of(next.page) == unit;
+            if !batch.is_empty() && (bytes + next.bytes > max || !same_unit)
             {
                 break;
             }
-            let ws = fast.staging.pop().expect("peeked front exists");
+            let ws = fast
+                .staging
+                .remove(idx)
+                .expect("get just returned this entry");
             bytes += ws.bytes;
             batch.push(ws);
         }
-        // mapping (behind the mempool — charged here, on sender thread)
-        let ready = self.ensure_unit(cl, t0, unit);
+        // mapping (behind the mempool — charged here, on the lane)
+        let ready =
+            self.seq
+                .ensure_unit(cl, t0, unit, self.vcfg.replicas.max(1));
         let u = self
+            .seq
             .units
             .get(unit)
             .expect("ensure_unit mapped this unit");
@@ -595,14 +513,16 @@ impl RemoteSender {
             }
             fast.metrics.disk_writes += 1;
         }
-        // The sender thread is busy only for its CPU work (mapping waits
-        // + mrpool get + posting the WQE, ~300 ns); the verb completes
-        // asynchronously on the NIC (tracked via `inflight`), so many
-        // messages pipeline — and un-coalesced small messages flood the
-        // WQE cache, which is exactly the §3.3 argument for batching.
+        // The lane's timeline is busy only for its CPU work (mapping
+        // waits + mrpool get + posting the WQE, ~300 ns); the verb
+        // completes asynchronously on the NIC (tracked via the lane's
+        // `inflight`), so many messages pipeline — and un-coalesced
+        // small messages flood the WQE cache, which is exactly the §3.3
+        // argument for batching.
+        let lane = self.lane_of(nodes[0]);
         let post_done = t + 300;
-        self.thread.serve(t0, post_done.saturating_sub(t0));
-        self.inflight.push(Inflight {
+        self.lanes[lane].thread.serve(t0, post_done.saturating_sub(t0));
+        self.lanes[lane].inflight.push(Inflight {
             done,
             shard,
             sets: batch,
@@ -624,8 +544,10 @@ impl RemoteSender {
         use crate::backends::{Access, Source};
         let mut t = now + self.lat.radix_insert;
         fast.metrics.write_parts.add("radix", self.lat.radix_insert);
-        let unit = self.units.unit_of(page);
-        let ready = self.ensure_unit(cl, t, unit);
+        let unit = self.seq.units.unit_of(page);
+        let ready =
+            self.seq
+                .ensure_unit(cl, t, unit, self.vcfg.replicas.max(1));
         if ready > t {
             fast.metrics.write_parts.add("mapping", ready - t);
             t = ready;
@@ -634,6 +556,7 @@ impl RemoteSender {
         t += copy;
         fast.metrics.write_parts.add("copy", copy);
         let u = self
+            .seq
             .units
             .get(unit)
             .expect("ensure_unit mapped this unit");
@@ -658,8 +581,8 @@ impl RemoteSender {
 
     /// A peer needs `bytes` of its donated memory back: select victims
     /// via the pluggable policy and **enqueue** one live [`MigrationSm`]
-    /// per victim into the migration table — the pump drives the
-    /// protocol from here ([`Self::advance_migrations`]); this call
+    /// per victim into the source peer's lane table — the pump drives
+    /// the protocol from here ([`Self::advance_migrations`]); this call
     /// never blocks on wire time. Delete stays the synchronous last
     /// resort when no destination has room. The returned outcome counts
     /// bytes *committed to reclaim* (blocks are victim-marked
@@ -687,8 +610,9 @@ impl RemoteSender {
         // second pressure wave arriving mid-copy would select surplus
         // victims for memory that is already on its way out).
         let pending: u64 = self
-            .migs
+            .lanes
             .iter()
+            .flat_map(|l| l.migs.iter())
             .filter(|m| {
                 m.src == node
                     && matches!(
@@ -709,12 +633,14 @@ impl RemoteSender {
             // only among its own blocks. Blocks already migrating are
             // never re-selected (their MrState filters them out).
             let choice = {
-                let selected = match self.owner_tag {
+                let selected = match self.seq.owner_tag {
                     Some(tag) => {
                         let view = cl.mrpools[node].owned_by(tag);
-                        self.victim_policy.select(&view, t)
+                        self.seq.victim_policy.select(&view, t)
                     }
-                    None => self.victim_policy.select(&cl.mrpools[node], t),
+                    None => {
+                        self.seq.victim_policy.select(&cl.mrpools[node], t)
+                    }
                 };
                 match selected {
                     Some(c) => c,
@@ -725,16 +651,18 @@ impl RemoteSender {
             let block_bytes = cl.mrpools[node]
                 .get(choice.block)
                 .map(|b| b.bytes)
-                .unwrap_or(self.units.unit_bytes);
-            let unit_id = self.units.unit_of_block(node, choice.block);
+                .unwrap_or(self.seq.units.unit_bytes);
+            let unit_id = self.seq.units.unit_of_block(node, choice.block);
             let has_dst = unit_id
                 .map(|u| self.has_reclaim_candidate(cl, u, node, block_bytes))
                 .unwrap_or(false);
             match unit_id {
                 Some(unit_id) if has_dst => {
-                    // Enqueue a live protocol machine; destination
-                    // choice (pressure-aware) happens at activation,
-                    // when the migration takes a concurrency slot.
+                    // Enqueue a live protocol machine into the source
+                    // peer's lane, stamped with the global submission
+                    // sequence; destination choice (pressure-aware)
+                    // happens at activation, when the migration takes a
+                    // concurrency slot.
                     let mut sm = MigrationSm::new();
                     sm.on_event(MigEvent::PressureReport {
                         block: choice.block,
@@ -743,9 +671,11 @@ impl RemoteSender {
                     .expect("fresh machine accepts a pressure report");
                     if let Some(b) = cl.mrpools[node].get_mut(choice.block)
                     {
-                        b.state = MrState::Migrating;
+                        b.state = crate::mrpool::MrState::Migrating;
                     }
-                    self.migs.push(ActiveMigration {
+                    let stamp = self.seq.next_mig_seq();
+                    let lane = self.lane_of(node);
+                    self.lanes[lane].migs.push(ActiveMigration {
                         sm,
                         unit: unit_id,
                         src: node,
@@ -761,8 +691,9 @@ impl RemoteSender {
                         phase_done: 0,
                         parked: Vec::new(),
                         parked_bytes: 0,
+                        seq: stamp,
                     });
-                    self.mig_stats.started += 1;
+                    self.seq.mig_stats.started += 1;
                     out.migrated += 1;
                     out.reclaimed_bytes += block_bytes;
                     out.done_at = out.done_at.max(t);
@@ -770,7 +701,7 @@ impl RemoteSender {
                 _ => {
                     // No destination with room (or untracked block):
                     // last resort — delete like the baselines would.
-                    self.delete_victim(cl, node, choice.block, unit_id);
+                    self.seq.delete_victim(cl, node, choice.block, unit_id);
                     out.deleted += 1;
                     out.reclaimed_bytes += block_bytes;
                     out.done_at = out.done_at.max(t);
@@ -780,44 +711,13 @@ impl RemoteSender {
         out
     }
 
-    /// The delete last-resort (§3.5 "delete like the baselines"):
-    /// release the victim block and drop its replica slot from the unit
-    /// map. Surviving replicas keep serving reads (Table 3: replica
-    /// first); only when the last copy is gone does the unit die and
-    /// reads fall through to the disk backup (or are lost).
-    fn delete_victim(
-        &mut self,
-        cl: &mut ClusterState,
-        node: NodeId,
-        block: MrBlockId,
-        unit_id: Option<u64>,
-    ) {
-        cl.mrpools[node].release(block);
-        if let Some(uid) = unit_id {
-            if let Some(u) = self.units.get_mut(uid) {
-                if let Some(pos) = u
-                    .nodes
-                    .iter()
-                    .zip(u.blocks.iter())
-                    .position(|(&n, &b)| n == node && b == block)
-                {
-                    u.nodes.remove(pos);
-                    u.blocks.remove(pos);
-                }
-                if u.nodes.is_empty() {
-                    u.alive = false;
-                }
-            }
-        }
-        self.mig_stats.deleted += 1;
-    }
-
     /// Bytes other pending migrations have promised to `node` (their MR
     /// blocks register only when their copy starts, so raw free bytes
     /// would over-commit a popular peer).
     fn reserved_on(&self, node: NodeId) -> u64 {
-        self.migs
+        self.lanes
             .iter()
+            .flat_map(|l| l.migs.iter())
             .filter(|m| m.dst == Some(node) && m.dst_block.is_none())
             .map(|m| m.block_bytes)
             .sum()
@@ -840,15 +740,17 @@ impl RemoteSender {
         c.node != src
             && !holders.contains(&c.node)
             && !self
-                .migs
+                .lanes
                 .iter()
+                .flat_map(|l| l.migs.iter())
                 .any(|m| m.unit == unit && m.dst == Some(c.node))
             && c.free_bytes.saturating_sub(self.reserved_on(c.node))
                 >= block_bytes
     }
 
     fn unit_holders(&self, unit: u64) -> &[NodeId] {
-        self.units
+        self.seq
+            .units
             .get(unit)
             .map(|u| u.nodes.as_slice())
             .unwrap_or(&[])
@@ -870,8 +772,9 @@ impl RemoteSender {
     ) -> bool {
         let holders = self.unit_holders(unit);
         let queued: u64 = self
-            .migs
+            .lanes
             .iter()
+            .flat_map(|l| l.migs.iter())
             .filter(|m| m.dst.is_none())
             .map(|m| m.block_bytes)
             .sum();
@@ -915,78 +818,120 @@ impl RemoteSender {
             .collect()
     }
 
-    /// The migration table's earliest actionable event: `(time, index,
+    /// The lane tables' earliest actionable event: `(time, machine,
     /// is_activation)` — a queued machine that could take a free
     /// concurrency slot, or the active machine whose phase completes
     /// first. THE selection rule, shared by the advance loop and the
-    /// backpressure probe so the two can never drift.
-    fn next_migration_action(&self) -> Option<(Ns, usize, bool)> {
+    /// backpressure probe so the two can never drift. Machines are
+    /// visited in global submission-stamp order, which reproduces the
+    /// pre-split single-table insertion order exactly.
+    fn next_migration_action(&self) -> Option<(Ns, MigRef, bool)> {
         let cap = self.vcfg.max_concurrent_migrations.max(1);
-        let active = self.migs.iter().filter(|m| m.is_active()).count();
-        let mut next: Option<(Ns, usize, bool)> = None;
+        let active = self
+            .lanes
+            .iter()
+            .flat_map(|l| l.migs.iter())
+            .filter(|m| m.is_active())
+            .count();
+        let mut next: Option<(Ns, MigRef, bool)> = None;
         if active < cap {
-            if let Some(i) =
-                self.migs.iter().position(|m| !m.is_active())
-            {
-                let t = self.migs[i].scheduled.max(self.mig_slot_free);
-                next = Some((t, i, true));
+            // earliest-submitted queued machine across all lanes
+            let mut best: Option<(u64, MigRef)> = None;
+            for (li, lane) in self.lanes.iter().enumerate() {
+                for (mi, m) in lane.migs.iter().enumerate() {
+                    if m.is_active() {
+                        continue;
+                    }
+                    let earlier = match best {
+                        Some((s, _)) => m.seq < s,
+                        None => true,
+                    };
+                    if earlier {
+                        best = Some((m.seq, (li, mi)));
+                    }
+                }
+            }
+            if let Some((_, (li, mi))) = best {
+                let t = self.lanes[li].migs[mi]
+                    .scheduled
+                    .max(self.seq.mig_slot_free);
+                next = Some((t, (li, mi), true));
             }
         }
-        for (i, m) in self.migs.iter().enumerate() {
-            if !m.is_active() {
-                continue;
-            }
+        // active machines, visited in submission order (strict `<`
+        // keeps ties resolving to the earlier-submitted machine, and to
+        // the activation candidate before any active one)
+        let mut act: Vec<(u64, MigRef)> = self
+            .lanes
+            .iter()
+            .enumerate()
+            .flat_map(|(li, lane)| {
+                lane.migs
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, m)| m.is_active())
+                    .map(move |(mi, m)| (m.seq, (li, mi)))
+            })
+            .collect();
+        act.sort_unstable();
+        for (_, (li, mi)) in act {
+            let pd = self.lanes[li].migs[mi].phase_done;
             let earlier = match next {
-                Some((t, _, _)) => m.phase_done < t,
+                Some((t, _, _)) => pd < t,
                 None => true,
             };
             if earlier {
-                next = Some((m.phase_done, i, false));
+                next = Some((pd, (li, mi), false));
             }
         }
         next
     }
 
-    /// Earliest virtual time at which the migration table has work to
+    /// Earliest virtual time at which the migration tables have work to
     /// do (a queued machine that could activate, or an active phase
-    /// completing). `None` when the table is empty. Used by the
+    /// completing). `None` when every table is empty. Used by the
     /// backpressure path to force progress instead of spinning.
     pub fn next_migration_event(&self) -> Option<Ns> {
         self.next_migration_action().map(|(t, _, _)| t)
     }
 
-    /// Advance every migration in the table up to `now`: activate
-    /// queued machines while concurrency slots are free, and walk each
-    /// active machine through its due phase transitions (PREPARE ack →
-    /// copy → COPY_DONE → COMMIT). Called from the pump/driver paths,
-    /// interleaved with write batches, so reclaim overlaps demand
-    /// traffic instead of blocking it. No-op when the table is empty.
+    /// Advance every migration up to `now`: activate queued machines
+    /// while concurrency slots are free (global submission order), and
+    /// walk each active machine through its due phase transitions
+    /// (PREPARE ack → copy → COPY_DONE → COMMIT). Called from the
+    /// pump/driver paths, interleaved with write batches, so reclaim
+    /// overlaps demand traffic instead of blocking it. No-op when the
+    /// tables are empty. This is the sequencer tick: cross-lane by
+    /// design, unlike the per-lane completion ticks.
     pub fn advance_migrations(&mut self, cl: &mut ClusterState, now: Ns) {
         let mut stepped = false;
-        while let Some((t, i, activation)) = self.next_migration_action() {
+        while let Some((t, mref, activation)) = self.next_migration_action()
+        {
             if t > now {
                 break;
             }
             if activation {
-                self.activate_migration(cl, i, t);
+                self.activate_migration(cl, mref, t);
             } else {
-                self.step_migration(cl, i);
+                self.step_migration(cl, mref);
             }
             stepped = true;
         }
         // Migration-milestone audit: every activation/phase/commit that
-        // just fired re-proves the table's conservation laws. The
+        // just fired re-proves the tables' conservation laws. The
         // replica sweep over the whole unit map piggybacks on every
         // 64th crossing (see `audit_check`). Compiled away in release
         // builds without the `audit` feature.
-        if audit::enabled() && (stepped || !self.migs.is_empty()) {
+        if audit::enabled()
+            && (stepped || self.lanes.iter().any(|l| !l.migs.is_empty()))
+        {
             self.audit_tick = self.audit_tick.wrapping_add(1);
             let thorough = self.audit_tick % 64 == 0;
             audit::enforce(&self.audit_check(cl, thorough));
         }
     }
 
-    /// Give migration `i` its concurrency slot at `t_act`: poll
+    /// Give the machine at `mref` its concurrency slot at `t_act`: poll
     /// candidates (one control RTT each), choose the destination
     /// through the pressure-aware placement hook, park writes
     /// (StopWrites fires with the DestChosen transition) and send
@@ -995,25 +940,25 @@ impl RemoteSender {
     fn activate_migration(
         &mut self,
         cl: &mut ClusterState,
-        i: usize,
+        (li, mi): MigRef,
         t_act: Ns,
     ) {
         let rtt = ctrl_rtt(&self.lat);
         let (unit, src, block_bytes) = {
-            let m = &self.migs[i];
+            let m = &self.lanes[li].migs[mi];
             (m.unit, m.src, m.block_bytes)
         };
         let cands = self.reclaim_candidates(cl, unit, src, block_bytes);
-        let dst = self.reclaim_placement.pick(&cands);
+        let dst = self.seq.reclaim_placement.pick(&cands);
         let Some(dst) = dst else {
             // every candidate filled up while we were queued: delete
             // (surviving replicas, if any, keep serving reads)
-            let m = self.migs.remove(i);
-            self.delete_victim(cl, m.src, m.src_block, Some(m.unit));
-            self.mig_slot_free = self.mig_slot_free.max(t_act);
+            let m = self.lanes[li].migs.remove(mi);
+            self.seq.delete_victim(cl, m.src, m.src_block, Some(m.unit));
+            self.seq.mig_slot_free = self.seq.mig_slot_free.max(t_act);
             return;
         };
-        let m = &mut self.migs[i];
+        let m = &mut self.lanes[li].migs[mi];
         let actions = m
             .sm
             .on_event(MigEvent::DestChosen { dst })
@@ -1031,15 +976,15 @@ impl RemoteSender {
         m.phase_done = c1.max(c2) + rtt;
     }
 
-    /// Fire the phase transition of active migration `i` that completes
-    /// at `migs[i].phase_done`.
-    fn step_migration(&mut self, cl: &mut ClusterState, i: usize) {
+    /// Fire the phase transition of the active machine at `mref` that
+    /// completes at its `phase_done`.
+    fn step_migration(&mut self, cl: &mut ClusterState, (li, mi): MigRef) {
         let rtt = ctrl_rtt(&self.lat);
-        let owner = self.owner_tag.unwrap_or(cl.sender);
-        let state = self.migs[i].sm.state();
+        let owner = self.seq.owner_tag.unwrap_or(cl.sender);
+        let state = self.lanes[li].migs[mi].sm.state();
         match state {
             MigState::Preparing => {
-                let m = &mut self.migs[i];
+                let m = &mut self.lanes[li].migs[mi];
                 m.sm
                     .on_event(MigEvent::PrepareAcked)
                     .expect("preparing accepts ack");
@@ -1065,7 +1010,7 @@ impl RemoteSender {
                 m.phase_done = m.copy_end;
             }
             MigState::Copying => {
-                let m = &mut self.migs[i];
+                let m = &mut self.lanes[li].migs[mi];
                 m.sm
                     .on_event(MigEvent::CopyDone)
                     .expect("copying accepts copy-done");
@@ -1073,16 +1018,17 @@ impl RemoteSender {
                 cl.mrpools[m.src].release(m.src_block);
                 m.phase_done = m.copy_end + 2 * rtt;
             }
-            MigState::Committing => self.commit_migration(cl, i),
+            MigState::Committing => self.commit_migration(cl, (li, mi)),
             s => unreachable!("active migration in phase {s:?}"),
         }
     }
 
-    /// COMMIT acked: remap the unit's replica slot to the destination,
-    /// validate the replica set through [`choose_replicas`], flush
+    /// COMMIT acked: the sequencer's cross-peer step — remap the unit's
+    /// replica slot to the destination, validate the replica set
+    /// through [`choose_replicas`], issue the COMMIT ticket, flush
     /// parked write sets to the new location and retire the machine.
-    fn commit_migration(&mut self, cl: &mut ClusterState, i: usize) {
-        let mut m = self.migs.remove(i);
+    fn commit_migration(&mut self, cl: &mut ClusterState, (li, mi): MigRef) {
+        let mut m = self.lanes[li].migs.remove(mi);
         let done = m.phase_done;
         let actions = m
             .sm
@@ -1093,7 +1039,7 @@ impl RemoteSender {
         let dst = m.dst.expect("active migration has dst");
         let dst_block = m.dst_block.expect("copy registered the block");
         let mut flush_nodes = vec![dst];
-        if let Some(u) = self.units.get_mut(m.unit) {
+        if let Some(u) = self.seq.units.get_mut(m.unit) {
             for (n, b) in u.nodes.iter_mut().zip(u.blocks.iter_mut()) {
                 if *n == m.src && *b == m.src_block {
                     *n = dst;
@@ -1115,7 +1061,9 @@ impl RemoteSender {
         }
         // FlushParkedWrites: one coalesced message per replica carrying
         // everything that parked during the migration; completions land
-        // in the owning shards' mailboxes like any other batch.
+        // in the owning shards' mailboxes like any other batch. The
+        // in-flight entry stays on the source lane that ran the
+        // migration.
         let parked_flushed = m.parked.len() as u64;
         if !m.parked.is_empty() {
             let t = done + self.lat.mrpool_get;
@@ -1125,7 +1073,7 @@ impl RemoteSender {
                     cl.fabric.rdma_write(t, cl.sender, n, m.parked_bytes);
                 flush_done = flush_done.max(verb.end);
             }
-            self.mig_stats.flushed_sets += m.parked.len() as u64;
+            self.seq.mig_stats.flushed_sets += m.parked.len() as u64;
             let mut by_shard: Vec<(usize, Vec<WriteSet>)> = Vec::new();
             for (shard, ws) in m.parked.drain(..) {
                 match by_shard.iter_mut().find(|(s, _)| *s == shard) {
@@ -1134,7 +1082,7 @@ impl RemoteSender {
                 }
             }
             for (shard, sets) in by_shard {
-                self.inflight.push(Inflight {
+                self.lanes[li].inflight.push(Inflight {
                     done: flush_done,
                     shard,
                     sets,
@@ -1143,15 +1091,21 @@ impl RemoteSender {
         }
         // pairwise overlap accounting: credit each concurrent pair once,
         // at the earlier completion (the other machine is still active)
-        for other in self.migs.iter().filter(|o| o.is_active()) {
+        for other in self
+            .lanes
+            .iter()
+            .flat_map(|l| l.migs.iter())
+            .filter(|o| o.is_active())
+        {
             let both_from = m.activated.max(other.activated);
             if done > both_from {
-                self.mig_stats.overlap_ns += done - both_from;
+                self.seq.mig_stats.overlap_ns += done - both_from;
             }
         }
-        self.mig_stats.completed += 1;
-        self.mig_slot_free = self.mig_slot_free.max(done);
-        self.mig_records.push(MigrationRecord {
+        self.seq.mig_stats.completed += 1;
+        self.seq.commit_seq += 1;
+        self.seq.mig_slot_free = self.seq.mig_slot_free.max(done);
+        self.seq.mig_records.push(MigrationRecord {
             unit: m.unit,
             src: m.src,
             dst,
@@ -1169,12 +1123,14 @@ impl RemoteSender {
     // -- the invariant auditor ----------------------------------------
 
     /// Audit the slow path's conservation laws; returns every violation
-    /// found (empty = clean). Always checks the migration table
+    /// found (empty = clean). Always checks the lane migration tables
     /// ([`Law::MigrationLegality`], [`Law::MigratingNotReselected`],
-    /// [`Law::ParkedFlushOnce`]); with `thorough` it also re-validates
-    /// every live unit's replica set against
-    /// [`choose_replicas`] ([`Law::ReplicaDistinct`]) — the sweep the
-    /// crossing hooks sample and the fuzzer/tests run in full.
+    /// [`Law::ParkedFlushOnce`] — details carry the owning lane) and
+    /// the cross-lane commit ledger ([`Law::LaneSequencer`]); with
+    /// `thorough` it also re-validates every live unit's replica set
+    /// against [`choose_replicas`] ([`Law::ReplicaDistinct`]) — the
+    /// sweep the crossing hooks sample and the fuzzer/tests run in
+    /// full.
     pub fn audit_check(
         &self,
         cl: &ClusterState,
@@ -1183,12 +1139,20 @@ impl RemoteSender {
         let mut out = Vec::new();
 
         // -- migration-legality: table states imply their fields and
-        // the milestone clocks are ordered.
-        for (i, m) in self.migs.iter().enumerate() {
+        // the milestone clocks are ordered. Lane-local sweep, tagged
+        // with the lane so a violation names its timeline.
+        let all: Vec<(usize, &ActiveMigration)> = self
+            .lanes
+            .iter()
+            .enumerate()
+            .flat_map(|(li, l)| l.migs.iter().map(move |m| (li, m)))
+            .collect();
+        for (i, &(li, m)) in all.iter().enumerate() {
             let snap = || {
                 format!(
-                    "unit={} src={} state={:?} scheduled={} activated={} \
-                     park_from={} copy_start={} copy_end={} phase_done={}",
+                    "lane={li} unit={} src={} state={:?} scheduled={} \
+                     activated={} park_from={} copy_start={} copy_end={} \
+                     phase_done={}",
                     m.unit,
                     m.src,
                     m.sm.state(),
@@ -1200,7 +1164,7 @@ impl RemoteSender {
                     m.phase_done,
                 )
             };
-            let dup = self.migs[i + 1..].iter().any(|o| o.unit == m.unit);
+            let dup = all[i + 1..].iter().any(|&(_, o)| o.unit == m.unit);
             audit::check(
                 &mut out,
                 !dup,
@@ -1216,8 +1180,26 @@ impl RemoteSender {
                 None,
                 || {
                     format!(
-                        "table entry for unit {} is in terminal/idle state",
+                        "lane {li} entry for unit {} is in terminal/idle \
+                         state",
                         m.unit
+                    )
+                },
+                snap,
+            );
+            // lane ownership: a machine lives in its source peer's lane
+            audit::check(
+                &mut out,
+                self.lane_of(m.src) == li,
+                Law::MigrationLegality,
+                None,
+                || {
+                    format!(
+                        "machine for unit {} (src {}) lives in lane {li}, \
+                         not its source lane {}",
+                        m.unit,
+                        m.src,
+                        self.lane_of(m.src)
                     )
                 },
                 snap,
@@ -1288,22 +1270,21 @@ impl RemoteSender {
         }
 
         // -- migrating-not-reselected: every `Migrating` block on every
-        // peer is the source of exactly one live table entry (and a
-        // table entry whose source block is still registered must have
-        // marked it).
+        // peer is the source of exactly one live machine across all
+        // lanes (and a machine whose source block is still registered
+        // must have marked it).
         for (node, pool) in cl.mrpools.iter().enumerate() {
             for b in pool.blocks() {
-                if b.state != MrState::Migrating {
+                if b.state != crate::mrpool::MrState::Migrating {
                     continue;
                 }
-                let refs = self
-                    .migs
+                let refs = all
                     .iter()
-                    .filter(|m| m.src == node && m.src_block == b.id)
+                    .filter(|&&(_, m)| m.src == node && m.src_block == b.id)
                     .count();
                 // A tenant-tagged sender audits only its own blocks:
                 // another tenant's migrations live in another sender.
-                if self.owner_tag.is_some_and(|tag| tag != b.owner) {
+                if self.seq.owner_tag.is_some_and(|tag| tag != b.owner) {
                     continue;
                 }
                 audit::check(
@@ -1318,7 +1299,7 @@ impl RemoteSender {
                             b.id
                         )
                     },
-                    || format!("table_len={}", self.migs.len()),
+                    || format!("table_len={}", all.len()),
                 );
             }
         }
@@ -1326,29 +1307,52 @@ impl RemoteSender {
         // -- parked-flush-once: every set that ever parked is either
         // still parked or was flushed — never both, never neither.
         let parked_now: u64 =
-            self.migs.iter().map(|m| m.parked.len() as u64).sum();
+            all.iter().map(|&(_, m)| m.parked.len() as u64).sum();
         audit::check(
             &mut out,
-            self.mig_stats.parked_sets
-                == self.mig_stats.flushed_sets + parked_now,
+            self.seq.mig_stats.parked_sets
+                == self.seq.mig_stats.flushed_sets + parked_now,
             Law::ParkedFlushOnce,
             None,
             || {
                 format!(
                     "parked {} != flushed {} + in-table {}",
-                    self.mig_stats.parked_sets,
-                    self.mig_stats.flushed_sets,
+                    self.seq.mig_stats.parked_sets,
+                    self.seq.mig_stats.flushed_sets,
                     parked_now
                 )
             },
-            || format!("{:?}", self.mig_stats),
+            || format!("{:?}", self.seq.mig_stats),
+        );
+
+        // -- lane-sequencer: the cross-lane commit ledger is
+        // conserved — every COMMIT issued exactly one ticket, booked
+        // exactly one completion and pushed exactly one record. Lanes
+        // retire machines independently; only this three-way equality
+        // proves no commit bypassed the sequencer (or was double-
+        // counted by two lanes).
+        audit::check(
+            &mut out,
+            self.seq.commit_seq == self.seq.mig_stats.completed
+                && self.seq.mig_records.len() as u64 == self.seq.commit_seq,
+            Law::LaneSequencer,
+            None,
+            || {
+                format!(
+                    "commit tickets {} vs completed {} vs records {}",
+                    self.seq.commit_seq,
+                    self.seq.mig_stats.completed,
+                    self.seq.mig_records.len()
+                )
+            },
+            || format!("{:?}", self.seq.mig_stats),
         );
 
         // -- replica-distinct (thorough sweep): the §5.1 chooser is the
         // oracle — re-deriving the replica list from itself must be a
         // fixed point (distinct nodes, sender excluded, primary first).
         if thorough {
-            for (id, u) in self.units.iter() {
+            for (id, u) in self.seq.units.iter() {
                 if !u.alive || u.nodes.is_empty() {
                     continue;
                 }
@@ -1403,7 +1407,7 @@ impl RemoteSender {
     #[cfg(any(feature = "audit", debug_assertions))]
     #[doc(hidden)]
     pub fn audit_corrupt_replicas(&mut self) -> bool {
-        for (_, u) in self.units.iter_mut() {
+        for (_, u) in self.seq.units.iter_mut() {
             if !u.alive || u.nodes.is_empty() {
                 continue;
             }
@@ -1422,7 +1426,7 @@ impl RemoteSender {
     }
 
     /// Test-only corruption hook for [`Law::MigrationLegality`]: inject
-    /// a fabricated table entry in an active state with no destination.
+    /// a fabricated machine in an active state with no destination.
     #[cfg(any(feature = "audit", debug_assertions))]
     #[doc(hidden)]
     pub fn audit_inject_bogus_migration(&mut self, unit: u64) {
@@ -1431,7 +1435,9 @@ impl RemoteSender {
             .expect("fresh machine accepts a pressure report");
         sm.on_event(MigEvent::DestChosen { dst: 2 })
             .expect("choosing-dest accepts a destination");
-        self.migs.push(ActiveMigration {
+        let stamp = self.seq.next_mig_seq();
+        let lane = self.lane_of(1);
+        self.lanes[lane].migs.push(ActiveMigration {
             sm,
             unit,
             src: 1,
@@ -1447,6 +1453,7 @@ impl RemoteSender {
             phase_done: 0,
             parked: Vec::new(),
             parked_bytes: 0,
+            seq: stamp,
         });
     }
 
@@ -1455,6 +1462,14 @@ impl RemoteSender {
     #[cfg(any(feature = "audit", debug_assertions))]
     #[doc(hidden)]
     pub fn audit_corrupt_parked_stats(&mut self) {
-        self.mig_stats.parked_sets += 1;
+        self.seq.mig_stats.parked_sets += 1;
+    }
+
+    /// Test-only corruption hook for [`Law::LaneSequencer`]: issue a
+    /// COMMIT ticket no lane's machine ever earned.
+    #[cfg(any(feature = "audit", debug_assertions))]
+    #[doc(hidden)]
+    pub fn audit_corrupt_commit_ledger(&mut self) {
+        self.seq.commit_seq += 1;
     }
 }

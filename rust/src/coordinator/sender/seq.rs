@@ -1,0 +1,266 @@
+//! The **global sequencer**: the thin cross-peer remainder of the slow
+//! path after the per-peer lane split.
+//!
+//! Only state whose ordering is genuinely cross-peer lives here:
+//!
+//! * the **unit map** and the placement / replication decisions that
+//!   write it (a unit's replica set spans peers, so two lanes mapping
+//!   concurrently must agree through one map);
+//! * the per-shard **completion mailboxes** (a shard drains one FIFO
+//!   regardless of which lane completed the batch);
+//! * the migration **commit ledger** — submission stamps, the global
+//!   concurrency-slot clock (`mig_slot_free`), the COMMIT ticket
+//!   counter, completed-migration records and aggregate stats. COMMIT
+//!   remaps the unit's replica slot, which is a cross-peer operation by
+//!   definition (src lane loses the block, dst lane gains it).
+//!
+//! Everything else — timelines, in-flight batches, read tables, live
+//! migration machines — is lane-local ([`super::lane::SenderLane`]).
+//! The ledger invariant (`commit_seq == completed == records`) is the
+//! [`crate::audit::Law::LaneSequencer`] law.
+
+use std::collections::HashMap;
+
+use crate::backends::{ClusterState, Unit, UnitMap};
+use crate::config::Config;
+use crate::eviction::{ActivityBased, VictimPolicy};
+use crate::mrpool::MrBlockId;
+use crate::placement::{LeastPressured, Placement, PowerOfTwo};
+use crate::queues::WriteSet;
+use crate::replication::choose_replicas;
+use crate::sim::Ns;
+use crate::NodeId;
+
+/// Milestones of one completed migration (diagnostics + the
+/// `tests/reclaim.rs` oracle pin against [`crate::migration::simulate`]).
+#[derive(Clone, Copy, Debug)]
+pub struct MigrationRecord {
+    /// Address-space unit that moved.
+    pub unit: u64,
+    /// Source peer.
+    pub src: NodeId,
+    /// Destination peer.
+    pub dst: NodeId,
+    /// Bytes moved.
+    pub block_bytes: u64,
+    /// Victim selected at this time.
+    pub scheduled: Ns,
+    /// Concurrency slot acquired (candidate queries start here).
+    pub activated: Ns,
+    /// Writes parked from here (Figure 12's window opens).
+    pub park_from: Ns,
+    /// Bulk copy milestones.
+    pub copy_start: Ns,
+    /// Copy finished; source memory free from here.
+    pub copy_end: Ns,
+    /// COMMIT acked; unit remapped, parked writes flushed.
+    pub done: Ns,
+    /// Write sets that parked against this migration and flushed at
+    /// COMMIT.
+    pub parked_flushed: u64,
+}
+
+/// Aggregate reclaim-pipeline counters (sequencer-global — migrations
+/// belong to the shared slow path, not to any one shard's `RunMetrics`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MigStats {
+    /// Migrations enqueued by pressure episodes.
+    pub started: u64,
+    /// Migrations that reached COMMIT.
+    pub completed: u64,
+    /// Victims deleted instead (no destination with room).
+    pub deleted: u64,
+    /// Write sets parked against in-flight migrations.
+    pub parked_sets: u64,
+    /// Parked write sets flushed to their destination at COMMIT.
+    pub flushed_sets: u64,
+    /// Virtual time two migrations spent concurrently in flight, summed
+    /// pairwise — the `reclaim` experiment's overlap evidence (0 under
+    /// `max_concurrent_migrations = 1`).
+    pub overlap_ns: Ns,
+}
+
+/// Cross-peer slow-path state (see the module docs for what qualifies).
+pub(crate) struct Sequencer {
+    /// The remote address-space unit map, shared by every lane.
+    pub(crate) units: UnitMap,
+    /// Pluggable placement hook (§4.3; power-of-two choices by default).
+    pub(crate) placement: Box<dyn Placement + Send>,
+    /// Pluggable eviction hook (§3.5; activity-based by default).
+    pub(crate) victim_policy: Box<dyn VictimPolicy + Send>,
+    /// Destination policy for migrations (§3.5 "less-pressured peer");
+    /// defaults to [`LeastPressured`], separate from the unit-mapping
+    /// placement hook so swapping one never perturbs the other.
+    pub(crate) reclaim_placement: Box<dyn Placement + Send>,
+    /// Owner id stamped on MR registrations (multi-tenant arbitration);
+    /// `None` registers as the sender node.
+    pub(crate) owner_tag: Option<NodeId>,
+    /// Per-shard completion mailboxes: durable write sets waiting for
+    /// their owning shard to apply them (FIFO per shard). Lanes push
+    /// completions here; shards drain regardless of lane.
+    pub(crate) done: Vec<Vec<WriteSet>>,
+    /// Placement picks made at *routing* time for units not yet mapped:
+    /// the submission layer must know a set's lane before its first
+    /// batch is sent, so the primary is pre-picked here and consumed by
+    /// [`Self::ensure_unit`] when the mapping actually happens. With a
+    /// single lane the pick is made-and-consumed within one drive step
+    /// (routing is only consulted for sendable sets), reproducing the
+    /// pre-split pick order exactly.
+    pub(crate) pending_primary: HashMap<u64, NodeId>,
+    /// Milestones of completed migrations, in completion order.
+    pub(crate) mig_records: Vec<MigrationRecord>,
+    /// Aggregate reclaim counters.
+    pub(crate) mig_stats: MigStats,
+    /// A queued migration may activate no earlier than this (the last
+    /// time a concurrency slot freed) — keeps serialized mode
+    /// (`max_concurrent_migrations = 1`) strictly back-to-back across
+    /// lanes.
+    pub(crate) mig_slot_free: Ns,
+    /// Next migration submission stamp (monotone): reproduces the
+    /// pre-split single-table insertion order across lanes.
+    pub(crate) mig_seq: u64,
+    /// COMMIT tickets issued. The cross-lane sequencer law
+    /// ([`crate::audit::Law::LaneSequencer`]) pins this to
+    /// `mig_stats.completed` and `mig_records.len()`.
+    pub(crate) commit_seq: u64,
+}
+
+impl Sequencer {
+    /// Build the sequencer for `shards` fast paths.
+    pub(crate) fn new(cfg: &Config, shards: usize) -> Self {
+        Sequencer {
+            units: UnitMap::new(cfg.valet.mr_block_bytes),
+            placement: Box::new(PowerOfTwo::new(cfg.cluster.seed)),
+            victim_policy: Box::new(ActivityBased),
+            reclaim_placement: Box::new(LeastPressured::new()),
+            owner_tag: None,
+            done: vec![Vec::new(); shards.max(1)],
+            pending_primary: HashMap::new(),
+            mig_records: Vec::new(),
+            mig_stats: MigStats::default(),
+            mig_slot_free: 0,
+            mig_seq: 0,
+            commit_seq: 0,
+        }
+    }
+
+    /// The peer that will hold (or already holds) `unit`'s primary
+    /// replica — the lane-routing query. For a mapped live unit this is
+    /// its primary; for an unmapped one the placement hook picks now
+    /// and the pick is remembered in `pending_primary` until
+    /// [`Self::ensure_unit`] consumes it, so routing and mapping can
+    /// never disagree about the lane.
+    pub(crate) fn primary_for(
+        &mut self,
+        cl: &ClusterState,
+        unit: u64,
+    ) -> NodeId {
+        if let Some(u) = self.units.get(unit) {
+            if u.alive {
+                if let Some(&n) = u.nodes.first() {
+                    return n;
+                }
+            }
+        }
+        if let Some(&n) = self.pending_primary.get(&unit) {
+            return n;
+        }
+        let cands = cl.candidates();
+        let primary = self
+            .placement
+            .pick(&cands)
+            .expect("cluster has at least one peer");
+        self.pending_primary.insert(unit, primary);
+        primary
+    }
+
+    /// Ensure `unit` has a remote mapping; returns when it is usable.
+    /// Charged on the owning *lane's* timeline by the caller — never
+    /// the request path. Consumes the routing pre-pick if one exists.
+    pub(crate) fn ensure_unit(
+        &mut self,
+        cl: &mut ClusterState,
+        now: Ns,
+        unit: u64,
+        replicas: usize,
+    ) -> Ns {
+        if let Some(u) = self.units.get(unit) {
+            if u.alive {
+                return u.ready_at;
+            }
+        }
+        // (Re)map: primary from the routing pre-pick (or the placement
+        // hook if the unit was never routed), then replicas.
+        let cands = cl.candidates();
+        let primary = match self.pending_primary.remove(&unit) {
+            Some(n) => n,
+            None => self
+                .placement
+                .pick(&cands)
+                .expect("cluster has at least one peer"),
+        };
+        let cand_nodes: Vec<NodeId> = cands.iter().map(|c| c.node).collect();
+        let nodes = choose_replicas(cl.sender, primary, &cand_nodes, replicas);
+        // Connection (if new) + mapping, charged sequentially per node.
+        let mut t = now;
+        for &n in &nodes {
+            let (tc, _newc) = cl.fabric.ensure_connected(t, cl.sender, n);
+            t = cl.fabric.map_mr(tc, cl.sender);
+        }
+        let owner = self.owner_tag.unwrap_or(cl.sender);
+        let blocks = nodes
+            .iter()
+            .map(|&n| cl.mrpools[n].register(owner, self.units.unit_bytes, t))
+            .collect();
+        self.units.insert(
+            unit,
+            Unit {
+                nodes,
+                blocks,
+                ready_at: t,
+                wlocked_until: 0,
+                alive: true,
+            },
+        );
+        t
+    }
+
+    /// The delete last-resort (§3.5 "delete like the baselines"):
+    /// release the victim block and drop its replica slot from the unit
+    /// map. Surviving replicas keep serving reads (Table 3: replica
+    /// first); only when the last copy is gone does the unit die and
+    /// reads fall through to the disk backup (or are lost).
+    pub(crate) fn delete_victim(
+        &mut self,
+        cl: &mut ClusterState,
+        node: NodeId,
+        block: MrBlockId,
+        unit_id: Option<u64>,
+    ) {
+        cl.mrpools[node].release(block);
+        if let Some(uid) = unit_id {
+            if let Some(u) = self.units.get_mut(uid) {
+                if let Some(pos) = u
+                    .nodes
+                    .iter()
+                    .zip(u.blocks.iter())
+                    .position(|(&n, &b)| n == node && b == block)
+                {
+                    u.nodes.remove(pos);
+                    u.blocks.remove(pos);
+                }
+                if u.nodes.is_empty() {
+                    u.alive = false;
+                }
+            }
+        }
+        self.mig_stats.deleted += 1;
+    }
+
+    /// Issue the next migration submission stamp.
+    pub(crate) fn next_mig_seq(&mut self) -> u64 {
+        let s = self.mig_seq;
+        self.mig_seq += 1;
+        s
+    }
+}

@@ -61,7 +61,7 @@ use crate::coordinator::sender::RemoteSender;
 use crate::mempool::AllocFail;
 use crate::metrics::RunMetrics;
 use crate::prefetch::PrefetchConfig;
-use crate::queues::{self, WriteSet};
+use crate::queues::WriteSet;
 use crate::sim::Ns;
 use crate::{pages_for, NodeId, PAGE_SIZE};
 
@@ -171,10 +171,59 @@ pub fn audit_crossing(fast: &mut ShardFastPath, shard: usize, now: Ns) {
     audit::enforce(&v);
 }
 
+/// Find the earliest staged write set of `fast` that some *idle* sender
+/// lane can take at `now`: returns `(staging index, service start,
+/// enqueued_at)` of the first set (queue order) whose lane is free, or
+/// `None` when nothing is sendable. The scan walks past sets whose lane
+/// is busy — a saturated lane never blocks submissions routed to other
+/// lanes — but only the *first* set per lane is a candidate, so each
+/// lane stays FIFO in enqueue order.
+///
+/// With one lane this degenerates to the pre-split gate exactly: every
+/// set routes to lane 0, so the scan looks at the front only, and the
+/// all-lanes-busy early return fires *before any routing* — an unmapped
+/// unit's placement pick still happens at send time, not earlier.
+fn next_sendable(
+    sender: &mut RemoteSender,
+    fast: &ShardFastPath,
+    cl: &ClusterState,
+    now: Ns,
+) -> Option<(usize, Ns, Ns)> {
+    let nlanes = sender.lane_count();
+    if (0..nlanes).all(|l| sender.lane_busy_until(l) > now) {
+        return None;
+    }
+    let mut seen: u64 = 0;
+    for idx in 0..fast.staging.len() {
+        let ws = fast.staging.get(idx)?;
+        let enq = ws.enqueued_at;
+        if enq > now {
+            // staging is FIFO in enqueue time: everything behind this
+            // set entered even later
+            break;
+        }
+        let lane = sender.route_page(cl, ws.page);
+        if seen & (1u64 << lane) != 0 {
+            // an earlier set already owns this lane's next slot
+            continue;
+        }
+        seen |= 1u64 << lane;
+        let busy = sender.lane_busy_until(lane);
+        if busy <= now {
+            return Some((idx, busy.max(enq), enq));
+        }
+        if seen.count_ones() as usize >= nlanes {
+            break; // every lane's next candidate is gated
+        }
+    }
+    None
+}
+
 /// Drive the shared sender for one shard: apply completions, advance
-/// the migration table (the reclaim pipeline rides the same pump), then
-/// send coalesced batches from this shard's staging queue whose service
-/// can start at or before `now`.
+/// the migration tables (the reclaim pipeline rides the same pump),
+/// then send coalesced batches from this shard's staging queue whose
+/// service can start at or before `now` — each on its target peer's
+/// lane, scanning past sets whose lane is busy.
 pub fn drive_shard(
     sender: &mut RemoteSender,
     fast: &mut ShardFastPath,
@@ -186,14 +235,8 @@ pub fn drive_shard(
     sender.advance_migrations(cl, now);
     flush_activity(sender, fast, cl);
     apply_mailbox(sender, fast, shard);
-    while !fast.staging.is_empty() && sender.busy_until() <= now {
-        let start = sender
-            .busy_until()
-            .max(fast.staging.front_enqueued_at().unwrap_or(0));
-        if start > now {
-            break;
-        }
-        sender.send_one_batch(cl, start, shard, fast);
+    while let Some((idx, start, _)) = next_sendable(sender, fast, cl, now) {
+        sender.send_batch_at(cl, start, shard, fast, idx);
         // a batch may have parked against (or completed) a migration;
         // keep the two pipelines interleaved on the same timeline
         sender.advance_migrations(cl, now);
@@ -233,8 +276,34 @@ fn wait_for_reclaimable(
         return t;
     }
     if !fast.staging.is_empty() {
-        let start = sender.busy_until().max(now);
-        let done = sender.send_one_batch(cl, start, shard, fast);
+        // Forced send: this is a blocking wait, so jump to whichever
+        // lane frees first among the queued sets' target lanes (first
+        // set per lane only — per-lane FIFO — and queue order breaks
+        // ties). With one lane this is exactly the pre-split
+        // `busy_until().max(now)` front send.
+        let mut best: Option<(Ns, usize)> = None;
+        let mut seen: u64 = 0;
+        for idx in 0..fast.staging.len() {
+            let Some(ws) = fast.staging.get(idx) else { break };
+            let lane = sender.route_page(cl, ws.page);
+            if seen & (1u64 << lane) != 0 {
+                continue;
+            }
+            seen |= 1u64 << lane;
+            let start = sender.lane_busy_until(lane).max(now);
+            let better = match best {
+                Some((bs, _)) => start < bs,
+                None => true,
+            };
+            if better {
+                best = Some((start, idx));
+            }
+            if seen.count_ones() as usize >= sender.lane_count() {
+                break;
+            }
+        }
+        let (start, idx) = best.expect("staging checked non-empty");
+        let done = sender.send_batch_at(cl, start, shard, fast, idx);
         sender.complete_inflight(cl, done);
         apply_mailbox(sender, fast, shard);
         return done.max(now);
@@ -1112,10 +1181,15 @@ impl ShardedEngine {
     }
 
     /// The single pump/sender driver: apply completions, advance the
-    /// migration table, then repeatedly pick the shard whose staging
-    /// front entered first and send one coalesced batch from it —
-    /// re-advancing migrations between batches so the reclaim pipeline
-    /// and the write pipeline interleave on one timeline.
+    /// migration tables, then repeatedly pick — across every shard —
+    /// the earliest-enqueued staged set whose target lane is idle and
+    /// send one coalesced batch from it (ties break to the lowest shard
+    /// index, so the drain order is deterministic), re-advancing
+    /// migrations between batches so the reclaim pipeline and the write
+    /// pipeline interleave on one timeline. With one lane this is the
+    /// pre-split globally-oldest-first funnel exactly; with more, a
+    /// shard blocked on one peer no longer holds up batches bound for
+    /// the others.
     fn drive_all(&mut self, cl: &mut ClusterState, now: Ns) {
         let ShardedEngine { shards, sender, .. } = self;
         sender.complete_inflight(cl, now);
@@ -1125,21 +1199,25 @@ impl ShardedEngine {
             apply_mailbox(sender, fast, i);
         }
         loop {
-            let Some(s) =
-                queues::earliest_front(shards.iter().map(|f| &f.staging))
-            else {
+            // (enqueued_at, shard, staging idx, service start)
+            let mut best: Option<(Ns, usize, usize, Ns)> = None;
+            for (s, fast) in shards.iter().enumerate() {
+                if let Some((idx, start, enq)) =
+                    next_sendable(sender, fast, cl, now)
+                {
+                    let better = match best {
+                        Some((be, bs, _, _)) => (enq, s) < (be, bs),
+                        None => true,
+                    };
+                    if better {
+                        best = Some((enq, s, idx, start));
+                    }
+                }
+            }
+            let Some((_, s, idx, start)) = best else {
                 break;
             };
-            if sender.busy_until() > now {
-                break;
-            }
-            let start = sender
-                .busy_until()
-                .max(shards[s].staging.front_enqueued_at().unwrap_or(0));
-            if start > now {
-                break;
-            }
-            sender.send_one_batch(cl, start, s, &mut shards[s]);
+            sender.send_batch_at(cl, start, s, &mut shards[s], idx);
             sender.advance_migrations(cl, now);
         }
     }

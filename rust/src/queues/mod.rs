@@ -79,6 +79,22 @@ impl StagingQueue {
         Some(ws)
     }
 
+    /// The `i`-th queued write set (0 = front), without removing it.
+    /// The per-lane drive loops scan past sets whose lane is busy, so
+    /// the queue needs positional access beyond `peek`.
+    pub fn get(&self, i: usize) -> Option<&WriteSet> {
+        self.q.get(i)
+    }
+
+    /// Remove the `i`-th queued write set (0 = front), preserving the
+    /// relative order of everything else — per-lane FIFO holds even
+    /// when a lane's batch is plucked from the middle of the queue.
+    pub fn remove(&mut self, i: usize) -> Option<WriteSet> {
+        let ws = self.q.remove(i)?;
+        self.bytes -= ws.bytes;
+        Some(ws)
+    }
+
     /// Pop up to `max_bytes` of write sets for one coalesced RDMA message
     /// (§3.3 "message coalescing and batch sending with large size of
     /// RDMA MR"). Always returns at least one write set if non-empty.
@@ -208,6 +224,21 @@ mod tests {
         assert_eq!(s.bytes(), 150);
         s.pop();
         assert_eq!(s.bytes(), 50);
+    }
+
+    #[test]
+    fn remove_from_middle_keeps_order_and_bytes() {
+        let mut s = StagingQueue::new();
+        for i in 0..4 {
+            s.push(ws(i, 10 + i, i));
+        }
+        assert_eq!(s.get(2).unwrap().page, 2);
+        assert_eq!(s.remove(2).unwrap().page, 2);
+        assert_eq!(s.bytes(), 10 + 11 + 13);
+        assert!(s.remove(5).is_none());
+        let rest: Vec<_> =
+            std::iter::from_fn(|| s.pop()).map(|w| w.page).collect();
+        assert_eq!(rest, vec![0, 1, 3]);
     }
 
     #[test]

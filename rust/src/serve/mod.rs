@@ -363,13 +363,26 @@ impl ServeClient {
 // Sharded serving — the parallel front-end over the sharded engine
 // ---------------------------------------------------------------------
 
-/// The slow-path state the shard workers share behind one mutex: the
-/// simulated substrate plus the remote sender. Everything else a request
-/// touches is shard-local and lock-free.
+/// The slow-path state the shard workers share behind one mutex — the
+/// **sequencer lock**: the simulated substrate plus the remote sender.
+/// Everything else a request touches is shard-local and lock-free.
+///
+/// Since the sender split into per-peer lanes, the lock's long holds
+/// are gone from the background path: the pump driver ticks each lane's
+/// completions under its own short hold ([`RemoteSender::tick_lane`])
+/// and takes one more for the cross-lane sequencer work (migration
+/// scheduling / COMMIT), instead of one hold spanning everything.
+/// Request-side holds are unchanged (a write or miss needs the
+/// substrate either way); local hits never take the lock at all.
 struct SharedSlow {
     cl: ClusterState,
     sender: RemoteSender,
     host_free_pages: u64,
+    /// High watermark of the shard workers' virtual clocks — the time
+    /// the pump driver's lane ticks run "up to". Each worker raises it
+    /// while it already holds the lock for a request, so the driver
+    /// never needs to poll every worker to learn where virtual time is.
+    vnow_hw: Ns,
 }
 
 // ---------------------------------------------------------------------
@@ -424,7 +437,10 @@ pub struct ShardedServeHandle {
 
 /// One shard worker: exclusively owns its fast path. Local read hits
 /// (single-page or whole-block) run lock-free; writes, read misses and
-/// pump ticks take the shared slow-path lock.
+/// pump ticks take the shared sequencer lock. After a write enqueues a
+/// staging set the worker rings `bell` (a lock-free MPSC channel to the
+/// pump driver) *after* dropping the lock, so the driver pumps this
+/// shard promptly instead of waiting out the broadcast interval.
 #[allow(clippy::too_many_arguments)]
 fn shard_worker(
     shard: usize,
@@ -435,6 +451,7 @@ fn shard_worker(
     mut fast: ShardFastPath,
     shared: Arc<Mutex<SharedSlow>>,
     rx: mpsc::Receiver<(Request, mpsc::Sender<Reply>)>,
+    bell: mpsc::Sender<usize>,
 ) -> ShardFastPath {
     let route = engine::ShardRoute {
         shard,
@@ -448,6 +465,7 @@ fn shard_worker(
             Request::Write { page, bytes } => {
                 let mut sh = lock_slow(&shared);
                 let host = share_of(sh.host_free_pages, shards, shard);
+                sh.vnow_hw = sh.vnow_hw.max(vnow);
                 let SharedSlow { cl, sender, .. } = &mut *sh;
                 // Valet-RemoteOnly ablation (no mempool): synchronous
                 // remote write, exactly like the single-driver path.
@@ -460,6 +478,9 @@ fn shard_worker(
                     )
                 };
                 drop(sh);
+                // ring the submission doorbell outside the lock: the
+                // pump driver will drive this shard's staging queue
+                let _ = bell.send(shard);
                 let lat_v = a.end - vnow;
                 vnow = a.end;
                 let _ = reply_tx.send(Reply {
@@ -485,6 +506,7 @@ fn shard_worker(
                     }
                     None => {
                         let mut sh = lock_slow(&shared);
+                        sh.vnow_hw = sh.vnow_hw.max(vnow);
                         let SharedSlow { cl, sender, .. } = &mut *sh;
                         engine::shard_read_miss(
                             sender, &mut fast, cl, vnow, page, route,
@@ -518,6 +540,7 @@ fn shard_worker(
                     }
                     None => {
                         let mut sh = lock_slow(&shared);
+                        sh.vnow_hw = sh.vnow_hw.max(vnow);
                         let SharedSlow { cl, sender, .. } = &mut *sh;
                         engine::shard_read_block(
                             sender, &mut fast, cl, vnow, page, npages,
@@ -536,6 +559,7 @@ fn shard_worker(
                 vnow += PUMP_TICK;
                 let mut sh = lock_slow(&shared);
                 let host = share_of(sh.host_free_pages, shards, shard);
+                sh.vnow_hw = sh.vnow_hw.max(vnow);
                 let SharedSlow { cl, sender, .. } = &mut *sh;
                 engine::drive_shard(sender, &mut fast, cl, vnow, shard);
                 drop(sh);
@@ -568,13 +592,19 @@ pub fn spawn_sharded(cfg: &Config, shards: usize) -> ShardedServeHandle {
         cl: ClusterState::new(cfg),
         sender,
         host_free_pages,
+        vnow_hw: 0,
     }));
+    // The submission doorbell: a lock-free MPSC channel every worker
+    // rings (outside the sequencer lock) after staging a write, so the
+    // pump driver services busy shards promptly between broadcasts.
+    let (bell_tx, bell_rx) = mpsc::channel::<usize>();
     let mut txs = Vec::with_capacity(shards);
     let mut joins = Vec::with_capacity(shards);
     for (i, fast) in fasts.into_iter().enumerate() {
         let (tx, rx) = mpsc::channel::<(Request, mpsc::Sender<Reply>)>();
         let sh = shared.clone();
         let lat = cfg.latency.clone();
+        let bell = bell_tx.clone();
         joins.push(Some(thread::spawn(move || {
             shard_worker(
                 i,
@@ -585,17 +615,54 @@ pub fn spawn_sharded(cfg: &Config, shards: usize) -> ShardedServeHandle {
                 fast,
                 sh,
                 rx,
+                bell,
             )
         })));
         txs.push(tx);
     }
-    // The single pump/sender driver: broadcast a tick to every shard so
-    // all staging queues keep draining even when no requests arrive.
+    drop(bell_tx); // pump driver owns the only receiver; workers ring
+    // The pump/sender driver. Per cycle: drain the doorbells and pump
+    // the shards that rang (targeted, not broadcast); tick each sender
+    // lane's completions under its own short sequencer-lock hold; run
+    // one cross-lane sequencer tick (migration scheduling / COMMIT);
+    // then broadcast a tick so every staging queue keeps draining even
+    // when no requests arrive.
     let pump_stop = Arc::new(AtomicBool::new(false));
     let pump_txs = txs.clone();
+    let pump_shared = shared.clone();
     let stop = pump_stop.clone();
     let pump_join = thread::spawn(move || {
         while !stop.load(Ordering::Relaxed) {
+            let mut rung = vec![false; pump_txs.len()];
+            while let Ok(s) = bell_rx.try_recv() {
+                if let Some(r) = rung.get_mut(s) {
+                    *r = true;
+                }
+            }
+            for (s, tx) in pump_txs.iter().enumerate() {
+                if !rung[s] {
+                    continue;
+                }
+                let (rtx, _rrx) = mpsc::channel();
+                if tx.send((Request::Pump, rtx)).is_err() {
+                    return; // a worker is gone: shutting down
+                }
+            }
+            // per-lane completion ticks: one short hold each, so a
+            // request thread can interleave between lanes
+            let nlanes = lock_slow(&pump_shared).sender.lane_count();
+            for lane in 0..nlanes {
+                let mut sh = lock_slow(&pump_shared);
+                let hw = sh.vnow_hw;
+                let SharedSlow { cl, sender, .. } = &mut *sh;
+                sender.tick_lane(cl, hw, lane);
+            }
+            {
+                let mut sh = lock_slow(&pump_shared);
+                let hw = sh.vnow_hw;
+                let SharedSlow { cl, sender, .. } = &mut *sh;
+                sender.advance_migrations(cl, hw);
+            }
             for tx in &pump_txs {
                 let (rtx, _rrx) = mpsc::channel();
                 if tx.send((Request::Pump, rtx)).is_err() {

@@ -293,6 +293,37 @@ fn parked_flush_once_fires_on_phantom_parked_set() {
     );
 }
 
+#[test]
+fn lane_sequencer_fires_on_commit_ledger_skew() {
+    // The cross-lane law: COMMIT tickets issued by the sequencer must
+    // equal migrations completed and records pushed. Bump the ticket
+    // counter behind the lanes' backs — as if a lane had committed
+    // without going through the sequencer.
+    let mut cfg = small_cfg();
+    cfg.valet.sender_lanes = 0; // one lane per peer
+    let (mut sc, t) = populated(&cfg, 1);
+    assert_clean(&sc.engine.audit_check(&sc.state, t));
+    sc.engine.sender_mut().audit_corrupt_commit_ledger();
+    assert_fires(
+        &sc.engine.sender().audit_check(&sc.state, false),
+        Law::LaneSequencer,
+    );
+}
+
+#[test]
+fn lane_sequencer_also_guards_the_single_lane_oracle() {
+    // The ledger law holds on the pre-split single-timeline config too
+    // (the lane count changes routing, never the COMMIT protocol).
+    let cfg = small_cfg(); // default: sender_lanes = 1
+    let (mut sc, t) = populated(&cfg, 2);
+    assert_clean(&sc.engine.audit_check(&sc.state, t));
+    sc.engine.sender_mut().audit_corrupt_commit_ledger();
+    assert_fires(
+        &sc.engine.sender().audit_check(&sc.state, false),
+        Law::LaneSequencer,
+    );
+}
+
 // -------------------------------------------------------- pressure log
 
 #[test]

@@ -12,10 +12,18 @@
 //! already runs at every slow-path crossing, migration milestone and
 //! event application *during* the schedule.
 //!
+//! Each topology also randomizes the **sender-lane count** (1 = the
+//! pre-split single timeline, 0 = one lane per peer, plus fixed 2/4),
+//! and a micro-pump burst op advances time in sub-millisecond steps so
+//! lanes are driven at many distinct interleaving points inside one
+//! another's busy windows.
+//!
 //! Knobs (environment):
 //! * `VALET_FUZZ_ITERS` — seeds to run (default 64; ci.sh runs 1000).
 //! * `VALET_FUZZ_SEED` — run exactly one seed. Every failure prints a
 //!   `VALET_FUZZ_SEED=<n>` line: set it to reproduce that schedule.
+//! * `VALET_FUZZ_LANES` — pin `sender_lanes` for every schedule (ci.sh
+//!   runs a lane-pinned pass with 4 forced lanes).
 
 #![cfg(any(feature = "audit", debug_assertions))]
 
@@ -24,7 +32,7 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 use valet::audit;
 use valet::cluster::{ClusterEvent, ShardedCluster};
 use valet::config::Config;
-use valet::sim::{ms, Ns};
+use valet::sim::{ms, us, Ns};
 use valet::util::Rng;
 use valet::PAGE_SIZE;
 
@@ -51,6 +59,13 @@ fn run_schedule(seed: u64) {
     cfg.valet.min_pool_pages = pool;
     cfg.valet.max_pool_pages = pool * (1 + rng.below(3));
     cfg.valet.prefetch = rng.chance(0.5);
+    // sender lanes: oracle single timeline / auto per-peer / fixed —
+    // drawn from the rng even when pinned so schedules stay comparable
+    let lane_pick = [1usize, 0, 2, 4][rng.below_usize(4)];
+    cfg.valet.sender_lanes = std::env::var("VALET_FUZZ_LANES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(lane_pick);
     let shards = 1 << rng.below_usize(3); // 1 / 2 / 4
 
     let mut sc = ShardedCluster::new(&cfg, shards);
@@ -115,6 +130,15 @@ fn run_schedule(seed: u64) {
                     t + rng.below(ms(5)),
                     ClusterEvent::SenderHostFree { pages },
                 );
+            }
+            // micro-pump burst: several sub-millisecond advances, so
+            // lanes get driven at interleaving points *inside* one
+            // another's busy windows (maps, migration phases)
+            94..=96 => {
+                for _ in 0..3 {
+                    t += 1 + rng.below(us(300));
+                    sc.advance(t);
+                }
             }
             // pump tick after a random quiet period
             _ => {
