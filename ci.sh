@@ -39,6 +39,11 @@ VALET_FUZZ_ITERS=1000 cargo test -q --features audit
 # coverage regardless of the per-seed lane draw
 VALET_FUZZ_ITERS=200 VALET_FUZZ_LANES=4 \
     cargo test -q --features audit --test schedule_fuzz
+# tier-pinned fuzz pass: force the pool tier ON so every schedule
+# exercises promotion/demotion, cross-tier migrations, the admission
+# predictor and the tier-accounting law regardless of the per-seed flip
+VALET_FUZZ_ITERS=200 VALET_FUZZ_TIER=1 \
+    cargo test -q --features audit --test schedule_fuzz
 
 echo "== benches compile =="
 # compile-gate the harness=false bench binaries so experiment/bench code
@@ -71,6 +76,10 @@ if [ "$FAST" -eq 0 ]; then
     grep -q '"metric":"no_pressure_regression_pct"' target/bench-smoke.json
     # the scaling experiment's sender-lane axis (virtual-time rows)
     grep -q '"metric":"lane_speedup"' target/bench-smoke.json
+    # the three-tier memory experiment must emit its self-baselined
+    # speedup and the admission-predictor ablation record
+    grep -q '"metric":"tiered_speedup"' target/bench-smoke.json
+    grep -q '"metric":"no_predictor_ablation"' target/bench-smoke.json
     # numeric gate (python3 is present on the CI image): sequential
     # reads must get FASTER with the pipeline on, the random mix must
     # stay within noise of the demand-only baseline, and the reclaim
@@ -102,6 +111,13 @@ assert sk["lane_speedup"] >= 1.5, \
     f"per-peer lanes must beat the single sender timeline: {sk['lane_speedup']}"
 print(f"sender lanes: submission drain x{sk['lane_speedup']:.2f} "
       f"({sk['lane1_ops_per_sec']:.0f} -> {sk['lane4_ops_per_sec']:.0f} ops/s)")
+tk = {r["metric"]: r["value"] for r in recs if r["id"] == "tiering"}
+assert tk["tiered_speedup"] > 1.0, \
+    f"pooled tier must beat the flat layout at equal memory: {tk['tiered_speedup']}"
+assert "no_predictor_ablation" in tk, "admission ablation record missing"
+print(f"three-tier memory: tiered x{tk['tiered_speedup']:.2f} vs flat, "
+      f"admission ablation x{tk['no_predictor_ablation']:.2f}, "
+      f"{tk['pool_hits']:.0f} pool hits")
 EOF
     fi
     echo "wrote target/bench-smoke.json"
@@ -114,10 +130,10 @@ EOF
     # the audit feature ON in release and require the JSON dumps to be
     # bit-identical to the audit-OFF release run.
     cargo run --release --bin valet-bench -- \
-        table1 fig5 prefetch reclaim --small \
+        table1 fig5 prefetch reclaim tiering --small \
         --json target/bench-audit-off.json >/dev/null
     cargo run --release --features audit --bin valet-bench -- \
-        table1 fig5 prefetch reclaim --small \
+        table1 fig5 prefetch reclaim tiering --small \
         --json target/bench-audit-on.json >/dev/null
     cmp target/bench-audit-off.json target/bench-audit-on.json
     echo "audit on/off metrics bit-identical"

@@ -139,6 +139,25 @@ fn main() {
         }));
     }
 
+    // Pool-tier read hit: the tier-dispatched read of a pool-resident
+    // block (no queue pair, NUMA-hop base latency) vs the rdma verb
+    // above — the per-access cost the tiering experiment banks on.
+    {
+        use valet::mrpool::MemTier;
+        let mut cfg = Config::default();
+        cfg.cluster.nodes = 4;
+        cfg.valet.pool_tier.enabled = true;
+        cfg.valet.pool_tier.capacity_bytes = 64 << 20;
+        let mut cl = ClusterState::new(&cfg);
+        let blk = cl.mrpools[1].register_tier(0, 1 << 20, 0, MemTier::Pool);
+        let mut now = 0;
+        results.push(bench("valet/pool-tier read hit (4k)", 1_000_000, || {
+            let d = cl.tiered_read(now, 1, blk, 4096);
+            now = d.end;
+            black_box(d);
+        }));
+    }
+
     // Full Valet write path (sim)
     {
         let mut cfg = Config::default();

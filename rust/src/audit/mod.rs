@@ -41,6 +41,7 @@
 //! | [`Law::PressureLogBounds`] | pressure ring bounded, time-ordered |
 //! | [`Law::GptCoherence`] | GPT entries ⟷ resident mempool slots |
 //! | [`Law::LaneSequencer`] | cross-lane COMMIT ledger conserved |
+//! | [`Law::TierAccounting`] | pool-tier bytes ⟷ resident blocks; tier moves conserved |
 
 use std::fmt;
 
@@ -113,6 +114,12 @@ pub enum Law {
     /// COMMIT bypassed the sequencer or was double-counted by two
     /// lanes.
     LaneSequencer,
+    /// Tier accounting: every node's cached pool-tier byte ledger
+    /// equals a recount over its resident pool-tier blocks, and
+    /// `promotions + demotions` equals the number of committed
+    /// cross-tier migration records — no block changes tier outside
+    /// the migration pipeline, and none is double-counted.
+    TierAccounting,
 }
 
 impl Law {
@@ -133,6 +140,7 @@ impl Law {
             Law::PressureLogBounds => "pressure-log-bounds",
             Law::GptCoherence => "gpt-coherence",
             Law::LaneSequencer => "lane-sequencer",
+            Law::TierAccounting => "tier-accounting",
         }
     }
 }

@@ -70,7 +70,8 @@ impl InfiniswapBackend {
         let primary = self
             .placement
             .pick(&cands)
-            .expect("cluster has at least one peer");
+            .expect("cluster has at least one peer")
+            .node;
         let cand_nodes: Vec<NodeId> = cands.iter().map(|c| c.node).collect();
         let nodes = choose_replicas(cl.sender, primary, &cand_nodes, 1);
         let (tc, _) = cl.fabric.ensure_connected(now, cl.sender, nodes[0]);

@@ -67,8 +67,15 @@ pub struct ClusterState {
     /// cluster event lands. The placement layer reads it through
     /// [`ClusterState::candidates`].
     pressure_score: Vec<f64>,
+    /// Per-node **pool-tier** pressure score: the PR-5 EWMA generalized
+    /// per tier — an EWMA of each node's pooled-slice occupancy
+    /// (`pool_bytes / capacity`). Empty unless the pool tier is on.
+    pool_pressure: Vec<f64>,
     /// EWMA weight (`valet.pressure_ewma`).
     pressure_alpha: f64,
+    /// The pool-tier shape (`valet.pool_tier`): candidate emission and
+    /// capacity accounting read it on every placement decision.
+    pub pool_cfg: crate::config::PoolTierConfig,
 }
 
 impl ClusterState {
@@ -89,7 +96,13 @@ impl ClusterState {
                 .collect(),
             sender: 0,
             pressure_score: vec![0.0; n],
+            pool_pressure: if cfg.valet.pool_tier.enabled {
+                vec![0.0; n]
+            } else {
+                Vec::new()
+            },
             pressure_alpha: cfg.valet.pressure_ewma.clamp(0.0, 1.0),
+            pool_cfg: cfg.valet.pool_tier.clone(),
         };
         cl.seed_pressure();
         cl
@@ -115,10 +128,20 @@ impl ClusterState {
         }
     }
 
+    /// Pooled-slice occupancy of a node (0 when the tier is off).
+    fn pool_occupancy(&self, node: NodeId) -> f64 {
+        let cap = self.pool_cfg.capacity_bytes;
+        if cap == 0 {
+            return 1.0;
+        }
+        (self.mrpools[node].pool_bytes() as f64 / cap as f64).clamp(0.0, 1.0)
+    }
+
     /// Fold the monitors' current occupancy into the per-node pressure
-    /// EWMA. The cluster assemblies call this on every timeline event
-    /// (native alloc/free, host churn) so the score tracks sustained
-    /// load, not instants.
+    /// EWMA (and, with the pool tier on, each node's pooled-slice
+    /// occupancy into the per-tier score). The cluster assemblies call
+    /// this on every timeline event (native alloc/free, host churn) so
+    /// the score tracks sustained load, not instants.
     pub fn refresh_pressure(&mut self) {
         let a = self.pressure_alpha;
         for n in 0..self.pressure_score.len() {
@@ -126,12 +149,37 @@ impl ClusterState {
             let prev = self.pressure_score[n];
             self.pressure_score[n] = prev + a * (now - prev);
         }
+        for n in 0..self.pool_pressure.len() {
+            let now = self.pool_occupancy(n);
+            let prev = self.pool_pressure[n];
+            self.pool_pressure[n] = prev + a * (now - prev);
+        }
     }
 
     /// The smoothed pressure score of a node in thousandths (0 = idle,
     /// 1000 = fully claimed).
     pub fn pressure_milli(&self, node: NodeId) -> u32 {
         (self.pressure_score[node].clamp(0.0, 1.0) * 1000.0) as u32
+    }
+
+    /// The smoothed pool-tier pressure score of a node in thousandths
+    /// (0 when the tier is off).
+    pub fn pool_pressure_milli(&self, node: NodeId) -> u32 {
+        match self.pool_pressure.get(node) {
+            Some(p) => (p.clamp(0.0, 1.0) * 1000.0) as u32,
+            None => 0,
+        }
+    }
+
+    /// Free bytes left in a node's pooled slice (0 when the tier is
+    /// off, so pool candidates never look placeable by accident).
+    pub fn pool_free(&self, node: NodeId) -> u64 {
+        if !self.pool_cfg.enabled {
+            return 0;
+        }
+        self.pool_cfg
+            .capacity_bytes
+            .saturating_sub(self.mrpools[node].pool_bytes())
     }
 
     /// Peer nodes (everyone but the sender).
@@ -145,15 +193,79 @@ impl ClusterState {
     }
 
     /// Placement candidates over all peers, carrying both the
-    /// instantaneous free bytes and the smoothed pressure score.
+    /// instantaneous free bytes and the smoothed pressure score — one
+    /// Remote-tier candidate per peer, plus (with the pool tier on) one
+    /// Pool-tier candidate per peer with its own capacity and its own
+    /// pressure score. With the tier off the list is exactly the
+    /// pre-tier list, so every policy draws the same samples.
     pub fn candidates(&self) -> Vec<crate::placement::Candidate> {
-        self.peers()
+        use crate::mrpool::MemTier;
+        let mut out: Vec<crate::placement::Candidate> = self
+            .peers()
             .map(|n| crate::placement::Candidate {
                 node: n,
                 free_bytes: self.donatable(n),
                 pressure_milli: self.pressure_milli(n),
+                tier: MemTier::Remote,
             })
-            .collect()
+            .collect();
+        if self.pool_cfg.enabled {
+            out.extend(self.peers().map(|n| crate::placement::Candidate {
+                node: n,
+                free_bytes: self.pool_free(n),
+                pressure_milli: self.pool_pressure_milli(n),
+                tier: MemTier::Pool,
+            }));
+        }
+        out
+    }
+
+    /// The memory tier `block` on `node` lives in (RDMA-remote for an
+    /// unknown block, so tier dispatch degrades to the classic verb).
+    pub fn block_tier(
+        &self,
+        node: NodeId,
+        block: crate::mrpool::MrBlockId,
+    ) -> crate::mrpool::MemTier {
+        self.mrpools[node]
+            .get(block)
+            .map(|b| b.tier)
+            .unwrap_or(crate::mrpool::MemTier::Remote)
+    }
+
+    /// Read `bytes` from `block` on `node` with the verb of its tier:
+    /// a pool access for a pool-resident block (NUMA-hop base latency,
+    /// no queue pair), an RDMA READ otherwise. With the pool tier off
+    /// every block is RDMA-remote and this IS `rdma_read` — part of
+    /// the off-means-bit-for-bit pin.
+    pub fn tiered_read(
+        &mut self,
+        now: crate::sim::Ns,
+        node: NodeId,
+        block: crate::mrpool::MrBlockId,
+        bytes: u64,
+    ) -> crate::simnet::VerbDone {
+        if self.block_tier(node, block) == crate::mrpool::MemTier::Pool {
+            self.fabric.pool_read(now, self.sender, node, bytes)
+        } else {
+            self.fabric.rdma_read(now, self.sender, node, bytes)
+        }
+    }
+
+    /// Write `bytes` into `block` on `node` with the verb of its tier
+    /// (see [`Self::tiered_read`]).
+    pub fn tiered_write(
+        &mut self,
+        now: crate::sim::Ns,
+        node: NodeId,
+        block: crate::mrpool::MrBlockId,
+        bytes: u64,
+    ) -> crate::simnet::VerbDone {
+        if self.block_tier(node, block) == crate::mrpool::MemTier::Pool {
+            self.fabric.pool_write(now, self.sender, node, bytes)
+        } else {
+            self.fabric.rdma_write(now, self.sender, node, bytes)
+        }
     }
 }
 
@@ -393,6 +505,33 @@ mod tests {
         cl.monitors[1].native_bytes = 0;
         cl.refresh_pressure();
         assert!(cl.pressure_milli(1) < prev);
+    }
+
+    #[test]
+    fn pool_candidates_appear_only_when_enabled() {
+        use crate::mrpool::MemTier;
+        let cfg = Config::default();
+        let cl = ClusterState::new(&cfg);
+        assert!(
+            cl.candidates().iter().all(|c| c.tier == MemTier::Remote),
+            "pool off: the candidate list is the pre-tier list"
+        );
+        assert_eq!(cl.pool_free(1), 0);
+        let mut cfg2 = Config::default();
+        cfg2.valet.pool_tier.enabled = true;
+        let mut cl2 = ClusterState::new(&cfg2);
+        let c = cl2.candidates();
+        assert_eq!(c.len(), 2 * (cfg2.cluster.nodes - 1));
+        assert!(c.iter().any(|x| x.tier == MemTier::Pool));
+        let cap = cfg2.valet.pool_tier.capacity_bytes;
+        assert_eq!(cl2.pool_free(1), cap);
+        // a resident pool block shrinks the slice and raises its
+        // (tier-local) pressure EWMA; other nodes are untouched
+        cl2.mrpools[1].register_tier(0, 1 << 30, 0, MemTier::Pool);
+        assert_eq!(cl2.pool_free(1), cap - (1 << 30));
+        cl2.refresh_pressure();
+        assert!(cl2.pool_pressure_milli(1) > 0);
+        assert_eq!(cl2.pool_pressure_milli(2), 0);
     }
 
     #[test]

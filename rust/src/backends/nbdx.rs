@@ -72,7 +72,8 @@ impl NbdxBackend {
         let primary = self
             .placement
             .pick(&cands)
-            .expect("cluster has at least one peer");
+            .expect("cluster has at least one peer")
+            .node;
         let cand_nodes: Vec<NodeId> = cands.iter().map(|c| c.node).collect();
         let nodes = choose_replicas(cl.sender, primary, &cand_nodes, 1);
         // connection considered pre-established: charge it once at t=0

@@ -1,4 +1,4 @@
-//! One function per paper table/figure (ARCHITECTURE.md §9 experiment index).
+//! One function per paper table/figure (ARCHITECTURE.md §10 experiment index).
 //!
 //! Scaling: the paper runs 10 M records / 10 M ops on 32 real machines;
 //! we run the identical pipeline with records/ops scaled by `Scale` so
@@ -1032,7 +1032,8 @@ pub fn ablations(scale: &Scale) -> Report {
                     .collect();
                 let pick = policy
                     .pick(&cands)
-                    .expect("candidate list is non-empty (n nodes)");
+                    .expect("candidate list is non-empty (n nodes)")
+                    .node;
                 loads[pick] += 1;
             }
             let imbalance = *loads
@@ -1849,12 +1850,213 @@ pub fn reclaim(scale: &Scale) -> Report {
     }
 }
 
+// ---------------------------------------------------------------------
+// Three-tier memory — pooled tier, activity promotion, admission control
+// ---------------------------------------------------------------------
+
+/// The three-tier memory experiment (beyond the paper; CXL-style pooled
+/// tier): a mixed working set — a **warm** quarter written and read
+/// back, and a **cold** bulk written once and never read — runs against
+/// three configs holding the SAME total remote memory per peer (the
+/// flat config folds the pooled slice back into DRAM):
+///
+/// * **flat (pool off)** — every remote byte is RDMA-remote DRAM; the
+///   PR-7 demand path, bit-for-bit (tests/tiering.rs pins it);
+/// * **tiered + predictor** — the Pond-style admission predictor keeps
+///   the warm (read-inside-window) units in the pooled tier and
+///   classifies the cold bulk as latency-insensitive, sending it
+///   cold-first to RDMA-remote; the tier pump demotes what leaked in;
+/// * **tiered, no predictor** — the ablation: admission is tier-naive,
+///   so the warm set starts RDMA-remote and must earn its way into the
+///   pool through promotion migrations while the measured loop runs.
+///
+/// Headline records: `tiered_speedup` (> 1, gated in ci.sh: warm reads
+/// at ~NUMA-hop pool latency instead of RDMA READ base latency) and
+/// `no_predictor_ablation` (tiered / naive throughput: what admission
+/// control buys over promotion-only tiering).
+pub fn tiering(scale: &Scale) -> Report {
+    use crate::cluster::ShardedCluster;
+    use crate::PAGE_SIZE;
+
+    let blocks: u64 = (scale.records / 40).clamp(256, 512);
+    let warm_blocks = blocks / 4; // the read-back set
+    let ops: u64 = (scale.ops / 4).clamp(2_000, 8_000);
+    let unit_bytes = 1u64 << 18; // 4 × 64 KB blocks per unit
+    let pool_cap = 4u64 << 20; // per-peer pooled slice
+    let dram = 64u64 << 20; // per-peer DRAM under test
+    // first demand read of a warm block lags its write by this many
+    // blocks — far enough that the page has left the local mempool
+    // (so the read is remote and the predictor sees it), near enough
+    // to land inside the predictor window
+    let lag = 40u64;
+
+    let mk_cfg = |pool_on: bool, predictor: bool| {
+        let mut cfg = base_config();
+        cfg.cluster.nodes = 5; // sender + 4 peers
+        cfg.valet.mr_block_bytes = unit_bytes;
+        // local mempool holds 1/4 of the warm pages: most measured
+        // reads miss locally and exercise the remote tiers
+        let warm_pages = warm_blocks * 16;
+        cfg.valet.min_pool_pages = (warm_pages / 4).max(64);
+        cfg.valet.max_pool_pages = (warm_pages / 4).max(64);
+        // equal total memory: the flat config gets the pooled slice
+        // back as DRAM, so no config holds more bytes than another
+        cfg.cluster.node_mem_bytes =
+            if pool_on { dram } else { dram + pool_cap };
+        cfg.valet.pool_tier.enabled = pool_on;
+        cfg.valet.pool_tier.capacity_bytes = pool_cap;
+        cfg.valet.pool_tier.predictor = predictor;
+        // tighten the pump to the experiment's virtual-ms time scale so
+        // promotion, demotion and predictor retirement all happen in-run
+        cfg.valet.pool_tier.scan_period = ms(5);
+        cfg.valet.pool_tier.promote_max_idle = ms(50);
+        cfg.valet.pool_tier.demote_after = ms(200);
+        cfg.valet.pool_tier.predictor_window = ms(5);
+        cfg
+    };
+
+    // One run: lay out warm (write + lagged read-back) then cold
+    // (write-only bulk), settle a few pump scans, then measure a
+    // deterministic random-read loop over the warm set.
+    let run = |pool_on: bool, predictor: bool| -> (f64, ShardedCluster) {
+        let cfg = mk_cfg(pool_on, predictor);
+        let mut cl = ShardedCluster::new(&cfg, 1);
+        let mut t: Ns = 0;
+        for blk in 0..warm_blocks {
+            t = cl.write(t, blk * 16, 16 * PAGE_SIZE).end;
+            if blk >= lag {
+                t = cl.read(t, (blk - lag) * 16).end;
+            }
+            if blk % 8 == 0 {
+                cl.advance(t);
+            }
+        }
+        for blk in warm_blocks.saturating_sub(lag)..warm_blocks {
+            t = cl.read(t, blk * 16).end;
+        }
+        cl.advance(t);
+        for blk in warm_blocks..blocks {
+            t = cl.write(t, blk * 16, 16 * PAGE_SIZE).end;
+            if blk % 16 == 0 {
+                cl.advance(t);
+            }
+        }
+        // short settle — a few tier scans, deliberately NOT long
+        // enough for the promotion-only ablation to pull the whole
+        // warm set in before the measured loop starts
+        t += ms(20);
+        cl.advance(t);
+        let t0 = t;
+        let mut x = 0xD1B5_4A32u64;
+        for i in 0..ops {
+            x = x
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            let blk = (x >> 33) % warm_blocks;
+            t = cl.read(t, blk * 16 + ((x >> 21) % 16)).end;
+            if i % 16 == 0 {
+                cl.advance(t);
+            }
+        }
+        cl.advance(t + secs(1)); // drain every tier migration
+        let tp = ops as f64 / ((t - t0).max(1) as f64 / 1e9);
+        (tp, cl)
+    };
+
+    let (tp_flat, cl_flat) = run(false, true);
+    let (tp_tier, cl_tier) = run(true, true);
+    let (tp_naive, cl_naive) = run(true, false);
+
+    // the flat run IS the PR-7 path: no pool verbs, no tier moves
+    let m_flat = cl_flat.engine.combined_metrics();
+    assert_eq!(m_flat.pool_hits, 0);
+    assert_eq!(cl_flat.engine.migration_stats().promotions, 0);
+
+    let m_tier = cl_tier.engine.combined_metrics();
+    let s_tier = cl_tier.engine.migration_stats();
+    let m_naive = cl_naive.engine.combined_metrics();
+    let s_naive = cl_naive.engine.migration_stats();
+
+    let pool_share = |m: &crate::metrics::RunMetrics| {
+        100.0 * m.pool_hits as f64 / (m.remote_hits.max(1)) as f64
+    };
+    let rows = vec![
+        vec![
+            "flat (pool off)".into(),
+            format!("{tp_flat:.0}"),
+            "-".into(),
+            "every remote read pays the RDMA READ base".into(),
+        ],
+        vec![
+            "tiered + predictor".into(),
+            format!("{tp_tier:.0}"),
+            format!(
+                "{} pool hits ({:.0}% of remote)",
+                m_tier.pool_hits,
+                pool_share(&m_tier)
+            ),
+            format!(
+                "{} promoted / {} demoted / {} canceled",
+                s_tier.promotions, s_tier.demotions, s_tier.tier_canceled
+            ),
+        ],
+        vec![
+            "tiered, no predictor".into(),
+            format!("{tp_naive:.0}"),
+            format!(
+                "{} pool hits ({:.0}% of remote)",
+                m_naive.pool_hits,
+                pool_share(&m_naive)
+            ),
+            format!(
+                "{} promoted / {} demoted / {} canceled",
+                s_naive.promotions, s_naive.demotions, s_naive.tier_canceled
+            ),
+        ],
+    ];
+    let kv = vec![
+        ("flat_tp".into(), tp_flat),
+        ("tiered_tp".into(), tp_tier),
+        ("no_predictor_tp".into(), tp_naive),
+        ("tiered_speedup".into(), tp_tier / tp_flat.max(1e-9)),
+        ("no_predictor_ablation".into(), tp_tier / tp_naive.max(1e-9)),
+        ("pool_hits".into(), m_tier.pool_hits as f64),
+        ("promotions".into(), s_tier.promotions as f64),
+        ("demotions".into(), s_tier.demotions as f64),
+        ("naive_promotions".into(), s_naive.promotions as f64),
+    ];
+
+    Report {
+        kv,
+        id: "tiering",
+        title: "Three-tier memory: pooled tier, activity-driven promotion/demotion, Pond-style admission",
+        header: vec!["run", "warm read ops/sec (virtual)", "pool traffic", "tier moves"],
+        rows,
+        notes: vec![
+            format!(
+                "{blocks} × 64 KB blocks ({warm_blocks} warm) on 4 \
+                 peers; per-peer memory is constant across runs \
+                 (flat trades the {} MiB pooled slice for DRAM)",
+                pool_cap >> 20
+            ),
+            "warm units see a demand read inside the predictor \
+             window, so admission keeps them in the pool; the cold \
+             bulk retires unread and is placed cold-first"
+                .into(),
+            "the no-predictor run starts the warm set RDMA-remote: \
+             promotion migrations recover it, but only at pump \
+             cadence — admission control is worth the difference"
+                .into(),
+        ],
+    }
+}
+
 /// All experiments, in presentation order.
 pub fn all_ids() -> Vec<&'static str> {
     vec![
         "table1", "fig2", "fig3", "fig5", "fig8", "fig9", "fig10",
         "bigdata", "ml", "fig21", "table7", "fig22", "fig23",
-        "ablations", "scaling", "prefetch", "reclaim",
+        "ablations", "scaling", "prefetch", "reclaim", "tiering",
     ]
 }
 
@@ -1878,6 +2080,7 @@ pub fn run(id: &str, scale: &Scale) -> Option<Report> {
         "scaling" => scaling(scale),
         "prefetch" => prefetch(scale),
         "reclaim" => reclaim(scale),
+        "tiering" => tiering(scale),
         _ => return None,
     })
 }

@@ -105,6 +105,19 @@ pub struct LatencyConfig {
     /// Infiniswap's MR-pool get under load (Table 7b: 8.37 µs on the
     /// write path vs Valet's 0.14 µs).
     pub mrpool_get_slow: Ns,
+    /// Pool-tier (CXL-style) READ base latency — ~a NUMA hop (Pond
+    /// measures 180–250 ns for a CXL load; we charge 0.6 µs to cover
+    /// the page-granular request setup), an order of magnitude below
+    /// the 36 µs fabric round trip.
+    pub pool_read_base: Ns,
+    /// Pool-tier WRITE base latency (same NUMA-hop class).
+    pub pool_write_base: Ns,
+    /// Pool-tier wire time per byte. CXL bandwidth is a memory-bus
+    /// fraction, well above the 56 Gbps fabric: half the RDMA rate.
+    pub pool_per_byte: f64,
+    /// Attach a pool-tier slice (HDM decoder + address window): 1 ms,
+    /// vs 62 ms for the full MR mapping exchange.
+    pub pool_map: Ns,
 }
 
 impl Default for LatencyConfig {
@@ -129,6 +142,10 @@ impl Default for LatencyConfig {
             copy_read_page: us_f(2.11),
             copy_fixed_slow: us_f(37.57),
             mrpool_get_slow: us_f(8.37),
+            pool_read_base: us_f(0.6),
+            pool_write_base: us_f(0.6),
+            pool_per_byte: (51.35 - 4.0) * 1000.0 / (512.0 * 1024.0) / 2.0,
+            pool_map: us_f(1_000.0),
         }
     }
 }
@@ -153,6 +170,16 @@ impl LatencyConfig {
     pub fn disk_io(&self, bytes: u64) -> Ns {
         self.disk_seek + (self.disk_per_byte * bytes as f64) as Ns
     }
+
+    /// Pool-tier READ service time for `bytes`.
+    pub fn pool_read(&self, bytes: u64) -> Ns {
+        self.pool_read_base + (self.pool_per_byte * bytes as f64) as Ns
+    }
+
+    /// Pool-tier WRITE service time for `bytes`.
+    pub fn pool_write(&self, bytes: u64) -> Ns {
+        self.pool_write_base + (self.pool_per_byte * bytes as f64) as Ns
+    }
 }
 
 /// Mempool cache-replacement policy. The paper uses LRU and names MRU as
@@ -164,6 +191,51 @@ pub enum Replacement {
     Lru,
     /// Evict the most-recently-used reclaimable page.
     Mru,
+}
+
+/// The CXL-style pooled middle tier (ROADMAP item 2, Pond/DOLMA). OFF
+/// by default: with `enabled = false` no pool candidate is ever
+/// emitted, no pool verb is ever charged and the whole pipeline is
+/// bit-for-bit the two-tier system (pinned by `tests/tiering.rs`, the
+/// same way `prefetch` and `sender_lanes` were pinned).
+#[derive(Clone, Debug)]
+pub struct PoolTierConfig {
+    /// Master switch for the pooled tier.
+    pub enabled: bool,
+    /// Each node's slice of the pooled appliance, bytes.
+    pub capacity_bytes: u64,
+    /// A pool-tier block whose last demand read is within this window
+    /// of a tier scan counts as warm-hot; a *Remote*-tier block this
+    /// recently read is promoted into the pool.
+    pub promote_max_idle: Ns,
+    /// A pool-tier block idle longer than this demotes to RDMA-remote,
+    /// freeing appliance capacity for warmer data.
+    pub demote_after: Ns,
+    /// Virtual-time period between tier scans (the promotion/demotion
+    /// pump cadence).
+    pub scan_period: Ns,
+    /// Pond-style admission predictor: classify a fresh write set as
+    /// latency-insensitive from early activity and place it cold-first
+    /// (straight to RDMA-remote), saving pool capacity for data that
+    /// will be read back.
+    pub predictor: bool,
+    /// A freshly mapped unit with no demand read within this window of
+    /// its mapping counts as a latency-insensitive allocation.
+    pub predictor_window: Ns,
+}
+
+impl Default for PoolTierConfig {
+    fn default() -> Self {
+        PoolTierConfig {
+            enabled: false,
+            capacity_bytes: 8 << 30,
+            promote_max_idle: ms(200),
+            demote_after: ms(2_000),
+            scan_period: ms(500),
+            predictor: true,
+            predictor_window: ms(500),
+        }
+    }
 }
 
 /// Valet-specific policy knobs (§3.4, §4.1, Table 2).
@@ -221,6 +293,8 @@ pub struct ValetConfig {
     /// the single pre-split sender timeline — the differential-test
     /// oracle configuration; capped at 64.
     pub sender_lanes: usize,
+    /// The pooled middle tier (`[valet.pool_tier]`; off by default).
+    pub pool_tier: PoolTierConfig,
 }
 
 impl Default for ValetConfig {
@@ -245,6 +319,7 @@ impl Default for ValetConfig {
             max_concurrent_migrations: 4,
             pressure_ewma: 0.3,
             sender_lanes: 1,
+            pool_tier: PoolTierConfig::default(),
         }
     }
 }
@@ -349,6 +424,34 @@ impl Config {
                 }
                 _ => return Err(err()),
             },
+            "valet.pool_tier" => {
+                let pt = &mut self.valet.pool_tier;
+                match key {
+                    "enabled" => pt.enabled = v.as_bool().ok_or_else(err)?,
+                    "capacity_gb" => {
+                        pt.capacity_bytes = v.as_u64().ok_or_else(err)? << 30
+                    }
+                    "capacity_mb" => {
+                        pt.capacity_bytes = v.as_u64().ok_or_else(err)? << 20
+                    }
+                    "promote_max_idle_ms" => {
+                        pt.promote_max_idle = ms(v.as_u64().ok_or_else(err)?)
+                    }
+                    "demote_after_ms" => {
+                        pt.demote_after = ms(v.as_u64().ok_or_else(err)?)
+                    }
+                    "scan_period_ms" => {
+                        pt.scan_period = ms(v.as_u64().ok_or_else(err)?)
+                    }
+                    "predictor" => {
+                        pt.predictor = v.as_bool().ok_or_else(err)?
+                    }
+                    "predictor_window_ms" => {
+                        pt.predictor_window = ms(v.as_u64().ok_or_else(err)?)
+                    }
+                    _ => return Err(err()),
+                }
+            }
             "latency" => {
                 let f = v.as_f64().ok_or_else(err)?;
                 let ns = us_f(f); // latency keys are specified in µs
@@ -364,6 +467,12 @@ impl Config {
                     "map_mr_us" => self.latency.map_mr = ns,
                     "disk_seek_us" => self.latency.disk_seek = ns,
                     "wqe_miss_penalty_us" => self.latency.wqe_miss_penalty = ns,
+                    "pool_read_base_us" => self.latency.pool_read_base = ns,
+                    "pool_write_base_us" => {
+                        self.latency.pool_write_base = ns
+                    }
+                    "pool_map_us" => self.latency.pool_map = ns,
+                    "pool_per_byte_ns" => self.latency.pool_per_byte = f,
                     "rdma_per_byte_ns" => self.latency.rdma_per_byte = f,
                     "copy_per_byte_ns" => self.latency.copy_per_byte = f,
                     "disk_per_byte_ns" => self.latency.disk_per_byte = f,
@@ -378,12 +487,68 @@ impl Config {
         Ok(())
     }
 
+    /// Range-check every knob that has a meaningful domain; returns the
+    /// first violation. Called by the TOML loaders so a bad config file
+    /// fails at build time, not as a silent mis-simulation; CLI paths
+    /// that assemble a [`Config`] by hand call it before running.
+    pub fn validate(&self) -> Result<(), String> {
+        let v = &self.valet;
+        if !(v.pressure_ewma > 0.0 && v.pressure_ewma <= 1.0) {
+            return Err(format!(
+                "valet.pressure_ewma must be in (0, 1], got {}",
+                v.pressure_ewma
+            ));
+        }
+        if !(0.0..=1.0).contains(&v.prefetch_min_accuracy) {
+            return Err(format!(
+                "valet.prefetch_min_accuracy must be in [0, 1], got {}",
+                v.prefetch_min_accuracy
+            ));
+        }
+        let pt = &v.pool_tier;
+        if pt.enabled {
+            if pt.capacity_bytes == 0 {
+                return Err(
+                    "valet.pool_tier.capacity_bytes must be > 0 when the \
+                     pool tier is enabled"
+                        .into(),
+                );
+            }
+            if pt.capacity_bytes < v.mr_block_bytes {
+                return Err(format!(
+                    "valet.pool_tier capacity ({} B) cannot hold even one \
+                     MR block ({} B)",
+                    pt.capacity_bytes, v.mr_block_bytes
+                ));
+            }
+        }
+        if pt.promote_max_idle > pt.demote_after {
+            return Err(format!(
+                "valet.pool_tier.promote_max_idle_ms ({}) must not exceed \
+                 demote_after_ms ({}): a block would promote and demote in \
+                 the same scan",
+                pt.promote_max_idle / 1_000_000,
+                pt.demote_after / 1_000_000
+            ));
+        }
+        if pt.scan_period == 0 {
+            return Err("valet.pool_tier.scan_period_ms must be > 0".into());
+        }
+        if pt.predictor_window == 0 {
+            return Err(
+                "valet.pool_tier.predictor_window_ms must be > 0".into()
+            );
+        }
+        Ok(())
+    }
+
     /// Load from TOML-subset text.
     pub fn from_toml(text: &str) -> Result<Self, String> {
         let mut cfg = Config::default();
         for ((section, key), value) in parse_toml(text)? {
             cfg.set(&section, &key, &value)?;
         }
+        cfg.validate()?;
         Ok(cfg)
     }
 
@@ -435,6 +600,55 @@ mod tests {
     fn unknown_key_is_error() {
         assert!(Config::from_toml("[valet]\nbogus = 1\n").is_err());
         assert!(Config::from_toml("[nope]\nx = 1\n").is_err());
+    }
+
+    #[test]
+    fn pool_tier_is_off_by_default_and_loads_from_toml() {
+        let d = Config::default();
+        assert!(!d.valet.pool_tier.enabled);
+        let cfg = Config::from_toml(
+            "[valet.pool_tier]\nenabled = true\ncapacity_gb = 4\n\
+             promote_max_idle_ms = 100\ndemote_after_ms = 1500\n\
+             scan_period_ms = 250\npredictor = false\n\
+             predictor_window_ms = 300\n",
+        )
+        .unwrap();
+        let pt = &cfg.valet.pool_tier;
+        assert!(pt.enabled);
+        assert_eq!(pt.capacity_bytes, 4 << 30);
+        assert_eq!(pt.promote_max_idle, ms(100));
+        assert_eq!(pt.demote_after, ms(1500));
+        assert_eq!(pt.scan_period, ms(250));
+        assert!(!pt.predictor);
+        assert_eq!(pt.predictor_window, ms(300));
+        assert!(
+            Config::from_toml("[valet.pool_tier]\nbogus = 1\n").is_err()
+        );
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_knobs() {
+        // the default tree is valid
+        Config::default().validate().unwrap();
+        let bad = |toml: &str| {
+            assert!(Config::from_toml(toml).is_err(), "accepted: {toml}");
+        };
+        // existing knobs gain range checks
+        bad("[valet]\npressure_ewma = 0.0\n");
+        bad("[valet]\npressure_ewma = 1.5\n");
+        bad("[valet]\nprefetch_min_accuracy = 1.1\n");
+        // pool-tier knobs
+        bad("[valet.pool_tier]\nenabled = true\ncapacity_mb = 0\n");
+        // capacity below one MR block cannot hold anything
+        bad("[valet.pool_tier]\nenabled = true\ncapacity_mb = 512\n");
+        bad("[valet.pool_tier]\npromote_max_idle_ms = 5000\n");
+        bad("[valet.pool_tier]\nscan_period_ms = 0\n");
+        bad("[valet.pool_tier]\npredictor_window_ms = 0\n");
+        // in-range values pass
+        Config::from_toml(
+            "[valet]\npressure_ewma = 1.0\nprefetch_min_accuracy = 0.0\n",
+        )
+        .unwrap();
     }
 
     #[test]

@@ -18,7 +18,7 @@ use std::collections::HashMap;
 
 use crate::backends::{ClusterState, UnitMap};
 use crate::migration::{MigState, MigrationSm};
-use crate::mrpool::MrBlockId;
+use crate::mrpool::{MemTier, MrBlockId};
 use crate::queues::WriteSet;
 use crate::sim::{Ns, Server};
 use crate::NodeId;
@@ -48,6 +48,10 @@ pub(crate) struct ActiveMigration {
     pub(crate) src: NodeId,
     /// Victim MR block on `src`.
     pub(crate) src_block: MrBlockId,
+    /// Memory tier the victim block lives in on `src`.
+    pub(crate) src_tier: MemTier,
+    /// Memory tier the replacement block is registered in on `dst`.
+    pub(crate) dst_tier: MemTier,
     /// Block size (bytes copied, bytes reclaimed).
     pub(crate) block_bytes: u64,
     /// Victim selected / machine enqueued at this time.

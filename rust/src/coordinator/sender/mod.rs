@@ -53,6 +53,7 @@ use crate::config::{Config, LatencyConfig, ValetConfig};
 use crate::coordinator::fast::ShardFastPath;
 use crate::eviction::VictimPolicy;
 use crate::migration::{ctrl_rtt, MigAction, MigEvent, MigState, MigrationSm};
+use crate::mrpool::{MemTier, MrBlockId, MrState};
 use crate::placement::{Candidate, Placement};
 use crate::queues::WriteSet;
 use crate::replication::choose_replicas;
@@ -363,9 +364,10 @@ impl RemoteSender {
             };
             let t = t0.max(ready) + self.lat.mrpool_get;
             let bytes = run.len() as u64 * PAGE_SIZE;
-            let verb = cl.fabric.rdma_read(t, cl.sender, primary, bytes);
+            let verb = cl.tiered_read(t, primary, block, bytes);
             if demand {
                 cl.mrpools[primary].touch_read(block, verb.end);
+                self.seq.note_demand_read(cl, unit);
             }
             let lane = self.lane_of(primary);
             for &p in run {
@@ -376,6 +378,15 @@ impl RemoteSender {
             i = j;
         }
         slowest
+    }
+
+    /// Feed the admission predictor a demand-read observation for
+    /// `unit` (a no-op unless the pool tier and its predictor are on).
+    /// The single-page engine miss path posts its verb directly, so it
+    /// reports here; the batched path reports inside
+    /// [`Self::read_batch`].
+    pub(crate) fn note_demand_read(&mut self, cl: &ClusterState, unit: u64) {
+        self.seq.note_demand_read(cl, unit);
     }
 
     /// The migration machine `unit`'s writes park against, if any (at
@@ -495,12 +506,14 @@ impl RemoteSender {
             .get(unit)
             .expect("ensure_unit mapped this unit");
         let mut t = t0.max(ready).max(u.wlocked_until);
-        // mrpool get + one-sided write per replica (queue on our NIC)
+        // mrpool get + one-sided write per replica (queue on our NIC);
+        // a pool-tier replica takes the pooled-appliance verb instead
         t += self.lat.mrpool_get;
         let nodes = u.nodes.clone();
+        let blocks = u.blocks.clone();
         let mut done = t;
-        for &n in &nodes {
-            let verb = cl.fabric.rdma_write(t, cl.sender, n, bytes);
+        for (&n, &b) in nodes.iter().zip(blocks.iter()) {
+            let verb = cl.tiered_write(t, n, b, bytes);
             done = done.max(verb.end);
         }
         // optional disk backup, off the critical path
@@ -561,9 +574,10 @@ impl RemoteSender {
             .get(unit)
             .expect("ensure_unit mapped this unit");
         let nodes = u.nodes.clone();
+        let blocks = u.blocks.clone();
         let mut done = t + self.lat.mrpool_get;
-        for &n in &nodes {
-            let verb = cl.fabric.rdma_write(t, cl.sender, n, bytes);
+        for (&n, &b) in nodes.iter().zip(blocks.iter()) {
+            let verb = cl.tiered_write(t, n, b, bytes);
             done = done.max(verb.end);
         }
         fast.metrics.write_parts.add("rdma", done - t);
@@ -615,6 +629,9 @@ impl RemoteSender {
             .flat_map(|l| l.migs.iter())
             .filter(|m| {
                 m.src == node
+                    // a pool-tier source frees appliance capacity, not
+                    // the DRAM this pressure episode is reclaiming
+                    && m.src_tier == MemTier::Remote
                     && matches!(
                         m.sm.state(),
                         MigState::ChoosingDest
@@ -673,6 +690,10 @@ impl RemoteSender {
                     {
                         b.state = crate::mrpool::MrState::Migrating;
                     }
+                    let src_tier = cl.mrpools[node]
+                        .get(choice.block)
+                        .map(|b| b.tier)
+                        .unwrap_or(MemTier::Remote);
                     let stamp = self.seq.next_mig_seq();
                     let lane = self.lane_of(node);
                     self.lanes[lane].migs.push(ActiveMigration {
@@ -680,6 +701,8 @@ impl RemoteSender {
                         unit: unit_id,
                         src: node,
                         src_block: choice.block,
+                        src_tier,
+                        dst_tier: MemTier::Remote,
                         block_bytes,
                         scheduled: t,
                         dst: None,
@@ -711,24 +734,31 @@ impl RemoteSender {
         out
     }
 
-    /// Bytes other pending migrations have promised to `node` (their MR
-    /// blocks register only when their copy starts, so raw free bytes
-    /// would over-commit a popular peer).
-    fn reserved_on(&self, node: NodeId) -> u64 {
+    /// Bytes other pending migrations have promised to `node`'s `tier`
+    /// (their MR blocks register only when their copy starts, so raw
+    /// free bytes would over-commit a popular peer).
+    fn reserved_on(&self, node: NodeId, tier: MemTier) -> u64 {
         self.lanes
             .iter()
             .flat_map(|l| l.migs.iter())
-            .filter(|m| m.dst == Some(node) && m.dst_block.is_none())
+            .filter(|m| {
+                m.dst == Some(node)
+                    && m.dst_tier == tier
+                    && m.dst_block.is_none()
+            })
             .map(|m| m.block_bytes)
             .sum()
     }
 
     /// THE destination filter, shared by the list builder and the
     /// cheap existence check so the two can never drift: a candidate
-    /// must not be the source or one of the unit's replica holders,
-    /// must not already be the destination of another in-flight
-    /// migration of the same unit (replica distinctness), and must
-    /// have room for the block after reservations.
+    /// must be in the wanted tier, must not be the source (unless the
+    /// move changes tier — a promotion/demotion may land on the same
+    /// node) or one of the unit's *other* replica holders, must not
+    /// already be the destination of another in-flight migration of
+    /// the same unit (replica distinctness), and must have room for
+    /// the block after reservations.
+    #[allow(clippy::too_many_arguments)]
     fn reclaim_candidate_ok(
         &self,
         c: &Candidate,
@@ -736,15 +766,21 @@ impl RemoteSender {
         src: NodeId,
         block_bytes: u64,
         holders: &[NodeId],
+        dst_tier: MemTier,
+        cross_tier: bool,
     ) -> bool {
-        c.node != src
-            && !holders.contains(&c.node)
+        let src_ok = c.node != src || cross_tier;
+        let holder_ok = !holders.contains(&c.node)
+            || (cross_tier && c.node == src);
+        c.tier == dst_tier
+            && src_ok
+            && holder_ok
             && !self
                 .lanes
                 .iter()
                 .flat_map(|l| l.migs.iter())
                 .any(|m| m.unit == unit && m.dst == Some(c.node))
-            && c.free_bytes.saturating_sub(self.reserved_on(c.node))
+            && c.free_bytes.saturating_sub(self.reserved_on(c.node, c.tier))
                 >= block_bytes
     }
 
@@ -775,16 +811,26 @@ impl RemoteSender {
             .lanes
             .iter()
             .flat_map(|l| l.migs.iter())
-            .filter(|m| m.dst.is_none())
+            .filter(|m| m.dst.is_none() && m.dst_tier == MemTier::Remote)
             .map(|m| m.block_bytes)
             .sum();
         let mut fits_somewhere = false;
         let mut spare = 0u64;
         for c in cl.candidates() {
-            if !self.reclaim_candidate_ok(&c, unit, src, 0, holders) {
+            if !self.reclaim_candidate_ok(
+                &c,
+                unit,
+                src,
+                0,
+                holders,
+                MemTier::Remote,
+                false,
+            ) {
                 continue;
             }
-            let free = c.free_bytes.saturating_sub(self.reserved_on(c.node));
+            let free = c
+                .free_bytes
+                .saturating_sub(self.reserved_on(c.node, c.tier));
             if free >= block_bytes {
                 fits_somewhere = true;
             }
@@ -793,26 +839,31 @@ impl RemoteSender {
         fits_somewhere && spare >= queued.saturating_add(block_bytes)
     }
 
-    /// Destination candidates for migrating `unit` off `src` (see
-    /// [`Self::reclaim_candidate_ok`] for the filter), with the
-    /// reserved bytes already subtracted so the placement policy ranks
-    /// peers by what they can actually still take.
+    /// Destination candidates for migrating `unit` off `src` into
+    /// `dst_tier` (see [`Self::reclaim_candidate_ok`] for the filter),
+    /// with the reserved bytes already subtracted so the placement
+    /// policy ranks peers by what they can actually still take.
     fn reclaim_candidates(
         &self,
         cl: &ClusterState,
         unit: u64,
         src: NodeId,
         block_bytes: u64,
+        dst_tier: MemTier,
+        cross_tier: bool,
     ) -> Vec<Candidate> {
         let holders = self.unit_holders(unit);
         cl.candidates()
             .into_iter()
             .filter(|c| {
-                self.reclaim_candidate_ok(c, unit, src, block_bytes, holders)
+                self.reclaim_candidate_ok(
+                    c, unit, src, block_bytes, holders, dst_tier, cross_tier,
+                )
             })
             .map(|mut c| {
-                c.free_bytes =
-                    c.free_bytes.saturating_sub(self.reserved_on(c.node));
+                c.free_bytes = c
+                    .free_bytes
+                    .saturating_sub(self.reserved_on(c.node, c.tier));
                 c
             })
             .collect()
@@ -904,6 +955,7 @@ impl RemoteSender {
     /// tables are empty. This is the sequencer tick: cross-lane by
     /// design, unlike the per-lane completion ticks.
     pub fn advance_migrations(&mut self, cl: &mut ClusterState, now: Ns) {
+        self.advance_tiering(cl, now);
         let mut stepped = false;
         while let Some((t, mref, activation)) = self.next_migration_action()
         {
@@ -931,6 +983,122 @@ impl RemoteSender {
         }
     }
 
+    /// Run every promotion/demotion scan due by `now` (the tier pump).
+    /// A strict no-op while the pool tier is disabled — the scan clock
+    /// never advances and no machine is ever enqueued, which is part of
+    /// the off-means-bit-for-bit pin.
+    pub fn advance_tiering(&mut self, cl: &mut ClusterState, now: Ns) {
+        if !cl.pool_cfg.enabled {
+            return;
+        }
+        let period = cl.pool_cfg.scan_period.max(1);
+        while self.seq.next_tier_scan <= now {
+            let t = self.seq.next_tier_scan;
+            self.scan_tiers(cl, t);
+            self.seq.next_tier_scan += period;
+        }
+    }
+
+    /// One promotion/demotion scan at virtual time `t`, driven by the
+    /// §3.5 activity tags: a pool-resident block idle past
+    /// `demote_after` demotes toward RDMA-remote (freeing appliance
+    /// capacity for hotter data); an RDMA-remote block with a demand
+    /// read within `promote_max_idle` promotes toward the host into
+    /// the pool tier. Moves ride the ordinary migration pipeline —
+    /// parked writes, COMMIT remap, audit laws — as cross-tier
+    /// machines whose destination may be the same node.
+    fn scan_tiers(&mut self, cl: &mut ClusterState, t: Ns) {
+        let owner = self.seq.owner_tag.unwrap_or(cl.sender);
+        let promote_max_idle = cl.pool_cfg.promote_max_idle;
+        let demote_after = cl.pool_cfg.demote_after;
+        // cheap admission guard for promotions: some pool slice must
+        // have raw room (the precise reservation-aware check runs at
+        // activation, which cancels the move if the room evaporated)
+        let pool_room: u64 =
+            (0..cl.mrpools.len()).map(|n| cl.pool_free(n)).sum();
+        let mut moves: Vec<(NodeId, MrBlockId, MemTier, MemTier, u64)> =
+            Vec::new();
+        for (node, pool) in cl.mrpools.iter().enumerate() {
+            for b in pool.blocks() {
+                if b.state != MrState::Active || b.owner != owner {
+                    continue;
+                }
+                match b.tier {
+                    MemTier::Pool => {
+                        if b.non_activity_duration(t) > demote_after {
+                            moves.push((
+                                node,
+                                b.id,
+                                MemTier::Pool,
+                                MemTier::Remote,
+                                b.bytes,
+                            ));
+                        }
+                    }
+                    MemTier::Remote => {
+                        if b.last_read > 0
+                            && t.saturating_sub(b.last_read)
+                                <= promote_max_idle
+                            && pool_room >= b.bytes
+                        {
+                            moves.push((
+                                node,
+                                b.id,
+                                MemTier::Remote,
+                                MemTier::Pool,
+                                b.bytes,
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        for (node, block, src_tier, dst_tier, block_bytes) in moves {
+            let Some(unit) = self.seq.units.unit_of_block(node, block)
+            else {
+                continue;
+            };
+            // one live machine per unit is an audited law
+            if self
+                .lanes
+                .iter()
+                .flat_map(|l| l.migs.iter())
+                .any(|m| m.unit == unit)
+            {
+                continue;
+            }
+            let mut sm = MigrationSm::new();
+            sm.on_event(MigEvent::PressureReport { block, src: node })
+                .expect("fresh machine accepts a pressure report");
+            sm.set_cross_tier();
+            if let Some(b) = cl.mrpools[node].get_mut(block) {
+                b.state = MrState::Migrating;
+            }
+            let stamp = self.seq.next_mig_seq();
+            let lane = self.lane_of(node);
+            self.lanes[lane].migs.push(ActiveMigration {
+                sm,
+                unit,
+                src: node,
+                src_block: block,
+                src_tier,
+                dst_tier,
+                block_bytes,
+                scheduled: t,
+                dst: None,
+                dst_block: None,
+                activated: 0,
+                park_from: 0,
+                copy_start: 0,
+                copy_end: 0,
+                phase_done: 0,
+                parked: Vec::new(),
+                parked_bytes: 0,
+                seq: stamp,
+            });
+        }
+    }
+
     /// Give the machine at `mref` its concurrency slot at `t_act`: poll
     /// candidates (one control RTT each), choose the destination
     /// through the pressure-aware placement hook, park writes
@@ -944,20 +1112,38 @@ impl RemoteSender {
         t_act: Ns,
     ) {
         let rtt = ctrl_rtt(&self.lat);
-        let (unit, src, block_bytes) = {
+        let (unit, src, block_bytes, dst_tier, cross_tier) = {
             let m = &self.lanes[li].migs[mi];
-            (m.unit, m.src, m.block_bytes)
+            (
+                m.unit,
+                m.src,
+                m.block_bytes,
+                m.dst_tier,
+                m.sm.is_cross_tier(),
+            )
         };
-        let cands = self.reclaim_candidates(cl, unit, src, block_bytes);
+        let cands = self
+            .reclaim_candidates(cl, unit, src, block_bytes, dst_tier, cross_tier);
         let dst = self.seq.reclaim_placement.pick(&cands);
-        let Some(dst) = dst else {
-            // every candidate filled up while we were queued: delete
-            // (surviving replicas, if any, keep serving reads)
+        let Some(placed) = dst else {
             let m = self.lanes[li].migs.remove(mi);
-            self.seq.delete_victim(cl, m.src, m.src_block, Some(m.unit));
             self.seq.mig_slot_free = self.seq.mig_slot_free.max(t_act);
+            if cross_tier {
+                // a tier move with nowhere to go is simply abandoned:
+                // the block stays where it is and leaves the table
+                if let Some(b) = cl.mrpools[m.src].get_mut(m.src_block) {
+                    b.state = MrState::Active;
+                }
+                self.seq.mig_stats.tier_canceled += 1;
+            } else {
+                // every candidate filled up while we were queued: delete
+                // (surviving replicas, if any, keep serving reads)
+                self.seq.delete_victim(cl, m.src, m.src_block, Some(m.unit));
+            }
             return;
         };
+        debug_assert_eq!(placed.tier, dst_tier);
+        let dst = placed.node;
         let m = &mut self.lanes[li].migs[mi];
         let actions = m
             .sm
@@ -991,21 +1177,48 @@ impl RemoteSender {
                 let dst = m.dst.expect("active migration has dst");
                 // src↔dst connection for the copy (may be new), then
                 // the bulk copy on the source's NIC; the destination
-                // registers its fresh MR block when the copy starts
-                let (t_conn, _) =
-                    cl.fabric.ensure_connected(m.phase_done, m.src, dst);
+                // registers its fresh MR block when the copy starts.
+                // Copies touching the pooled appliance need no queue
+                // pair — the pool is load/store-reachable from every
+                // node — so those skip the connection and take pool
+                // verbs (a same-node demotion pulls out of the local
+                // pool slice with a pool read).
+                let pool_copy = m.dst_tier == MemTier::Pool
+                    || (dst == m.src && m.src_tier == MemTier::Pool);
+                let t_conn = if pool_copy {
+                    m.phase_done
+                } else {
+                    cl.fabric.ensure_connected(m.phase_done, m.src, dst).0
+                };
                 m.copy_start = t_conn;
-                m.dst_block = Some(cl.mrpools[dst].register(
+                m.dst_block = Some(cl.mrpools[dst].register_tier(
                     owner,
                     m.block_bytes,
                     m.copy_start,
+                    m.dst_tier,
                 ));
-                let verb = cl.fabric.rdma_write(
-                    m.copy_start,
-                    m.src,
-                    dst,
-                    m.block_bytes,
-                );
+                let verb = if m.dst_tier == MemTier::Pool {
+                    cl.fabric.pool_write(
+                        m.copy_start,
+                        m.src,
+                        dst,
+                        m.block_bytes,
+                    )
+                } else if pool_copy {
+                    cl.fabric.pool_read(
+                        m.copy_start,
+                        m.src,
+                        dst,
+                        m.block_bytes,
+                    )
+                } else {
+                    cl.fabric.rdma_write(
+                        m.copy_start,
+                        m.src,
+                        dst,
+                        m.block_bytes,
+                    )
+                };
                 m.copy_end = verb.end;
                 m.phase_done = m.copy_end;
             }
@@ -1038,7 +1251,7 @@ impl RemoteSender {
         debug_assert_eq!(m.sm.state(), MigState::Done);
         let dst = m.dst.expect("active migration has dst");
         let dst_block = m.dst_block.expect("copy registered the block");
-        let mut flush_nodes = vec![dst];
+        let mut flush_to = vec![(dst, dst_block)];
         if let Some(u) = self.seq.units.get_mut(m.unit) {
             for (n, b) in u.nodes.iter_mut().zip(u.blocks.iter_mut()) {
                 if *n == m.src && *b == m.src_block {
@@ -1057,7 +1270,12 @@ impl RemoteSender {
                 "replica set must stay distinct across a remap"
             );
             u.wlocked_until = u.wlocked_until.max(done);
-            flush_nodes = u.nodes.clone();
+            flush_to = u
+                .nodes
+                .iter()
+                .copied()
+                .zip(u.blocks.iter().copied())
+                .collect();
         }
         // FlushParkedWrites: one coalesced message per replica carrying
         // everything that parked during the migration; completions land
@@ -1068,9 +1286,8 @@ impl RemoteSender {
         if !m.parked.is_empty() {
             let t = done + self.lat.mrpool_get;
             let mut flush_done = t;
-            for &n in &flush_nodes {
-                let verb =
-                    cl.fabric.rdma_write(t, cl.sender, n, m.parked_bytes);
+            for &(n, b) in &flush_to {
+                let verb = cl.tiered_write(t, n, b, m.parked_bytes);
                 flush_done = flush_done.max(verb.end);
             }
             self.seq.mig_stats.flushed_sets += m.parked.len() as u64;
@@ -1105,10 +1322,19 @@ impl RemoteSender {
         self.seq.mig_stats.completed += 1;
         self.seq.commit_seq += 1;
         self.seq.mig_slot_free = self.seq.mig_slot_free.max(done);
+        if m.src_tier != m.dst_tier {
+            if m.dst_tier == MemTier::Pool {
+                self.seq.mig_stats.promotions += 1;
+            } else {
+                self.seq.mig_stats.demotions += 1;
+            }
+        }
         self.seq.mig_records.push(MigrationRecord {
             unit: m.unit,
             src: m.src,
             dst,
+            src_tier: m.src_tier,
+            dst_tier: m.dst_tier,
             block_bytes: m.block_bytes,
             scheduled: m.scheduled,
             activated: m.activated,
@@ -1125,8 +1351,10 @@ impl RemoteSender {
     /// Audit the slow path's conservation laws; returns every violation
     /// found (empty = clean). Always checks the lane migration tables
     /// ([`Law::MigrationLegality`], [`Law::MigratingNotReselected`],
-    /// [`Law::ParkedFlushOnce`] — details carry the owning lane) and
-    /// the cross-lane commit ledger ([`Law::LaneSequencer`]); with
+    /// [`Law::ParkedFlushOnce`] — details carry the owning lane), the
+    /// cross-lane commit ledger ([`Law::LaneSequencer`]) and the
+    /// per-node pool-tier byte ledger plus promotion/demotion
+    /// conservation ([`Law::TierAccounting`]); with
     /// `thorough` it also re-validates every live unit's replica set
     /// against [`choose_replicas`] ([`Law::ReplicaDistinct`]) — the
     /// sweep the crossing hooks sample and the fuzzer/tests run in
@@ -1348,6 +1576,49 @@ impl RemoteSender {
             || format!("{:?}", self.seq.mig_stats),
         );
 
+        // -- tier-accounting: the cached pool-tier byte ledger on every
+        // node matches a recount of its resident pool-tier blocks, and
+        // the promotion/demotion counters are conserved against the
+        // committed cross-tier migration records.
+        for (node, pool) in cl.mrpools.iter().enumerate() {
+            audit::check(
+                &mut out,
+                pool.pool_bytes() == pool.pool_bytes_recount(),
+                Law::TierAccounting,
+                None,
+                || {
+                    format!(
+                        "node {node} pool-tier ledger {} != recount {}",
+                        pool.pool_bytes(),
+                        pool.pool_bytes_recount()
+                    )
+                },
+                || format!("blocks={}", pool.blocks().len()),
+            );
+        }
+        let tier_moves = self
+            .seq
+            .mig_records
+            .iter()
+            .filter(|r| r.src_tier != r.dst_tier)
+            .count() as u64;
+        audit::check(
+            &mut out,
+            self.seq.mig_stats.promotions + self.seq.mig_stats.demotions
+                == tier_moves,
+            Law::TierAccounting,
+            None,
+            || {
+                format!(
+                    "promotions {} + demotions {} != cross-tier records {}",
+                    self.seq.mig_stats.promotions,
+                    self.seq.mig_stats.demotions,
+                    tier_moves
+                )
+            },
+            || format!("{:?}", self.seq.mig_stats),
+        );
+
         // -- replica-distinct (thorough sweep): the §5.1 chooser is the
         // oracle — re-deriving the replica list from itself must be a
         // fixed point (distinct nodes, sender excluded, primary first).
@@ -1442,6 +1713,8 @@ impl RemoteSender {
             unit,
             src: 1,
             src_block: 0,
+            src_tier: MemTier::Remote,
+            dst_tier: MemTier::Remote,
             block_bytes: 0,
             scheduled: 10,
             dst: None, // the corruption: active yet destination-less
@@ -1471,5 +1744,13 @@ impl RemoteSender {
     #[doc(hidden)]
     pub fn audit_corrupt_commit_ledger(&mut self) {
         self.seq.commit_seq += 1;
+    }
+
+    /// Test-only corruption hook for [`Law::TierAccounting`]: claim a
+    /// promotion no cross-tier migration record backs.
+    #[cfg(any(feature = "audit", debug_assertions))]
+    #[doc(hidden)]
+    pub fn audit_corrupt_tier_ledger(&mut self) {
+        self.seq.mig_stats.promotions += 1;
     }
 }

@@ -24,8 +24,8 @@ use std::collections::HashMap;
 use crate::backends::{ClusterState, Unit, UnitMap};
 use crate::config::Config;
 use crate::eviction::{ActivityBased, VictimPolicy};
-use crate::mrpool::MrBlockId;
-use crate::placement::{LeastPressured, Placement, PowerOfTwo};
+use crate::mrpool::{MemTier, MrBlockId};
+use crate::placement::{Candidate, LeastPressured, Placed, Placement, PowerOfTwo};
 use crate::queues::WriteSet;
 use crate::replication::choose_replicas;
 use crate::sim::Ns;
@@ -41,6 +41,10 @@ pub struct MigrationRecord {
     pub src: NodeId,
     /// Destination peer.
     pub dst: NodeId,
+    /// Memory tier the victim block lived in on `src`.
+    pub src_tier: MemTier,
+    /// Memory tier the replacement block was registered in on `dst`.
+    pub dst_tier: MemTier,
     /// Bytes moved.
     pub block_bytes: u64,
     /// Victim selected at this time.
@@ -78,6 +82,17 @@ pub struct MigStats {
     /// pairwise — the `reclaim` experiment's overlap evidence (0 under
     /// `max_concurrent_migrations = 1`).
     pub overlap_ns: Ns,
+    /// Cross-tier moves that landed a block in the pool tier (toward
+    /// the host — a hotter tier) and reached COMMIT.
+    pub promotions: u64,
+    /// Cross-tier moves that landed a block in the RDMA-remote tier
+    /// (away from the host — a colder tier) and reached COMMIT.
+    pub demotions: u64,
+    /// Cross-tier moves abandoned at activation for lack of a
+    /// destination with room. Unlike pressure reclaim (which deletes
+    /// the victim as a last resort), a failed tier move simply leaves
+    /// the block where it was.
+    pub tier_canceled: u64,
 }
 
 /// Cross-peer slow-path state (see the module docs for what qualifies).
@@ -105,8 +120,9 @@ pub(crate) struct Sequencer {
     /// [`Self::ensure_unit`] when the mapping actually happens. With a
     /// single lane the pick is made-and-consumed within one drive step
     /// (routing is only consulted for sendable sets), reproducing the
-    /// pre-split pick order exactly.
-    pub(crate) pending_primary: HashMap<u64, NodeId>,
+    /// pre-split pick order exactly. Carries the full `(node, tier)`
+    /// pick so the mapping lands the primary in the tier routing chose.
+    pub(crate) pending_primary: HashMap<u64, Placed>,
     /// Milestones of completed migrations, in completion order.
     pub(crate) mig_records: Vec<MigrationRecord>,
     /// Aggregate reclaim counters.
@@ -123,6 +139,18 @@ pub(crate) struct Sequencer {
     /// ([`crate::audit::Law::LaneSequencer`]) pins this to
     /// `mig_stats.completed` and `mig_records.len()`.
     pub(crate) commit_seq: u64,
+    /// Admission-predictor observation window (Pond-style): units mapped
+    /// recently, with the mapping time and whether a demand read has hit
+    /// them yet. Entries older than `pool_tier.predictor_window` retire
+    /// into `insensitive_score`. Empty unless the pool tier (and the
+    /// predictor) is enabled.
+    pub(crate) recent_maps: Vec<(u64, Ns, bool)>,
+    /// EWMA of the fraction of retired observation-window entries that
+    /// never saw a demand read — the predicted probability that a new
+    /// write set is latency-insensitive and should be placed cold-first.
+    pub(crate) insensitive_score: f64,
+    /// Next promotion/demotion scan fires at this virtual time.
+    pub(crate) next_tier_scan: Ns,
 }
 
 impl Sequencer {
@@ -141,6 +169,9 @@ impl Sequencer {
             mig_slot_free: 0,
             mig_seq: 0,
             commit_seq: 0,
+            recent_maps: Vec::new(),
+            insensitive_score: 0.0,
+            next_tier_scan: cfg.valet.pool_tier.scan_period,
         }
     }
 
@@ -162,16 +193,111 @@ impl Sequencer {
                 }
             }
         }
-        if let Some(&n) = self.pending_primary.get(&unit) {
-            return n;
+        if let Some(p) = self.pending_primary.get(&unit) {
+            return p.node;
         }
-        let cands = cl.candidates();
-        let primary = self
-            .placement
-            .pick(&cands)
-            .expect("cluster has at least one peer");
+        let primary = self.pick_primary(cl);
         self.pending_primary.insert(unit, primary);
-        primary
+        primary.node
+    }
+
+    /// Pick the `(node, tier)` for a new unit's primary replica. With
+    /// the pool tier off the candidate list is exactly the pre-tier
+    /// remote list, so the placement hook sees identical input (and the
+    /// stochastic policies make identical RNG draws). With it on, the
+    /// admission predictor first narrows the list.
+    fn pick_primary(&mut self, cl: &ClusterState) -> Placed {
+        let cands = cl.candidates();
+        if cl.pool_cfg.enabled {
+            let filtered = self.admission_filter(cl, &cands);
+            return self
+                .placement
+                .pick(&filtered)
+                .expect("cluster has at least one peer");
+        }
+        self.placement
+            .pick(&cands)
+            .expect("cluster has at least one peer")
+    }
+
+    /// Pond-style admission filter (pool tier on). Predicted
+    /// latency-insensitive write sets are placed cold-first: only
+    /// RDMA-remote candidates survive, keeping pool capacity for data
+    /// the read path will actually hit. Predicted-sensitive sets prefer
+    /// a pool slot with room; if none exists the full list stands. With
+    /// the predictor disabled the list is untouched (naive tiering —
+    /// the `no_predictor` ablation).
+    fn admission_filter(
+        &self,
+        cl: &ClusterState,
+        cands: &[Candidate],
+    ) -> Vec<Candidate> {
+        if !cl.pool_cfg.predictor {
+            return cands.to_vec();
+        }
+        if self.insensitive_score > 0.5 {
+            let cold: Vec<Candidate> = cands
+                .iter()
+                .filter(|c| c.tier == MemTier::Remote)
+                .copied()
+                .collect();
+            if !cold.is_empty() {
+                return cold;
+            }
+            return cands.to_vec();
+        }
+        let pool: Vec<Candidate> = cands
+            .iter()
+            .filter(|c| {
+                c.tier == MemTier::Pool
+                    && c.free_bytes >= self.units.unit_bytes
+            })
+            .copied()
+            .collect();
+        if pool.is_empty() {
+            return cands.to_vec();
+        }
+        pool
+    }
+
+    /// Retire observation-window entries older than the predictor
+    /// window into the insensitivity EWMA, then start observing `unit`.
+    fn observe_mapping(&mut self, cl: &ClusterState, now: Ns, unit: u64) {
+        if !cl.pool_cfg.enabled || !cl.pool_cfg.predictor {
+            return;
+        }
+        let window = cl.pool_cfg.predictor_window;
+        let mut i = 0;
+        while i < self.recent_maps.len() {
+            let (_, mapped_at, saw_read) = self.recent_maps[i];
+            if mapped_at + window <= now {
+                let sample = if saw_read { 0.0 } else { 1.0 };
+                self.insensitive_score =
+                    0.7 * self.insensitive_score + 0.3 * sample;
+                self.recent_maps.remove(i);
+            } else {
+                i += 1;
+            }
+        }
+        const OBSERVED_CAP: usize = 256;
+        if self.recent_maps.len() >= OBSERVED_CAP {
+            self.recent_maps.remove(0);
+        }
+        self.recent_maps.push((unit, now, false));
+    }
+
+    /// Tell the admission predictor a demand read hit `unit` — the
+    /// evidence that its write set was latency-*sensitive*. No-op
+    /// unless the pool tier and the predictor are on.
+    pub(crate) fn note_demand_read(&mut self, cl: &ClusterState, unit: u64) {
+        if !cl.pool_cfg.enabled || !cl.pool_cfg.predictor {
+            return;
+        }
+        for entry in self.recent_maps.iter_mut() {
+            if entry.0 == unit {
+                entry.2 = true;
+            }
+        }
     }
 
     /// Ensure `unit` has a remote mapping; returns when it is usable.
@@ -193,24 +319,48 @@ impl Sequencer {
         // hook if the unit was never routed), then replicas.
         let cands = cl.candidates();
         let primary = match self.pending_primary.remove(&unit) {
-            Some(n) => n,
-            None => self
-                .placement
-                .pick(&cands)
-                .expect("cluster has at least one peer"),
+            Some(p) => p,
+            None => self.pick_primary(cl),
         };
-        let cand_nodes: Vec<NodeId> = cands.iter().map(|c| c.node).collect();
-        let nodes = choose_replicas(cl.sender, primary, &cand_nodes, replicas);
+        self.observe_mapping(cl, now, unit);
+        // Replica candidates are *nodes*: with the pool tier on a peer
+        // appears once per tier, so collapse to first occurrence (an
+        // identity transform with the tier off).
+        let mut cand_nodes: Vec<NodeId> = Vec::with_capacity(cands.len());
+        for c in &cands {
+            if !cand_nodes.contains(&c.node) {
+                cand_nodes.push(c.node);
+            }
+        }
+        let nodes =
+            choose_replicas(cl.sender, primary.node, &cand_nodes, replicas);
         // Connection (if new) + mapping, charged sequentially per node.
+        // A pool-tier primary needs no queue pair: it is mapped through
+        // the pooled appliance's fabric manager (cheaper than MAP_MR).
+        // Followers always land RDMA-remote — the replica set is the
+        // durability story and pool capacity is for hot primaries.
         let mut t = now;
-        for &n in &nodes {
-            let (tc, _newc) = cl.fabric.ensure_connected(t, cl.sender, n);
-            t = cl.fabric.map_mr(tc, cl.sender);
+        for (i, &n) in nodes.iter().enumerate() {
+            if i == 0 && primary.tier == MemTier::Pool {
+                t = cl.fabric.pool_map(t, cl.sender);
+            } else {
+                let (tc, _newc) = cl.fabric.ensure_connected(t, cl.sender, n);
+                t = cl.fabric.map_mr(tc, cl.sender);
+            }
         }
         let owner = self.owner_tag.unwrap_or(cl.sender);
         let blocks = nodes
             .iter()
-            .map(|&n| cl.mrpools[n].register(owner, self.units.unit_bytes, t))
+            .enumerate()
+            .map(|(i, &n)| {
+                let tier = if i == 0 { primary.tier } else { MemTier::Remote };
+                cl.mrpools[n].register_tier(
+                    owner,
+                    self.units.unit_bytes,
+                    t,
+                    tier,
+                )
+            })
             .collect();
         self.units.insert(
             unit,

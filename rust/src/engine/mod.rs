@@ -469,11 +469,21 @@ pub fn shard_read_miss(
         t = t.max(ready_at);
         t += mrpool_get;
         fast.metrics.read_parts.add("mrpool", mrpool_get);
-        let verb = cl.fabric.rdma_read(t, cl.sender, primary, PAGE_SIZE);
+        // fetch with the verb of the primary block's tier: a pool-tier
+        // hit takes the NUMA-hop appliance access, not an RDMA READ
+        let pool_hit = cl.block_tier(primary, primary_block)
+            == crate::mrpool::MemTier::Pool;
+        let verb = cl.tiered_read(t, primary, primary_block, PAGE_SIZE);
         // demand-read activity: §3.5 victim ranking sees read phases
         cl.mrpools[primary].touch_read(primary_block, verb.end);
+        sender.note_demand_read(cl, unit_id);
         sender.note_inflight_read(now, page, verb.end);
-        fast.metrics.read_parts.add("rdma", verb.end - t);
+        if pool_hit {
+            fast.metrics.read_parts.add("pool", verb.end - t);
+            fast.metrics.pool_hits += 1;
+        } else {
+            fast.metrics.read_parts.add("rdma", verb.end - t);
+        }
         t = verb.end + copy_read_page;
         fast.metrics.read_parts.add("copy", copy_read_page);
         fast.metrics.remote_hits += 1;
@@ -713,6 +723,24 @@ pub fn shard_read_block(
         fast.metrics.read_parts.add("mrpool", mrpool_get);
         fast.metrics.read_parts.add("rdma", done.saturating_sub(t));
         fast.metrics.remote_hits += fetched;
+        if cl.pool_cfg.enabled {
+            // attribute pool-tier hits: pages whose unit primary is
+            // pool-resident were served by the appliance verb
+            for &p in fetch.iter() {
+                let unit = sender.units().unit_of(p);
+                if let Some(u) = sender.units().get(unit) {
+                    if let (Some(&n), Some(&b)) =
+                        (u.nodes.first(), u.blocks.first())
+                    {
+                        if cl.block_tier(n, b)
+                            == crate::mrpool::MemTier::Pool
+                        {
+                            fast.metrics.pool_hits += 1;
+                        }
+                    }
+                }
+            }
+        }
         wait_until = wait_until.max(done);
         source = worse_source(source, Source::Remote);
     }

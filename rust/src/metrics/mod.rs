@@ -33,6 +33,10 @@ pub struct RunMetrics {
     pub local_hits: u64,
     /// Reads served by a remote node.
     pub remote_hits: u64,
+    /// Subset of `remote_hits` served from a pool-tier (CXL-style
+    /// appliance) block rather than a peer's RDMA-remote DRAM. Always 0
+    /// with `valet.pool_tier` off.
+    pub pool_hits: u64,
     /// Reads that fell through to disk.
     pub disk_reads: u64,
     /// Writes redirected to disk (Infiniswap connection/mapping windows).
@@ -110,6 +114,7 @@ impl RunMetrics {
         self.finished_at = self.finished_at.max(other.finished_at);
         self.local_hits += other.local_hits;
         self.remote_hits += other.remote_hits;
+        self.pool_hits += other.pool_hits;
         self.disk_reads += other.disk_reads;
         self.disk_writes += other.disk_writes;
         self.prefetch_issued += other.prefetch_issued;

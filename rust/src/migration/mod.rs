@@ -108,6 +108,11 @@ pub struct MigrationSm {
     pub src: Option<NodeId>,
     /// Destination peer (chosen in ChoosingDest).
     pub dst: Option<NodeId>,
+    /// The block is changing memory *tier*, not (only) node. Cross-tier
+    /// moves may legally stay on the same node — a promotion/demotion
+    /// between a peer's pooled slice and its DRAM; same-node same-tier
+    /// destinations remain a protocol bug.
+    cross_tier: bool,
 }
 
 impl Default for MigrationSm {
@@ -124,7 +129,20 @@ impl MigrationSm {
             block: None,
             src: None,
             dst: None,
+            cross_tier: false,
         }
+    }
+
+    /// Mark this migration as a cross-tier move (promotion/demotion):
+    /// the destination may then equal the source node, since the block
+    /// changes tier. Must be set before `DestChosen`.
+    pub fn set_cross_tier(&mut self) {
+        self.cross_tier = true;
+    }
+
+    /// Is this machine a cross-tier (promotion/demotion) move?
+    pub fn is_cross_tier(&self) -> bool {
+        self.cross_tier
     }
 
     /// Current phase.
@@ -168,8 +186,9 @@ impl MigrationSm {
                 Ok(vec![QueryCandidates])
             }
             (ChoosingDest, DestChosen { dst }) => {
-                if Some(dst) == self.src {
-                    // must move to a *different* node
+                if Some(dst) == self.src && !self.cross_tier {
+                    // must move to a *different* node — unless the move
+                    // is a tier change, which legally stays put
                     return Err(bad(self));
                 }
                 self.dst = Some(dst);
@@ -323,6 +342,21 @@ mod tests {
         sm.on_event(MigEvent::PressureReport { block: 7, src: 1 })
             .unwrap();
         assert!(sm.on_event(MigEvent::DestChosen { dst: 1 }).is_err());
+    }
+
+    #[test]
+    fn cross_tier_moves_may_stay_on_the_same_node() {
+        // A promotion/demotion between a node's pooled slice and its
+        // DRAM is a legal same-node migration; the whole park/copy/
+        // commit protocol still applies (the data physically moves).
+        let mut sm = MigrationSm::new();
+        sm.on_event(MigEvent::PressureReport { block: 7, src: 1 })
+            .unwrap();
+        sm.set_cross_tier();
+        assert!(sm.is_cross_tier());
+        let a = sm.on_event(MigEvent::DestChosen { dst: 1 }).unwrap();
+        assert_eq!(a, vec![MigAction::StopWrites, MigAction::SendPrepare]);
+        assert!(sm.writes_parked());
     }
 
     #[test]

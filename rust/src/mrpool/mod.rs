@@ -14,6 +14,20 @@ use crate::NodeId;
 /// Identifier of an MR block on some node.
 pub type MrBlockId = u64;
 
+/// Which donated-memory tier a block lives in on its node. The tier is
+/// part of the block's *address*: verbs, capacity accounting and victim
+/// selection all dispatch on it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum MemTier {
+    /// CXL-style pooled memory at ~NUMA-hop latency (§Pond). Capacity
+    /// is the node's slice of the pooled appliance
+    /// (`valet.pool_tier.capacity_bytes`), separate from its DRAM.
+    Pool,
+    /// Classic RDMA-registered remote memory (the paper's only tier).
+    /// Capacity is the node's donatable DRAM.
+    Remote,
+}
+
 /// State of one registered MR block.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum MrState {
@@ -43,6 +57,8 @@ pub struct MrBlock {
     pub registered_at: Ns,
     /// Current state.
     pub state: MrState,
+    /// Which memory tier the block occupies on this node.
+    pub tier: MemTier,
 }
 
 impl MrBlock {
@@ -68,6 +84,9 @@ pub struct MrBlockPool {
     pub registered: u64,
     /// Total blocks released (evicted or migrated away) (stats).
     pub released: u64,
+    /// Cached pool-tier resident bytes (kept in lockstep with the block
+    /// list; audited against the recount by the `tier-accounting` law).
+    pool_bytes: u64,
 }
 
 impl MrBlockPool {
@@ -76,18 +95,52 @@ impl MrBlockPool {
         Self::default()
     }
 
-    /// Bytes currently registered as remote memory.
+    /// Bytes currently registered as RDMA remote memory (the Remote
+    /// tier only — pool-tier blocks live on the pooled appliance, not
+    /// this node's donatable DRAM, so they never count against it).
     pub fn registered_bytes(&self) -> u64 {
-        self.blocks.iter().map(|b| b.bytes).sum()
+        self.blocks
+            .iter()
+            .filter(|b| b.tier == MemTier::Remote)
+            .map(|b| b.bytes)
+            .sum()
     }
 
-    /// Register a new unit MR block for `owner`. The receiver-side cost
-    /// is charged by the caller (user-space registration, §4.2).
+    /// Cached bytes resident in this node's pool-tier slice (the value
+    /// the placement path charges against `pool_tier.capacity_bytes`).
+    pub fn pool_bytes(&self) -> u64 {
+        self.pool_bytes
+    }
+
+    /// Recount pool-tier resident bytes from the block list — the
+    /// auditor's ground truth for [`Self::pool_bytes`].
+    pub fn pool_bytes_recount(&self) -> u64 {
+        self.blocks
+            .iter()
+            .filter(|b| b.tier == MemTier::Pool)
+            .map(|b| b.bytes)
+            .sum()
+    }
+
+    /// Register a new unit MR block for `owner` in the Remote tier. The
+    /// receiver-side cost is charged by the caller (user-space
+    /// registration, §4.2).
     pub fn register(
         &mut self,
         owner: NodeId,
         bytes: u64,
         now: Ns,
+    ) -> MrBlockId {
+        self.register_tier(owner, bytes, now, MemTier::Remote)
+    }
+
+    /// Register a new unit MR block for `owner` in an explicit tier.
+    pub fn register_tier(
+        &mut self,
+        owner: NodeId,
+        bytes: u64,
+        now: Ns,
+        tier: MemTier,
     ) -> MrBlockId {
         let id = self.next_id;
         self.next_id += 1;
@@ -99,8 +152,12 @@ impl MrBlockPool {
             last_read: 0,
             registered_at: now,
             state: MrState::Active,
+            tier,
         });
         self.registered += 1;
+        if tier == MemTier::Pool {
+            self.pool_bytes += bytes;
+        }
         id
     }
 
@@ -136,15 +193,25 @@ impl MrBlockPool {
     pub fn release(&mut self, block: MrBlockId) -> Option<MrBlock> {
         let i = self.blocks.iter().position(|b| b.id == block)?;
         self.released += 1;
-        Some(self.blocks.swap_remove(i))
+        let b = self.blocks.swap_remove(i);
+        if b.tier == MemTier::Pool {
+            self.pool_bytes = self.pool_bytes.saturating_sub(b.bytes);
+        }
+        Some(b)
     }
 
     /// The least-active block (max Non-Activity-Duration) among Active
-    /// blocks — §3.5's victim, computed purely from local tags.
+    /// **Remote-tier** blocks — §3.5's victim, computed purely from
+    /// local tags. Native-memory pressure reclaims DRAM; pool-tier
+    /// blocks occupy the pooled appliance, so evicting one would not
+    /// relieve the node and they are exempt here (the tier pump demotes
+    /// them on its own schedule).
     pub fn least_active(&self, now: Ns) -> Option<&MrBlock> {
         self.blocks
             .iter()
-            .filter(|b| b.state == MrState::Active)
+            .filter(|b| {
+                b.state == MrState::Active && b.tier == MemTier::Remote
+            })
             .max_by_key(|b| (b.non_activity_duration(now), b.id))
     }
 
@@ -154,16 +221,23 @@ impl MrBlockPool {
     /// [`crate::eviction::VictimPolicy`] so one tenant never evicts
     /// another tenant's blocks.
     pub fn owned_by(&self, owner: NodeId) -> MrBlockPool {
+        let blocks: Vec<MrBlock> = self
+            .blocks
+            .iter()
+            .filter(|b| b.owner == owner)
+            .cloned()
+            .collect();
+        let pool_bytes = blocks
+            .iter()
+            .filter(|b| b.tier == MemTier::Pool)
+            .map(|b| b.bytes)
+            .sum();
         MrBlockPool {
-            blocks: self
-                .blocks
-                .iter()
-                .filter(|b| b.owner == owner)
-                .cloned()
-                .collect(),
+            blocks,
             next_id: self.next_id,
             registered: self.registered,
             released: self.released,
+            pool_bytes,
         }
     }
 
@@ -180,6 +254,14 @@ impl MrBlockPool {
     /// True if no blocks are registered.
     pub fn is_empty(&self) -> bool {
         self.blocks.is_empty()
+    }
+
+    /// Test-only corruption hook for the `tier-accounting` law: claim
+    /// pool-tier bytes that no resident block backs.
+    #[cfg(any(feature = "audit", debug_assertions))]
+    #[doc(hidden)]
+    pub fn audit_corrupt_pool_bytes(&mut self) {
+        self.pool_bytes += 1;
     }
 }
 
@@ -307,6 +389,48 @@ mod tests {
         assert!(view.get(b1).is_none());
         // least-active within the view is owner 1's oldest, not b1
         assert_eq!(view.least_active(100).unwrap().id, a2);
+    }
+
+    #[test]
+    fn pool_tier_bytes_tracked_separately_from_remote() {
+        let mut p = MrBlockPool::new();
+        let r = p.register(1, 4 << 20, 0);
+        let q = p.register_tier(1, 1 << 20, 0, MemTier::Pool);
+        // Remote-tier bytes are the node's donated DRAM; pool-tier
+        // bytes charge the appliance slice. Neither leaks into the
+        // other's ledger.
+        assert_eq!(p.registered_bytes(), 4 << 20);
+        assert_eq!(p.pool_bytes(), 1 << 20);
+        assert_eq!(p.pool_bytes_recount(), 1 << 20);
+        assert_eq!(p.get(q).unwrap().tier, MemTier::Pool);
+        assert_eq!(p.get(r).unwrap().tier, MemTier::Remote);
+        p.release(q);
+        assert_eq!(p.pool_bytes(), 0);
+        assert_eq!(p.pool_bytes_recount(), 0);
+        assert_eq!(p.registered_bytes(), 4 << 20);
+    }
+
+    #[test]
+    fn pressure_victims_come_from_the_remote_tier_only() {
+        // An ancient pool-tier block must not be selected to relieve
+        // native-DRAM pressure: releasing it frees appliance capacity,
+        // not node memory.
+        let mut p = MrBlockPool::new();
+        let pool_old = p.register_tier(0, 1, 0, MemTier::Pool);
+        let remote_new = p.register(0, 1, 0);
+        p.touch_write(remote_new, 1000);
+        assert_ne!(p.least_active(2000).unwrap().id, pool_old);
+        assert_eq!(p.least_active(2000).unwrap().id, remote_new);
+    }
+
+    #[test]
+    fn owned_by_recomputes_the_pool_ledger() {
+        let mut p = MrBlockPool::new();
+        p.register_tier(1, 100, 0, MemTier::Pool);
+        p.register_tier(2, 7, 0, MemTier::Pool);
+        let view = p.owned_by(1);
+        assert_eq!(view.pool_bytes(), 100);
+        assert_eq!(view.pool_bytes(), view.pool_bytes_recount());
     }
 
     #[test]

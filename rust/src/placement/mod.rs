@@ -13,29 +13,46 @@
 //! memory-disaggregation literature (Pond, the Yelam survey) identifies
 //! as the pooling bottleneck.
 
+use crate::mrpool::MemTier;
 use crate::util::Rng;
 use crate::NodeId;
 
-/// A candidate peer with its currently free (donatable) bytes and its
-/// smoothed pressure score.
+/// A candidate **(peer, tier)** slot with its currently free bytes in
+/// that tier and the tier's smoothed pressure score. With the pool tier
+/// disabled only Remote-tier candidates exist and the list is
+/// byte-identical to the pre-tier system.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Candidate {
     /// Peer node.
     pub node: NodeId,
-    /// Free bytes it could donate.
+    /// Free bytes it could donate in this tier.
     pub free_bytes: u64,
-    /// Smoothed occupancy pressure in thousandths (0 = idle, 1000 =
-    /// fully claimed); see the module docs.
+    /// Smoothed occupancy pressure of this tier in thousandths (0 =
+    /// idle, 1000 = fully claimed); see the module docs.
     pub pressure_milli: u32,
+    /// The memory tier this candidacy offers.
+    pub tier: MemTier,
 }
 
 impl Candidate {
-    /// A candidate with no recorded pressure (tests, synthetic sweeps).
+    /// A Remote-tier candidate with no recorded pressure (tests,
+    /// synthetic sweeps).
     pub fn new(node: NodeId, free_bytes: u64) -> Self {
         Candidate {
             node,
             free_bytes,
             pressure_milli: 0,
+            tier: MemTier::Remote,
+        }
+    }
+
+    /// A pool-tier candidate with no recorded pressure.
+    pub fn pool(node: NodeId, free_bytes: u64) -> Self {
+        Candidate {
+            node,
+            free_bytes,
+            pressure_milli: 0,
+            tier: MemTier::Pool,
         }
     }
 
@@ -48,13 +65,30 @@ impl Candidate {
     }
 }
 
-/// Placement policy over candidate peers.
+/// A placement decision: which peer, and which of its memory tiers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Placed {
+    /// Chosen peer node.
+    pub node: NodeId,
+    /// Chosen memory tier on that peer.
+    pub tier: MemTier,
+}
+
+/// Placement policy over candidate (peer, tier) slots.
 pub trait Placement {
-    /// Pick a peer (None if `candidates` is empty). Candidates with zero
+    /// Pick a slot (None if `candidates` is empty). Candidates with zero
     /// free bytes are never picked unless all are zero-free.
-    fn pick(&mut self, candidates: &[Candidate]) -> Option<NodeId>;
+    fn pick(&mut self, candidates: &[Candidate]) -> Option<Placed>;
     /// Display name.
     fn name(&self) -> &'static str;
+}
+
+/// The decision a candidate turns into when picked.
+fn placed(c: &Candidate) -> Placed {
+    Placed {
+        node: c.node,
+        tier: c.tier,
+    }
 }
 
 /// Round-robin over the candidate list.
@@ -71,7 +105,7 @@ impl RoundRobin {
 }
 
 impl Placement for RoundRobin {
-    fn pick(&mut self, candidates: &[Candidate]) -> Option<NodeId> {
+    fn pick(&mut self, candidates: &[Candidate]) -> Option<Placed> {
         if candidates.is_empty() {
             return None;
         }
@@ -80,10 +114,10 @@ impl Placement for RoundRobin {
             let c = candidates[self.next % candidates.len()];
             self.next = (self.next + 1) % candidates.len();
             if c.free_bytes > 0 {
-                return Some(c.node);
+                return Some(placed(&c));
             }
         }
-        Some(candidates[self.next % candidates.len()].node)
+        Some(placed(&candidates[self.next % candidates.len()]))
     }
 
     fn name(&self) -> &'static str {
@@ -109,10 +143,10 @@ impl PowerOfTwo {
 }
 
 impl Placement for PowerOfTwo {
-    fn pick(&mut self, candidates: &[Candidate]) -> Option<NodeId> {
+    fn pick(&mut self, candidates: &[Candidate]) -> Option<Placed> {
         match candidates.len() {
             0 => None,
-            1 => Some(candidates[0].node),
+            1 => Some(placed(&candidates[0])),
             n => {
                 let i = self.rng.below_usize(n);
                 let mut j = self.rng.below_usize(n - 1);
@@ -124,9 +158,9 @@ impl Placement for PowerOfTwo {
                 // with momentarily more free memory
                 let (a, b) = (candidates[i], candidates[j]);
                 Some(if a.adjusted_free() >= b.adjusted_free() {
-                    a.node
+                    placed(&a)
                 } else {
-                    b.node
+                    placed(&b)
                 })
             }
         }
@@ -153,7 +187,7 @@ impl LeastPressured {
 }
 
 impl Placement for LeastPressured {
-    fn pick(&mut self, candidates: &[Candidate]) -> Option<NodeId> {
+    fn pick(&mut self, candidates: &[Candidate]) -> Option<Placed> {
         candidates
             .iter()
             .min_by_key(|c| {
@@ -161,9 +195,12 @@ impl Placement for LeastPressured {
                     c.pressure_milli,
                     u64::MAX - c.free_bytes,
                     c.node,
+                    // a (node, pressure, free) tie across tiers resolves
+                    // to the faster tier (Pool < Remote in enum order)
+                    c.tier,
                 )
             })
-            .map(|c| c.node)
+            .map(placed)
     }
 
     fn name(&self) -> &'static str {
@@ -189,7 +226,7 @@ mod tests {
         let mut rr = RoundRobin::new();
         let c = cands(&[1, 1, 1]);
         let picks: Vec<_> =
-            (0..6).map(|_| rr.pick(&c).unwrap()).collect();
+            (0..6).map(|_| rr.pick(&c).unwrap().node).collect();
         assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
     }
 
@@ -198,7 +235,7 @@ mod tests {
         let mut rr = RoundRobin::new();
         let c = cands(&[0, 5, 0, 5]);
         for _ in 0..8 {
-            let n = rr.pick(&c).unwrap();
+            let n = rr.pick(&c).unwrap().node;
             assert!(n == 1 || n == 3);
         }
     }
@@ -208,7 +245,7 @@ mod tests {
         let mut p = PowerOfTwo::new(1);
         let c = cands(&[100, 100, 100, 10_000]);
         let hits = (0..1000)
-            .filter(|_| p.pick(&c) == Some(3))
+            .filter(|_| p.pick(&c).map(|x| x.node) == Some(3))
             .count();
         // node 3 wins every sample that includes it: P ≈ 2/4 = 0.5
         assert!(hits > 350, "hits={hits}");
@@ -217,7 +254,8 @@ mod tests {
     #[test]
     fn p2c_single_candidate() {
         let mut p = PowerOfTwo::new(2);
-        assert_eq!(p.pick(&cands(&[7])), Some(0));
+        let only = p.pick(&cands(&[7])).unwrap();
+        assert_eq!((only.node, only.tier), (0, MemTier::Remote));
         assert_eq!(p.pick(&[]), None);
     }
 
@@ -242,7 +280,7 @@ mod tests {
             // at least sometimes.
             let mut picked_max = false;
             for _ in 0..64 {
-                let pick = p.pick(&c).unwrap();
+                let pick = p.pick(&c).unwrap().node;
                 let free = c[pick].free_bytes;
                 let _ = free;
                 if c[pick].free_bytes == max_free {
@@ -265,7 +303,7 @@ mod tests {
             let c: Vec<Candidate> = (0..n)
                 .map(|i| Candidate::new(i, 1_000_000 - loads_p2c[i]))
                 .collect();
-            let pick = p.pick(&c).unwrap();
+            let pick = p.pick(&c).unwrap().node;
             loads_p2c[pick] += 1;
         }
         let mut rng = Rng::new(4);
@@ -290,16 +328,21 @@ mod tests {
             node: 0,
             free_bytes: 1_100,
             pressure_milli: 900,
+            tier: MemTier::Remote,
         };
         let idle = Candidate {
             node: 1,
             free_bytes: 1_000,
             pressure_milli: 0,
+            tier: MemTier::Remote,
         };
         assert!(idle.adjusted_free() > pressured.adjusted_free());
         let mut p = PowerOfTwo::new(11);
         for _ in 0..64 {
-            assert_eq!(p.pick(&[pressured, idle]), Some(1));
+            assert_eq!(
+                p.pick(&[pressured, idle]).map(|x| x.node),
+                Some(1)
+            );
         }
     }
 
@@ -312,27 +355,53 @@ mod tests {
                 node: 0,
                 free_bytes: 500,
                 pressure_milli: 700,
+                tier: MemTier::Remote,
             },
             Candidate {
                 node: 1,
                 free_bytes: 100,
                 pressure_milli: 100,
+                tier: MemTier::Remote,
             },
             Candidate {
                 node: 2,
                 free_bytes: 900,
                 pressure_milli: 100,
+                tier: MemTier::Remote,
             },
         ];
         // lowest pressure wins; among the 100-milli pair the freer node
-        assert_eq!(lp.pick(&c), Some(2));
+        assert_eq!(lp.pick(&c).map(|x| x.node), Some(2));
         // exact tie falls back to the lowest node id
         let tie = vec![
             Candidate::new(4, 64),
             Candidate::new(3, 64),
         ];
-        assert_eq!(lp.pick(&tie), Some(3));
+        assert_eq!(lp.pick(&tie).map(|x| x.node), Some(3));
         assert_eq!(lp.name(), "least_pressured");
+    }
+
+    #[test]
+    fn policies_carry_the_candidate_tier_through_the_pick() {
+        // A pool-tier candidacy picked by any policy yields a pool-tier
+        // decision: tier rides the candidate, never a separate guess.
+        let c = vec![Candidate::pool(2, 1 << 20)];
+        let mut rr = RoundRobin::new();
+        assert_eq!(
+            rr.pick(&c),
+            Some(Placed {
+                node: 2,
+                tier: MemTier::Pool
+            })
+        );
+        let mut lp = LeastPressured::new();
+        assert_eq!(lp.pick(&c).unwrap().tier, MemTier::Pool);
+        let mut p2 = PowerOfTwo::new(9);
+        assert_eq!(p2.pick(&c).unwrap().tier, MemTier::Pool);
+        // a full (node, pressure, free) tie resolves to the faster tier
+        let mut lp2 = LeastPressured::new();
+        let tie = vec![Candidate::new(1, 64), Candidate::pool(1, 64)];
+        assert_eq!(lp2.pick(&tie).unwrap().tier, MemTier::Pool);
     }
 
     #[test]
@@ -341,18 +410,21 @@ mod tests {
             node: 0,
             free_bytes: u64::MAX,
             pressure_milli: 0,
+            tier: MemTier::Remote,
         };
         assert_eq!(c.adjusted_free(), u64::MAX);
         let half = Candidate {
             node: 0,
             free_bytes: 10_000,
             pressure_milli: 500,
+            tier: MemTier::Remote,
         };
         assert_eq!(half.adjusted_free(), 5_000);
         let full = Candidate {
             node: 0,
             free_bytes: 10_000,
             pressure_milli: 1000,
+            tier: MemTier::Remote,
         };
         assert_eq!(full.adjusted_free(), 0);
     }

@@ -45,6 +45,8 @@ struct Nic {
     verbs_posted: u64,
     /// WQE cache misses charged (stats).
     wqe_misses: u64,
+    /// Pool-tier loads/stores initiated (stats; these post no WQE).
+    pool_accesses: u64,
 }
 
 /// The cluster-wide RDMA fabric.
@@ -172,6 +174,57 @@ impl Fabric {
         VerbDone { start, end }
     }
 
+    /// Pool-tier WRITE of `bytes` from `from` into `to`'s slice of the
+    /// CXL-style pooled appliance. Load/store semantics: no queue pair
+    /// is required and no WQE is posted (so no cache-thrash penalty) —
+    /// but the payload still crosses the initiator's pipe, so wire
+    /// occupancy charges on `from`'s TX server exactly like the RDMA
+    /// verbs and backlog modeling keeps holding. The base latency is
+    /// ~a NUMA hop (`pool_write_base`), an order of magnitude below
+    /// the fabric round trip.
+    pub fn pool_write(
+        &mut self,
+        now: Ns,
+        from: NodeId,
+        to: NodeId,
+        bytes: u64,
+    ) -> VerbDone {
+        let _ = to; // capacity is the receiver's; latency is not
+        let occupancy = (self.lat.pool_per_byte * bytes as f64) as Ns;
+        let (start, occ_end) = self.nics[from].tx.serve(now, occupancy);
+        let end = occ_end + self.lat.pool_write_base;
+        self.nics[from].pool_accesses += 1;
+        VerbDone { start, end }
+    }
+
+    /// Pool-tier READ of `bytes` from `to`'s slice of the pooled
+    /// appliance into `from`. Same occupancy/latency split as
+    /// [`Fabric::pool_write`].
+    pub fn pool_read(
+        &mut self,
+        now: Ns,
+        from: NodeId,
+        to: NodeId,
+        bytes: u64,
+    ) -> VerbDone {
+        let _ = to;
+        let occupancy = (self.lat.pool_per_byte * bytes as f64) as Ns;
+        let (start, occ_end) = self.nics[from].tx.serve(now, occupancy);
+        let end = occ_end + self.lat.pool_read_base;
+        self.nics[from].pool_accesses += 1;
+        VerbDone { start, end }
+    }
+
+    /// Attach `from` to a pool-tier slice (HDM-decoder programming +
+    /// address-window setup). Far cheaper than `map_mr`'s full MR
+    /// exchange; charged on the initiator's TX pipeline.
+    pub fn pool_map(&mut self, now: Ns, from: NodeId) -> Ns {
+        let dur = self.lat.pool_map;
+        let (_, end) = self.nics[from].tx.serve(now, dur);
+        self.mappings_made += 1;
+        end
+    }
+
     /// Two-sided SEND/RECV of `bytes` (nbdX-style): the receiver's CPU
     /// must post a RECV, copy the payload and send a response, so the
     /// target's rx_cpu server is on the critical path. Returns completion
@@ -220,6 +273,11 @@ impl Fabric {
     /// WQE cache misses charged to a node (stats).
     pub fn wqe_misses(&self, node: NodeId) -> u64 {
         self.nics[node].wqe_misses
+    }
+
+    /// Pool-tier accesses initiated by a node (stats).
+    pub fn pool_accesses(&self, node: NodeId) -> u64 {
+        self.nics[node].pool_accesses
     }
 
     /// Number of nodes.
@@ -294,6 +352,66 @@ mod tests {
         }
         let worst = ends.iter().max().unwrap() - t;
         assert!(worst < us(45), "worst concurrent read {worst}");
+    }
+
+    #[test]
+    fn pool_read_sits_between_local_and_rdma() {
+        // The tier ladder: a pooled-page load is far cheaper than the
+        // 36 µs fabric round trip but still a real (NUMA-hop-scale)
+        // cost — the whole point of a middle tier.
+        let mut f = fabric();
+        let pool = f.pool_read(0, 0, 1, 4096);
+        let pool_lat = pool.end - pool.start;
+        let mut f2 = fabric();
+        let (t, _) = f2.ensure_connected(0, 0, 1);
+        let rdma = f2.rdma_read(t, 0, 1, 4096);
+        let rdma_lat = rdma.end - rdma.start;
+        assert!(pool_lat > 0, "pool access is not free");
+        assert!(
+            pool_lat * 10 < rdma_lat,
+            "pool {pool_lat} should be an order below rdma {rdma_lat}"
+        );
+        assert_eq!(f.pool_accesses(0), 1);
+    }
+
+    #[test]
+    fn pool_verbs_need_no_connection_and_post_no_wqe() {
+        // CXL load/store semantics: no queue pair, no WQE cache
+        // pressure — but wire occupancy still charges the sender's TX
+        // pipe, so backlog modeling holds.
+        let mut f = fabric();
+        assert!(!f.is_connected(0, 1));
+        let mut last = 0;
+        for _ in 0..1000 {
+            last = f.pool_write(0, 0, 1, 4096).end;
+        }
+        assert_eq!(f.wqe_misses(0), 0, "pool stores post no WQEs");
+        assert_eq!(f.verbs_posted(0), 0);
+        assert_eq!(f.pool_accesses(0), 1000);
+        assert!(f.tx_backlog(0, 0) > 0, "occupancy queues on the pipe");
+        let _ = last;
+    }
+
+    #[test]
+    fn pool_writes_share_the_tx_pipe_with_rdma() {
+        // A pool store and an RDMA write issued at the same instant
+        // serialize their wire occupancy on the shared sender pipe.
+        let mut f = fabric();
+        let (t, _) = f.ensure_connected(0, 0, 1);
+        let a = f.rdma_write(t, 0, 1, 512 * 1024);
+        let b = f.pool_write(t, 0, 1, 512 * 1024);
+        assert!(b.start >= a.start + 1, "second access queues behind");
+        assert!(b.end > a.start);
+    }
+
+    #[test]
+    fn pool_map_is_cheaper_than_map_mr() {
+        let mut f = fabric();
+        let m = f.pool_map(0, 0);
+        let mut f2 = fabric();
+        let mr = f2.map_mr(0, 0);
+        assert!(m * 10 < mr, "pool attach {m} vs MR map {mr}");
+        assert_eq!(f.mappings_made, 1);
     }
 
     #[test]

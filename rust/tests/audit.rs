@@ -324,6 +324,44 @@ fn lane_sequencer_also_guards_the_single_lane_oracle() {
     );
 }
 
+// ----------------------------------------------------- tier accounting
+
+#[test]
+fn tier_accounting_fires_on_pool_byte_ledger_skew() {
+    // Law 15, ledger half: a node's cached pool-tier byte count must
+    // equal a recount over its resident pool-tier blocks. Claim a
+    // phantom byte behind the cache's back.
+    let mut cfg = small_cfg();
+    cfg.valet.pool_tier.enabled = true;
+    cfg.valet.pool_tier.capacity_bytes = 64 << 20;
+    let (mut sc, t) = populated(&cfg, 1);
+    assert_clean(&sc.engine.audit_check(&sc.state, t));
+    let sender = sc.state.sender;
+    let node = (0..sc.state.mrpools.len())
+        .find(|&n| n != sender)
+        .expect("cluster has at least one peer");
+    sc.state.mrpools[node].audit_corrupt_pool_bytes();
+    assert_fires(
+        &sc.engine.sender().audit_check(&sc.state, false),
+        Law::TierAccounting,
+    );
+}
+
+#[test]
+fn tier_accounting_fires_on_unbacked_promotion_count() {
+    // Law 15, conservation half: promotions + demotions must equal the
+    // committed cross-tier migration records. Bump the promotion
+    // counter as if a tier move committed without a record.
+    let cfg = small_cfg(); // tier off: the law still holds (0 == 0)
+    let (mut sc, t) = populated(&cfg, 1);
+    assert_clean(&sc.engine.audit_check(&sc.state, t));
+    sc.engine.sender_mut().audit_corrupt_tier_ledger();
+    assert_fires(
+        &sc.engine.sender().audit_check(&sc.state, false),
+        Law::TierAccounting,
+    );
+}
+
 // -------------------------------------------------------- pressure log
 
 #[test]

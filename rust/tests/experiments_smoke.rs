@@ -126,6 +126,29 @@ fn reclaim_experiment_overlaps_and_spares_demand_traffic() {
 }
 
 #[test]
+fn tiering_experiment_beats_flat_and_keeps_its_records() {
+    let r = run("tiering", &Scale::small()).unwrap();
+    let kv: std::collections::HashMap<String, f64> =
+        r.kv.iter().cloned().collect();
+    let g = |k: &str| *kv.get(k).unwrap_or_else(|| panic!("record {k}"));
+    // the win condition: at equal total memory, warm reads served from
+    // the pooled tier beat the all-RDMA flat layout
+    assert!(g("tiered_speedup") > 1.0, "speedup {}", g("tiered_speedup"));
+    // the measured loop actually exercised the pool
+    assert!(g("pool_hits") > 0.0, "no pool traffic in the tiered run");
+    // the ablation record exists and is finite (ci.sh greps for it)
+    assert!(
+        g("no_predictor_ablation").is_finite(),
+        "no_predictor_ablation must be finite"
+    );
+    for k in ["flat_tp", "tiered_tp", "no_predictor_tp"] {
+        assert!(g(k) > 0.0, "{k} must be positive");
+    }
+    // three runs, three rows
+    assert_eq!(r.rows.len(), 3);
+}
+
+#[test]
 fn table1_disk_and_connection_dominate() {
     let r = run("table1", &Scale::small()).unwrap();
     // rows: name, µs, share. Disk WR must be the largest share, and

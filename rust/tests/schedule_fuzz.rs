@@ -24,6 +24,10 @@
 //!   `VALET_FUZZ_SEED=<n>` line: set it to reproduce that schedule.
 //! * `VALET_FUZZ_LANES` — pin `sender_lanes` for every schedule (ci.sh
 //!   runs a lane-pinned pass with 4 forced lanes).
+//! * `VALET_FUZZ_TIER` — pin the pool tier on (`1`) or off (`0`) for
+//!   every schedule instead of the per-seed coin flip (ci.sh runs a
+//!   tier-pinned pass so every schedule exercises promotion/demotion,
+//!   cross-tier migrations and the admission predictor).
 
 #![cfg(any(feature = "audit", debug_assertions))]
 
@@ -66,6 +70,21 @@ fn run_schedule(seed: u64) {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(lane_pick);
+    // pool tier: a coin flip per seed (drawn even when pinned so
+    // schedules stay comparable across VALET_FUZZ_TIER settings), with
+    // the pump and predictor tightened to the schedule's ms time scale
+    let tier_pick = rng.chance(0.5);
+    cfg.valet.pool_tier.enabled = std::env::var("VALET_FUZZ_TIER")
+        .ok()
+        .and_then(|v| v.parse::<u8>().ok())
+        .map(|v| v != 0)
+        .unwrap_or(tier_pick);
+    cfg.valet.pool_tier.capacity_bytes = (2 + rng.below(15)) << 20;
+    cfg.valet.pool_tier.scan_period = ms(1 + rng.below(10));
+    cfg.valet.pool_tier.promote_max_idle = ms(1 + rng.below(50));
+    cfg.valet.pool_tier.demote_after = ms(5 + rng.below(100));
+    cfg.valet.pool_tier.predictor = rng.chance(0.5);
+    cfg.valet.pool_tier.predictor_window = ms(1 + rng.below(10));
     let shards = 1 << rng.below_usize(3); // 1 / 2 / 4
 
     let mut sc = ShardedCluster::new(&cfg, shards);

@@ -1,0 +1,265 @@
+//! Regression harness for the pooled memory tier.
+//!
+//! The contract under test (ISSUE 8 / ARCHITECTURE.md "The memory
+//! tiers"): `valet.pool_tier` is **off by default**, and off means the
+//! demand path is the pre-tier engine **bit-for-bit** — not merely
+//! statistically similar. On top of that pin, the tier itself must
+//! behave: admission places read-back units in the pool (pool hits on
+//! the read path), the pump promotes read-touched RDMA-remote blocks,
+//! and read-your-writes survives blocks changing tier mid-run.
+
+use valet::backends::{ClusterState, Source};
+use valet::config::Config;
+use valet::engine::ShardedEngine;
+use valet::metrics::RunMetrics;
+use valet::placement::RoundRobin;
+use valet::sim::{ms, Ns};
+use valet::util::Rng;
+use valet::PAGE_SIZE;
+
+/// 1 sender + 4 peers, 1 MB units, small pinned pool.
+fn small_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.cluster.nodes = 5;
+    cfg.valet.mr_block_bytes = 1 << 20;
+    cfg.valet.min_pool_pages = 64;
+    cfg.valet.max_pool_pages = 64;
+    cfg
+}
+
+/// One deterministic mixed op sequence (writes / reads / pumps).
+#[derive(Clone, Copy, Debug)]
+enum Op {
+    Write(u64, u64),
+    Read(u64),
+    Pump(Ns),
+}
+
+fn workload(n: usize, seed: u64) -> Vec<Op> {
+    let mut rng = Rng::new(seed);
+    let mut ops = Vec::with_capacity(n);
+    for _ in 0..n {
+        match rng.below(5) {
+            0 | 1 => {
+                ops.push(Op::Write(rng.below(128) * 16, 16 * PAGE_SIZE));
+            }
+            2 => ops.push(Op::Write(rng.below(2048), PAGE_SIZE)),
+            3 => ops.push(Op::Read(rng.below(2048))),
+            _ => ops.push(Op::Pump(ms(rng.below(40)))),
+        }
+    }
+    ops
+}
+
+/// Everything we compare between two runs (mirrors `tests/lanes.rs`;
+/// float metrics compared via `to_bits` so "equal" means identical).
+#[derive(Debug, PartialEq)]
+struct Summary {
+    finished_at: Ns,
+    local_hits: u64,
+    remote_hits: u64,
+    pool_hits: u64,
+    disk_reads: u64,
+    read_count: u64,
+    read_mean_bits: u64,
+    read_p50: u64,
+    read_p99: u64,
+    write_count: u64,
+    write_mean_bits: u64,
+    write_p50: u64,
+    write_p99: u64,
+    stall_ns: u128,
+    pending: usize,
+    staged_bytes: u64,
+    disk_writes: u64,
+    mapped_units: usize,
+    prefetch_issued: u64,
+    prefetch_hits: u64,
+    coalesced_reads: u64,
+    migrations_started: u64,
+    promotions: u64,
+    demotions: u64,
+}
+
+fn run_summary(cfg: &Config, ops: &[Op]) -> Summary {
+    let mut cl = ClusterState::new(cfg);
+    let mut e = ShardedEngine::new(cfg, 1);
+    let mut t: Ns = 0;
+    for &op in ops {
+        match op {
+            Op::Write(page, bytes) => t = e.write(&mut cl, t, page, bytes).end,
+            Op::Read(page) => t = e.read(&mut cl, t, page).end,
+            Op::Pump(dt) => {
+                t += dt;
+                e.pump(&mut cl, t);
+            }
+        }
+    }
+    let m: RunMetrics = e.combined_metrics();
+    let stats = e.migration_stats();
+    Summary {
+        finished_at: t,
+        local_hits: m.local_hits,
+        remote_hits: m.remote_hits,
+        pool_hits: m.pool_hits,
+        disk_reads: m.disk_reads,
+        read_count: m.read_latency.count(),
+        read_mean_bits: m.read_latency.mean().to_bits(),
+        read_p50: m.read_latency.p50(),
+        read_p99: m.read_latency.p99(),
+        write_count: m.write_latency.count(),
+        write_mean_bits: m.write_latency.mean().to_bits(),
+        write_p50: m.write_latency.p50(),
+        write_p99: m.write_latency.p99(),
+        stall_ns: m.write_parts.sum("stall"),
+        pending: e.pending_write_sets(),
+        staged_bytes: e.staged_bytes(),
+        disk_writes: m.disk_writes,
+        mapped_units: e.mapped_units(),
+        prefetch_issued: m.prefetch_issued,
+        prefetch_hits: m.prefetch_hits,
+        coalesced_reads: m.coalesced_reads,
+        migrations_started: stats.started,
+        promotions: stats.promotions,
+        demotions: stats.demotions,
+    }
+}
+
+#[test]
+fn pool_tier_off_is_bit_for_bit_identical_to_pre_tier_engine() {
+    // The PR-7 differential pin: with `pool_tier.enabled = false`
+    // (the default) every other tier knob must be dead weight. A run
+    // under the defaults and a run under deliberately absurd-but-off
+    // tier knobs must produce the identical metric summary, down to
+    // float bits — proof the tier code adds no RNG draws, no extra
+    // candidates, no pump work and no verb changes when disabled.
+    let cfg = small_cfg();
+    let ops = workload(700, 0x7E1A);
+    let oracle = run_summary(&cfg, &ops);
+
+    let mut noisy = small_cfg();
+    noisy.valet.pool_tier.capacity_bytes = 1; // absurd, but off
+    noisy.valet.pool_tier.promote_max_idle = 1;
+    noisy.valet.pool_tier.demote_after = 2;
+    noisy.valet.pool_tier.scan_period = 1;
+    noisy.valet.pool_tier.predictor = false;
+    noisy.valet.pool_tier.predictor_window = 1;
+    let perturbed = run_summary(&noisy, &ops);
+
+    assert_eq!(oracle, perturbed, "disabled tier knobs leaked into the run");
+    assert_eq!(oracle.pool_hits, 0, "pool hits with the tier off");
+    assert_eq!(oracle.promotions + oracle.demotions, 0);
+    assert!(oracle.read_count > 0 && oracle.write_count > 0);
+}
+
+#[test]
+fn tiered_runs_are_deterministic() {
+    // With the tier ON (pump scans, admission predictor, cross-tier
+    // migrations all live) identical traces must replay bit-for-bit.
+    let mut cfg = small_cfg();
+    cfg.valet.pool_tier.enabled = true;
+    cfg.valet.pool_tier.capacity_bytes = 4 << 20;
+    cfg.valet.pool_tier.scan_period = ms(5);
+    cfg.valet.pool_tier.promote_max_idle = ms(50);
+    cfg.valet.pool_tier.demote_after = ms(100);
+    for seed in [0xC0FFEEu64, 42] {
+        let ops = workload(600, seed);
+        let a = run_summary(&cfg, &ops);
+        let b = run_summary(&cfg, &ops);
+        assert_eq!(a, b, "nondeterministic tiered replay (seed {seed})");
+    }
+}
+
+#[test]
+fn read_back_working_set_is_served_from_the_pool() {
+    // Admission path: the predictor starts every unit as
+    // latency-sensitive, so a freshly mapped unit lands in the pooled
+    // tier (it has room) and demand reads of it are pool accesses —
+    // `pool_hits` must be a non-zero subset of `remote_hits`.
+    let mut cfg = small_cfg();
+    cfg.valet.pool_tier.enabled = true;
+    cfg.valet.pool_tier.capacity_bytes = 64 << 20;
+    let mut cl = ClusterState::new(&cfg);
+    let mut e = ShardedEngine::new(&cfg, 1);
+    let mut t: Ns = 0;
+    for blk in 0..32u64 {
+        t = e.write(&mut cl, t, blk * 16, 16 * PAGE_SIZE).end;
+    }
+    let mut iters = 0;
+    while e.pending_write_sets() > 0 && iters < 100_000 {
+        t += ms(1);
+        e.pump(&mut cl, t);
+        iters += 1;
+    }
+    assert_eq!(e.pending_write_sets(), 0, "drain did not converge");
+    for blk in 0..32u64 {
+        let a = e.read(&mut cl, t, blk * 16 + (blk % 16));
+        assert!(!matches!(a.source, Source::Disk), "block {blk} hit disk");
+        t = a.end;
+    }
+    let m = e.combined_metrics();
+    assert_eq!(m.disk_reads, 0);
+    assert!(m.remote_hits > 0, "pool too large to force remote reads?");
+    assert!(
+        m.pool_hits > 0,
+        "no pool hits: admission never placed a unit in the pooled tier"
+    );
+    assert!(m.pool_hits <= m.remote_hits, "pool_hits must be a subset");
+}
+
+#[test]
+fn pump_promotes_read_touched_remote_blocks() {
+    // Promotion path: with the predictor OFF, placement is tier-naive;
+    // round-robin starts at candidate 0 and the candidate list is
+    // Remote-first, so every unit here deterministically starts
+    // RDMA-remote. Demand reads tag the blocks; the tier pump must
+    // then promote them into the pool, and later reads of the same
+    // blocks become pool hits.
+    let mut cfg = small_cfg();
+    cfg.valet.pool_tier.enabled = true;
+    cfg.valet.pool_tier.capacity_bytes = 64 << 20;
+    cfg.valet.pool_tier.predictor = false;
+    cfg.valet.pool_tier.scan_period = ms(5);
+    cfg.valet.pool_tier.promote_max_idle = ms(500);
+    cfg.valet.pool_tier.demote_after = ms(60_000); // no demotion noise
+    let mut cl = ClusterState::new(&cfg);
+    let mut e = ShardedEngine::new(&cfg, 1);
+    e.sender_mut().set_placement(Box::new(RoundRobin::new()));
+    let mut t: Ns = 0;
+    for blk in 0..8u64 {
+        t = e.write(&mut cl, t, blk * 16, 16 * PAGE_SIZE).end;
+    }
+    let mut iters = 0;
+    while e.pending_write_sets() > 0 && iters < 100_000 {
+        t += ms(1);
+        e.pump(&mut cl, t);
+        iters += 1;
+    }
+    for blk in 0..8u64 {
+        t = e.read(&mut cl, t, blk * 16).end;
+    }
+    let before = e.combined_metrics().pool_hits;
+    assert_eq!(before, 0, "naive placement should start RDMA-remote");
+    // drive the pump until the promotions commit
+    let mut iters = 0;
+    while e.migration_stats().promotions == 0 && iters < 10_000 {
+        t += ms(1);
+        e.pump(&mut cl, t);
+        iters += 1;
+    }
+    let stats = e.migration_stats();
+    assert!(stats.promotions > 0, "tier pump never promoted a read block");
+    t += ms(50);
+    e.pump(&mut cl, t);
+    for blk in 0..8u64 {
+        let a = e.read(&mut cl, t, blk * 16 + 1 + (blk % 15));
+        assert!(!matches!(a.source, Source::Disk), "block {blk} hit disk");
+        t = a.end;
+    }
+    let m = e.combined_metrics();
+    assert!(
+        m.pool_hits > before,
+        "promoted blocks still read at RDMA latency"
+    );
+    assert_eq!(m.disk_reads, 0, "read-your-writes broke across the move");
+}
