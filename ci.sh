@@ -44,6 +44,12 @@ VALET_FUZZ_ITERS=200 VALET_FUZZ_LANES=4 \
 # predictor and the tier-accounting law regardless of the per-seed flip
 VALET_FUZZ_ITERS=200 VALET_FUZZ_TIER=1 \
     cargo test -q --features audit --test schedule_fuzz
+# churn-pinned fuzz pass: force the failure-domain layer ON so every
+# schedule kills (and maybe rejoins) a peer under traffic — death
+# sweep, failover reads, re-replication and the replica-health law get
+# dense coverage regardless of the per-seed flip
+VALET_FUZZ_ITERS=200 VALET_FUZZ_CHURN=1 \
+    cargo test -q --features audit --test schedule_fuzz
 
 echo "== benches compile =="
 # compile-gate the harness=false bench binaries so experiment/bench code
@@ -80,6 +86,11 @@ if [ "$FAST" -eq 0 ]; then
     # speedup and the admission-predictor ablation record
     grep -q '"metric":"tiered_speedup"' target/bench-smoke.json
     grep -q '"metric":"no_predictor_ablation"' target/bench-smoke.json
+    # the churn experiment must emit its zero-lost-writes, bounded
+    # recovery and join-rebalance records
+    grep -q '"metric":"lost_writes"' target/bench-smoke.json
+    grep -q '"metric":"recovery_ms"' target/bench-smoke.json
+    grep -q '"metric":"post_join_balance"' target/bench-smoke.json
     # numeric gate (python3 is present on the CI image): sequential
     # reads must get FASTER with the pipeline on, the random mix must
     # stay within noise of the demand-only baseline, and the reclaim
@@ -118,6 +129,19 @@ assert "no_predictor_ablation" in tk, "admission ablation record missing"
 print(f"three-tier memory: tiered x{tk['tiered_speedup']:.2f} vs flat, "
       f"admission ablation x{tk['no_predictor_ablation']:.2f}, "
       f"{tk['pool_hits']:.0f} pool hits")
+ck = {r["metric"]: r["value"] for r in recs if r["id"] == "churn"}
+assert ck["lost_writes"] == 0, \
+    f"acknowledged writes lost across the crash: {ck['lost_writes']}"
+assert 0 < ck["recovery_ms"] < 2000, \
+    f"re-replication not bounded: {ck['recovery_ms']} ms"
+assert ck["repairs"] > 0, "the kill must thin units and force repairs"
+assert ck["rebalanced"] > 0, "the join must migrate units onto the peer"
+assert ck["post_join_balance"] < ck["pre_join_balance"], \
+    f"join rebalancing must improve balance: " \
+    f"{ck['pre_join_balance']} -> {ck['post_join_balance']}"
+print(f"failure domains: 0 lost writes, recovery {ck['recovery_ms']:.1f} ms, "
+      f"{ck['repairs']:.0f} repairs, {ck['rebalanced']:.0f} rebalanced, "
+      f"imbalance {ck['pre_join_balance']:.2f} -> {ck['post_join_balance']:.2f}")
 EOF
     fi
     echo "wrote target/bench-smoke.json"

@@ -42,6 +42,7 @@
 //! | [`Law::GptCoherence`] | GPT entries ⟷ resident mempool slots |
 //! | [`Law::LaneSequencer`] | cross-lane COMMIT ledger conserved |
 //! | [`Law::TierAccounting`] | pool-tier bytes ⟷ resident blocks; tier moves conserved |
+//! | [`Law::ReplicaHealth`] | live replica slots never on a Dead peer; damage queued for repair |
 
 use std::fmt;
 
@@ -120,6 +121,13 @@ pub enum Law {
     /// cross-tier migration records — no block changes tier outside
     /// the migration pipeline, and none is double-counted.
     TierAccounting,
+    /// Failure-domain ledger coherence: no live replica slot references
+    /// a Dead peer (the death sweep purged them in the same event
+    /// application that declared the death), a unit with no slots is
+    /// dead, and — with health on — every under-replicated live unit
+    /// is queued for the re-replication pump, owned by a live
+    /// migration machine, or covered by the disk backup.
+    ReplicaHealth,
 }
 
 impl Law {
@@ -141,6 +149,7 @@ impl Law {
             Law::GptCoherence => "gpt-coherence",
             Law::LaneSequencer => "lane-sequencer",
             Law::TierAccounting => "tier-accounting",
+            Law::ReplicaHealth => "replica-health",
         }
     }
 }

@@ -174,6 +174,23 @@ pub enum ClusterEvent {
         /// New free-page count available to the mempool.
         pages: u64,
     },
+    /// `node` crashes (power loss, fabric partition): its donated MR
+    /// blocks and any data on them are gone instantly. With health
+    /// tracking enabled ([`crate::config::HealthConfig`]) the failure
+    /// domain layer fails reads over to surviving replicas, re-targets
+    /// in-flight migrations and queues re-replication; without it the
+    /// event is ignored (the PR-8 world has no failure vocabulary).
+    PeerDown {
+        /// The crashing node.
+        node: NodeId,
+    },
+    /// `node` (re)joins the cluster with a fresh, empty memory pool.
+    /// With health tracking enabled the join triggers rebalancing that
+    /// migrates units onto the fresh peer; without it, ignored.
+    PeerJoin {
+        /// The joining node.
+        node: NodeId,
+    },
 }
 
 /// Who handles the backend-facing half of a [`ClusterEvent`]: all three
@@ -190,6 +207,32 @@ trait EventTarget {
     ) -> PressureOutcome;
     /// Host free memory on the sender changed to `pages`.
     fn on_host_free(&mut self, pages: u64);
+    /// Keep-alive observation: one cluster event was applied, originated
+    /// by `origin` (`None` for sender-local events). Default no-op —
+    /// only the sharded engine keeps a health ledger.
+    fn on_cluster_tick(
+        &mut self,
+        _cl: &mut ClusterState,
+        _now: Ns,
+        _origin: Option<NodeId>,
+    ) {
+    }
+    /// `node` was explicitly declared dead. Default no-op.
+    fn on_peer_down(
+        &mut self,
+        _cl: &mut ClusterState,
+        _now: Ns,
+        _node: NodeId,
+    ) {
+    }
+    /// `node` (re)joined with a fresh pool. Default no-op.
+    fn on_peer_join(
+        &mut self,
+        _cl: &mut ClusterState,
+        _now: Ns,
+        _node: NodeId,
+    ) {
+    }
 }
 
 impl EventTarget for dyn PagingBackend {
@@ -238,6 +281,33 @@ impl EventTarget for ShardedEngine {
     fn on_host_free(&mut self, pages: u64) {
         self.set_host_free_pages(pages);
     }
+
+    fn on_cluster_tick(
+        &mut self,
+        cl: &mut ClusterState,
+        now: Ns,
+        origin: Option<NodeId>,
+    ) {
+        self.sender_mut().health_tick(cl, now, origin);
+    }
+
+    fn on_peer_down(
+        &mut self,
+        cl: &mut ClusterState,
+        now: Ns,
+        node: NodeId,
+    ) {
+        self.sender_mut().peer_down(cl, now, node);
+    }
+
+    fn on_peer_join(
+        &mut self,
+        cl: &mut ClusterState,
+        now: Ns,
+        node: NodeId,
+    ) {
+        self.sender_mut().peer_join(cl, now, node);
+    }
 }
 
 /// Apply all events due at or before `now` — THE event semantics, shared
@@ -261,6 +331,18 @@ fn apply_events<T: EventTarget + ?Sized>(
     now: Ns,
 ) {
     while let Some((t, ev)) = events.pop_due(now) {
+        // keep-alive first: an event from a peer proves it alive *now*,
+        // and silence from the others is what ages them toward Suspect
+        // and Dead — so health transitions (including the death sweep)
+        // happen in the same global timestamp order as the events.
+        let origin = match ev {
+            ClusterEvent::NativeAlloc { node, .. }
+            | ClusterEvent::NativeFree { node, .. }
+            | ClusterEvent::PeerJoin { node } => Some(node),
+            ClusterEvent::SenderHostFree { .. }
+            | ClusterEvent::PeerDown { .. } => None,
+        };
+        target.on_cluster_tick(state, t, origin);
         match ev {
             ClusterEvent::NativeAlloc { node, bytes } => {
                 state.monitors[node].native_bytes += bytes;
@@ -286,6 +368,12 @@ fn apply_events<T: EventTarget + ?Sized>(
                     .total_bytes
                     .saturating_sub(pages * crate::PAGE_SIZE);
                 target.on_host_free(pages);
+            }
+            ClusterEvent::PeerDown { node } => {
+                target.on_peer_down(state, t, node);
+            }
+            ClusterEvent::PeerJoin { node } => {
+                target.on_peer_join(state, t, node);
             }
         }
         // every event moves some monitor: fold the new occupancy into

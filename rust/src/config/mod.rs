@@ -238,6 +238,41 @@ impl Default for PoolTierConfig {
     }
 }
 
+/// The failure-domain layer (ROADMAP item 1, FluidMem/EDGELESS). OFF
+/// by default: with `enabled = false` the health ledger never ticks,
+/// every peer stays Healthy, no failover/repair/rebalance work is ever
+/// scheduled and the whole pipeline is bit-for-bit the PR-8 system
+/// (pinned by `tests/churn.rs`, the same way `prefetch`,
+/// `sender_lanes` and `pool_tier` were pinned).
+#[derive(Clone, Debug)]
+pub struct HealthConfig {
+    /// Master switch for health tracking, failover reads, the
+    /// re-replication pump and join rebalancing.
+    pub enabled: bool,
+    /// A peer that misses this many expected cluster events (no event
+    /// originated by it while others kept arriving) turns Suspect;
+    /// at `2 × max_missed` it is declared Dead. An explicit
+    /// [`crate::cluster::ClusterEvent::PeerDown`] kills immediately.
+    pub max_missed: u64,
+    /// Virtual-time period between re-replication pump scans (restores
+    /// `FtPolicy.copies` for units that lost replicas to a dead peer).
+    pub repair_period: Ns,
+    /// Maximum units migrated onto a freshly joined peer per join
+    /// event (bounds the rebalance burst a join injects).
+    pub rebalance_max: usize,
+}
+
+impl Default for HealthConfig {
+    fn default() -> Self {
+        HealthConfig {
+            enabled: false,
+            max_missed: 8,
+            repair_period: ms(200),
+            rebalance_max: 4,
+        }
+    }
+}
+
 /// Valet-specific policy knobs (§3.4, §4.1, Table 2).
 #[derive(Clone, Debug)]
 pub struct ValetConfig {
@@ -295,6 +330,8 @@ pub struct ValetConfig {
     pub sender_lanes: usize,
     /// The pooled middle tier (`[valet.pool_tier]`; off by default).
     pub pool_tier: PoolTierConfig,
+    /// The failure-domain layer (`[valet.health]`; off by default).
+    pub health: HealthConfig,
 }
 
 impl Default for ValetConfig {
@@ -320,6 +357,7 @@ impl Default for ValetConfig {
             pressure_ewma: 0.3,
             sender_lanes: 1,
             pool_tier: PoolTierConfig::default(),
+            health: HealthConfig::default(),
         }
     }
 }
@@ -452,6 +490,23 @@ impl Config {
                     _ => return Err(err()),
                 }
             }
+            "valet.health" => {
+                let h = &mut self.valet.health;
+                match key {
+                    "enabled" => h.enabled = v.as_bool().ok_or_else(err)?,
+                    "max_missed" => {
+                        h.max_missed = v.as_u64().ok_or_else(err)?
+                    }
+                    "repair_period_ms" => {
+                        h.repair_period = ms(v.as_u64().ok_or_else(err)?)
+                    }
+                    "rebalance_max" => {
+                        h.rebalance_max =
+                            v.as_u64().ok_or_else(err)? as usize
+                    }
+                    _ => return Err(err()),
+                }
+            }
             "latency" => {
                 let f = v.as_f64().ok_or_else(err)?;
                 let ns = us_f(f); // latency keys are specified in µs
@@ -538,6 +593,24 @@ impl Config {
             return Err(
                 "valet.pool_tier.predictor_window_ms must be > 0".into()
             );
+        }
+        let h = &v.health;
+        if h.enabled {
+            if h.max_missed == 0 {
+                return Err(
+                    "valet.health.max_missed must be > 0 when health \
+                     tracking is enabled (0 would kill every peer on the \
+                     first event)"
+                        .into(),
+                );
+            }
+            if h.repair_period == 0 {
+                return Err(
+                    "valet.health.repair_period_ms must be > 0 when \
+                     health tracking is enabled"
+                        .into(),
+                );
+            }
         }
         Ok(())
     }
@@ -627,6 +700,23 @@ mod tests {
     }
 
     #[test]
+    fn health_is_off_by_default_and_loads_from_toml() {
+        let d = Config::default();
+        assert!(!d.valet.health.enabled);
+        let cfg = Config::from_toml(
+            "[valet.health]\nenabled = true\nmax_missed = 3\n\
+             repair_period_ms = 50\nrebalance_max = 2\n",
+        )
+        .unwrap();
+        let h = &cfg.valet.health;
+        assert!(h.enabled);
+        assert_eq!(h.max_missed, 3);
+        assert_eq!(h.repair_period, ms(50));
+        assert_eq!(h.rebalance_max, 2);
+        assert!(Config::from_toml("[valet.health]\nbogus = 1\n").is_err());
+    }
+
+    #[test]
     fn validate_rejects_out_of_range_knobs() {
         // the default tree is valid
         Config::default().validate().unwrap();
@@ -644,6 +734,10 @@ mod tests {
         bad("[valet.pool_tier]\npromote_max_idle_ms = 5000\n");
         bad("[valet.pool_tier]\nscan_period_ms = 0\n");
         bad("[valet.pool_tier]\npredictor_window_ms = 0\n");
+        // health knobs: only constrained while enabled
+        bad("[valet.health]\nenabled = true\nmax_missed = 0\n");
+        bad("[valet.health]\nenabled = true\nrepair_period_ms = 0\n");
+        Config::from_toml("[valet.health]\nmax_missed = 0\n").unwrap();
         // in-range values pass
         Config::from_toml(
             "[valet]\npressure_ewma = 1.0\nprefetch_min_accuracy = 0.0\n",

@@ -77,6 +77,14 @@ pub(crate) struct ActiveMigration {
     /// Global submission stamp (sequencer-issued, monotone): the
     /// cross-lane activation and stepping order.
     pub(crate) seq: u64,
+    /// A re-replication copy (failure-domain layer): the source block
+    /// is *not* released at COMMIT and the destination is **appended**
+    /// as a new replica slot instead of remapping the source slot —
+    /// the unit gains a copy rather than moving one.
+    pub(crate) repair: bool,
+    /// Pinned destination (join rebalancing): activation tries this
+    /// node's candidate first instead of the placement policy's pick.
+    pub(crate) forced_dst: Option<NodeId>,
 }
 
 impl ActiveMigration {

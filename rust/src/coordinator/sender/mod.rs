@@ -45,7 +45,7 @@
 mod lane;
 mod seq;
 
-pub use seq::{MigStats, MigrationRecord};
+pub use seq::{Health, MigStats, MigrationRecord};
 
 use crate::audit::{self, Law, Violation};
 use crate::backends::{ClusterState, PressureOutcome};
@@ -54,9 +54,9 @@ use crate::coordinator::fast::ShardFastPath;
 use crate::eviction::VictimPolicy;
 use crate::migration::{ctrl_rtt, MigAction, MigEvent, MigState, MigrationSm};
 use crate::mrpool::{MemTier, MrBlockId, MrState};
-use crate::placement::{Candidate, Placement};
+use crate::placement::{Candidate, Placed, Placement};
 use crate::queues::WriteSet;
-use crate::replication::choose_replicas;
+use crate::replication::{choose_replicas, read_source, FtPolicy, ReadSource};
 use crate::sim::Ns;
 use crate::{NodeId, PAGE_SIZE};
 
@@ -250,6 +250,24 @@ impl RemoteSender {
         &self.seq.mig_records
     }
 
+    /// Current keep-alive state of `node` (always Healthy with health
+    /// off — the ledger never ticks then).
+    pub fn peer_health(&self, node: NodeId) -> Health {
+        self.seq.health.state(node)
+    }
+
+    /// Whether the failure-domain layer is on (`valet.health.enabled`).
+    pub fn health_on(&self) -> bool {
+        self.seq.health.enabled
+    }
+
+    /// Units awaiting the re-replication pump (diagnostics; the churn
+    /// experiment's recovery clock runs until this and the live repair
+    /// machines both drain).
+    pub fn repair_backlog(&self) -> usize {
+        self.seq.repair_queue.len()
+    }
+
     // -- the sender-lane pipeline -------------------------------------
 
     /// Apply completions of in-flight RDMA batches up to `now` on every
@@ -313,6 +331,39 @@ impl RemoteSender {
         self.lanes.iter().map(|l| l.inflight_reads.len()).sum()
     }
 
+    /// The replica slot a read of `unit` should target: the first slot
+    /// whose peer can still serve, picked through the Table-3
+    /// [`read_source`] ladder over the slot list with per-peer
+    /// liveness. With health off this is exactly slot 0 — the
+    /// bit-for-bit pin. `None` when the unit is unmapped, dead, or
+    /// every replica peer is Dead (the caller falls through to the
+    /// disk backup, then to a lost read).
+    pub fn read_slot(&self, unit: u64) -> Option<(NodeId, MrBlockId, Ns)> {
+        let u = self.seq.units.get(unit)?;
+        if !u.alive || u.nodes.is_empty() {
+            return None;
+        }
+        if !self.seq.health.enabled {
+            return Some((u.nodes[0], u.blocks[0], u.ready_at));
+        }
+        let copies: Vec<(NodeId, bool)> = u
+            .nodes
+            .iter()
+            .map(|&n| (n, self.seq.health.alive(n)))
+            .collect();
+        let policy = FtPolicy {
+            copies: copies.len().max(1),
+            disk_backup: false, // the disk rung belongs to the caller
+        };
+        match read_source(policy, &copies) {
+            ReadSource::Remote(n) => {
+                let i = u.nodes.iter().position(|&x| x == n)?;
+                Some((n, u.blocks[i], u.ready_at))
+            }
+            _ => None,
+        }
+    }
+
     /// Batched remote read: fetch `pages` (grouped into runs that share
     /// an address-space unit) with **one** RDMA READ per unit — one
     /// base round trip plus per-page wire time, mirroring the write
@@ -352,9 +403,9 @@ impl RemoteSender {
                 j += 1;
             }
             let run = &pages[i..j];
-            let (primary, block, ready) = match self.seq.units.get(unit) {
-                Some(u) if u.alive => (u.nodes[0], u.blocks[0], u.ready_at),
-                _ => {
+            let (primary, block, ready) = match self.read_slot(unit) {
+                Some(slot) => slot,
+                None => {
                     for &p in run {
                         out.push((p, t0));
                     }
@@ -481,6 +532,46 @@ impl RemoteSender {
             self.seq.mig_stats.parked_sets += parked;
             return t0;
         }
+        // Failure-domain guard: a (re)mapping with every peer Dead has
+        // nowhere to land (`ensure_unit` would pick from an empty live
+        // cluster). The sets go to the disk backup (Table 3) or are
+        // counted lost — and either way they complete back to their
+        // shard, so the fast path never deadlocks on a dead cluster.
+        if self.seq.health.enabled
+            && self.seq.units.get(unit).map_or(true, |u| !u.alive)
+            && !cl.peers().any(|n| self.seq.health.alive(n))
+        {
+            let mut batch = Vec::new();
+            let mut bytes = 0u64;
+            while let Some(next) = fast.staging.get(idx) {
+                if self.seq.units.unit_of(next.page) != unit {
+                    break;
+                }
+                let ws = fast
+                    .staging
+                    .remove(idx)
+                    .expect("get just returned this entry");
+                if self.vcfg.disk_backup {
+                    for p in ws.page..ws.page + ws.pages() {
+                        fast.disk_valid.set(p);
+                    }
+                }
+                bytes += ws.bytes;
+                batch.push(ws);
+            }
+            if self.vcfg.disk_backup {
+                cl.disks[cl.sender].write_async(t0, bytes);
+                fast.metrics.disk_writes += 1;
+            } else {
+                self.seq.mig_stats.lost_write_sets += batch.len() as u64;
+            }
+            self.lanes[0].inflight.push(Inflight {
+                done: t0,
+                shard,
+                sets: batch,
+            });
+            return t0;
+        }
         let mut batch = Vec::new();
         let mut bytes = 0u64;
         while let Some(next) = fast.staging.get(idx) {
@@ -591,6 +682,253 @@ impl RemoteSender {
         }
     }
 
+    // -- failure domains: keep-alive, death sweep, join ---------------
+
+    /// One applied cluster event ticks the keep-alive ledger: the
+    /// event's originating peer (if any) proves itself alive, every
+    /// other peer ages one expected event. Peers that crossed into
+    /// Dead get the full death sweep immediately — transitions happen
+    /// inside the single event-application loop, so every lane
+    /// observes one global timestamp order of deaths. Strict no-op
+    /// with health off.
+    pub(crate) fn health_tick(
+        &mut self,
+        cl: &mut ClusterState,
+        now: Ns,
+        origin: Option<NodeId>,
+    ) {
+        if !self.seq.health.enabled {
+            return;
+        }
+        for node in self.seq.health.tick(cl.sender, origin) {
+            self.on_peer_dead(cl, now, node);
+        }
+    }
+
+    /// Explicit peer crash
+    /// ([`crate::cluster::ClusterEvent::PeerDown`]): declare `node`
+    /// Dead and run the death sweep. Idempotent; with health off the
+    /// event is inert (it still refreshes pressure like any event).
+    pub(crate) fn peer_down(
+        &mut self,
+        cl: &mut ClusterState,
+        now: Ns,
+        node: NodeId,
+    ) {
+        if self.seq.health.kill(node) {
+            self.on_peer_dead(cl, now, node);
+        }
+    }
+
+    /// Peer (re)join ([`crate::cluster::ClusterEvent::PeerJoin`]): a
+    /// Dead peer revives with an empty donated pool (wiped at death)
+    /// and is queued for join rebalancing on the next repair scan; a
+    /// join event for a live peer is just a keep-alive.
+    pub(crate) fn peer_join(
+        &mut self,
+        _cl: &mut ClusterState,
+        _now: Ns,
+        node: NodeId,
+    ) {
+        if self.seq.health.revive(node)
+            && !self.seq.pending_rebalance.contains(&node)
+        {
+            self.seq.pending_rebalance.push(node);
+        }
+    }
+
+    /// The death sweep for `node`, run exactly once per death at the
+    /// event's virtual time: purge its replica slots (survivors shift
+    /// left, so a dead primary fails over to its first follower; a
+    /// unit whose last copy died is dead), abort or re-target every
+    /// migration machine touching it, wipe its MR pool and routing
+    /// pre-picks, and queue every damaged unit for the re-replication
+    /// pump.
+    fn on_peer_dead(&mut self, cl: &mut ClusterState, now: Ns, node: NodeId) {
+        // 1. replica slots
+        let mut damaged: Vec<u64> = Vec::new();
+        for (id, u) in self.seq.units.iter_mut() {
+            if !u.alive {
+                continue;
+            }
+            let before = u.nodes.len();
+            let mut i = 0;
+            while i < u.nodes.len() {
+                if u.nodes[i] == node {
+                    u.nodes.remove(i);
+                    u.blocks.remove(i);
+                } else {
+                    i += 1;
+                }
+            }
+            if u.nodes.len() < before {
+                if u.nodes.is_empty() {
+                    u.alive = false;
+                } else {
+                    damaged.push(*id);
+                }
+            }
+        }
+        damaged.sort_unstable();
+        // 2. migration machines: src dead → abort (parked sets flush
+        //    to the survivors right now — exactly once); dst dead →
+        //    DestLost returns the machine to destination selection and
+        //    its parked sets stay parked (they flush at the eventual
+        //    COMMIT against the new destination).
+        for li in 0..self.lanes.len() {
+            let mut mi = 0;
+            while mi < self.lanes[li].migs.len() {
+                if self.lanes[li].migs[mi].src == node {
+                    let m = self.lanes[li].migs.remove(mi);
+                    self.abort_machine_src_dead(cl, now, li, m);
+                    continue;
+                }
+                if self.lanes[li].migs[mi].dst == Some(node) {
+                    let m = &mut self.lanes[li].migs[mi];
+                    m.sm
+                        .on_event(MigEvent::DestLost)
+                        .expect("machine with a destination accepts dest-lost");
+                    m.dst = None;
+                    m.dst_block = None; // died with its peer (wiped below)
+                    self.seq.mig_slot_free = self.seq.mig_slot_free.max(now);
+                }
+                mi += 1;
+            }
+        }
+        // 3. the dead peer's donated memory is gone
+        let gone: Vec<MrBlockId> =
+            cl.mrpools[node].blocks().iter().map(|b| b.id).collect();
+        for b in gone {
+            cl.mrpools[node].release(b);
+        }
+        // 4. routing pre-picks onto the dead peer re-place at mapping
+        self.seq.pending_primary.retain(|_, p| p.node != node);
+        // 5. survivors that lost a copy queue for the repair pump
+        let want = self.vcfg.replicas.max(1);
+        for id in damaged {
+            let under = self
+                .seq
+                .units
+                .get(id)
+                .map(|u| u.alive && u.nodes.len() < want)
+                .unwrap_or(false);
+            if under {
+                self.seq.queue_repair(id);
+            }
+        }
+        cl.refresh_pressure();
+    }
+
+    /// Abort a machine whose *source* peer died mid-protocol: the
+    /// source block died with the peer (its pool is wiped by the death
+    /// sweep), a destination block already registered on a live peer
+    /// is released, and parked sets flush on the way out. A repair
+    /// machine's unit goes back in the queue — if a copy survives, the
+    /// pump retries from it.
+    fn abort_machine_src_dead(
+        &mut self,
+        cl: &mut ClusterState,
+        now: Ns,
+        li: usize,
+        mut m: ActiveMigration,
+    ) {
+        if let (Some(d), Some(db)) = (m.dst, m.dst_block) {
+            cl.mrpools[d].release(db);
+        }
+        if m.is_active() {
+            self.seq.mig_slot_free = self.seq.mig_slot_free.max(now);
+        }
+        if m.repair
+            && self
+                .seq
+                .units
+                .get(m.unit)
+                .map(|u| u.alive)
+                .unwrap_or(false)
+        {
+            self.seq.queue_repair(m.unit);
+        }
+        self.flush_orphaned_parked(cl, now, li, &mut m);
+    }
+
+    /// Queue `unit` for the repair pump if it is alive and below the
+    /// configured copy count (no-op with health off) — keeps the
+    /// `replica-health` law's "damaged ⇒ queued" clause airtight on
+    /// the delete paths too.
+    fn queue_repair_if_under(&mut self, unit: Option<u64>) {
+        let Some(id) = unit else { return };
+        let want = self.vcfg.replicas.max(1);
+        let under = self
+            .seq
+            .units
+            .get(id)
+            .map(|u| u.alive && u.nodes.len() < want)
+            .unwrap_or(false);
+        if under {
+            self.seq.queue_repair(id);
+        }
+    }
+
+    /// Flush a departing machine's parked write sets exactly once: to
+    /// the unit's surviving replicas, else the disk backup (the sets
+    /// stamped `disk_valid` when they parked), else count them lost —
+    /// and in every case complete them back to their shards, so the
+    /// fast path never waits on a dead migration and the
+    /// `parked-flush-once` law holds across aborts, not just COMMITs.
+    fn flush_orphaned_parked(
+        &mut self,
+        cl: &mut ClusterState,
+        now: Ns,
+        li: usize,
+        m: &mut ActiveMigration,
+    ) {
+        if m.parked.is_empty() {
+            return;
+        }
+        let sets = m.parked.len() as u64;
+        let flush_to: Vec<(NodeId, MrBlockId)> = self
+            .seq
+            .units
+            .get(m.unit)
+            .filter(|u| u.alive)
+            .map(|u| {
+                u.nodes
+                    .iter()
+                    .copied()
+                    .zip(u.blocks.iter().copied())
+                    .collect()
+            })
+            .unwrap_or_default();
+        let mut flush_done = now;
+        if !flush_to.is_empty() {
+            let t = now + self.lat.mrpool_get;
+            flush_done = t;
+            for &(n, b) in &flush_to {
+                let verb = cl.tiered_write(t, n, b, m.parked_bytes);
+                flush_done = flush_done.max(verb.end);
+            }
+        } else if self.vcfg.disk_backup {
+            cl.disks[cl.sender].write_async(now, m.parked_bytes);
+        } else {
+            self.seq.mig_stats.lost_write_sets += sets;
+        }
+        self.seq.mig_stats.flushed_sets += sets;
+        let mut by_shard: Vec<(usize, Vec<WriteSet>)> = Vec::new();
+        for (shard, ws) in m.parked.drain(..) {
+            match by_shard.iter_mut().find(|(s, _)| *s == shard) {
+                Some((_, list)) => list.push(ws),
+                None => by_shard.push((shard, vec![ws])),
+            }
+        }
+        for (shard, list) in by_shard {
+            self.lanes[li].inflight.push(Inflight {
+                done: flush_done,
+                shard,
+                sets: list,
+            });
+        }
+    }
+
     // -- remote pressure (§3.5): the reclaim pipeline -----------------
 
     /// A peer needs `bytes` of its donated memory back: select victims
@@ -632,6 +970,9 @@ impl RemoteSender {
                     // a pool-tier source frees appliance capacity, not
                     // the DRAM this pressure episode is reclaiming
                     && m.src_tier == MemTier::Remote
+                    // a repair *copies from* its source and never
+                    // releases it — no bytes are on their way out
+                    && !m.repair
                     && matches!(
                         m.sm.state(),
                         MigState::ChoosingDest
@@ -715,6 +1056,8 @@ impl RemoteSender {
                         parked: Vec::new(),
                         parked_bytes: 0,
                         seq: stamp,
+                        repair: false,
+                        forced_dst: None,
                     });
                     self.seq.mig_stats.started += 1;
                     out.migrated += 1;
@@ -724,7 +1067,20 @@ impl RemoteSender {
                 _ => {
                     // No destination with room (or untracked block):
                     // last resort — delete like the baselines would.
+                    // Diagnose the episode first: "the cluster is dead"
+                    // (a destination would exist if the Dead/Suspect
+                    // peers still counted) is surfaced separately from
+                    // "the cluster is full".
+                    let dead_blocked = unit_id.is_some_and(|u| {
+                        self.pressure_blocked_by_dead(cl, u, node, block_bytes)
+                    });
                     self.seq.delete_victim(cl, node, choice.block, unit_id);
+                    self.queue_repair_if_under(unit_id);
+                    if dead_blocked {
+                        self.seq.mig_stats.no_candidate_dead_peers += 1;
+                    } else {
+                        self.seq.mig_stats.deleted += 1;
+                    }
                     out.deleted += 1;
                     out.reclaimed_bytes += block_bytes;
                     out.done_at = out.done_at.max(t);
@@ -756,8 +1112,12 @@ impl RemoteSender {
     /// move changes tier — a promotion/demotion may land on the same
     /// node) or one of the unit's *other* replica holders, must not
     /// already be the destination of another in-flight migration of
-    /// the same unit (replica distinctness), and must have room for
-    /// the block after reservations.
+    /// the same unit (replica distinctness), must have room for the
+    /// block after reservations — and, with the health ledger on and
+    /// `heed_health`, must be a Healthy peer (a Dead peer cannot take
+    /// a copy; a Suspect one is not gambled on). Diagnostics pass
+    /// `heed_health = false` to ask "would a destination exist if the
+    /// dead peers were alive?" — the `no_candidate_dead_peers` split.
     #[allow(clippy::too_many_arguments)]
     fn reclaim_candidate_ok(
         &self,
@@ -768,13 +1128,18 @@ impl RemoteSender {
         holders: &[NodeId],
         dst_tier: MemTier,
         cross_tier: bool,
+        heed_health: bool,
     ) -> bool {
         let src_ok = c.node != src || cross_tier;
         let holder_ok = !holders.contains(&c.node)
             || (cross_tier && c.node == src);
+        let health_ok = !heed_health
+            || !self.seq.health.enabled
+            || self.seq.health.placeable(c.node);
         c.tier == dst_tier
             && src_ok
             && holder_ok
+            && health_ok
             && !self
                 .lanes
                 .iter()
@@ -806,6 +1171,35 @@ impl RemoteSender {
         src: NodeId,
         block_bytes: u64,
     ) -> bool {
+        self.reclaim_admission(cl, unit, src, block_bytes, true)
+    }
+
+    /// True when a pressure victim of `unit` is blocked *only by peer
+    /// health*: no destination passes the live filter, yet one would
+    /// if the Dead/Suspect peers still counted — the
+    /// `no_candidate_dead_peers` diagnosis ("the cluster is dead",
+    /// not "the cluster is full").
+    fn pressure_blocked_by_dead(
+        &self,
+        cl: &ClusterState,
+        unit: u64,
+        src: NodeId,
+        block_bytes: u64,
+    ) -> bool {
+        self.seq.health.enabled
+            && self.reclaim_admission(cl, unit, src, block_bytes, false)
+    }
+
+    /// The admission loop behind [`Self::has_reclaim_candidate`],
+    /// parameterized on whether peer health narrows the candidates.
+    fn reclaim_admission(
+        &self,
+        cl: &ClusterState,
+        unit: u64,
+        src: NodeId,
+        block_bytes: u64,
+        heed_health: bool,
+    ) -> bool {
         let holders = self.unit_holders(unit);
         let queued: u64 = self
             .lanes
@@ -825,6 +1219,7 @@ impl RemoteSender {
                 holders,
                 MemTier::Remote,
                 false,
+                heed_health,
             ) {
                 continue;
             }
@@ -858,6 +1253,7 @@ impl RemoteSender {
             .filter(|c| {
                 self.reclaim_candidate_ok(
                     c, unit, src, block_bytes, holders, dst_tier, cross_tier,
+                    true,
                 )
             })
             .map(|mut c| {
@@ -956,6 +1352,7 @@ impl RemoteSender {
     /// design, unlike the per-lane completion ticks.
     pub fn advance_migrations(&mut self, cl: &mut ClusterState, now: Ns) {
         self.advance_tiering(cl, now);
+        self.advance_repair(cl, now);
         let mut stepped = false;
         while let Some((t, mref, activation)) = self.next_migration_action()
         {
@@ -996,6 +1393,203 @@ impl RemoteSender {
             let t = self.seq.next_tier_scan;
             self.scan_tiers(cl, t);
             self.seq.next_tier_scan += period;
+        }
+    }
+
+    /// Run every re-replication/rebalance scan due by `now` (the
+    /// repair pump, riding the same advance path as the tier pump). A
+    /// strict no-op with health off — the scan clock never advances
+    /// and no machine is ever enqueued, which is part of the
+    /// off-means-bit-for-bit pin.
+    fn advance_repair(&mut self, cl: &mut ClusterState, now: Ns) {
+        if !self.seq.health.enabled {
+            return;
+        }
+        let period = self.vcfg.health.repair_period.max(1);
+        while self.seq.next_repair_scan <= now {
+            let t = self.seq.next_repair_scan;
+            self.scan_repair(cl, t);
+            self.seq.next_repair_scan += period;
+        }
+    }
+
+    /// One repair scan at virtual time `t`: first drain pending joins
+    /// (up to `health.rebalance_max` unit moves onto each fresh peer),
+    /// then spawn one re-replication machine per queued
+    /// under-replicated unit that has a usable source and a
+    /// destination today; the rest stay queued for the next scan.
+    fn scan_repair(&mut self, cl: &mut ClusterState, t: Ns) {
+        let joins = std::mem::take(&mut self.seq.pending_rebalance);
+        for node in joins {
+            // a joiner that died again before the pump ran is skipped
+            if self.seq.health.placeable(node) {
+                self.rebalance_onto(cl, t, node);
+            }
+        }
+        let queue = std::mem::take(&mut self.seq.repair_queue);
+        for unit in queue {
+            if !self.try_spawn_repair(cl, t, unit) {
+                // still under-replicated but unserviceable right now
+                self.seq.queue_repair(unit);
+            }
+        }
+    }
+
+    /// Try to spawn a re-replication machine for `unit`: copy from its
+    /// primary slot toward a fresh peer, *appending* a replica slot at
+    /// COMMIT (`repair` machines never release their source). Returns
+    /// false when the unit must stay queued — another machine owns the
+    /// unit, the source block is busy, or no destination passes the
+    /// shared candidate filter today; true when it was spawned or no
+    /// longer needs repair.
+    fn try_spawn_repair(
+        &mut self,
+        cl: &mut ClusterState,
+        t: Ns,
+        unit: u64,
+    ) -> bool {
+        let want = self.vcfg.replicas.max(1);
+        let (src, src_block) = match self.seq.units.get(unit) {
+            Some(u) if u.alive && u.nodes.len() < want => {
+                (u.nodes[0], u.blocks[0])
+            }
+            _ => return true, // healed or dead: nothing to repair
+        };
+        // one live machine per unit is an audited law
+        if self
+            .lanes
+            .iter()
+            .flat_map(|l| l.migs.iter())
+            .any(|m| m.unit == unit)
+        {
+            return false;
+        }
+        let (block_bytes, src_tier) = match cl.mrpools[src].get(src_block) {
+            Some(b) if b.state == MrState::Active => (b.bytes, b.tier),
+            _ => return false, // source busy — retry next scan
+        };
+        if self
+            .reclaim_candidates(cl, unit, src, block_bytes, MemTier::Remote, false)
+            .is_empty()
+        {
+            return false; // nowhere to put a copy today
+        }
+        let mut sm = MigrationSm::new();
+        sm.on_event(MigEvent::PressureReport { block: src_block, src })
+            .expect("fresh machine accepts a pressure report");
+        if let Some(b) = cl.mrpools[src].get_mut(src_block) {
+            b.state = MrState::Migrating;
+        }
+        let stamp = self.seq.next_mig_seq();
+        let lane = self.lane_of(src);
+        self.lanes[lane].migs.push(ActiveMigration {
+            sm,
+            unit,
+            src,
+            src_block,
+            src_tier,
+            dst_tier: MemTier::Remote,
+            block_bytes,
+            scheduled: t,
+            dst: None,
+            dst_block: None,
+            activated: 0,
+            park_from: 0,
+            copy_start: 0,
+            copy_end: 0,
+            phase_done: 0,
+            parked: Vec::new(),
+            parked_bytes: 0,
+            seq: stamp,
+            repair: true,
+            forced_dst: None,
+        });
+        true
+    }
+
+    /// Join rebalancing: move up to `health.rebalance_max` unit slots
+    /// onto freshly joined `node`, sourced from the most-loaded live
+    /// peers, as ordinary move machines pinned to the new destination
+    /// (`forced_dst` — activation still validates room through the
+    /// shared candidate filter, so a pin never overcommits the
+    /// joiner).
+    fn rebalance_onto(&mut self, cl: &mut ClusterState, t: Ns, node: NodeId) {
+        let max_moves = self.vcfg.health.rebalance_max;
+        if max_moves == 0 {
+            return;
+        }
+        let busy: Vec<u64> = self
+            .lanes
+            .iter()
+            .flat_map(|l| l.migs.iter())
+            .map(|m| m.unit)
+            .collect();
+        // candidate slots: alive units not already on the joiner, no
+        // live machine, Remote-tier Active source block — taken from
+        // the fullest donor (unit id breaks ties, so the pick is
+        // deterministic despite the map's iteration order)
+        let mut cands: Vec<(u64, u64, NodeId, MrBlockId, u64)> = Vec::new();
+        for (&id, u) in self.seq.units.iter() {
+            if !u.alive || u.nodes.contains(&node) || busy.contains(&id) {
+                continue;
+            }
+            let mut best: Option<(u64, NodeId, MrBlockId, u64)> = None;
+            for (&n, &b) in u.nodes.iter().zip(u.blocks.iter()) {
+                let Some(blk) = cl.mrpools[n].get(b) else {
+                    continue;
+                };
+                if blk.state != MrState::Active
+                    || blk.tier != MemTier::Remote
+                {
+                    continue;
+                }
+                let load = cl.mrpools[n].registered_bytes();
+                let heavier = best
+                    .as_ref()
+                    .map(|&(l, _, _, _)| load > l)
+                    .unwrap_or(true);
+                if heavier {
+                    best = Some((load, n, b, blk.bytes));
+                }
+            }
+            if let Some((load, n, b, bytes)) = best {
+                cands.push((id, load, n, b, bytes));
+            }
+        }
+        cands.sort_unstable_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        for (unit, _, src, src_block, block_bytes) in
+            cands.into_iter().take(max_moves)
+        {
+            let mut sm = MigrationSm::new();
+            sm.on_event(MigEvent::PressureReport { block: src_block, src })
+                .expect("fresh machine accepts a pressure report");
+            if let Some(b) = cl.mrpools[src].get_mut(src_block) {
+                b.state = MrState::Migrating;
+            }
+            let stamp = self.seq.next_mig_seq();
+            let lane = self.lane_of(src);
+            self.lanes[lane].migs.push(ActiveMigration {
+                sm,
+                unit,
+                src,
+                src_block,
+                src_tier: MemTier::Remote,
+                dst_tier: MemTier::Remote,
+                block_bytes,
+                scheduled: t,
+                dst: None,
+                dst_block: None,
+                activated: 0,
+                park_from: 0,
+                copy_start: 0,
+                copy_end: 0,
+                phase_done: 0,
+                parked: Vec::new(),
+                parked_bytes: 0,
+                seq: stamp,
+                repair: false,
+                forced_dst: Some(node),
+            });
         }
     }
 
@@ -1095,6 +1689,8 @@ impl RemoteSender {
                 parked: Vec::new(),
                 parked_bytes: 0,
                 seq: stamp,
+                repair: false,
+                forced_dst: None,
             });
         }
     }
@@ -1112,7 +1708,7 @@ impl RemoteSender {
         t_act: Ns,
     ) {
         let rtt = ctrl_rtt(&self.lat);
-        let (unit, src, block_bytes, dst_tier, cross_tier) = {
+        let (unit, src, block_bytes, dst_tier, cross_tier, forced) = {
             let m = &self.lanes[li].migs[mi];
             (
                 m.unit,
@@ -1120,15 +1716,35 @@ impl RemoteSender {
                 m.block_bytes,
                 m.dst_tier,
                 m.sm.is_cross_tier(),
+                m.forced_dst,
             )
         };
         let cands = self
             .reclaim_candidates(cl, unit, src, block_bytes, dst_tier, cross_tier);
-        let dst = self.seq.reclaim_placement.pick(&cands);
+        // a pinned destination (join rebalancing) is taken when it
+        // passes the shared filter; otherwise the policy picks
+        let dst = forced
+            .and_then(|f| cands.iter().find(|c| c.node == f).copied())
+            .map(|c| Placed {
+                node: c.node,
+                tier: c.tier,
+            })
+            .or_else(|| self.seq.reclaim_placement.pick(&cands));
         let Some(placed) = dst else {
-            let m = self.lanes[li].migs.remove(mi);
+            let mut m = self.lanes[li].migs.remove(mi);
             self.seq.mig_slot_free = self.seq.mig_slot_free.max(t_act);
-            if cross_tier {
+            if m.repair || m.forced_dst.is_some() {
+                // a repair/rebalance copy with nowhere to go stands
+                // down: the source replica is intact, so restore it —
+                // never delete — and, for a repair, go back in the
+                // queue for a later scan
+                if let Some(b) = cl.mrpools[m.src].get_mut(m.src_block) {
+                    b.state = MrState::Active;
+                }
+                if m.repair {
+                    self.seq.queue_repair(m.unit);
+                }
+            } else if cross_tier {
                 // a tier move with nowhere to go is simply abandoned:
                 // the block stays where it is and leaves the table
                 if let Some(b) = cl.mrpools[m.src].get_mut(m.src_block) {
@@ -1139,7 +1755,13 @@ impl RemoteSender {
                 // every candidate filled up while we were queued: delete
                 // (surviving replicas, if any, keep serving reads)
                 self.seq.delete_victim(cl, m.src, m.src_block, Some(m.unit));
+                self.queue_repair_if_under(Some(m.unit));
+                self.seq.mig_stats.deleted += 1;
             }
+            // a machine that lost its first destination to a death may
+            // already hold parked sets — they flush exactly once on
+            // the way out
+            self.flush_orphaned_parked(cl, t_act, li, &mut m);
             return;
         };
         debug_assert_eq!(placed.tier, dst_tier);
@@ -1227,8 +1849,11 @@ impl RemoteSender {
                 m.sm
                     .on_event(MigEvent::CopyDone)
                     .expect("copying accepts copy-done");
-                // source's memory is free once the copy is out
-                cl.mrpools[m.src].release(m.src_block);
+                // source's memory is free once the copy is out — except
+                // for a repair, which copies *alongside* its source
+                if !m.repair {
+                    cl.mrpools[m.src].release(m.src_block);
+                }
                 m.phase_done = m.copy_end + 2 * rtt;
             }
             MigState::Committing => self.commit_migration(cl, (li, mi)),
@@ -1252,7 +1877,40 @@ impl RemoteSender {
         let dst = m.dst.expect("active migration has dst");
         let dst_block = m.dst_block.expect("copy registered the block");
         let mut flush_to = vec![(dst, dst_block)];
-        if let Some(u) = self.seq.units.get_mut(m.unit) {
+        if m.repair {
+            // Re-replication COMMIT: *append* the fresh copy — the
+            // source replica survives and its block returns to Active.
+            if let Some(b) = cl.mrpools[m.src].get_mut(m.src_block) {
+                b.state = MrState::Active;
+            }
+            if let Some(u) = self.seq.units.get_mut(m.unit) {
+                if u.nodes.contains(&dst) {
+                    // raced with a remap onto dst — drop the extra copy
+                    cl.mrpools[dst].release(dst_block);
+                } else {
+                    u.nodes.push(dst);
+                    u.blocks.push(dst_block);
+                }
+                debug_assert_eq!(
+                    choose_replicas(
+                        cl.sender,
+                        u.nodes[0],
+                        &u.nodes,
+                        u.nodes.len()
+                    ),
+                    u.nodes,
+                    "replica set must stay distinct across a repair append"
+                );
+                u.wlocked_until = u.wlocked_until.max(done);
+                flush_to = u
+                    .nodes
+                    .iter()
+                    .copied()
+                    .zip(u.blocks.iter().copied())
+                    .collect();
+            }
+            self.seq.mig_stats.repairs += 1;
+        } else if let Some(u) = self.seq.units.get_mut(m.unit) {
             for (n, b) in u.nodes.iter_mut().zip(u.blocks.iter_mut()) {
                 if *n == m.src && *b == m.src_block {
                     *n = dst;
@@ -1276,6 +1934,9 @@ impl RemoteSender {
                 .copied()
                 .zip(u.blocks.iter().copied())
                 .collect();
+        }
+        if !m.repair && m.forced_dst == Some(dst) {
+            self.seq.mig_stats.rebalanced += 1;
         }
         // FlushParkedWrites: one coalesced message per replica carrying
         // everything that parked during the migration; completions land
@@ -1356,9 +2017,11 @@ impl RemoteSender {
     /// per-node pool-tier byte ledger plus promotion/demotion
     /// conservation ([`Law::TierAccounting`]); with
     /// `thorough` it also re-validates every live unit's replica set
-    /// against [`choose_replicas`] ([`Law::ReplicaDistinct`]) — the
-    /// sweep the crossing hooks sample and the fuzzer/tests run in
-    /// full.
+    /// against [`choose_replicas`] ([`Law::ReplicaDistinct`]) and the
+    /// failure-domain ledger — no live slot on a Dead peer,
+    /// under-replication always queued or in repair
+    /// ([`Law::ReplicaHealth`]) — the sweeps the crossing hooks sample
+    /// and the fuzzer/tests run in full.
     pub fn audit_check(
         &self,
         cl: &ClusterState,
@@ -1669,6 +2332,73 @@ impl RemoteSender {
                 );
             }
         }
+
+        // -- replica-health (failure-domain law, thorough sweep): no
+        // live replica slot references a Dead peer, a unit with no
+        // slots is dead, and (health on) an under-replicated live unit
+        // is queued for repair, owned by a live machine, or covered by
+        // the disk backup — the zero-lost-writes contract's standing
+        // half.
+        if thorough {
+            let want = self.vcfg.replicas.max(1);
+            for (id, u) in self.seq.units.iter() {
+                let snap = || {
+                    format!(
+                        "unit={id} nodes={:?} alive={} repair_queue={:?}",
+                        u.nodes, u.alive, self.seq.repair_queue
+                    )
+                };
+                audit::check(
+                    &mut out,
+                    !(u.alive && u.nodes.is_empty()),
+                    Law::ReplicaHealth,
+                    None,
+                    || format!("unit {id} is alive with no replica slots"),
+                    snap,
+                );
+                if !u.alive {
+                    continue;
+                }
+                for &n in &u.nodes {
+                    audit::check(
+                        &mut out,
+                        self.seq.health.state(n) != Health::Dead,
+                        Law::ReplicaHealth,
+                        None,
+                        || {
+                            format!(
+                                "unit {id} holds a live replica slot on \
+                                 dead peer {n}"
+                            )
+                        },
+                        snap,
+                    );
+                }
+                if self.seq.health.enabled && u.nodes.len() < want {
+                    let queued = self.seq.repair_queue.contains(id);
+                    let machine = self
+                        .lanes
+                        .iter()
+                        .flat_map(|l| l.migs.iter())
+                        .any(|mg| mg.unit == *id);
+                    audit::check(
+                        &mut out,
+                        queued || machine || self.vcfg.disk_backup,
+                        Law::ReplicaHealth,
+                        None,
+                        || {
+                            format!(
+                                "unit {id} is under-replicated \
+                                 ({}/{want}) with no queued repair, live \
+                                 machine or disk backup",
+                                u.nodes.len()
+                            )
+                        },
+                        snap,
+                    );
+                }
+            }
+        }
         out
     }
 
@@ -1727,7 +2457,32 @@ impl RemoteSender {
             parked: Vec::new(),
             parked_bytes: 0,
             seq: stamp,
+            repair: false,
+            forced_dst: None,
         });
+    }
+
+    /// Test-only corruption hook for [`Law::ReplicaHealth`]: mark the
+    /// first live unit's primary peer Dead *without* running the death
+    /// sweep, leaving a live slot pointing at a dead peer. Returns
+    /// false when no live unit exists to corrupt.
+    #[cfg(any(feature = "audit", debug_assertions))]
+    #[doc(hidden)]
+    pub fn audit_corrupt_health(&mut self) -> bool {
+        let victim = self
+            .seq
+            .units
+            .iter()
+            .filter(|(_, u)| u.alive)
+            .filter_map(|(_, u)| u.nodes.first().copied())
+            .next();
+        match victim {
+            Some(n) => {
+                self.seq.health.force_dead(n);
+                true
+            }
+            None => false,
+        }
     }
 
     /// Test-only corruption hook for [`Law::ParkedFlushOnce`]: claim a

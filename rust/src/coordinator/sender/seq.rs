@@ -64,6 +64,141 @@ pub struct MigrationRecord {
     pub parked_flushed: u64,
 }
 
+/// Peer liveness states of the keep-alive ledger (failure-domain
+/// layer). Transitions happen only inside the single cluster-event
+/// application loop, so every lane observes one global timestamp order
+/// of deaths and joins.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Health {
+    /// Events from this peer arrive on schedule.
+    Healthy,
+    /// Missed `health.max_missed` expected cluster events: excluded
+    /// from *new* placement, but its replicas still serve reads.
+    Suspect,
+    /// Missed `2 × max_missed` events, or explicitly killed
+    /// ([`crate::cluster::ClusterEvent::PeerDown`]): its memory is
+    /// gone — slots purge, reads fail over, migrations re-target.
+    Dead,
+}
+
+/// The keep-alive ledger: per-peer [`Health`] driven by cluster-event
+/// arrivals. Every applied event is one "expected event" tick — the
+/// originating peer proves itself alive, everyone else ages by one
+/// missed event. Disabled (`valet.health.enabled = false`, the
+/// default), the ledger never ticks and every peer stays Healthy:
+/// bit-for-bit the PR-8 system.
+pub(crate) struct HealthLedger {
+    /// Master switch (`valet.health.enabled`).
+    pub(crate) enabled: bool,
+    /// Missed-event threshold for Healthy → Suspect (Dead at double).
+    max_missed: u64,
+    /// Per-node `(state, missed count)`; the sender never ages.
+    states: Vec<(Health, u64)>,
+}
+
+impl HealthLedger {
+    fn new(cfg: &Config) -> Self {
+        HealthLedger {
+            enabled: cfg.valet.health.enabled,
+            max_missed: cfg.valet.health.max_missed.max(1),
+            states: vec![(Health::Healthy, 0); cfg.cluster.nodes],
+        }
+    }
+
+    /// Current state of `node` (Healthy for any out-of-range id, so
+    /// diagnostics can probe freely).
+    pub(crate) fn state(&self, node: NodeId) -> Health {
+        self.states.get(node).map_or(Health::Healthy, |s| s.0)
+    }
+
+    /// May `node`'s replicas serve reads? (Not Dead — a Suspect peer's
+    /// data is still there until it is declared gone.)
+    pub(crate) fn alive(&self, node: NodeId) -> bool {
+        self.state(node) != Health::Dead
+    }
+
+    /// May *new* data be placed on `node`? (Healthy only — placing on
+    /// a Suspect peer gambles fresh writes on a likely death.)
+    pub(crate) fn placeable(&self, node: NodeId) -> bool {
+        self.state(node) == Health::Healthy
+    }
+
+    /// One applied cluster event: `origin` (if any) resets its missed
+    /// counter (Suspect recovers; Dead stays dead until an explicit
+    /// join), every other peer ages one missed event. Returns the
+    /// peers that crossed into Dead on this tick, in node order.
+    pub(crate) fn tick(
+        &mut self,
+        sender: NodeId,
+        origin: Option<NodeId>,
+    ) -> Vec<NodeId> {
+        if !self.enabled {
+            return Vec::new();
+        }
+        let mut newly_dead = Vec::new();
+        for (n, entry) in self.states.iter_mut().enumerate() {
+            if n == sender || entry.0 == Health::Dead {
+                continue;
+            }
+            if origin == Some(n) {
+                *entry = (Health::Healthy, 0);
+                continue;
+            }
+            entry.1 += 1;
+            if entry.1 >= 2 * self.max_missed {
+                entry.0 = Health::Dead;
+                newly_dead.push(n);
+            } else if entry.1 >= self.max_missed {
+                entry.0 = Health::Suspect;
+            }
+        }
+        newly_dead
+    }
+
+    /// Explicit kill ([`crate::cluster::ClusterEvent::PeerDown`]).
+    /// Returns false if the peer was already Dead (idempotent).
+    pub(crate) fn kill(&mut self, node: NodeId) -> bool {
+        if !self.enabled {
+            return false;
+        }
+        match self.states.get_mut(node) {
+            Some(entry) if entry.0 != Health::Dead => {
+                *entry = (Health::Dead, 0);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Explicit join ([`crate::cluster::ClusterEvent::PeerJoin`]).
+    /// Returns true when the peer was Dead (a *fresh* join with an
+    /// empty pool, triggering rebalance); a join event for a live peer
+    /// is just a keep-alive.
+    pub(crate) fn revive(&mut self, node: NodeId) -> bool {
+        if !self.enabled {
+            return false;
+        }
+        match self.states.get_mut(node) {
+            Some(entry) => {
+                let was_dead = entry.0 == Health::Dead;
+                *entry = (Health::Healthy, 0);
+                was_dead
+            }
+            None => false,
+        }
+    }
+
+    /// Corruption hook for the negative audit tests: mark `node` Dead
+    /// *without* running the death sweep, leaving unit slots pointing
+    /// at a dead peer.
+    #[cfg(any(feature = "audit", debug_assertions))]
+    pub(crate) fn force_dead(&mut self, node: NodeId) {
+        if let Some(entry) = self.states.get_mut(node) {
+            *entry = (Health::Dead, 0);
+        }
+    }
+}
+
 /// Aggregate reclaim-pipeline counters (sequencer-global — migrations
 /// belong to the shared slow path, not to any one shard's `RunMetrics`).
 #[derive(Clone, Copy, Debug, Default)]
@@ -93,6 +228,22 @@ pub struct MigStats {
     /// the victim as a last resort), a failed tier move simply leaves
     /// the block where it was.
     pub tier_canceled: u64,
+    /// Pressure episodes where every candidate destination was
+    /// excluded as Dead/Suspect — "the cluster is dead", as opposed to
+    /// `deleted`'s "the cluster is full". The victim is still released
+    /// (the pressured peer needs its memory back either way) but the
+    /// episode is surfaced here instead of the generic delete count.
+    pub no_candidate_dead_peers: u64,
+    /// Re-replication copies committed (a unit regained a replica slot
+    /// lost to a dead peer).
+    pub repairs: u64,
+    /// Units migrated onto a freshly joined peer by join rebalancing.
+    pub rebalanced: u64,
+    /// Acknowledged write sets lost to a peer death: they were parked
+    /// against a migration whose unit had no surviving replica and no
+    /// disk backup to flush to. The `churn` experiment gates this (and
+    /// the read-side `lost_reads`) to zero under `FtPolicy.copies ≥ 2`.
+    pub lost_write_sets: u64,
 }
 
 /// Cross-peer slow-path state (see the module docs for what qualifies).
@@ -151,6 +302,16 @@ pub(crate) struct Sequencer {
     pub(crate) insensitive_score: f64,
     /// Next promotion/demotion scan fires at this virtual time.
     pub(crate) next_tier_scan: Ns,
+    /// The keep-alive health ledger (failure-domain layer; inert and
+    /// all-Healthy unless `valet.health.enabled`).
+    pub(crate) health: HealthLedger,
+    /// Units that lost a replica slot to a dead peer and await the
+    /// re-replication pump (insertion order; deduplicated on push).
+    pub(crate) repair_queue: Vec<u64>,
+    /// Freshly joined peers awaiting join rebalancing on the next pump.
+    pub(crate) pending_rebalance: Vec<NodeId>,
+    /// Next re-replication scan fires at this virtual time.
+    pub(crate) next_repair_scan: Ns,
 }
 
 impl Sequencer {
@@ -172,6 +333,10 @@ impl Sequencer {
             recent_maps: Vec::new(),
             insensitive_score: 0.0,
             next_tier_scan: cfg.valet.pool_tier.scan_period,
+            health: HealthLedger::new(cfg),
+            repair_queue: Vec::new(),
+            pending_rebalance: Vec::new(),
+            next_repair_scan: cfg.valet.health.repair_period,
         }
     }
 
@@ -207,7 +372,7 @@ impl Sequencer {
     /// stochastic policies make identical RNG draws). With it on, the
     /// admission predictor first narrows the list.
     fn pick_primary(&mut self, cl: &ClusterState) -> Placed {
-        let cands = cl.candidates();
+        let cands = self.health_candidates(cl.candidates());
         if cl.pool_cfg.enabled {
             let filtered = self.admission_filter(cl, &cands);
             return self
@@ -317,10 +482,17 @@ impl Sequencer {
         }
         // (Re)map: primary from the routing pre-pick (or the placement
         // hook if the unit was never routed), then replicas.
-        let cands = cl.candidates();
+        let cands = self.health_candidates(cl.candidates());
+        // a routing pre-pick is dropped if its node has since died or
+        // turned Suspect — re-place through the hooks instead
         let primary = match self.pending_primary.remove(&unit) {
-            Some(p) => p,
-            None => self.pick_primary(cl),
+            Some(p)
+                if !self.health.enabled
+                    || self.health.placeable(p.node) =>
+            {
+                p
+            }
+            _ => self.pick_primary(cl),
         };
         self.observe_mapping(cl, now, unit);
         // Replica candidates are *nodes*: with the pool tier on a peer
@@ -334,6 +506,9 @@ impl Sequencer {
         }
         let nodes =
             choose_replicas(cl.sender, primary.node, &cand_nodes, replicas);
+        // a mapping truncated below its copy target (deaths thinned the
+        // candidates) starts life queued for the re-replication pump
+        let short = nodes.len() < replicas;
         // Connection (if new) + mapping, charged sequentially per node.
         // A pool-tier primary needs no queue pair: it is mapped through
         // the pooled appliance's fabric manager (cheaper than MAP_MR).
@@ -372,6 +547,9 @@ impl Sequencer {
                 alive: true,
             },
         );
+        if short {
+            self.queue_repair(unit);
+        }
         t
     }
 
@@ -379,7 +557,10 @@ impl Sequencer {
     /// release the victim block and drop its replica slot from the unit
     /// map. Surviving replicas keep serving reads (Table 3: replica
     /// first); only when the last copy is gone does the unit die and
-    /// reads fall through to the disk backup (or are lost).
+    /// reads fall through to the disk backup (or are lost). Callers
+    /// account the episode themselves (`deleted` for "cluster full",
+    /// `no_candidate_dead_peers` for "cluster dead") — the mechanics
+    /// here are shared, the diagnosis is not.
     pub(crate) fn delete_victim(
         &mut self,
         cl: &mut ClusterState,
@@ -404,7 +585,45 @@ impl Sequencer {
                 }
             }
         }
-        self.mig_stats.deleted += 1;
+    }
+
+    /// Queue `unit` for the re-replication pump (deduplicated; no-op
+    /// with health off — the pump never runs then anyway).
+    pub(crate) fn queue_repair(&mut self, unit: u64) {
+        if self.health.enabled && !self.repair_queue.contains(&unit) {
+            self.repair_queue.push(unit);
+        }
+    }
+
+    /// Narrow placement candidates by peer health: Healthy nodes are
+    /// the first choice; an all-Suspect cluster falls back to any
+    /// non-Dead node (still accepting writes beats refusing them). The
+    /// input is returned untouched when health is off — zero extra
+    /// work on the default path.
+    pub(crate) fn health_candidates(
+        &self,
+        cands: Vec<Candidate>,
+    ) -> Vec<Candidate> {
+        if !self.health.enabled {
+            return cands;
+        }
+        let healthy: Vec<Candidate> = cands
+            .iter()
+            .filter(|c| self.health.placeable(c.node))
+            .copied()
+            .collect();
+        if !healthy.is_empty() {
+            return healthy;
+        }
+        let alive: Vec<Candidate> = cands
+            .iter()
+            .filter(|c| self.health.alive(c.node))
+            .copied()
+            .collect();
+        if !alive.is_empty() {
+            return alive;
+        }
+        cands
     }
 
     /// Issue the next migration submission stamp.

@@ -415,7 +415,8 @@ pub fn shard_write(
 
 /// One shard's read miss path: coalesce with an outstanding fetch of
 /// the same page if one is in flight, else one-sided RDMA READ from the
-/// unit's primary, else disk (Table 3 fallback). Every miss also feeds
+/// unit's first *live* replica (the primary, unless the health ledger
+/// declared its peer Dead), else disk (Table 3 fallback). Every miss also feeds
 /// the shard's stride prefetcher, which may post an asynchronous
 /// readahead batch — posted *after* the demand fetch so speculation
 /// never queues ahead of demand on the NIC, and never charged to this
@@ -453,19 +454,16 @@ pub fn shard_read_miss(
         };
     }
     let unit_id = sender.units().unit_of(page);
-    let remote_ok = sender
-        .units()
-        .get(unit_id)
-        .map(|u| u.alive && fast.remote_ready.get(page))
-        .unwrap_or(false);
-    if remote_ok {
-        let u = sender
-            .units()
-            .get(unit_id)
-            .expect("remote_ok was derived from this same unit lookup");
-        let primary = u.nodes[0];
-        let primary_block = u.blocks[0];
-        let ready_at = u.ready_at;
+    // Failover ladder, rung 1: a live replica slot. With health off
+    // this is exactly the unit's primary; with health on, a read whose
+    // primary peer died fails over to the first surviving replica
+    // (`replication::read_source` inside `read_slot`).
+    let slot = if fast.remote_ready.get(page) {
+        sender.read_slot(unit_id)
+    } else {
+        None
+    };
+    if let Some((primary, primary_block, ready_at)) = slot {
         t = t.max(ready_at);
         t += mrpool_get;
         fast.metrics.read_parts.add("mrpool", mrpool_get);
@@ -494,7 +492,16 @@ pub fn shard_read_miss(
             source: Source::Remote,
         };
     }
-    // Remote copy unavailable: disk (Table 3 fallback).
+    // Rungs 2–3: disk backup, else the data is gone. A page the remote
+    // side acknowledged but no live replica or disk copy can serve is a
+    // *lost read* — the churn gate's headline number. The disk access
+    // is charged either way so virtual time flows identically.
+    if sender.health_on()
+        && fast.remote_ready.get(page)
+        && !fast.disk_valid.get(page)
+    {
+        fast.metrics.lost_reads += 1;
+    }
     let end = cl.disks[cl.sender].read(t, PAGE_SIZE);
     fast.metrics.read_parts.add("disk", end - t);
     fast.metrics.disk_reads += 1;
@@ -592,7 +599,7 @@ fn land_readahead(
             continue;
         }
         let unit = sender.units().unit_of(p);
-        if !sender.units().get(unit).map(|u| u.alive).unwrap_or(false) {
+        if sender.read_slot(unit).is_none() {
             continue;
         }
         // A slot for the speculation, or stop: the pool has no room.
@@ -704,14 +711,17 @@ pub fn shard_read_block(
             continue;
         }
         let unit = sender.units().unit_of(p);
-        let remote_ok = sender
-            .units()
-            .get(unit)
-            .map(|u| u.alive && fast.remote_ready.get(p))
-            .unwrap_or(false);
+        let remote_ok =
+            fast.remote_ready.get(p) && sender.read_slot(unit).is_some();
         if remote_ok {
             fetch.push(p);
         } else {
+            if sender.health_on()
+                && fast.remote_ready.get(p)
+                && !fast.disk_valid.get(p)
+            {
+                fast.metrics.lost_reads += 1;
+            }
             disk_pages += 1;
         }
     }

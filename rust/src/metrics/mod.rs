@@ -58,6 +58,12 @@ pub struct RunMetrics {
     /// lock-free completion or one collect→coalesce→batch crossing
     /// (`remote_hits`/`coalesced_reads` tell the two apart).
     pub batched_reads: u64,
+    /// Reads of data the cluster acknowledged but can no longer serve:
+    /// every replica slot died, the unit is gone, and the disk backup
+    /// was off. The churn gate requires this to stay 0 whenever
+    /// `replicas ≥ 2` or `valet.disk_backup` is on. Always 0 with
+    /// `valet.health` off (deaths never happen without the ledger).
+    pub lost_reads: u64,
 }
 
 impl RunMetrics {
@@ -123,6 +129,7 @@ impl RunMetrics {
         self.prefetch_wasted += other.prefetch_wasted;
         self.coalesced_reads += other.coalesced_reads;
         self.batched_reads += other.batched_reads;
+        self.lost_reads += other.lost_reads;
     }
 }
 

@@ -69,6 +69,11 @@ pub enum MigEvent {
     CopyDone,
     /// Destination acknowledged COMMIT.
     CommitAcked,
+    /// The chosen destination died before COMMIT: drop it and return to
+    /// destination selection. Writes already parked stay parked (they
+    /// re-park against the next destination and still flush exactly
+    /// once, at the eventual COMMIT — the `parked-flush-once` law).
+    DestLost,
 }
 
 /// Actions the protocol asks its host (the sender module) to perform.
@@ -206,6 +211,14 @@ impl MigrationSm {
             (Committing, CommitAcked) => {
                 self.state = Done;
                 Ok(vec![FlushParkedWrites])
+            }
+            (Preparing | Copying | Committing, DestLost) => {
+                // crash-consistent re-target: back to destination
+                // selection with the same block/src; parked writes are
+                // retained by the host (they flush at the new COMMIT)
+                self.dst = None;
+                self.state = ChoosingDest;
+                Ok(vec![QueryCandidates])
             }
             _ => Err(bad(self)),
         }
@@ -357,6 +370,35 @@ mod tests {
         let a = sm.on_event(MigEvent::DestChosen { dst: 1 }).unwrap();
         assert_eq!(a, vec![MigAction::StopWrites, MigAction::SendPrepare]);
         assert!(sm.writes_parked());
+    }
+
+    #[test]
+    fn dest_lost_returns_to_choosing_and_still_commits_once() {
+        let mut sm = MigrationSm::new();
+        sm.on_event(MigEvent::PressureReport { block: 7, src: 1 })
+            .unwrap();
+        sm.on_event(MigEvent::DestChosen { dst: 2 }).unwrap();
+        sm.on_event(MigEvent::PrepareAcked).unwrap();
+        assert_eq!(sm.state(), MigState::Copying);
+        // dst dies mid-copy: back to ChoosingDest, dst cleared, writes
+        // no longer parked *by the machine* (the host retains them)
+        let a = sm.on_event(MigEvent::DestLost).unwrap();
+        assert_eq!(a, vec![MigAction::QueryCandidates]);
+        assert_eq!(sm.state(), MigState::ChoosingDest);
+        assert_eq!(sm.dst, None);
+        assert_eq!(sm.block, Some(7));
+        assert_eq!(sm.src, Some(1));
+        // the machine completes normally against a fresh destination,
+        // flushing parked writes exactly once
+        sm.on_event(MigEvent::DestChosen { dst: 3 }).unwrap();
+        sm.on_event(MigEvent::PrepareAcked).unwrap();
+        sm.on_event(MigEvent::CopyDone).unwrap();
+        let last = sm.on_event(MigEvent::CommitAcked).unwrap();
+        assert_eq!(last, vec![MigAction::FlushParkedWrites]);
+        // DestLost is illegal outside the parked window
+        assert!(sm.on_event(MigEvent::DestLost).is_err());
+        let mut idle = MigrationSm::new();
+        assert!(idle.on_event(MigEvent::DestLost).is_err());
     }
 
     #[test]

@@ -362,6 +362,49 @@ fn tier_accounting_fires_on_unbacked_promotion_count() {
     );
 }
 
+// ----------------------------------------------------- replica health
+
+#[test]
+fn replica_health_fires_on_live_slot_on_dead_peer() {
+    // Law 16: a live replica slot must never reference a Dead peer —
+    // the death sweep purges slots in the same event application that
+    // declares the death, so a dead-pointing slot can only mean the
+    // sweep was bypassed. Force a referenced peer Dead behind the
+    // sweep's back. (The clause is NOT gated on `health.enabled`: a
+    // Dead mark with health off is itself corruption.)
+    let cfg = small_cfg();
+    let (mut sc, t) = populated(&cfg, 1);
+    assert_clean(&sc.engine.audit_check(&sc.state, t));
+    assert!(
+        sc.engine.sender_mut().audit_corrupt_health(),
+        "populated engine must have a live unit"
+    );
+    assert_fires(
+        &sc.engine.sender().audit_check(&sc.state, true),
+        Law::ReplicaHealth,
+    );
+}
+
+#[test]
+fn replica_health_holds_through_a_real_death() {
+    // The positive half: a *legitimate* kill (event-applied death
+    // sweep) leaves the ledger coherent — every slot purged, every
+    // thinned unit queued for the re-replication pump — so the law
+    // stays silent right at the most dangerous instant, before the
+    // pump has repaired anything.
+    use valet::cluster::ClusterEvent;
+    let mut cfg = small_cfg();
+    cfg.valet.replicas = 2;
+    cfg.valet.disk_backup = false;
+    cfg.valet.health.enabled = true;
+    let (mut sc, t) = populated(&cfg, 1);
+    assert_clean(&sc.engine.audit_check(&sc.state, t));
+    sc.schedule(t + 1, ClusterEvent::PeerDown { node: 1 });
+    sc.advance(t + 1); // enforcement inside would panic on a bad sweep
+    assert_clean(&sc.engine.audit_check(&sc.state, t + 1));
+    assert_clean(&sc.engine.sender().audit_check(&sc.state, true));
+}
+
 // -------------------------------------------------------- pressure log
 
 #[test]

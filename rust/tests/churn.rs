@@ -1,0 +1,407 @@
+//! Regression harness for the failure-domain layer.
+//!
+//! The contract under test (ISSUE 9 / ARCHITECTURE.md "Failure
+//! domains"): `valet.health` is **off by default**, and off means the
+//! engine is the pre-health PR-8 system **bit-for-bit** — peer deaths
+//! have no vocabulary, the repair pump never scans, and every health
+//! knob is dead weight. On top of that pin, the layer itself must
+//! behave: an explicit `PeerDown` kills immediately and reads fail over
+//! to surviving replicas with zero lost acknowledged writes, the
+//! re-replication pump restores the copy target, a rejoining peer
+//! receives rebalanced units, and a peer that goes silent while others
+//! keep speaking ages Healthy → Suspect → Dead through the keep-alive
+//! ledger.
+
+use valet::cluster::{ClusterEvent, ShardedCluster};
+use valet::config::Config;
+use valet::coordinator::sender::Health;
+use valet::metrics::RunMetrics;
+use valet::sim::{ms, Ns};
+use valet::util::Rng;
+use valet::PAGE_SIZE;
+
+/// 1 sender + 4 peers, 256 KB units, small pinned mempool (so reads
+/// actually reach the remote side and exercise failover).
+fn small_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.cluster.nodes = 5;
+    cfg.valet.mr_block_bytes = 1 << 18;
+    cfg.valet.min_pool_pages = 64;
+    cfg.valet.max_pool_pages = 64;
+    cfg
+}
+
+/// `small_cfg` with the failure-domain layer on and two copies of
+/// everything, disk backup off: survival must come from replicas.
+fn churn_cfg() -> Config {
+    let mut cfg = small_cfg();
+    cfg.valet.replicas = 2;
+    cfg.valet.disk_backup = false;
+    cfg.valet.health.enabled = true;
+    cfg.valet.health.repair_period = ms(2);
+    cfg.valet.health.rebalance_max = 64;
+    cfg
+}
+
+/// One deterministic mixed op sequence (writes / reads / pumps).
+#[derive(Clone, Copy, Debug)]
+enum Op {
+    Write(u64, u64),
+    Read(u64),
+    Pump(Ns),
+}
+
+fn workload(n: usize, seed: u64) -> Vec<Op> {
+    let mut rng = Rng::new(seed);
+    let mut ops = Vec::with_capacity(n);
+    for _ in 0..n {
+        match rng.below(5) {
+            0 | 1 => {
+                ops.push(Op::Write(rng.below(128) * 16, 16 * PAGE_SIZE));
+            }
+            2 => ops.push(Op::Write(rng.below(2048), PAGE_SIZE)),
+            3 => ops.push(Op::Read(rng.below(2048))),
+            _ => ops.push(Op::Pump(ms(rng.below(40)))),
+        }
+    }
+    ops
+}
+
+/// Everything we compare between two runs (mirrors `tests/tiering.rs`;
+/// float metrics compared via `to_bits` so "equal" means identical).
+#[derive(Debug, PartialEq)]
+struct Summary {
+    finished_at: Ns,
+    local_hits: u64,
+    remote_hits: u64,
+    disk_reads: u64,
+    disk_writes: u64,
+    lost_reads: u64,
+    read_count: u64,
+    read_mean_bits: u64,
+    read_p50: u64,
+    read_p99: u64,
+    write_count: u64,
+    write_mean_bits: u64,
+    write_p50: u64,
+    write_p99: u64,
+    stall_ns: u128,
+    pending: usize,
+    staged_bytes: u64,
+    mapped_units: usize,
+    prefetch_issued: u64,
+    prefetch_hits: u64,
+    coalesced_reads: u64,
+    migrations_started: u64,
+    repairs: u64,
+    rebalanced: u64,
+    lost_write_sets: u64,
+}
+
+/// Run `ops` on a [`ShardedCluster`] (so scheduled [`ClusterEvent`]s
+/// flow through the one global event-application loop) and summarize.
+fn run_summary(
+    cfg: &Config,
+    ops: &[Op],
+    events: &[(Ns, ClusterEvent)],
+) -> Summary {
+    let mut cl = ShardedCluster::new(cfg, 1);
+    for &(at, ev) in events {
+        cl.schedule(at, ev);
+    }
+    let mut t: Ns = 0;
+    for &op in ops {
+        match op {
+            Op::Write(page, bytes) => t = cl.write(t, page, bytes).end,
+            Op::Read(page) => t = cl.read(t, page).end,
+            Op::Pump(dt) => {
+                t += dt;
+                cl.advance(t);
+            }
+        }
+    }
+    let m: RunMetrics = cl.engine.combined_metrics();
+    let stats = cl.engine.migration_stats();
+    Summary {
+        finished_at: t,
+        local_hits: m.local_hits,
+        remote_hits: m.remote_hits,
+        disk_reads: m.disk_reads,
+        disk_writes: m.disk_writes,
+        lost_reads: m.lost_reads,
+        read_count: m.read_latency.count(),
+        read_mean_bits: m.read_latency.mean().to_bits(),
+        read_p50: m.read_latency.p50(),
+        read_p99: m.read_latency.p99(),
+        write_count: m.write_latency.count(),
+        write_mean_bits: m.write_latency.mean().to_bits(),
+        write_p50: m.write_latency.p50(),
+        write_p99: m.write_latency.p99(),
+        stall_ns: m.write_parts.sum("stall"),
+        pending: cl.engine.pending_write_sets(),
+        staged_bytes: cl.engine.staged_bytes(),
+        mapped_units: cl.engine.mapped_units(),
+        prefetch_issued: m.prefetch_issued,
+        prefetch_hits: m.prefetch_hits,
+        coalesced_reads: m.coalesced_reads,
+        migrations_started: stats.started,
+        repairs: stats.repairs,
+        rebalanced: stats.rebalanced,
+        lost_write_sets: stats.lost_write_sets,
+    }
+}
+
+/// Write `blocks` 16-page blocks and drain the staging pipeline so
+/// every write is acknowledged remote (`remote_ready`) before churn.
+fn lay_down(cl: &mut ShardedCluster, blocks: u64) -> Ns {
+    let mut t: Ns = 0;
+    for blk in 0..blocks {
+        t = cl.write(t, blk * 16, 16 * PAGE_SIZE).end;
+        if blk % 16 == 0 {
+            cl.advance(t);
+        }
+    }
+    let mut iters = 0;
+    while cl.engine.pending_write_sets() > 0 && iters < 100_000 {
+        t += ms(1);
+        cl.advance(t);
+        iters += 1;
+    }
+    assert_eq!(cl.engine.pending_write_sets(), 0, "drain did not converge");
+    t
+}
+
+#[test]
+fn health_off_is_bit_for_bit_identical_to_pre_health_engine() {
+    // The PR-9 differential pin: with `health.enabled = false` (the
+    // default) every other health knob must be dead weight — even with
+    // kill and join events on the timeline (they are ignored without
+    // the ledger). A run under the defaults and a run under absurd-
+    // but-off knobs must produce the identical metric summary, down to
+    // float bits — proof the failure-domain code adds no RNG draws, no
+    // candidate filtering, no pump work and no verb changes when off.
+    let cfg = small_cfg();
+    let ops = workload(700, 0x9B1E);
+    let events = [
+        (ms(3), ClusterEvent::PeerDown { node: 1 }),
+        (ms(9), ClusterEvent::PeerJoin { node: 1 }),
+    ];
+    let oracle = run_summary(&cfg, &ops, &events);
+
+    let mut noisy = small_cfg();
+    noisy.valet.health.max_missed = 1; // absurd, but off
+    noisy.valet.health.repair_period = 1;
+    noisy.valet.health.rebalance_max = 1_000;
+    let perturbed = run_summary(&noisy, &ops, &events);
+
+    assert_eq!(oracle, perturbed, "disabled health knobs leaked into the run");
+    assert_eq!(oracle.repairs + oracle.rebalanced, 0);
+    assert_eq!(oracle.lost_reads + oracle.lost_write_sets, 0);
+    assert!(oracle.read_count > 0 && oracle.write_count > 0);
+}
+
+#[test]
+fn peer_down_with_health_off_is_inert() {
+    // With health off, PeerDown must do exactly what any other event
+    // does: tick the shared event plumbing (pressure refresh) and
+    // nothing else. Compare against a neutral zero-byte NativeFree at
+    // the same instants — identical summaries prove the kill neither
+    // purged slots nor touched a pool.
+    let cfg = small_cfg();
+    let ops = workload(500, 0x51CE);
+    let down = [
+        (ms(2), ClusterEvent::PeerDown { node: 2 }),
+        (ms(8), ClusterEvent::PeerDown { node: 3 }),
+    ];
+    let neutral = [
+        (ms(2), ClusterEvent::NativeFree { node: 2, bytes: 0 }),
+        (ms(8), ClusterEvent::NativeFree { node: 3, bytes: 0 }),
+    ];
+    let a = run_summary(&cfg, &ops, &down);
+    let b = run_summary(&cfg, &ops, &neutral);
+    assert_eq!(a, b, "PeerDown with health off changed the run");
+}
+
+#[test]
+fn churned_runs_are_deterministic() {
+    // With health ON (ledger, death sweep, repair pump, rebalancing
+    // all live) identical traces with kill+join events must replay
+    // bit-for-bit.
+    let cfg = churn_cfg();
+    let events = [
+        (ms(5), ClusterEvent::PeerDown { node: 1 }),
+        (ms(40), ClusterEvent::PeerJoin { node: 1 }),
+    ];
+    for seed in [0xC0FFEEu64, 42] {
+        let ops = workload(600, seed);
+        let a = run_summary(&cfg, &ops, &events);
+        let b = run_summary(&cfg, &ops, &events);
+        assert_eq!(a, b, "nondeterministic churn replay (seed {seed})");
+    }
+}
+
+#[test]
+fn kill_mid_traffic_loses_no_acknowledged_write() {
+    // The headline contract: kill a peer after the working set is
+    // acknowledged, then read back EVERY page. With `replicas = 2`
+    // each unit keeps a surviving copy, so the failover ladder serves
+    // everything remotely — zero lost reads, zero lost write sets, and
+    // (with both copies placed on distinct peers) zero disk reads.
+    let cfg = churn_cfg();
+    let mut cl = ShardedCluster::new(&cfg, 1);
+    let blocks = 48u64;
+    let mut t = lay_down(&mut cl, blocks);
+
+    let victim = 1;
+    t += ms(1);
+    cl.schedule(t, ClusterEvent::PeerDown { node: victim });
+    cl.advance(t);
+    assert_eq!(cl.engine.sender().peer_health(victim), Health::Dead);
+
+    // no live replica slot may reference the dead peer
+    for (_, u) in cl.engine.sender().units().iter() {
+        if u.alive {
+            assert!(
+                !u.nodes.contains(&victim),
+                "live slot still on the dead peer"
+            );
+            assert!(!u.nodes.is_empty(), "alive unit with no slots");
+        }
+    }
+
+    for blk in 0..blocks {
+        for p in 0..16u64 {
+            t = cl.read(t, blk * 16 + p).end;
+        }
+        cl.advance(t);
+    }
+    let m = cl.engine.combined_metrics();
+    let s = cl.engine.migration_stats();
+    assert_eq!(m.lost_reads, 0, "acknowledged write unreadable");
+    assert_eq!(s.lost_write_sets, 0, "write set dropped by the sweep");
+    assert_eq!(m.disk_reads, 0, "failover should not need the disk");
+    assert!(m.remote_hits > 0, "sweep never reached the remote side");
+}
+
+#[test]
+fn repair_pump_restores_the_copy_target() {
+    // After a death thins units to one copy, the re-replication pump
+    // must restore `replicas = 2` for every live unit — and the new
+    // copies land on live peers only.
+    let cfg = churn_cfg();
+    let mut cl = ShardedCluster::new(&cfg, 1);
+    let mut t = lay_down(&mut cl, 48);
+
+    let victim = 1;
+    t += ms(1);
+    cl.schedule(t, ClusterEvent::PeerDown { node: victim });
+    cl.advance(t);
+    assert!(
+        cl.engine.sender().repair_backlog() > 0,
+        "death queued nothing for re-replication"
+    );
+
+    let mut iters = 0;
+    while (cl.engine.sender().repair_backlog() > 0
+        || cl.engine.migrations_inflight() > 0)
+        && iters < 100_000
+    {
+        t += ms(1);
+        cl.advance(t);
+        iters += 1;
+    }
+    assert_eq!(cl.engine.sender().repair_backlog(), 0, "pump never drained");
+    let s = cl.engine.migration_stats();
+    assert!(s.repairs > 0, "pump drained without committing a repair");
+    for (id, u) in cl.engine.sender().units().iter() {
+        if u.alive {
+            assert_eq!(u.nodes.len(), 2, "unit {id} below the copy target");
+            assert!(!u.nodes.contains(&victim), "repair used the dead peer");
+        }
+    }
+}
+
+#[test]
+fn join_rebalances_units_onto_the_fresh_peer() {
+    // A rejoining peer starts with an empty pool; the join must
+    // trigger bounded rebalancing that migrates units onto it (the
+    // per-join burst is capped by `health.rebalance_max`).
+    let cfg = churn_cfg();
+    let mut cl = ShardedCluster::new(&cfg, 1);
+    let mut t = lay_down(&mut cl, 48);
+
+    let victim = 1;
+    t += ms(1);
+    cl.schedule(t, ClusterEvent::PeerDown { node: victim });
+    cl.advance(t);
+    let mut iters = 0;
+    while (cl.engine.sender().repair_backlog() > 0
+        || cl.engine.migrations_inflight() > 0)
+        && iters < 100_000
+    {
+        t += ms(1);
+        cl.advance(t);
+        iters += 1;
+    }
+    assert_eq!(cl.state.mrpools[victim].registered_bytes(), 0);
+
+    t += ms(1);
+    cl.schedule(t, ClusterEvent::PeerJoin { node: victim });
+    cl.advance(t);
+    assert_eq!(cl.engine.sender().peer_health(victim), Health::Healthy);
+    let mut iters = 0;
+    while cl.engine.migrations_inflight() > 0 && iters < 100_000 {
+        t += ms(1);
+        cl.advance(t);
+        iters += 1;
+    }
+    let s = cl.engine.migration_stats();
+    assert!(s.rebalanced > 0, "join triggered no rebalance commits");
+    assert!(
+        s.rebalanced <= cfg.valet.health.rebalance_max as u64,
+        "rebalance burst exceeded its cap"
+    );
+    assert!(
+        cl.state.mrpools[victim].registered_bytes() > 0,
+        "fresh peer received no units"
+    );
+    // read-your-writes across the rebalance remaps
+    let m0 = cl.engine.combined_metrics().lost_reads;
+    for blk in 0..48u64 {
+        t = cl.read(t, blk * 16 + (blk % 16)).end;
+    }
+    assert_eq!(cl.engine.combined_metrics().lost_reads, m0);
+}
+
+#[test]
+fn silence_ages_a_peer_to_suspect_then_dead() {
+    // The keep-alive ledger: while peers 2 and 3 keep originating
+    // events, peer 1 stays silent — it must pass through Suspect at
+    // `max_missed` missed events and Dead at twice that, in the same
+    // global timestamp order as the events themselves.
+    let mut cfg = churn_cfg();
+    cfg.valet.health.max_missed = 4;
+    let mut cl = ShardedCluster::new(&cfg, 1);
+    let t = lay_down(&mut cl, 24);
+
+    let mut seen_suspect = false;
+    for i in 0..8u64 {
+        let origin = 2 + (i % 2) as usize;
+        cl.schedule(
+            t + ms(i + 1),
+            ClusterEvent::NativeFree { node: origin, bytes: 0 },
+        );
+        cl.advance(t + ms(i + 1));
+        if cl.engine.sender().peer_health(1) == Health::Suspect {
+            seen_suspect = true;
+        }
+    }
+    assert!(seen_suspect, "silent peer never turned Suspect");
+    assert_eq!(
+        cl.engine.sender().peer_health(1),
+        Health::Dead,
+        "silent peer never declared Dead"
+    );
+    assert_eq!(cl.engine.sender().peer_health(2), Health::Healthy);
+    assert_eq!(cl.engine.sender().peer_health(3), Health::Healthy);
+}

@@ -28,6 +28,12 @@
 //!   every schedule instead of the per-seed coin flip (ci.sh runs a
 //!   tier-pinned pass so every schedule exercises promotion/demotion,
 //!   cross-tier migrations and the admission predictor).
+//! * `VALET_FUZZ_CHURN` — pin the failure-domain layer on (`1`) or off
+//!   (`0`) instead of the per-seed coin flip (ci.sh runs a churn-pinned
+//!   pass so every schedule kills — and maybe rejoins — a peer under
+//!   traffic and sweeps the law catalog over the aftermath). Churn
+//!   targets and times are drawn for every seed either way, so
+//!   schedules stay RNG-comparable across pin settings.
 
 #![cfg(any(feature = "audit", debug_assertions))]
 
@@ -85,6 +91,21 @@ fn run_schedule(seed: u64) {
     cfg.valet.pool_tier.demote_after = ms(5 + rng.below(100));
     cfg.valet.pool_tier.predictor = rng.chance(0.5);
     cfg.valet.pool_tier.predictor_window = ms(1 + rng.below(10));
+    // failure domains: a coin flip per seed (drawn even when pinned so
+    // schedules stay comparable across VALET_FUZZ_CHURN settings), with
+    // replication and disk backup randomized so the death sweep meets
+    // every fault-tolerance row of Table 3
+    let churn_pick = rng.chance(0.5);
+    cfg.valet.health.enabled = std::env::var("VALET_FUZZ_CHURN")
+        .ok()
+        .and_then(|v| v.parse::<u8>().ok())
+        .map(|v| v != 0)
+        .unwrap_or(churn_pick);
+    cfg.valet.health.max_missed = 2 + rng.below(12);
+    cfg.valet.health.repair_period = ms(1 + rng.below(10));
+    cfg.valet.health.rebalance_max = rng.below_usize(9);
+    cfg.valet.replicas = 1 + rng.below_usize(2);
+    cfg.valet.disk_backup = rng.chance(0.5);
     let shards = 1 << rng.below_usize(3); // 1 / 2 / 4
 
     let mut sc = ShardedCluster::new(&cfg, shards);
@@ -101,6 +122,21 @@ fn run_schedule(seed: u64) {
     let peers: Vec<usize> = (0..cfg.cluster.nodes)
         .filter(|&n| n != sc.state.sender)
         .collect();
+
+    // Churn: kill one random peer at a random future time, maybe
+    // rejoin it later. Every draw happens for every seed — target,
+    // times and both coins — so the rng stream (and with it the rest
+    // of the schedule) is identical whether or not the events land.
+    let kill_node = peers[rng.below_usize(peers.len())];
+    let kill_at = t + ms(1) + rng.below(ms(40));
+    let join_at = kill_at + ms(1) + rng.below(ms(40));
+    let rejoin = rng.chance(0.5);
+    if rng.chance(0.5) {
+        sc.schedule(kill_at, ClusterEvent::PeerDown { node: kill_node });
+        if rejoin {
+            sc.schedule(join_at, ClusterEvent::PeerJoin { node: kill_node });
+        }
+    }
 
     for _ in 0..OPS {
         match rng.below(100) {
