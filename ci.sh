@@ -50,6 +50,12 @@ VALET_FUZZ_ITERS=200 VALET_FUZZ_TIER=1 \
 # dense coverage regardless of the per-seed flip
 VALET_FUZZ_ITERS=200 VALET_FUZZ_CHURN=1 \
     cargo test -q --features audit --test schedule_fuzz
+# slow-path-pinned fuzz pass: force every schedule's sends through the
+# per-lane admission rings (slow_path_threads = 0) so the ring detour
+# and the lane-lock-coherence law get dense coverage regardless of the
+# per-seed draw
+VALET_FUZZ_ITERS=200 VALET_FUZZ_SLOW_THREADS=0 \
+    cargo test -q --features audit --test schedule_fuzz
 
 echo "== benches compile =="
 # compile-gate the harness=false bench binaries so experiment/bench code
@@ -82,6 +88,8 @@ if [ "$FAST" -eq 0 ]; then
     grep -q '"metric":"no_pressure_regression_pct"' target/bench-smoke.json
     # the scaling experiment's sender-lane axis (virtual-time rows)
     grep -q '"metric":"lane_speedup"' target/bench-smoke.json
+    # ... and its slow-path-threads axis (wall-clock write-heavy rows)
+    grep -q '"metric":"slow_threads_speedup"' target/bench-smoke.json
     # the three-tier memory experiment must emit its self-baselined
     # speedup and the admission-predictor ablation record
     grep -q '"metric":"tiered_speedup"' target/bench-smoke.json
@@ -122,6 +130,12 @@ assert sk["lane_speedup"] >= 1.5, \
     f"per-peer lanes must beat the single sender timeline: {sk['lane_speedup']}"
 print(f"sender lanes: submission drain x{sk['lane_speedup']:.2f} "
       f"({sk['lane1_ops_per_sec']:.0f} -> {sk['lane4_ops_per_sec']:.0f} ops/s)")
+assert sk["slow_threads_speedup"] >= 1.3, \
+    f"per-lane drain threads must beat the one-lock slow path: " \
+    f"{sk['slow_threads_speedup']}"
+print(f"slow-path threads: write-heavy x{sk['slow_threads_speedup']:.2f} "
+      f"({sk['threads1_ops_per_sec']:.0f} -> "
+      f"{sk['lane_threads_ops_per_sec']:.0f} ops/s)")
 tk = {r["metric"]: r["value"] for r in recs if r["id"] == "tiering"}
 assert tk["tiered_speedup"] > 1.0, \
     f"pooled tier must beat the flat layout at equal memory: {tk['tiered_speedup']}"

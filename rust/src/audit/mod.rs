@@ -41,6 +41,7 @@
 //! | [`Law::PressureLogBounds`] | pressure ring bounded, time-ordered |
 //! | [`Law::GptCoherence`] | GPT entries ⟷ resident mempool slots |
 //! | [`Law::LaneSequencer`] | cross-lane COMMIT ledger conserved |
+//! | [`Law::LaneLockCoherence`] | ring-admitted sets conserved: drained + queued |
 //! | [`Law::TierAccounting`] | pool-tier bytes ⟷ resident blocks; tier moves conserved |
 //! | [`Law::ReplicaHealth`] | live replica slots never on a Dead peer; damage queued for repair |
 
@@ -115,6 +116,13 @@ pub enum Law {
     /// COMMIT bypassed the sequencer or was double-counted by two
     /// lanes.
     LaneSequencer,
+    /// Per-lane admission-ring conservation: every write set admitted
+    /// to a lane's slow-path ring was either drained (dispatched into
+    /// the lane — in flight, parked, or completed to a mailbox) or is
+    /// still queued in the ring: `admitted == drained + Σ queued`. No
+    /// set is ever lost (or double-counted) between the lock-free
+    /// admission side and the locked dispatch side.
+    LaneLockCoherence,
     /// Tier accounting: every node's cached pool-tier byte ledger
     /// equals a recount over its resident pool-tier blocks, and
     /// `promotions + demotions` equals the number of committed
@@ -148,6 +156,7 @@ impl Law {
             Law::PressureLogBounds => "pressure-log-bounds",
             Law::GptCoherence => "gpt-coherence",
             Law::LaneSequencer => "lane-sequencer",
+            Law::LaneLockCoherence => "lane-lock-coherence",
             Law::TierAccounting => "tier-accounting",
             Law::ReplicaHealth => "replica-health",
         }

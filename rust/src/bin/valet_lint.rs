@@ -10,6 +10,7 @@
 //! | `expect-message` | a non-test `.expect("...")` literal must state an invariant (≥ 10 chars) |
 //! | `no-wall-clock` | no `Instant::now` / `SystemTime` in the simulation substrate (virtual time only; `serve/`, `bench/`, `main.rs` and `bin/` measure real wall time and are exempt) |
 //! | `serve-lock` | no bare `.lock(` in `serve/` outside the marked lock-ordering helpers (`valet-lint: allow-lock-begin` / `allow-lock-end`) |
+//! | `lock-order` | every `serve/` call into the admission-ring machinery (`drain_lane_ring(` / `admit_staged(`) must carry a `lock-order:` comment on the same or one of the two preceding lines, stating its place in the sequencer→ring discipline |
 //!
 //! The scanner masks comments, string/char literals and raw strings, and
 //! skips items under `#[cfg(test)]`, so test code and prose never trip a
@@ -332,6 +333,37 @@ fn lint_file(path: &Path, src: &str) -> Vec<Finding> {
                           helpers — go through `lock_slow` / `lock_lane`"
                     .to_string(),
             });
+        }
+
+        // -- lock-order -----------------------------------------------
+        // Calls into the admission-ring machinery participate in the
+        // sequencer→ring lock discipline; each call site must say so
+        // with a `lock-order:` comment on its own or one of the two
+        // preceding lines, so the discipline stays reviewable at every
+        // acquisition point.
+        let lines: Vec<&str> = src.lines().collect();
+        for needle in ["drain_lane_ring(", "admit_staged("] {
+            for off in find_all(&masked, needle) {
+                if in_tests(off) {
+                    continue;
+                }
+                let line = line_of(off);
+                let documented = (line.saturating_sub(3)..line)
+                    .filter_map(|i| lines.get(i))
+                    .any(|l| l.contains("lock-order:"));
+                if !documented {
+                    out.push(Finding {
+                        path: path.to_path_buf(),
+                        line,
+                        rule: "lock-order",
+                        message: format!(
+                            "`{needle}` without a nearby `lock-order:` \
+                             comment — state the call's place in the \
+                             sequencer→ring discipline"
+                        ),
+                    });
+                }
+            }
         }
     }
 
@@ -661,6 +693,32 @@ mod tests {
             "fn f() { let t = Instant::now(); }",
         );
         assert!(ok.is_empty());
+    }
+
+    #[test]
+    fn lock_order_rule_wants_a_nearby_comment() {
+        // same-line and two-lines-above comments both satisfy the rule
+        let ok = lint_file(
+            Path::new("x/src/serve/mod.rs"),
+            "fn f() {\n    // lock-order: sequencer → ring\n    \
+             s.drain_lane_ring(cl, hw, 0, 64);\n    \
+             admit_staged(v, r, f, 0); // lock-order: ring only\n}\n",
+        );
+        assert!(ok.is_empty(), "{ok:?}");
+        // an undocumented call is flagged
+        let bad = lint_file(
+            Path::new("x/src/serve/mod.rs"),
+            "fn f() {\n    s.drain_lane_ring(cl, hw, 0, 64);\n}\n",
+        );
+        assert_eq!(bad.len(), 1);
+        assert_eq!(bad[0].rule, "lock-order");
+        assert_eq!(bad[0].line, 2);
+        // the rule is serve-scoped: the sender module defines these
+        let elsewhere = lint_file(
+            Path::new("x/src/coordinator/sender/mod.rs"),
+            "fn f() { s.drain_lane_ring(cl, hw, 0, 64); }",
+        );
+        assert!(elsewhere.is_empty());
     }
 
     #[test]

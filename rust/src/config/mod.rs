@@ -328,6 +328,16 @@ pub struct ValetConfig {
     /// the single pre-split sender timeline — the differential-test
     /// oracle configuration; capped at 64.
     pub sender_lanes: usize,
+    /// Slow-path drain threads `serve::spawn_sharded` runs next to the
+    /// pump driver (each owns a disjoint set of lanes and drains their
+    /// admission rings under short sequencer-lock holds). `1` (the
+    /// default) = no drain threads and no admission detour — the
+    /// pre-split single-mutex serve, bit-for-bit; `0` = one thread per
+    /// lane; `n` = n threads, capped at the lane count. Ignored by
+    /// purely virtual-time runs except that any non-`1` value routes
+    /// sends through the admission rings (a synchronous, bit-identical
+    /// detour that keeps the ring machinery and its audit law hot).
+    pub slow_path_threads: usize,
     /// The pooled middle tier (`[valet.pool_tier]`; off by default).
     pub pool_tier: PoolTierConfig,
     /// The failure-domain layer (`[valet.health]`; off by default).
@@ -356,6 +366,7 @@ impl Default for ValetConfig {
             max_concurrent_migrations: 4,
             pressure_ewma: 0.3,
             sender_lanes: 1,
+            slow_path_threads: 1,
             pool_tier: PoolTierConfig::default(),
             health: HealthConfig::default(),
         }
@@ -458,6 +469,10 @@ impl Config {
                 }
                 "sender_lanes" => {
                     self.valet.sender_lanes =
+                        v.as_u64().ok_or_else(err)? as usize
+                }
+                "slow_path_threads" => {
+                    self.valet.slow_path_threads =
                         v.as_u64().ok_or_else(err)? as usize
                 }
                 _ => return Err(err()),
@@ -667,6 +682,18 @@ mod tests {
         assert_eq!(cfg.valet.replicas, 2);
         assert!(cfg.valet.disk_backup);
         assert_eq!(cfg.latency.connect, 1_000_000);
+    }
+
+    #[test]
+    fn slow_path_threads_defaults_inline_and_loads_from_toml() {
+        // 1 = the pre-split single-mutex serve, the bit-for-bit default
+        assert_eq!(Config::default().valet.slow_path_threads, 1);
+        let cfg = Config::from_toml("[valet]\nslow_path_threads = 0\n")
+            .unwrap();
+        assert_eq!(cfg.valet.slow_path_threads, 0);
+        let cfg = Config::from_toml("[valet]\nslow_path_threads = 3\n")
+            .unwrap();
+        assert_eq!(cfg.valet.slow_path_threads, 3);
     }
 
     #[test]

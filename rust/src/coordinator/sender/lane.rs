@@ -14,7 +14,7 @@
 //! is what keeps "one peer ↔ one timeline" an enforceable ownership
 //! boundary rather than a convention.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 
 use crate::backends::{ClusterState, UnitMap};
 use crate::migration::{MigState, MigrationSm};
@@ -99,6 +99,75 @@ impl ActiveMigration {
 /// Prune a lane's in-flight read table once it reaches this size (stale
 /// entries — completions in the past — are dropped; live ones kept).
 const INFLIGHT_READS_PRUNE: usize = 4096;
+
+/// Capacity of one lane's admission ring, in entries. An admission that
+/// would overflow is refused (the caller leaves its sets staged and the
+/// pump's locked drive path sends them), so the ring is a bounded queue
+/// with graceful fallback, never a loss point.
+pub(crate) const RING_CAP: usize = 1024;
+
+/// One entry in a lane's slow-path **admission ring**: a pre-coalesced
+/// same-unit write batch handed from a shard worker (which owns the
+/// staging queue) to the lane's slow-path drain. All fast-path
+/// bookkeeping (staging pops, disk-valid stamping, shard metrics)
+/// happened at admission time, on the side that owns the fast path; the
+/// drain side needs only the cluster substrate and the sender.
+#[derive(Clone, Debug)]
+pub(crate) struct RingEntry {
+    /// Shard whose staging queue produced the batch (completion
+    /// mailbox routing).
+    pub(crate) shard: usize,
+    /// Address-space unit every set in the batch targets.
+    pub(crate) unit: u64,
+    /// Total payload bytes (one coalesced RDMA message).
+    pub(crate) bytes: u64,
+    /// Latest `enqueued_at` among the sets: the batch may not be wired
+    /// before this virtual time (mirrors the staged-send gate).
+    pub(crate) enq: Ns,
+    /// The write sets themselves, staging order.
+    pub(crate) sets: Vec<WriteSet>,
+}
+
+/// One lane's bounded admission ring plus its conservation counters
+/// (in **sets**, monotone): `admitted == drained + Σ queued` at every
+/// consistent point — [`crate::audit::Law::LaneLockCoherence`]. This is
+/// the per-lane *locked* state of the concurrent serve slow path: shard
+/// workers push under the ring's own mutex (never holding the
+/// sequencer), the per-lane drain pops under sequencer → ring order.
+#[derive(Debug, Default)]
+pub(crate) struct LaneRing {
+    /// Queued batches, admission order.
+    pub(crate) q: VecDeque<RingEntry>,
+    /// Write sets ever admitted (monotone).
+    pub(crate) admitted: u64,
+    /// Write sets ever popped for dispatch (monotone; a popped set is
+    /// synchronously wired, parked, or completed before the ring lock
+    /// is released).
+    pub(crate) drained: u64,
+}
+
+impl LaneRing {
+    /// Fresh empty ring.
+    pub(crate) fn new() -> Self {
+        LaneRing::default()
+    }
+
+    /// Admit a batch; at capacity the entry is handed back untouched
+    /// (`Some`) and the caller keeps its sets.
+    pub(crate) fn admit(&mut self, e: RingEntry) -> Option<RingEntry> {
+        if self.q.len() >= RING_CAP {
+            return Some(e);
+        }
+        self.admitted += e.sets.len() as u64;
+        self.q.push_back(e);
+        None
+    }
+
+    /// Write sets currently queued (the audit recount).
+    pub(crate) fn queued_sets(&self) -> u64 {
+        self.q.iter().map(|e| e.sets.len() as u64).sum()
+    }
+}
 
 /// Per-peer lane state (see the module docs for the ownership split).
 pub(crate) struct SenderLane {

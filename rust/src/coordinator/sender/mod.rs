@@ -42,8 +42,22 @@
 //! [`crate::migration::simulate`] survives as the test oracle for the
 //! single-migration timeline (`tests/reclaim.rs`).
 
+//! ## The admission rings (concurrent serve slow path)
+//!
+//! With `valet.slow_path_threads != 1` every coalesced write batch
+//! travels through its lane's bounded **admission ring**
+//! ([`lane::LaneRing`]) before it is wired. In the simulated engine the
+//! detour is synchronous — admit, then drain in the same call — so
+//! virtual-time results are bit-identical to the inline path; under
+//! `serve::spawn_sharded` the shard workers admit lock-free (ring mutex
+//! only, never the sequencer) and dedicated per-lane slow-path threads
+//! drain in batches under sequencer → ring lock order. Conservation
+//! across the hand-off is [`Law::LaneLockCoherence`].
+
 mod lane;
 mod seq;
+
+use std::sync::{Arc, Mutex};
 
 pub use seq::{Health, MigStats, MigrationRecord};
 
@@ -60,8 +74,12 @@ use crate::replication::{choose_replicas, read_source, FtPolicy, ReadSource};
 use crate::sim::Ns;
 use crate::{NodeId, PAGE_SIZE};
 
-use lane::{ActiveMigration, Inflight, SenderLane};
+use lane::{ActiveMigration, Inflight, LaneRing, RingEntry, SenderLane};
 use seq::Sequencer;
+
+/// Shared handle to the per-lane admission rings: the only sender state
+/// the serve shard workers may touch without the sequencer lock.
+pub(crate) type LaneRings = Arc<Vec<Mutex<LaneRing>>>;
 
 /// Candidate peers the sender polls before choosing a migration
 /// destination (the power-of-two query model the old one-shot path also
@@ -82,6 +100,11 @@ pub struct RemoteSender {
     vcfg: ValetConfig,
     /// Per-peer sender lanes; a peer `n` routes to lane `n % lanes.len()`.
     lanes: Vec<SenderLane>,
+    /// Per-lane admission rings (see module docs): behind their own
+    /// mutexes so serve workers can admit batches without the sequencer
+    /// lock. Lock order is fixed — sequencer first, then at most one
+    /// ring, never ring → sequencer and never ring → ring.
+    rings: LaneRings,
     /// Cross-peer state: unit map, placement, mailboxes, commit ledger.
     seq: Sequencer,
     /// Audit crossings seen (drives the every-Nth thorough sweep; only
@@ -105,6 +128,9 @@ impl RemoteSender {
             lat: cfg.latency.clone(),
             vcfg: cfg.valet.clone(),
             lanes: (0..nlanes).map(|_| SenderLane::new()).collect(),
+            rings: Arc::new(
+                (0..nlanes).map(|_| Mutex::new(LaneRing::new())).collect(),
+            ),
             seq: Sequencer::new(cfg, shards),
             audit_tick: 0,
         }
@@ -296,6 +322,56 @@ impl RemoteSender {
     /// Drain `shard`'s completion mailbox (FIFO).
     pub fn take_done(&mut self, shard: usize) -> Vec<WriteSet> {
         std::mem::take(&mut self.seq.done[shard])
+    }
+
+    // -- the admission rings (concurrent serve slow path) --------------
+
+    /// Shared handle to the per-lane admission rings — the only sender
+    /// state the serve shard workers may touch without holding the
+    /// sequencer lock (see [`admit_staged`]).
+    pub(crate) fn rings_handle(&self) -> LaneRings {
+        Arc::clone(&self.rings)
+    }
+
+    /// Drain up to `max_entries` batches from `lane`'s admission ring
+    /// and dispatch each — wire, park, or dead-cluster-complete — at no
+    /// earlier than `t0` (each batch additionally gated by its own
+    /// staging-enqueue time). The caller holds the sequencer (this is
+    /// `&mut self`); the ring mutex is taken inside, which is the one
+    /// sanctioned sequencer → ring order. Pop and dispatch happen under
+    /// a single ring hold, so [`Law::LaneLockCoherence`] holds at every
+    /// instant another thread can observe the counters. Returns the
+    /// last dispatched batch's completion time (`t0` for an empty
+    /// ring).
+    pub(crate) fn drain_lane_ring(
+        &mut self,
+        cl: &mut ClusterState,
+        t0: Ns,
+        lane: usize,
+        max_entries: usize,
+    ) -> Ns {
+        let rings = Arc::clone(&self.rings);
+        let mut ring =
+            rings[lane].lock().expect("lane admission ring poisoned");
+        let mut done = t0;
+        let mut n = 0usize;
+        while n < max_entries {
+            let Some(e) = ring.q.pop_front() else { break };
+            ring.drained += e.sets.len() as u64;
+            done = self.send_ring_batch(cl, t0.max(e.enq), e);
+            n += 1;
+        }
+        done
+    }
+
+    /// Drain every ring to empty — the serve shutdown path: after the
+    /// slow-path threads are joined, whatever admissions were still
+    /// queued flush here so no write set is lost across the engine
+    /// reassembly.
+    pub(crate) fn drain_all_rings(&mut self, cl: &mut ClusterState, now: Ns) {
+        for lane in 0..self.rings.len() {
+            self.drain_lane_ring(cl, now, lane, usize::MAX);
+        }
     }
 
     // -- the read-side pipeline ---------------------------------------
@@ -587,6 +663,65 @@ impl RemoteSender {
             bytes += ws.bytes;
             batch.push(ws);
         }
+        // disk-backup bookkeeping stays here, where the fast path is in
+        // reach — the ring detour below hands the batch to dispatch
+        // code that never sees `fast`
+        if self.vcfg.disk_backup {
+            for ws in &batch {
+                for p in ws.page..ws.page + ws.pages() {
+                    fast.disk_valid.set(p);
+                }
+            }
+            fast.metrics.disk_writes += 1;
+        }
+        if self.vcfg.slow_path_threads != 1 {
+            // Admission-ring detour: admit, then synchronously drain
+            // the same ring — same instant, same sequencer state, so
+            // virtual-time results stay bit-identical to the inline
+            // path below while the ring machinery (and its conservation
+            // law) is exercised on every send. Under serve this drain
+            // also flushes batches the shard workers admitted
+            // lock-free to the same ring.
+            let hint = (unit as usize) % self.rings.len();
+            let entry = RingEntry {
+                shard,
+                unit,
+                bytes,
+                enq: t0,
+                sets: batch,
+            };
+            let leftover = {
+                let rings = Arc::clone(&self.rings);
+                let mut ring = rings[hint]
+                    .lock()
+                    .expect("lane admission ring poisoned");
+                ring.admit(entry)
+            };
+            return match leftover {
+                // ring at capacity (a serve backlog): dispatch directly
+                Some(e) => self.send_ring_batch(cl, t0, e),
+                None => self.drain_lane_ring(cl, t0, hint, usize::MAX),
+            };
+        }
+        self.wire_batch(cl, t0, shard, unit, batch, bytes)
+    }
+
+    /// Wire one coalesced same-unit batch: map the unit if needed,
+    /// charge the mrpool get plus one tiered RDMA WRITE per replica,
+    /// issue the optional disk-backup write, charge the lane timeline
+    /// for the posting work and record the in-flight entry. The shared
+    /// tail of the inline send path and the ring drain — exactly one
+    /// implementation of the wire crossing. Fast-path bookkeeping
+    /// (disk-valid stamps, shard metrics) is the caller's job.
+    fn wire_batch(
+        &mut self,
+        cl: &mut ClusterState,
+        t0: Ns,
+        shard: usize,
+        unit: u64,
+        batch: Vec<WriteSet>,
+        bytes: u64,
+    ) -> Ns {
         // mapping (behind the mempool — charged here, on the lane)
         let ready =
             self.seq
@@ -610,12 +745,6 @@ impl RemoteSender {
         // optional disk backup, off the critical path
         if self.vcfg.disk_backup {
             cl.disks[cl.sender].write_async(t, bytes);
-            for ws in &batch {
-                for p in ws.page..ws.page + ws.pages() {
-                    fast.disk_valid.set(p);
-                }
-            }
-            fast.metrics.disk_writes += 1;
         }
         // The lane's timeline is busy only for its CPU work (mapping
         // waits + mrpool get + posting the WQE, ~300 ns); the verb
@@ -632,6 +761,55 @@ impl RemoteSender {
             sets: batch,
         });
         done
+    }
+
+    /// Dispatch one admitted ring batch under the sequencer: the same
+    /// three-way branch as [`Self::send_batch_at`] — park against a
+    /// live migration of the unit, complete to the disk backup (or
+    /// count lost) on a dead cluster, else wire. Fast-path-free by
+    /// construction: staging pops, disk-valid stamps and shard metrics
+    /// all happened at admission, on the side that owns the fast path.
+    fn send_ring_batch(
+        &mut self,
+        cl: &mut ClusterState,
+        t0: Ns,
+        e: RingEntry,
+    ) -> Ns {
+        let RingEntry { shard, unit, bytes, sets, .. } = e;
+        // §3.5 write parking (see send_batch_at): the batch's unit went
+        // mid-migration between admission and this drain
+        if let Some((pl, pm)) = self.find_parking_target(unit) {
+            if self.vcfg.disk_backup {
+                cl.disks[cl.sender].write_async(t0, bytes);
+            }
+            let parked = sets.len() as u64;
+            let m = &mut self.lanes[pl].migs[pm];
+            for ws in sets {
+                m.parked_bytes += ws.bytes;
+                m.parked.push((shard, ws));
+            }
+            self.seq.mig_stats.parked_sets += parked;
+            return t0;
+        }
+        // dead-cluster guard (see send_batch_at): nowhere to land, so
+        // the sets complete to the disk backup or are counted lost
+        if self.seq.health.enabled
+            && self.seq.units.get(unit).map_or(true, |u| !u.alive)
+            && !cl.peers().any(|n| self.seq.health.alive(n))
+        {
+            if self.vcfg.disk_backup {
+                cl.disks[cl.sender].write_async(t0, bytes);
+            } else {
+                self.seq.mig_stats.lost_write_sets += sets.len() as u64;
+            }
+            self.lanes[0].inflight.push(Inflight {
+                done: t0,
+                shard,
+                sets,
+            });
+            return t0;
+        }
+        self.wire_batch(cl, t0, shard, unit, sets, bytes)
     }
 
     /// Synchronous write (Valet-RemoteOnly ablation): radix + copy + wait
@@ -1380,6 +1558,51 @@ impl RemoteSender {
         }
     }
 
+    /// The per-lane slice of [`Self::advance_migrations`] for the
+    /// concurrent serve drivers: step activations and phase transitions
+    /// due by `now` only while the globally-oldest due action belongs
+    /// to `lane`. Global submission order is preserved exactly — a lane
+    /// thread never steps past another lane's older action; that
+    /// action's own thread takes it on its next tick (every lane is
+    /// owned by exactly one thread, so progress is guaranteed). The
+    /// background scans (tiering, repair) stay with the sequencer tick
+    /// ([`Self::advance_sequencer`]).
+    pub(crate) fn advance_migrations_lane(
+        &mut self,
+        cl: &mut ClusterState,
+        now: Ns,
+        lane: usize,
+    ) {
+        let mut stepped = false;
+        while let Some((t, mref, activation)) = self.next_migration_action()
+        {
+            if t > now || mref.0 != lane {
+                break;
+            }
+            if activation {
+                self.activate_migration(cl, mref, t);
+            } else {
+                self.step_migration(cl, mref);
+            }
+            stepped = true;
+        }
+        if audit::enabled() && stepped {
+            self.audit_tick = self.audit_tick.wrapping_add(1);
+            let thorough = self.audit_tick % 64 == 0;
+            audit::enforce(&self.audit_check(cl, thorough));
+        }
+    }
+
+    /// The sequencer-scoped slice of the background tick for the
+    /// concurrent serve pump: run the tiering and repair scan clocks
+    /// (which only *enqueue* machines) without stepping any lane's due
+    /// actions — those belong to the per-lane drivers
+    /// ([`Self::advance_migrations_lane`]).
+    pub(crate) fn advance_sequencer(&mut self, cl: &mut ClusterState, now: Ns) {
+        self.advance_tiering(cl, now);
+        self.advance_repair(cl, now);
+    }
+
     /// Run every promotion/demotion scan due by `now` (the tier pump).
     /// A strict no-op while the pool tier is disabled — the scan clock
     /// never advances and no machine is ever enqueued, which is part of
@@ -2029,6 +2252,40 @@ impl RemoteSender {
     ) -> Vec<Violation> {
         let mut out = Vec::new();
 
+        // -- lane-lock-coherence: every write set admitted to a lane's
+        // ring was drained (dispatched under the sequencer) or still
+        // queues. try_lock, not lock: a ring held at audit time can
+        // only mean this very thread is mid-drain on it (pop and
+        // dispatch happen under one hold, and every drain runs under
+        // the sequencer the auditor's caller also holds), so skipping
+        // re-proves it at the next sweep instead of self-deadlocking.
+        for (li, ring) in self.rings.iter().enumerate() {
+            let Ok(g) = ring.try_lock() else { continue };
+            let queued = g.queued_sets();
+            audit::check(
+                &mut out,
+                g.admitted == g.drained + queued && g.drained <= g.admitted,
+                Law::LaneLockCoherence,
+                None,
+                || {
+                    format!(
+                        "lane {li} ring leaks write sets: admitted {} != \
+                         drained {} + queued {queued}",
+                        g.admitted, g.drained
+                    )
+                },
+                || {
+                    format!(
+                        "lane={li} admitted={} drained={} queued={queued} \
+                         entries={}",
+                        g.admitted,
+                        g.drained,
+                        g.q.len()
+                    )
+                },
+            );
+        }
+
         // -- migration-legality: table states imply their fields and
         // the milestone clocks are ordered. Lane-local sweep, tagged
         // with the lane so a violation names its timeline.
@@ -2507,5 +2764,82 @@ impl RemoteSender {
     #[doc(hidden)]
     pub fn audit_corrupt_tier_ledger(&mut self) {
         self.seq.mig_stats.promotions += 1;
+    }
+
+    /// Test-only corruption hook for [`Law::LaneLockCoherence`]: claim
+    /// an admitted write set that never entered ring 0.
+    #[cfg(any(feature = "audit", debug_assertions))]
+    #[doc(hidden)]
+    pub fn audit_corrupt_ring(&mut self) {
+        self.rings[0]
+            .lock()
+            .expect("lane admission ring poisoned")
+            .admitted += 1;
+    }
+}
+
+/// Lock-free-side admission for the concurrent serve front-end: pop
+/// `fast`'s staged write sets front-to-back, coalesce each consecutive
+/// same-unit run under the RDMA message cap exactly like
+/// [`RemoteSender::send_batch_at`]'s pop loop, and push every batch into
+/// its lane's admission ring — taking only that ring's mutex, never the
+/// sequencer (a shard worker therefore never blocks on slow-path work).
+/// Disk-backup stamping and the shard's disk-write metric happen here,
+/// on the side that owns the fast path. A free function on purpose: its
+/// signature *proves* admission needs no `&RemoteSender` and so no
+/// sequencer lock. Returns `false` when a full ring stopped admission
+/// early — the remaining sets stay staged and the pump's locked drive
+/// path sends them (bounded-queue fallback, never a loss point).
+pub(crate) fn admit_staged(
+    vcfg: &ValetConfig,
+    rings: &LaneRings,
+    fast: &mut ShardFastPath,
+    shard: usize,
+) -> bool {
+    let unit_bytes = vcfg.mr_block_bytes.max(PAGE_SIZE);
+    let max = if vcfg.coalescing { vcfg.rdma_msg_bytes } else { 1 };
+    loop {
+        let Some(head) = fast.staging.get(0) else { return true };
+        let unit = head.page * PAGE_SIZE / unit_bytes;
+        // lock-order: ring only — admission never holds the sequencer
+        let mut ring = rings[(unit as usize) % rings.len()]
+            .lock()
+            .expect("lane admission ring poisoned");
+        if ring.q.len() >= lane::RING_CAP {
+            return false;
+        }
+        let mut batch = Vec::new();
+        let mut bytes = 0u64;
+        let mut enq: Ns = 0;
+        while let Some(next) = fast.staging.get(0) {
+            let same_unit = next.page * PAGE_SIZE / unit_bytes == unit;
+            if !batch.is_empty() && (bytes + next.bytes > max || !same_unit)
+            {
+                break;
+            }
+            let ws = fast
+                .staging
+                .remove(0)
+                .expect("get just returned this entry");
+            bytes += ws.bytes;
+            enq = enq.max(ws.enqueued_at);
+            batch.push(ws);
+        }
+        if vcfg.disk_backup {
+            for ws in &batch {
+                for p in ws.page..ws.page + ws.pages() {
+                    fast.disk_valid.set(p);
+                }
+            }
+            fast.metrics.disk_writes += 1;
+        }
+        let leftover = ring.admit(RingEntry {
+            shard,
+            unit,
+            bytes,
+            enq,
+            sets: batch,
+        });
+        debug_assert!(leftover.is_none(), "capacity was checked above");
     }
 }

@@ -18,6 +18,16 @@
 //! migration machines — is lane-local ([`super::lane::SenderLane`]).
 //! The ledger invariant (`commit_seq == completed == records`) is the
 //! [`crate::audit::Law::LaneSequencer`] law.
+//!
+//! Under `serve::spawn_sharded` the whole sequencer (this struct plus
+//! every lane) lives behind **one** mutex — the "sequencer lock" of the
+//! concurrent slow path. The per-lane admission rings
+//! ([`super::lane::LaneRing`]) sit *outside* it, each behind its own
+//! small mutex, so shard workers can hand off write sets without
+//! touching cross-peer state. The lock order is fixed: sequencer first,
+//! then at most one ring (the drain side); never ring → sequencer and
+//! never ring → ring. [`crate::audit::Law::LaneLockCoherence`] pins the
+//! hand-off conservation (`admitted == drained + queued`) per ring.
 
 use std::collections::HashMap;
 

@@ -413,6 +413,85 @@ pub fn shard_write(
     }
 }
 
+/// The shard-local half of [`shard_write`], runnable without the slow
+/// path: GPT insert, mempool copy and staging-queue push — everything
+/// the critical path in Figure 7 actually touches — using only the
+/// shard's own state. The concurrent serve front-end calls this
+/// lock-free (the staged sets then travel through the lane admission
+/// rings); the latency charges are identical to [`shard_write`]'s.
+///
+/// Returns `None` when an allocation hits backpressure
+/// ([`AllocFail::NoReclaimable`]): making progress there *requires* the
+/// slow path (forced sends, migration stepping), so the caller falls
+/// back to the locked [`shard_write`]. Fast-path mutations already made
+/// (overwrite bookkeeping, allocated slots for earlier pages) are
+/// benign across the retry — the locked pass resolves those pages via
+/// the GPT-overwrite arm (the shard's diagnostic `write_parts` radix
+/// charge double-counts on that rare retry; latencies do not).
+pub fn shard_stage_write(
+    fast: &mut ShardFastPath,
+    lat: &crate::config::LatencyConfig,
+    now: Ns,
+    page: u64,
+    bytes: u64,
+    host_free_pages: u64,
+) -> Option<Access> {
+    let radix_insert = lat.radix_insert;
+    let staging_enqueue = lat.staging_enqueue;
+    let copy = lat.copy(bytes);
+    let npages = pages_for(bytes);
+    let mut t = now + radix_insert;
+    fast.metrics.write_parts.add("radix", radix_insert);
+
+    let mut slots = Vec::with_capacity(npages as usize);
+    for p in page..page + npages {
+        if let Some(slot) = fast.gpt.lookup(p) {
+            // overwrite in place (§5.2) — same arm as `shard_write`
+            let flags = fast.mempool.flags(slot);
+            if flags.prefetched {
+                fast.pending_arrivals.remove(&p);
+            }
+            if flags.reclaimable {
+                fast.mempool.unmark_reclaimable(slot);
+            } else {
+                fast.mempool.bump_update(slot);
+            }
+            fast.remote_ready.clear(p);
+            slots.push(slot);
+            continue;
+        }
+        match fast.mempool.alloc(p, host_free_pages) {
+            Ok(a) => {
+                if let Some(evicted) = a.evicted_page {
+                    fast.gpt.remove(evicted);
+                    fast.pending_arrivals.remove(&evicted);
+                }
+                fast.gpt.insert(p, a.slot);
+                slots.push(a.slot);
+            }
+            // backpressure needs the slow path: bail to the locked run
+            Err(AllocFail::NoReclaimable) => return None,
+        }
+    }
+
+    t += copy;
+    fast.metrics.write_parts.add("copy", copy);
+    t += staging_enqueue;
+    fast.metrics.write_parts.add("enqueue", staging_enqueue);
+
+    fast.staging.push(WriteSet {
+        page,
+        slots,
+        bytes,
+        enqueued_at: t,
+    });
+    fast.metrics.write_latency.record(t - now);
+    Some(Access {
+        end: t,
+        source: Source::LocalPool,
+    })
+}
+
 /// One shard's read miss path: coalesce with an outstanding fetch of
 /// the same page if one is in flight, else one-sided RDMA READ from the
 /// unit's first *live* replica (the primary, unless the health ledger

@@ -13,13 +13,22 @@
 //!   ([`crate::coordinator::fast::ShardFastPath`]), so a local-cache
 //!   read hit completes without taking any lock and hit throughput
 //!   scales with the shard count — §4.1's "parallel reads" with real
-//!   threads. Writes, read misses and pump ticks enter the one mutex
-//!   around the shared slow path (cluster substrate +
-//!   [`crate::coordinator::sender::RemoteSender`]) and therefore
-//!   serialize across shards in wall-clock terms; write *ordering*
+//!   threads. Read misses and pump ticks enter the mutex around the
+//!   shared slow path (cluster substrate +
+//!   [`crate::coordinator::sender::RemoteSender`]); write *ordering*
 //!   remains a per-shard property (each shard's staging queue is FIFO
 //!   on its own timeline). A single pump driver broadcasts ticks so all
-//!   shards' staging queues drain through the same coalescing batcher.
+//!   shards' staging queues keep draining through the shared coalescing
+//!   batcher. Writes depend on `valet.slow_path_threads`: with the
+//!   default `1` they take the same mutex (the pre-split single-lock
+//!   serve, bit-for-bit); any other value turns on **concurrent
+//!   slow-path mode** — shard workers stage and coalesce writes
+//!   lock-free, push the batches into per-lane bounded admission rings
+//!   (ring mutex only, never the sequencer), and dedicated per-lane
+//!   drain threads dispatch them under short sequencer-lock holds. The
+//!   lock-order contract is sequencer → ring, never ring → sequencer
+//!   and never ring → ring; conservation across the hand-off is audit
+//!   law #17 (`lane-lock-coherence`).
 //! * [`spawn_tenants`] — N containers behind the
 //!   [`crate::arbiter::HostArbiter`], rebalancing leases on every tick.
 //!
@@ -111,6 +120,11 @@ const PUMP_TICK: Ns = ms(1);
 
 /// Wall-clock interval between the driver thread's Pump ticks.
 const PUMP_INTERVAL: Duration = Duration::from_millis(1);
+
+/// Ring entries a slow-path drain thread dispatches per sequencer-lock
+/// hold (concurrent mode): large enough to amortize the acquire, small
+/// enough that request threads interleave between batches.
+const SLOW_DRAIN_BATCH: usize = 64;
 
 /// Spawn the coordinator's leader thread plus the remote-sender driver.
 pub fn spawn(cfg: &Config, kind: BackendKind) -> ServeHandle {
@@ -431,16 +445,34 @@ pub struct ShardedServeHandle {
     shared: Option<Arc<Mutex<SharedSlow>>>,
     pump_stop: Arc<AtomicBool>,
     pump_join: Option<thread::JoinHandle<()>>,
+    /// Per-lane slow-path drain threads (empty in single-mutex mode);
+    /// they watch the same stop flag as the pump driver.
+    slow_joins: Vec<thread::JoinHandle<()>>,
     stripe_pages: u64,
     cfg: Config,
 }
 
+/// What a shard worker needs to admit writes lock-free in concurrent
+/// slow-path mode (see [`spawn_sharded`]): the lane-ring handle, the
+/// policy knobs the coalescer reads, and this shard's precomputed
+/// host-free share (fixed for the session — the sharded front-end never
+/// rebalances it mid-run). `None` in the default single-mutex mode and
+/// in the sync-write ablation, where every write takes the lock.
+struct AdmissionCtx {
+    rings: crate::coordinator::sender::LaneRings,
+    vcfg: crate::config::ValetConfig,
+    host: u64,
+}
+
 /// One shard worker: exclusively owns its fast path. Local read hits
-/// (single-page or whole-block) run lock-free; writes, read misses and
-/// pump ticks take the shared sequencer lock. After a write enqueues a
-/// staging set the worker rings `bell` (a lock-free MPSC channel to the
-/// pump driver) *after* dropping the lock, so the driver pumps this
-/// shard promptly instead of waiting out the broadcast interval.
+/// (single-page or whole-block) run lock-free; read misses and pump
+/// ticks take the shared sequencer lock. Writes take it too in the
+/// default mode — with an [`AdmissionCtx`] they instead stage into the
+/// shard's own queue and admit to the lane rings lock-free, falling
+/// back to the locked path only on mempool backpressure. After a write
+/// the worker rings `bell` (a lock-free MPSC channel to the pump
+/// driver) *outside* any lock, so the driver pumps this shard promptly
+/// instead of waiting out the broadcast interval.
 #[allow(clippy::too_many_arguments)]
 fn shard_worker(
     shard: usize,
@@ -448,6 +480,7 @@ fn shard_worker(
     stripe_pages: u64,
     sync_mode: bool,
     lat: LatencyConfig,
+    admission: Option<AdmissionCtx>,
     mut fast: ShardFastPath,
     shared: Arc<Mutex<SharedSlow>>,
     rx: mpsc::Receiver<(Request, mpsc::Sender<Reply>)>,
@@ -463,21 +496,45 @@ fn shard_worker(
         let wall0 = Instant::now();
         match req {
             Request::Write { page, bytes } => {
-                let mut sh = lock_slow(&shared);
-                let host = share_of(sh.host_free_pages, shards, shard);
-                sh.vnow_hw = sh.vnow_hw.max(vnow);
-                let SharedSlow { cl, sender, .. } = &mut *sh;
-                // Valet-RemoteOnly ablation (no mempool): synchronous
-                // remote write, exactly like the single-driver path.
-                let a = if sync_mode {
-                    sender.write_sync(cl, vnow, page, bytes, &mut fast)
-                } else {
-                    engine::shard_write(
-                        sender, &mut fast, cl, shard, vnow, page, bytes,
-                        host,
+                // Concurrent mode: stage + admit without the sequencer
+                // lock; only backpressure (which *needs* slow-path
+                // progress to free a slot) drops to the locked path.
+                let staged = admission.as_ref().and_then(|ctx| {
+                    engine::shard_stage_write(
+                        &mut fast, &lat, vnow, page, bytes, ctx.host,
                     )
+                    .map(|a| {
+                        // lock-order: ring only — admission never
+                        // holds the sequencer
+                        crate::coordinator::sender::admit_staged(
+                            &ctx.vcfg, &ctx.rings, &mut fast, shard,
+                        );
+                        a
+                    })
+                });
+                let a = match staged {
+                    Some(a) => a,
+                    None => {
+                        let mut sh = lock_slow(&shared);
+                        let host =
+                            share_of(sh.host_free_pages, shards, shard);
+                        sh.vnow_hw = sh.vnow_hw.max(vnow);
+                        let SharedSlow { cl, sender, .. } = &mut *sh;
+                        // Valet-RemoteOnly ablation (no mempool):
+                        // synchronous remote write, exactly like the
+                        // single-driver path.
+                        if sync_mode {
+                            sender.write_sync(
+                                cl, vnow, page, bytes, &mut fast,
+                            )
+                        } else {
+                            engine::shard_write(
+                                sender, &mut fast, cl, shard, vnow,
+                                page, bytes, host,
+                            )
+                        }
+                    }
                 };
-                drop(sh);
                 // ring the submission doorbell outside the lock: the
                 // pump driver will drive this shard's staging queue
                 let _ = bell.send(shard);
@@ -588,6 +645,20 @@ pub fn spawn_sharded(cfg: &Config, shards: usize) -> ShardedServeHandle {
     let host_free_pages = engine.host_free_pages();
     let sync_mode = engine.is_sync_mode();
     let (fasts, sender) = engine.into_parts();
+    let nlanes = sender.lane_count();
+    let rings = sender.rings_handle();
+    // Concurrent slow-path mode (valet.slow_path_threads): `1` (the
+    // default) spawns no drain threads and keeps every write on the
+    // single-mutex path — byte-for-byte today's behavior; `0` runs one
+    // drain thread per lane; `n` runs n threads over the lanes. The
+    // sync-write ablation has no staging queue to admit from, so it
+    // always stays locked.
+    let nthreads = match cfg.valet.slow_path_threads {
+        1 => 0,
+        0 => nlanes,
+        n => n.min(nlanes),
+    };
+    let concurrent = nthreads > 0 && !sync_mode;
     let shared = Arc::new(Mutex::new(SharedSlow {
         cl: ClusterState::new(cfg),
         sender,
@@ -605,6 +676,11 @@ pub fn spawn_sharded(cfg: &Config, shards: usize) -> ShardedServeHandle {
         let sh = shared.clone();
         let lat = cfg.latency.clone();
         let bell = bell_tx.clone();
+        let admission = concurrent.then(|| AdmissionCtx {
+            rings: rings.clone(),
+            vcfg: cfg.valet.clone(),
+            host: share_of(host_free_pages, shards, i),
+        });
         joins.push(Some(thread::spawn(move || {
             shard_worker(
                 i,
@@ -612,6 +688,7 @@ pub fn spawn_sharded(cfg: &Config, shards: usize) -> ShardedServeHandle {
                 stripe_pages,
                 sync_mode,
                 lat,
+                admission,
                 fast,
                 sh,
                 rx,
@@ -621,13 +698,43 @@ pub fn spawn_sharded(cfg: &Config, shards: usize) -> ShardedServeHandle {
         txs.push(tx);
     }
     drop(bell_tx); // pump driver owns the only receiver; workers ring
-    // The pump/sender driver. Per cycle: drain the doorbells and pump
-    // the shards that rang (targeted, not broadcast); tick each sender
-    // lane's completions under its own short sequencer-lock hold; run
-    // one cross-lane sequencer tick (migration scheduling / COMMIT);
-    // then broadcast a tick so every staging queue keeps draining even
-    // when no requests arrive.
     let pump_stop = Arc::new(AtomicBool::new(false));
+    // Per-lane slow-path drain threads (concurrent mode only): thread t
+    // owns lanes {l : l % nthreads == t} and for each runs, under one
+    // short sequencer hold per lane, the ring drain, the lane's
+    // completion tick, and the lane's slice of migration stepping — so
+    // a stalled lane (a 62 ms map_mr on a fresh unit) only ever stalls
+    // its own thread while other peers' slow-path work keeps flowing.
+    let mut slow_joins = Vec::with_capacity(nthreads);
+    for t in 0..nthreads {
+        let shared_t = shared.clone();
+        let stop = pump_stop.clone();
+        slow_joins.push(thread::spawn(move || {
+            let owned: Vec<usize> =
+                (0..nlanes).filter(|l| l % nthreads == t).collect();
+            while !stop.load(Ordering::Relaxed) {
+                for &lane in &owned {
+                    let mut sh = lock_slow(&shared_t);
+                    let hw = sh.vnow_hw;
+                    let SharedSlow { cl, sender, .. } = &mut *sh;
+                    // lock-order: sequencer → ring (the drain takes
+                    // the ring mutex inside the sequencer hold)
+                    sender.drain_lane_ring(cl, hw, lane, SLOW_DRAIN_BATCH);
+                    sender.tick_lane(cl, hw, lane);
+                    sender.advance_migrations_lane(cl, hw, lane);
+                }
+                thread::sleep(PUMP_INTERVAL);
+            }
+        }));
+    }
+    // The pump/sender driver. Per cycle: drain the doorbells and pump
+    // the shards that rang (targeted, not broadcast); then the
+    // background slow-path tick — in concurrent mode just the sequencer
+    // scans (lane work belongs to the drain threads above), otherwise
+    // each lane's completions under its own short hold plus one
+    // cross-lane sequencer tick (migration scheduling / COMMIT); then
+    // broadcast a tick so every staging queue keeps draining even when
+    // no requests arrive.
     let pump_txs = txs.clone();
     let pump_shared = shared.clone();
     let stop = pump_stop.clone();
@@ -648,20 +755,28 @@ pub fn spawn_sharded(cfg: &Config, shards: usize) -> ShardedServeHandle {
                     return; // a worker is gone: shutting down
                 }
             }
-            // per-lane completion ticks: one short hold each, so a
-            // request thread can interleave between lanes
-            let nlanes = lock_slow(&pump_shared).sender.lane_count();
-            for lane in 0..nlanes {
+            if concurrent {
+                // one short hold for the cross-lane scan clocks only
                 let mut sh = lock_slow(&pump_shared);
                 let hw = sh.vnow_hw;
                 let SharedSlow { cl, sender, .. } = &mut *sh;
-                sender.tick_lane(cl, hw, lane);
-            }
-            {
-                let mut sh = lock_slow(&pump_shared);
-                let hw = sh.vnow_hw;
-                let SharedSlow { cl, sender, .. } = &mut *sh;
-                sender.advance_migrations(cl, hw);
+                sender.advance_sequencer(cl, hw);
+            } else {
+                // per-lane completion ticks: one short hold each, so a
+                // request thread can interleave between lanes
+                let nlanes = lock_slow(&pump_shared).sender.lane_count();
+                for lane in 0..nlanes {
+                    let mut sh = lock_slow(&pump_shared);
+                    let hw = sh.vnow_hw;
+                    let SharedSlow { cl, sender, .. } = &mut *sh;
+                    sender.tick_lane(cl, hw, lane);
+                }
+                {
+                    let mut sh = lock_slow(&pump_shared);
+                    let hw = sh.vnow_hw;
+                    let SharedSlow { cl, sender, .. } = &mut *sh;
+                    sender.advance_migrations(cl, hw);
+                }
             }
             for tx in &pump_txs {
                 let (rtx, _rrx) = mpsc::channel();
@@ -679,6 +794,7 @@ pub fn spawn_sharded(cfg: &Config, shards: usize) -> ShardedServeHandle {
         shared: Some(shared),
         pump_stop,
         pump_join: Some(pump_join),
+        slow_joins,
         stripe_pages,
         cfg: cfg.clone(),
     }
@@ -729,8 +845,20 @@ impl ShardedServeHandle {
         if let Some(p) = self.pump_join.take() {
             let _ = p.join();
         }
-        // workers + pump are joined: this handle holds the last clone
-        let slow = Arc::try_unwrap(shared).ok()?.into_inner().ok()?;
+        // the drain threads hold Arc clones of the slow path: they must
+        // be joined before try_unwrap below can succeed
+        for j in self.slow_joins.drain(..) {
+            let _ = j.join();
+        }
+        // workers + pump + drains are joined: this handle holds the
+        // last clone
+        let mut slow = Arc::try_unwrap(shared).ok()?.into_inner().ok()?;
+        // flush admissions still queued in the rings (a worker staged
+        // them lock-free right before shutdown): every admitted write
+        // set dispatches — the conservation the lane-lock-coherence law
+        // re-proves on the reassembled engine's final audit
+        let hw = slow.vnow_hw;
+        slow.sender.drain_all_rings(&mut slow.cl, hw);
         Some(ShardedServeOutcome {
             engine: ShardedEngine::from_parts(
                 &self.cfg,

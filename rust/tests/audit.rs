@@ -324,6 +324,26 @@ fn lane_sequencer_also_guards_the_single_lane_oracle() {
     );
 }
 
+#[test]
+fn lane_lock_coherence_fires_on_ring_ledger_skew() {
+    // Law 17: every write set admitted to a lane's ring is either still
+    // queued there or was drained into the sequencer — admitted ==
+    // drained + queued per ring. Route the whole run through the rings
+    // (slow_path_threads != 1 takes the synchronous detour in virtual
+    // time), verify the conservation held, then claim one phantom
+    // admission behind the drain's back.
+    let mut cfg = small_cfg();
+    cfg.valet.sender_lanes = 0; // one ring per peer
+    cfg.valet.slow_path_threads = 0; // sends detour through the rings
+    let (mut sc, t) = populated(&cfg, 1);
+    assert_clean(&sc.engine.audit_check(&sc.state, t));
+    sc.engine.sender_mut().audit_corrupt_ring();
+    assert_fires(
+        &sc.engine.sender().audit_check(&sc.state, false),
+        Law::LaneLockCoherence,
+    );
+}
+
 // ----------------------------------------------------- tier accounting
 
 #[test]

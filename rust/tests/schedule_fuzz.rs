@@ -34,6 +34,10 @@
 //!   traffic and sweeps the law catalog over the aftermath). Churn
 //!   targets and times are drawn for every seed either way, so
 //!   schedules stay RNG-comparable across pin settings.
+//! * `VALET_FUZZ_SLOW_THREADS` — pin `slow_path_threads` for every
+//!   schedule instead of the per-seed draw (ci.sh runs a pinned pass
+//!   with `0` so every schedule routes its sends through the per-lane
+//!   admission rings and sweeps the lane-lock-coherence law).
 
 #![cfg(any(feature = "audit", debug_assertions))]
 
@@ -76,6 +80,14 @@ fn run_schedule(seed: u64) {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(lane_pick);
+    // slow-path admission rings: 1 = inline sends (today's path), else
+    // every send detours through its lane's ring — drawn from the rng
+    // even when pinned so schedules stay comparable
+    let spt_pick = [1usize, 0, 2][rng.below_usize(3)];
+    cfg.valet.slow_path_threads = std::env::var("VALET_FUZZ_SLOW_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(spt_pick);
     // pool tier: a coin flip per seed (drawn even when pinned so
     // schedules stay comparable across VALET_FUZZ_TIER settings), with
     // the pump and predictor tightened to the schedule's ms time scale

@@ -1,0 +1,265 @@
+//! Regression harness for the concurrent slow path (`slow_path_threads`).
+//!
+//! The default `slow_path_threads = 1` keeps the pre-ring code: every
+//! send dispatches inline under the sequencer, bit-for-bit the PR-9
+//! system. Any other value routes sends through the per-lane admission
+//! rings — in virtual-time (sim) runs as a synchronous admit-then-drain
+//! detour that must be **bit-identical by construction**, and under
+//! `serve::spawn_sharded` as the real concurrent pipeline (lock-free
+//! staging in the shard workers, per-lane drain threads). These tests
+//! pin both halves:
+//!
+//! * **Sim ⇒ bit-for-bit.** The full metric summary (the
+//!   `tests/lanes.rs` float-to-bits pattern) must be identical across
+//!   `slow_path_threads ∈ {1, 0, 4}` for single-lane, multi-lane and
+//!   disk-backed configurations alike.
+//! * **Serve ⇒ bounded + conservative.** A burst of fresh-unit writes
+//!   saturates lanes with 62 ms virtual MR-map charges; a second
+//!   submitter's writes must still complete through serve in bounded
+//!   *wall* time (admission never waits out another lane's charge), no
+//!   write may be lost across the rings, and the reassembled engine
+//!   must pass the full audit sweep — including the
+//!   lane-lock-coherence conservation law over the drained rings.
+
+use std::time::{Duration, Instant};
+
+use valet::backends::ClusterState;
+use valet::config::Config;
+use valet::engine::ShardedEngine;
+use valet::metrics::RunMetrics;
+use valet::serve::{spawn_sharded, Request};
+use valet::sim::{ms, Ns};
+use valet::util::Rng;
+use valet::PAGE_SIZE;
+
+/// 1 sender + 4 peers, 1 MB units, small pinned pool (the
+/// `tests/lanes.rs` topology: enough churn to map units, evict and
+/// migrate within a few hundred ops).
+fn small_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.cluster.nodes = 5;
+    cfg.valet.mr_block_bytes = 1 << 20;
+    cfg.valet.min_pool_pages = 64;
+    cfg.valet.max_pool_pages = 64;
+    cfg
+}
+
+/// One deterministic mixed op sequence (writes / reads / pumps).
+#[derive(Clone, Copy, Debug)]
+enum Op {
+    Write(u64, u64),
+    Read(u64),
+    Pump(Ns),
+}
+
+fn workload(n: usize, seed: u64) -> Vec<Op> {
+    let mut rng = Rng::new(seed);
+    let mut ops = Vec::with_capacity(n);
+    for _ in 0..n {
+        match rng.below(5) {
+            0 | 1 => {
+                // block-aligned 64 KB writes (one stripe)
+                ops.push(Op::Write(rng.below(128) * 16, 16 * PAGE_SIZE));
+            }
+            2 => {
+                // single-page rewrites exercise the §5.2 UPDATE flag
+                ops.push(Op::Write(rng.below(2048), PAGE_SIZE));
+            }
+            3 => ops.push(Op::Read(rng.below(2048))),
+            _ => ops.push(Op::Pump(ms(rng.below(40)))),
+        }
+    }
+    ops
+}
+
+/// Everything we compare between two runs (mirrors `tests/lanes.rs`;
+/// float metrics compared via `to_bits` so "equal" means identical).
+#[derive(Debug, PartialEq)]
+struct Summary {
+    finished_at: Ns,
+    local_hits: u64,
+    remote_hits: u64,
+    disk_reads: u64,
+    read_count: u64,
+    read_mean_bits: u64,
+    read_p50: u64,
+    read_p99: u64,
+    write_count: u64,
+    write_mean_bits: u64,
+    write_p50: u64,
+    write_p99: u64,
+    stall_ns: u128,
+    pending: usize,
+    staged_bytes: u64,
+    disk_writes: u64,
+    mapped_units: usize,
+    lost_write_sets: u64,
+}
+
+fn summarize(
+    m: &RunMetrics,
+    t: Ns,
+    pending: usize,
+    staged: u64,
+    units: usize,
+    lost: u64,
+) -> Summary {
+    Summary {
+        finished_at: t,
+        local_hits: m.local_hits,
+        remote_hits: m.remote_hits,
+        disk_reads: m.disk_reads,
+        read_count: m.read_latency.count(),
+        read_mean_bits: m.read_latency.mean().to_bits(),
+        read_p50: m.read_latency.p50(),
+        read_p99: m.read_latency.p99(),
+        write_count: m.write_latency.count(),
+        write_mean_bits: m.write_latency.mean().to_bits(),
+        write_p50: m.write_latency.p50(),
+        write_p99: m.write_latency.p99(),
+        stall_ns: m.write_parts.sum("stall"),
+        pending,
+        staged_bytes: staged,
+        disk_writes: m.disk_writes,
+        mapped_units: units,
+        lost_write_sets: lost,
+    }
+}
+
+/// Run `ops` through a one-shard engine built from `cfg` and summarize.
+fn run_sim(cfg: &Config, ops: &[Op]) -> Summary {
+    let mut cl = ClusterState::new(cfg);
+    let mut e = ShardedEngine::new(cfg, 1);
+    let mut t: Ns = 0;
+    for &op in ops {
+        match op {
+            Op::Write(page, bytes) => t = e.write(&mut cl, t, page, bytes).end,
+            Op::Read(page) => t = e.read(&mut cl, t, page).end,
+            Op::Pump(dt) => {
+                t += dt;
+                e.pump(&mut cl, t);
+            }
+        }
+    }
+    let m = e.combined_metrics();
+    let lost = e.migration_stats().lost_write_sets;
+    summarize(
+        &m,
+        t,
+        e.pending_write_sets(),
+        e.staged_bytes(),
+        e.mapped_units(),
+        lost,
+    )
+}
+
+#[test]
+fn ring_detour_is_bit_identical_in_virtual_time() {
+    // The sim detour (admit to the lane ring, then synchronously drain
+    // it at the same instant) must reproduce the inline oracle exactly:
+    // same parking decisions, same timeline charges, same metrics to
+    // the bit — across lane layouts and with the disk backup on.
+    for (lanes, disk) in [(1usize, false), (0, false), (0, true)] {
+        let mut cfg = small_cfg();
+        cfg.valet.sender_lanes = lanes;
+        cfg.valet.disk_backup = disk;
+        let ops = workload(600, 0xC0FFEE ^ lanes as u64);
+
+        cfg.valet.slow_path_threads = 1; // inline oracle
+        let oracle = run_sim(&cfg, &ops);
+        cfg.valet.slow_path_threads = 0; // ring detour, auto threads
+        let auto = run_sim(&cfg, &ops);
+        cfg.valet.slow_path_threads = 4; // ring detour, fixed pool
+        let fixed = run_sim(&cfg, &ops);
+
+        assert_eq!(
+            oracle, auto,
+            "ring detour diverged from inline (lanes={lanes} disk={disk})"
+        );
+        assert_eq!(
+            oracle, fixed,
+            "thread-count knob perturbed the detour (lanes={lanes})"
+        );
+        assert!(oracle.write_count > 0 && oracle.read_count > 0);
+    }
+}
+
+/// Serve-side topology: 4 peers so auto lane/thread counts exercise
+/// real multi-ring hand-off, and a pool large enough that writes stage
+/// without eviction noise.
+fn serve_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.cluster.nodes = 5;
+    cfg.valet.mr_block_bytes = 1 << 20;
+    cfg.valet.min_pool_pages = 4096;
+    cfg.valet.max_pool_pages = 4096;
+    cfg.valet.sender_lanes = 0; // one lane per peer
+    cfg.valet.slow_path_threads = 0; // one drain thread per lane
+    cfg
+}
+
+#[test]
+fn saturated_lane_keeps_serve_writes_bounded_in_wall_time() {
+    // Burst 8 fresh units: each first batch charges its lane a ~62 ms
+    // virtual MR map (plus connects), so at any instant most lanes sit
+    // deep in a charge. A second submitter's small writes must still
+    // complete through serve in bounded wall time: admission stages to
+    // the shard's own queue and the lane rings without ever waiting on
+    // the sequencer while a drain thread holds it, and virtual charges
+    // cost no wall clock. Pre-ring, every one of these writes took the
+    // one global lock in line behind the drain work.
+    let h = spawn_sharded(&serve_cfg(), 2);
+    let start = Instant::now();
+    for u in 0..8u64 {
+        let w = h
+            .call(Request::Write { page: u * 256, bytes: 16 * PAGE_SIZE })
+            .expect("serve workers alive");
+        assert!(w.virtual_ns > 0);
+    }
+    let c = h.client();
+    for i in 0..32u64 {
+        let w = c
+            .call(Request::Write { page: (i % 8) * 256, bytes: PAGE_SIZE })
+            .expect("serve workers alive");
+        assert!(w.virtual_ns > 0);
+    }
+    assert!(
+        start.elapsed() < Duration::from_secs(30),
+        "writes stalled behind saturated lanes: {:?}",
+        start.elapsed()
+    );
+    // drive the background past every map charge, then reassemble
+    for _ in 0..400 {
+        let _ = h.call(Request::Pump).expect("serve workers alive");
+    }
+    let out = h.shutdown().expect("first shutdown owns the outcome");
+    let m = out.engine.combined_metrics();
+    assert_eq!(m.write_latency.count(), 40, "a write was lost");
+    assert_eq!(out.engine.staged_bytes(), 0, "staging must drain");
+    assert!(out.engine.mapped_units() >= 1);
+}
+
+#[cfg(any(feature = "audit", debug_assertions))]
+#[test]
+fn ring_conservation_survives_serve_shutdown() {
+    // Shutdown drains every ring after joining the drain threads; the
+    // reassembled engine must pass the full audit sweep — including
+    // law #17 (`admitted == drained + queued` per ring, with every
+    // queue empty) — so no admitted write set can be silently dropped
+    // on the floor between a worker's hand-off and the teardown.
+    use valet::sim::secs;
+    let h = spawn_sharded(&serve_cfg(), 2);
+    for u in 0..6u64 {
+        let _ = h
+            .call(Request::Write { page: u * 256, bytes: 16 * PAGE_SIZE })
+            .expect("serve workers alive");
+    }
+    // shut down promptly: rings may still hold queued admissions
+    let out = h.shutdown().expect("first shutdown owns the outcome");
+    let v = out.engine.audit_check(&out.state, secs(10_000));
+    assert!(
+        v.is_empty(),
+        "audit after concurrent shutdown: {:?}",
+        v.iter().map(|x| x.to_string()).collect::<Vec<_>>()
+    );
+}
